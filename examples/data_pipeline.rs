@@ -1,0 +1,101 @@
+//! The data pipeline end-to-end (paper §2 "Data Pipeline"):
+//! synthetic JSONL corpus → indexation → BPE vocabulary → producer/
+//! consumer tokenization (vs the Megatron-style baseline) → memory-
+//! mapped packed dataset with O(1) random access → global shuffle.
+
+use modalities::data::baseline::tokenize_corpus_baseline;
+use modalities::data::bpe::{train_bpe, BpeEncoder};
+use modalities::data::dataset::{Dataset, PackedDataset, Sampler, ShuffledSampler};
+use modalities::data::jsonl::{index_jsonl, JsonlCorpus};
+use modalities::data::pipeline::{tokenize_corpus, PipelineConfig};
+use modalities::data::synthetic::{generate_corpus, CorpusSpec};
+use modalities::util::human;
+use modalities::util::stats::Timer;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("runs/data_pipeline");
+    std::fs::create_dir_all(&dir)?;
+    let jsonl = dir.join("corpus.jsonl");
+
+    // 1. Corpus generation (FineWeb stand-in; Zipf word statistics).
+    let spec = CorpusSpec { num_docs: 5000, mean_doc_words: 150, seed: 3, ..Default::default() };
+    let t = Timer::start();
+    let (docs, bytes) = generate_corpus(&jsonl, &spec)?;
+    println!("[gen]      {docs} docs, {} in {}", human::bytes(bytes), human::duration(t.elapsed_s()));
+
+    // 2. Indexation: document boundaries, O(1) raw access.
+    let _ = std::fs::remove_file(modalities::data::jsonl::default_index_path(&jsonl));
+    let t = Timer::start();
+    let n = index_jsonl(&jsonl, None)?;
+    println!("[index]    {n} docs in {}", human::duration(t.elapsed_s()));
+
+    // 3. BPE vocabulary from a corpus sample.
+    let corpus = JsonlCorpus::open(&jsonl)?;
+    let sample: Vec<String> = (0..500).map(|i| corpus.doc_text(i).unwrap()).collect();
+    let refs: Vec<&str> = sample.iter().map(|s| s.as_str()).collect();
+    let t = Timer::start();
+    let vocab = Arc::new(train_bpe(&refs, 1024));
+    println!(
+        "[vocab]    {} merges (vocab {}) in {}",
+        vocab.merges.len(),
+        vocab.size(),
+        human::duration(t.elapsed_s())
+    );
+
+    // 4. Tokenization: pipeline vs Megatron-style baseline.
+    let out_pipe = dir.join("corpus.mmtok");
+    let cfg = PipelineConfig { num_workers: 2, ..Default::default() };
+    let sp = tokenize_corpus(&jsonl, &out_pipe, vocab.clone(), &cfg)?;
+    println!(
+        "[pipeline] {} tokens in {} — {} (cache hit {:.1}%)",
+        human::count(sp.tokens),
+        human::duration(sp.elapsed_s),
+        human::rate(sp.tokens_per_s(), "tok"),
+        100.0 * sp.cache_hits as f64 / (sp.cache_hits + sp.cache_misses) as f64
+    );
+    let out_base = dir.join("corpus.baseline.mmtok");
+    let sb = tokenize_corpus_baseline(&jsonl, &out_base, vocab.clone(), true, 4)?;
+    println!(
+        "[baseline] {} tokens in {} — {}  (pipeline speedup {:.1}x)",
+        human::count(sb.tokens),
+        human::duration(sb.elapsed_s),
+        human::rate(sb.tokens_per_s(), "tok"),
+        sp.tokens_per_s() / sb.tokens_per_s()
+    );
+    assert_eq!(
+        std::fs::read(&out_pipe)?,
+        std::fs::read(&out_base)?,
+        "pipeline and baseline must agree bit-for-bit"
+    );
+
+    // 5. Packed dataset: O(1) sample access + global shuffle.
+    let ds = PackedDataset::open(&out_pipe, 64)?;
+    println!(
+        "[dataset]  {} samples of seq 64 over {} tokens (vocab fp {:016x})",
+        ds.len(),
+        human::count(ds.num_tokens()),
+        ds.vocab_fingerprint()
+    );
+    let sampler = ShuffledSampler { len: ds.len(), seed: 9 };
+    let order = sampler.epoch_indices(0);
+    let t = Timer::start();
+    let mut checksum = 0u64;
+    for &i in order.iter().take(10_000) {
+        checksum ^= ds.sample(i % ds.len())[0] as u64;
+    }
+    println!(
+        "[access]   10k random samples in {} ({:.1} µs/sample, checksum {checksum:x})",
+        human::duration(t.elapsed_s()),
+        t.elapsed_s() * 1e6 / 10_000.0
+    );
+
+    // 6. Round-trip sanity: decode a document back to text.
+    let mut enc = BpeEncoder::new(vocab);
+    let doc0 = corpus.doc_text(0)?;
+    let ids = enc.encode(&doc0);
+    assert_eq!(enc.decode_string(&ids), doc0);
+    println!("[roundtrip] doc0: {} chars -> {} tokens -> identical text", doc0.len(), ids.len());
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! **The end-to-end driver** (EXPERIMENTS.md E7): the full system on a
+//! real small workload, proving all layers compose —
+//!
+//!   corpus generation → JSONL indexation → BPE vocabulary training →
+//!   producer/consumer tokenization → memory-mapped packed dataset →
+//!   declarative YAML config → object graph → gym → FSDP(dp=2) training
+//!   of the `tiny` (1.6M-param) LLaMa-style transformer through AOT
+//!   Pallas/XLA artifacts → loss curve + eval + checkpoints.
+//!
+//! Defaults are sized for a 1-core CPU testbed (~tens of minutes for
+//! 300 steps); `E2E_STEPS` / `E2E_MODEL` env vars scale it up (e.g.
+//! `E2E_MODEL=small` for the 12.6M-param config).
+
+use modalities::config::Config;
+use modalities::data::bpe::train_bpe;
+use modalities::data::jsonl::JsonlCorpus;
+use modalities::data::pipeline::{tokenize_corpus, PipelineConfig};
+use modalities::data::synthetic::{generate_corpus, CorpusSpec};
+use modalities::registry::{ComponentRegistry, ObjectGraphBuilder};
+use modalities::util::human;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::var("E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = std::env::var("E2E_MODEL").unwrap_or_else(|_| "tiny".to_string());
+    let dir = PathBuf::from("runs/e2e");
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- data: corpus → index → vocab → tokens ------------------------------
+    let jsonl = dir.join("corpus.jsonl");
+    let mmtok = dir.join("corpus.mmtok");
+    if !mmtok.exists() {
+        println!("== building data pipeline artifacts ==");
+        let spec = CorpusSpec { num_docs: 8000, mean_doc_words: 180, seed: 5, ..Default::default() };
+        let (docs, bytes) = generate_corpus(&jsonl, &spec)?;
+        println!("corpus: {docs} docs / {}", human::bytes(bytes));
+        let corpus = JsonlCorpus::open(&jsonl)?; // builds the index
+        let sample: Vec<String> = (0..800).map(|i| corpus.doc_text(i).unwrap()).collect();
+        let refs: Vec<&str> = sample.iter().map(|s| s.as_str()).collect();
+        // tiny's vocab is 2048: 256 bytes + 1788 merges + 4 specials.
+        let vocab = Arc::new(train_bpe(&refs, 1788));
+        assert!(vocab.size() <= 2048, "vocab {} must fit the model", vocab.size());
+        vocab.save(&dir.join("vocab.bpe"))?;
+        let stats = tokenize_corpus(&jsonl, &mmtok, vocab, &PipelineConfig::default())?;
+        println!(
+            "tokenized: {} tokens at {}",
+            human::count(stats.tokens),
+            human::rate(stats.tokens_per_s(), "tok")
+        );
+    } else {
+        println!("== reusing {} ==", mmtok.display());
+    }
+
+    // ---- training through the declarative config ----------------------------
+    println!("\n== training {model} for {steps} steps (FSDP dp=2) ==");
+    std::env::set_var("E2E_MMTOK", mmtok.display().to_string());
+    let mut cfg = Config::from_file("configs/e2e_pretrain.yaml")?;
+    cfg.set_override(&format!("components.trainer.config.steps={steps}"))?;
+    cfg.set_override(&format!("components.net.config.model_name={model}"))?;
+    if model == "small" {
+        cfg.set_override("components.train_dataset.config.seq_len=256")?;
+        cfg.set_override("components.train_loader.config.batch_size=4")?;
+    }
+
+    let registry = ComponentRegistry::with_builtins();
+    let graph = ObjectGraphBuilder::new(&registry).build(&cfg)?;
+    let mut gym = graph.into_gym()?;
+    let summary = gym.run()?;
+
+    println!("\n== e2e summary ==");
+    println!("model {model}: {} steps, {} tokens", summary.steps, human::count(summary.tokens_seen));
+    println!(
+        "loss {:.3} -> {:.3} (eval curve: {} points)",
+        summary.curve.first().map(|c| c.loss).unwrap_or(f32::NAN),
+        summary.final_loss,
+        summary.eval_curve.len()
+    );
+    println!(
+        "throughput {} over {} ranks; total collective traffic {}",
+        human::rate(summary.tokens_per_s, "tok"),
+        summary.world,
+        human::bytes(summary.comm_bytes)
+    );
+    println!("loss curve written to runs/e2e/metrics.jsonl");
+    Ok(())
+}

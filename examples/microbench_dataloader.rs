@@ -1,0 +1,18 @@
+//! §Perf microbench: dataloader batch assembly throughput.
+use modalities::data::dataset::{DataLoader, Dataset, Sampler, ShuffledSampler, SyntheticDataset};
+use std::sync::Arc;
+
+fn main() {
+    let ds: Arc<dyn Dataset> = Arc::new(SyntheticDataset::new(512, 64, 100_000, 0.02, 1));
+    let sampler: Arc<dyn Sampler> = Arc::new(ShuffledSampler { len: ds.len(), seed: 2 });
+    let dl = DataLoader::new(ds, sampler, 8).unwrap();
+    let n = 2000;
+    let t0 = std::time::Instant::now();
+    let mut sink = 0u64;
+    for b in 0..n {
+        let batch = dl.batch(0, b % dl.batches_per_epoch(0));
+        sink ^= batch.inputs[0] as u64;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{:.1} batches/s ({:.3} ms/batch, sink {sink})", n as f64 / dt, dt * 1e3 / n as f64);
+}

@@ -1,0 +1,28 @@
+//! §Perf microbench: BPE encode throughput in isolation (no I/O).
+use modalities::data::bpe::{train_bpe, BpeEncoder};
+use modalities::data::synthetic::{sample_texts, CorpusSpec};
+use std::sync::Arc;
+
+fn main() {
+    let spec = CorpusSpec { num_docs: 300, mean_doc_words: 200, seed: 3, ..Default::default() };
+    let texts = sample_texts(&spec, 300);
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let vocab = Arc::new(train_bpe(&refs, 2048));
+    let mut enc = BpeEncoder::new(vocab);
+    // warmup (fills cache)
+    let mut total = 0usize;
+    for t in &texts {
+        total += enc.encode(t).len();
+    }
+    let reps = 30;
+    let t0 = std::time::Instant::now();
+    let mut out = Vec::new();
+    for _ in 0..reps {
+        for t in &texts {
+            out.clear();
+            enc.encode_into(t, &mut out);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("encode: {:.2}M tok/s ({} tokens x{reps} in {:.3}s)", (total * reps) as f64 / dt / 1e6, total, dt);
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: L2/L1 jax graphs → HLO *text* artifacts + manifest.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 (the build
+the `xla` rust crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Per model config this emits:
+  <name>.train.hlo.txt  (params..., tokens, targets) -> (loss, *grads)
+  <name>.loss.hlo.txt   (params..., tokens, targets) -> (loss,)
+  <name>.fwd.hlo.txt    (params..., tokens)          -> (logits,)
+plus artifacts/manifest.json describing shapes, parameter order, and
+model statistics — the contract the rust runtime validates against.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--configs nano,tiny]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import CONFIGS, PARAM_ORDER, param_shapes, train_step_fn, forward_fn, loss_only_fn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_for(cfg, with_targets: bool):
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_shapes(cfg)]
+    tokens = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+    if with_targets:
+        return (*params, tokens, tokens)
+    return (*params, tokens)
+
+
+def lower_config(cfg, out_dir: str, variants=("train", "loss", "fwd")) -> dict:
+    files = {}
+    for variant in variants:
+        if variant == "train":
+            fn, specs = train_step_fn(cfg), specs_for(cfg, True)
+        elif variant == "loss":
+            fn, specs = loss_only_fn(cfg), specs_for(cfg, True)
+        elif variant == "fwd":
+            fn, specs = forward_fn(cfg), specs_for(cfg, False)
+        else:
+            raise ValueError(variant)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{variant}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[variant] = fname
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)", flush=True)
+    return files
+
+
+def manifest_entry(cfg, files: dict) -> dict:
+    return {
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch_size": cfg.batch_size,
+            "norm_eps": cfg.norm_eps,
+            "rope_theta": cfg.rope_theta,
+        },
+        "param_order": PARAM_ORDER,
+        "param_shapes": [[n, list(s)] for n, s in param_shapes(cfg)],
+        "num_params": cfg.num_params(),
+        "flops_per_token": cfg.flops_per_token(),
+        "files": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="nano,tiny,small")
+    ap.add_argument("--variants", default="train,loss,fwd")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n.strip() for n in args.configs.split(",") if n.strip()]
+    variants = tuple(v.strip() for v in args.variants.split(",") if v.strip())
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                pass
+
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"lowering {name} ({cfg.num_params() / 1e6:.2f}M params)...", flush=True)
+        files = lower_config(cfg, args.out_dir, variants)
+        manifest["models"][name] = manifest_entry(cfg, files)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

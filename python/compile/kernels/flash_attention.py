@@ -1,0 +1,182 @@
+"""L1 Pallas kernel: causal flash attention (online softmax).
+
+TPU-oriented design (DESIGN.md §Hardware-Adaptation): the paper's
+frameworks run GPU flash attention with warp-level tiles in shared
+memory; on TPU the same insight — never materialize the [S, S] score
+matrix in HBM — maps to a BlockSpec schedule: the grid walks
+(batch*heads, q-blocks), each program holds one q-tile plus streamed
+k/v-tiles in VMEM, and the online-softmax accumulators (m, l, acc) live
+in registers/VMEM across the k-loop. Block sizes default to 128 lanes to
+match the MXU's 128x128 systolic tile.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md), so the kernel lowers to
+plain HLO for execution while keeping the block-level structure that
+would ship to a real TPU.
+
+The backward pass is a second Pallas kernel computing (dq, dk, dv) with
+the standard flash-attention recomputation trick (no stored [S, S]
+probabilities; row statistics are re-derived from the forward output via
+delta = rowsum(do * o)). Both directions are validated against
+`ref.ref_causal_attention` and `jax.grad` of it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_k, seq_len):
+    """One program: one (batch*head, q-block) tile.
+
+    q_ref: [1, bq, hd]; k_ref/v_ref: [1, S, hd]; o_ref: [1, bq, hd];
+    lse_ref: [1, bq] (log-sum-exp rows, saved for the backward pass).
+    """
+    q_blk = pl.program_id(1)
+    bq = q_ref.shape[1]
+    hd = q_ref.shape[2]
+    q = q_ref[0, :, :] * scale  # [bq, hd]
+    q_pos = q_blk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)  # [bq,1]
+
+    m = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc = jnp.zeros((bq, hd), dtype=jnp.float32)
+
+    num_kb = seq_len // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(kb * block_k, block_k), :]  # [bk, hd]
+        v = v_ref[0, pl.dslice(kb * block_k, block_k), :]
+        s = q @ k.T  # [bq, bk] — the MXU matmul
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)  # causal mask
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return m_new, l, acc
+
+    # Causality: the q-block only attends to kv blocks at or before it.
+    last_kb = jnp.minimum(num_kb, (q_blk + 1) * bq // block_k + 1)
+    m, l, acc = jax.lax.fori_loop(0, last_kb, body, (m, l, acc))
+
+    o_ref[0, :, :] = acc / l
+    lse_ref[0, :] = (m + jnp.log(l))[:, 0]
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, o_ref, do_ref, lse_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    """Backward for one batch*head (full-S tile; recomputation-based).
+
+    p = exp(q k^T * scale - lse); delta = rowsum(do * o)
+    dv = p^T do ; dp = do v^T ; ds = p * (dp - delta)
+    dq = ds k * scale ; dk = ds^T q * scale
+    """
+    s_len = q_ref.shape[1]
+    q = q_ref[0, :, :]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    o = o_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :][:, None]  # [S,1]
+
+    s = (q @ k.T) * scale  # [S, S]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 1)
+    causal = pos >= kpos
+    p = jnp.where(causal, jnp.exp(s - lse), 0.0)  # [S, S]
+
+    delta = jnp.sum(do * o, axis=-1, keepdims=True)  # [S, 1]
+    dv = p.T @ do
+    dp = do @ v.T
+    ds = p * (dp - delta)
+    dq_ref[0, :, :] = (ds @ k) * scale
+    dk_ref[0, :, :] = (ds.T @ q) * scale
+    dv_ref[0, :, :] = dv
+
+
+def _pick_block(seq_len, want):
+    """Largest power-of-two divisor of seq_len, capped at `want`."""
+    b = 1
+    while b * 2 <= min(seq_len, want) and seq_len % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal flash attention. q, k, v: [BH, S, hd] float32."""
+    o, _ = _flash_fwd(q, k, v, block_q, block_k)
+    return o
+
+
+def _flash_fwd(q, k, v, block_q, block_k):
+    bh, s, hd = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (bh, s // bq)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, block_k=bk, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+def _vjp_fwd(q, k, v, block_q, block_k):
+    o, lse = _flash_fwd(q, k, v, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    bh, s, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0))] * 5
+        + [pl.BlockSpec((1, s), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((bh, s, hd), jnp.float32)] * 3,
+        interpret=True,
+    )(q, k, v, o, do, lse)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint_bytes(seq_len, head_dim, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Estimated VMEM bytes per program of the forward kernel — used by
+    DESIGN.md §Perf to check the schedule fits a TPU core's ~16 MiB VMEM."""
+    bq = _pick_block(seq_len, block_q)
+    bk = _pick_block(seq_len, block_k)
+    f = 4  # float32
+    q_tile = bq * head_dim * f
+    kv_stream = 2 * bk * head_dim * f  # double-buffered pair of k/v tiles
+    acc = bq * head_dim * f + 2 * bq * f
+    scores = bq * bk * f
+    return q_tile + 2 * kv_stream + acc + scores

@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the numerics ground truth: every Pallas kernel is checked
+against its `ref_*` twin by `python/tests/test_kernels.py` (including
+hypothesis sweeps over shapes). The references are also used as the
+rematerialized math inside custom-VJP backward rules where noted.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_causal_attention(q, k, v, scale=None):
+    """Causal scaled-dot-product attention.
+
+    Args:
+      q, k, v: [B*H, S, hd]
+      scale: optional softmax scale; default 1/sqrt(hd).
+    Returns:
+      [B*H, S, hd]
+    """
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = q.shape[-2]
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.float32(-1e30))
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def ref_cross_entropy_rows(logits, targets):
+    """Per-row softmax cross-entropy (the fused kernel's raw output).
+
+    Args:
+      logits: [N, V] float32
+      targets: [N] int32
+    Returns:
+      [N] float32 per-row loss
+    """
+    m = logits.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.exp(logits - m).sum(axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - picked
+
+
+def ref_cross_entropy(logits, targets):
+    """Token-mean softmax cross-entropy (scalar)."""
+    return jnp.mean(ref_cross_entropy_rows(logits, targets))
+
+
+def ref_rmsnorm(x, w, eps=1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w

@@ -1,0 +1,244 @@
+"""L2: the JAX transformer LM (LLaMa-style) — build-time only.
+
+Architecture: token embedding -> L x [RMSNorm -> causal attention
+(RoPE, L1 flash kernel) -> residual -> RMSNorm -> SwiGLU MLP ->
+residual] -> RMSNorm -> LM head -> fused cross-entropy (L1 kernel).
+
+Layers are folded with `jax.lax.scan` over stacked per-layer weights,
+so the lowered HLO is O(1) in depth (fast AOT compiles, small artifact
+files) and the rust runtime sees exactly 12 parameter tensors
+regardless of L (see PARAM_ORDER).
+
+Everything here runs once at `make artifacts`; the training loop only
+ever touches the lowered HLO.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_ce import fused_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch_size: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        c = self
+        emb = c.vocab_size * c.d_model
+        per_layer = (
+            2 * c.d_model                      # norms
+            + 4 * c.d_model * c.d_model        # wq wk wv wo
+            + 3 * c.d_model * c.d_ff           # gate, up, down
+        )
+        return emb + c.n_layers * per_layer + c.d_model + c.d_model * c.vocab_size
+
+    def flops_per_token(self) -> int:
+        """~6N flops/token for training (fwd+bwd), N = non-embedding params."""
+        c = self
+        n = c.n_layers * (4 * c.d_model * c.d_model + 3 * c.d_model * c.d_ff)
+        n += c.d_model * c.vocab_size
+        return 6 * n
+
+
+# Stable parameter order — the contract with the rust runtime (and the
+# manifest). Shapes use the stacked-layer convention [L, ...].
+PARAM_ORDER: List[str] = [
+    "tok_emb",      # [V, D]
+    "attn_norm_w",  # [L, D]
+    "wq",           # [L, D, D]
+    "wk",           # [L, D, D]
+    "wv",           # [L, D, D]
+    "wo",           # [L, D, D]
+    "mlp_norm_w",   # [L, D]
+    "w_gate",       # [L, D, F]
+    "w_up",         # [L, D, F]
+    "w_down",       # [L, F, D]
+    "final_norm_w", # [D]
+    "lm_head",      # [D, V]
+]
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    c = cfg
+    return [
+        ("tok_emb", (c.vocab_size, c.d_model)),
+        ("attn_norm_w", (c.n_layers, c.d_model)),
+        ("wq", (c.n_layers, c.d_model, c.d_model)),
+        ("wk", (c.n_layers, c.d_model, c.d_model)),
+        ("wv", (c.n_layers, c.d_model, c.d_model)),
+        ("wo", (c.n_layers, c.d_model, c.d_model)),
+        ("mlp_norm_w", (c.n_layers, c.d_model)),
+        ("w_gate", (c.n_layers, c.d_model, c.d_ff)),
+        ("w_up", (c.n_layers, c.d_model, c.d_ff)),
+        ("w_down", (c.n_layers, c.d_ff, c.d_model)),
+        ("final_norm_w", (c.d_model,)),
+        ("lm_head", (c.d_model, c.vocab_size)),
+    ]
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """Scaled-normal init (0.02, residual projections scaled by 1/sqrt(2L)).
+
+    Only used by the python tests; the rust side owns production init
+    (same scheme, its own PRNG) so training needs no python.
+    """
+    params = []
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    resid_scale = 1.0 / (2.0 * cfg.n_layers) ** 0.5
+    for (name, shape), k in zip(shapes, keys):
+        if name.endswith("norm_w"):
+            p = jnp.ones(shape, jnp.float32)
+        elif name in ("wo", "w_down"):
+            p = jax.random.normal(k, shape, jnp.float32) * 0.02 * resid_scale
+        else:
+            p = jax.random.normal(k, shape, jnp.float32) * 0.02
+        params.append(p)
+    return params
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    inv = cfg.rope_theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = pos[:, None] * inv[None, :]          # [S, hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, S, hd] — rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def block(cfg: ModelConfig, h, layer_params, cos, sin):
+    """One transformer block. h: [B, S, D]."""
+    (attn_w, wq, wk, wv, wo, mlp_w, w_gate, w_up, w_down) = layer_params
+    b, s, d = h.shape
+    hh = cfg.n_heads
+    hd = cfg.head_dim
+
+    x = rmsnorm(h, attn_w, cfg.norm_eps)
+    q = (x @ wq).reshape(b, s, hh, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+    k = (x @ wk).reshape(b, s, hh, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, hh, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # L1 kernel over flattened [B*H, S, hd]
+    o = flash_attention(
+        q.reshape(b * hh, s, hd), k.reshape(b * hh, s, hd), v.reshape(b * hh, s, hd)
+    )
+    o = o.reshape(b, hh, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + o @ wo
+
+    x = rmsnorm(h, mlp_w, cfg.norm_eps)
+    h = h + (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+    return h
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens [B, S] int32 → logits [B, S, V]."""
+    (tok_emb, attn_norm_w, wq, wk, wv, wo, mlp_norm_w,
+     w_gate, w_up, w_down, final_norm_w, lm_head) = params
+    cos, sin = rope_tables(cfg)
+    h = tok_emb[tokens]  # [B, S, D]
+
+    def body(h, layer):
+        return block(cfg, h, layer, cos, sin), None
+
+    stacked = (attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down)
+    h, _ = jax.lax.scan(body, h, stacked)
+    h = rmsnorm(h, final_norm_w, cfg.norm_eps)
+    return h @ lm_head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    b, s, v = logits.shape
+    return fused_cross_entropy(logits.reshape(b * s, v), targets.reshape(b * s))
+
+
+def train_step_fn(cfg: ModelConfig):
+    """(params..., tokens, targets) → (loss, *grads) — the AOT unit."""
+
+    def step(*args):
+        params = list(args[: len(PARAM_ORDER)])
+        tokens, targets = args[len(PARAM_ORDER)], args[len(PARAM_ORDER) + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets)
+        )(params)
+        return (loss, *grads)
+
+    return step
+
+
+def forward_fn(cfg: ModelConfig):
+    """(params..., tokens) → (logits,) — eval/generation unit."""
+
+    def fwd(*args):
+        params = list(args[: len(PARAM_ORDER)])
+        tokens = args[len(PARAM_ORDER)]
+        return (forward(cfg, params, tokens),)
+
+    return fwd
+
+
+def loss_only_fn(cfg: ModelConfig):
+    """(params..., tokens, targets) → (loss,) — validation unit."""
+
+    def f(*args):
+        params = list(args[: len(PARAM_ORDER)])
+        tokens, targets = args[len(PARAM_ORDER)], args[len(PARAM_ORDER) + 1]
+        return (loss_fn(cfg, params, tokens, targets),)
+
+    return f
+
+
+# ---- named configurations (must stay in sync with configs/*.yaml) -----------
+
+CONFIGS = {
+    "nano": ModelConfig(
+        name="nano", vocab_size=512, d_model=64, n_layers=2, n_heads=2,
+        d_ff=256, seq_len=32, batch_size=4,
+    ),
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=2048, d_model=128, n_layers=4, n_heads=4,
+        d_ff=512, seq_len=64, batch_size=8,
+    ),
+    "small": ModelConfig(
+        name="small", vocab_size=8192, d_model=256, n_layers=8, n_heads=8,
+        d_ff=1024, seq_len=256, batch_size=4,
+    ),
+    "mid": ModelConfig(
+        name="mid", vocab_size=16384, d_model=512, n_layers=12, n_heads=8,
+        d_ff=2048, seq_len=512, batch_size=2,
+    ),
+}

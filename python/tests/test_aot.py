@@ -1,0 +1,57 @@
+"""AOT export tests: HLO text artifacts are well-formed and the manifest
+matches the model contract."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import lower_config, manifest_entry, specs_for, to_hlo_text
+from compile.model import CONFIGS, PARAM_ORDER, train_step_fn
+
+
+def test_hlo_text_well_formed(tmp_path):
+    cfg = CONFIGS["nano"]
+    files = lower_config(cfg, str(tmp_path), variants=("loss",))
+    text = (tmp_path / files["loss"]).read_text()
+    assert "ENTRY" in text
+    assert "f32[" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text or ") tuple" in text or "(f32[]" in text
+
+
+def test_manifest_contract(tmp_path):
+    cfg = CONFIGS["nano"]
+    entry = manifest_entry(cfg, {"train": "x"})
+    assert entry["param_order"] == PARAM_ORDER
+    assert len(entry["param_shapes"]) == len(PARAM_ORDER)
+    assert entry["num_params"] == cfg.num_params()
+    shapes = dict((n, tuple(s)) for n, s in entry["param_shapes"])
+    assert shapes["tok_emb"] == (cfg.vocab_size, cfg.d_model)
+    assert shapes["wq"] == (cfg.n_layers, cfg.d_model, cfg.d_model)
+
+
+def test_train_step_spec_arity():
+    cfg = CONFIGS["nano"]
+    specs = specs_for(cfg, True)
+    assert len(specs) == len(PARAM_ORDER) + 2
+    # Lowering with the specs must succeed and produce 13 outputs.
+    lowered = jax.jit(train_step_fn(cfg)).lower(*specs)
+    text = to_hlo_text(lowered)
+    assert text.count("f32") > 10
+
+
+def test_repo_manifest_in_sync():
+    """If artifacts/ exists, its manifest must match current model code."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["models"].items():
+        cfg = CONFIGS[name]
+        assert entry["num_params"] == cfg.num_params(), name
+        assert entry["param_order"] == PARAM_ORDER, name

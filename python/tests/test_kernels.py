@@ -1,0 +1,165 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (`ref.py`).
+
+This is the CORE numerics signal of the repo: the AOT artifacts embed
+these kernels, so agreement here + HLO round-trip tests transfer
+correctness to the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import flash_attention, vmem_footprint_bytes
+from compile.kernels.fused_ce import fused_cross_entropy, fused_cross_entropy_rows
+from compile.kernels.ref import (
+    ref_causal_attention,
+    ref_cross_entropy,
+    ref_cross_entropy_rows,
+    ref_rmsnorm,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------- flash attention ------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.sampled_from([1, 2, 6]),
+    seq=st.sampled_from([8, 16, 32, 64, 96]),
+    hd=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_fwd_matches_ref(bh, seq, hd, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(kk, (bh, seq, hd)) for kk in keys)
+    out = flash_attention(q, k, v)
+    want = ref_causal_attention(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    seq=st.sampled_from([8, 32, 48]),
+    hd=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_grads_match_ref(seq, hd, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q, k, v = (rand(kk, (2, seq, hd)) for kk in keys[:3])
+    ct = rand(keys[3], (2, seq, hd))  # random cotangent
+
+    def f_pallas(q, k, v):
+        return (flash_attention(q, k, v) * ct).sum()
+
+    def f_ref(q, k, v):
+        return (ref_causal_attention(q, k, v) * ct).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gp, gr, "qkv"):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5, err_msg=f"d{name}")
+
+
+def test_attention_block_size_invariance():
+    """Different BlockSpec tilings must not change numerics."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(kk, (2, 64, 16)) for kk in keys)
+    a = flash_attention(q, k, v, 16, 16)
+    b = flash_attention(q, k, v, 64, 32)
+    c = flash_attention(q, k, v, 128, 128)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_is_causal():
+    """Future tokens must not influence earlier outputs."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(kk, (1, 32, 8)) for kk in keys)
+    base = flash_attention(q, k, v)
+    k2 = k.at[:, 20:, :].set(99.0)
+    v2 = v.at[:, 20:, :].set(-99.0)
+    pert = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :20], pert[:, :20], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(base[:, 20:], pert[:, 20:])
+
+
+def test_attention_vmem_budget():
+    """Default block sizes must fit a TPU core's ~16 MiB VMEM."""
+    assert vmem_footprint_bytes(8192, 128) < 16 * 1024 * 1024
+
+
+# ---------- fused cross-entropy ---------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 16, 64, 100]),
+    v=st.sampled_from([16, 128, 1000]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ce_fwd_matches_ref(n, v, scale, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = rand(k1, (n, v), scale)
+    targets = jax.random.randint(k2, (n,), 0, v)
+    np.testing.assert_allclose(
+        fused_cross_entropy_rows(logits, targets),
+        ref_cross_entropy_rows(logits, targets),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        fused_cross_entropy(logits, targets),
+        ref_cross_entropy(logits, targets),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 32]),
+    v=st.sampled_from([64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ce_grads_match_ref(n, v, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = rand(k1, (n, v))
+    targets = jax.random.randint(k2, (n,), 0, v)
+    gp = jax.grad(lambda x: fused_cross_entropy(x, targets))(logits)
+    gr = jax.grad(lambda x: ref_cross_entropy(x, targets))(logits)
+    np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_ce_extreme_logits_stable():
+    """Online max keeps exp() in range: huge logits must not produce NaN/Inf."""
+    logits = jnp.array([[1e4, -1e4, 0.0, 5e3]] * 4, jnp.float32)
+    targets = jnp.array([0, 1, 2, 3], jnp.int32)
+    loss = fused_cross_entropy_rows(logits, targets)
+    assert np.all(np.isfinite(np.asarray(loss)))
+    np.testing.assert_allclose(loss, ref_cross_entropy_rows(logits, targets), rtol=1e-5)
+
+
+def test_ce_perfect_prediction_near_zero():
+    v = 32
+    logits = jnp.eye(v, dtype=jnp.float32) * 50.0
+    targets = jnp.arange(v, dtype=jnp.int32)
+    loss = fused_cross_entropy(logits, targets)
+    assert float(loss) < 1e-4
+
+
+# ---------- rmsnorm oracle sanity -------------------------------------------
+
+
+def test_rmsnorm_ref_properties():
+    x = rand(jax.random.PRNGKey(0), (4, 16), 3.0)
+    w = jnp.ones((16,), jnp.float32)
+    y = ref_rmsnorm(x, w)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones_like(rms), rtol=1e-3)

@@ -1,0 +1,119 @@
+"""L2 model tests: shapes, gradient correctness (finite differences on a
+micro config), determinism, and loss behaviour."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    CONFIGS,
+    ModelConfig,
+    PARAM_ORDER,
+    forward,
+    init_params,
+    loss_fn,
+    param_shapes,
+    train_step_fn,
+)
+
+MICRO = ModelConfig(
+    name="micro", vocab_size=64, d_model=16, n_layers=2, n_heads=2,
+    d_ff=32, seq_len=8, batch_size=2,
+)
+
+
+def data_for(cfg, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tokens = jax.random.randint(k1, (cfg.batch_size, cfg.seq_len), 0, cfg.vocab_size)
+    targets = jax.random.randint(k2, (cfg.batch_size, cfg.seq_len), 0, cfg.vocab_size)
+    return tokens, targets
+
+
+def test_param_shapes_match_declared_order():
+    for cfg in (MICRO, CONFIGS["nano"]):
+        names = [n for n, _ in param_shapes(cfg)]
+        assert names == PARAM_ORDER
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        assert [p.shape for p in params] == [tuple(s) for _, s in param_shapes(cfg)]
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == cfg.num_params()
+
+
+def test_forward_shapes_and_finiteness():
+    params = init_params(MICRO, jax.random.PRNGKey(1))
+    tokens, _ = data_for(MICRO)
+    logits = forward(MICRO, params, tokens)
+    assert logits.shape == (MICRO.batch_size, MICRO.seq_len, MICRO.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Random init ⇒ loss ≈ ln(V)."""
+    params = init_params(MICRO, jax.random.PRNGKey(2))
+    tokens, targets = data_for(MICRO)
+    loss = float(loss_fn(MICRO, params, tokens, targets))
+    assert abs(loss - np.log(MICRO.vocab_size)) < 0.5, loss
+
+
+def test_train_step_outputs():
+    params = init_params(MICRO, jax.random.PRNGKey(3))
+    tokens, targets = data_for(MICRO)
+    out = train_step_fn(MICRO)(*params, tokens, targets)
+    assert len(out) == 1 + len(PARAM_ORDER)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_grads_match_finite_differences():
+    """Spot-check autodiff grads with central differences on a few coords."""
+    params = init_params(MICRO, jax.random.PRNGKey(4))
+    tokens, targets = data_for(MICRO)
+    f = lambda ps: loss_fn(MICRO, ps, tokens, targets)
+    grads = jax.grad(f)(params)
+    eps = 1e-3
+    rng = np.random.RandomState(0)
+    for pi in [0, 2, 7, 11]:  # tok_emb, wq, w_gate, lm_head
+        p = np.asarray(params[pi])
+        flat_idx = rng.randint(0, p.size)
+        idx = np.unravel_index(flat_idx, p.shape)
+        bump = np.zeros_like(p)
+        bump[idx] = eps
+        plus = list(params); plus[pi] = params[pi] + bump
+        minus = list(params); minus[pi] = params[pi] - bump
+        fd = (float(f(plus)) - float(f(minus))) / (2 * eps)
+        ad = float(np.asarray(grads[pi])[idx])
+        assert abs(fd - ad) < 5e-3 + 0.05 * abs(fd), (PARAM_ORDER[pi], fd, ad)
+
+
+def test_forward_deterministic():
+    params = init_params(MICRO, jax.random.PRNGKey(5))
+    tokens, _ = data_for(MICRO)
+    a = forward(MICRO, params, tokens)
+    b = forward(MICRO, params, tokens)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_one_sgd_step_reduces_loss():
+    params = init_params(MICRO, jax.random.PRNGKey(6))
+    tokens, targets = data_for(MICRO)
+    f = lambda ps: loss_fn(MICRO, ps, tokens, targets)
+    l0 = float(f(params))
+    grads = jax.grad(f)(params)
+    params2 = [p - 0.5 * g for p, g in zip(params, grads)]
+    l1 = float(f(params2))
+    assert l1 < l0, (l0, l1)
+
+
+def test_causality_end_to_end():
+    """Changing future tokens must not change earlier logits."""
+    params = init_params(MICRO, jax.random.PRNGKey(7))
+    tokens, _ = data_for(MICRO)
+    logits = forward(MICRO, params, tokens)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % MICRO.vocab_size)
+    logits2 = forward(MICRO, params, tokens2)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :-1]), np.asarray(logits2[:, :-1]), rtol=1e-5, atol=1e-6
+    )

@@ -1,0 +1,57 @@
+//! Registry factories for checkpointing policies and conversion.
+
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// When to write sharded checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Every N optimizer steps (None = only at end).
+    pub every_steps: Option<u64>,
+    /// Keep only the latest K checkpoints (0 = keep all).
+    pub keep_last: usize,
+}
+
+/// Conversion job spec (`modalities convert` CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConversionSpec {
+    pub from: PathBuf,
+    pub to: PathBuf,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("checkpointing", "interval", |ctx, cfg| {
+        let every = ctx.usize_or(cfg, "every_steps", 0)?;
+        let keep_last = ctx.usize_or(cfg, "keep_last", 0)?;
+        Ok(Component::new(
+            "checkpointing",
+            "interval",
+            CheckpointPolicy {
+                every_steps: if every == 0 { None } else { Some(every as u64) },
+                keep_last,
+            },
+        ))
+    })?;
+
+    reg.register("checkpointing", "none", |_ctx, _cfg| {
+        Ok(Component::new(
+            "checkpointing",
+            "none",
+            CheckpointPolicy { every_steps: None, keep_last: 0 },
+        ))
+    })?;
+
+    reg.register("checkpoint_conversion", "consolidate", |ctx, cfg| {
+        Ok(Component::new(
+            "checkpoint_conversion",
+            "consolidate",
+            ConversionSpec {
+                from: PathBuf::from(ctx.str(cfg, "from")?),
+                to: PathBuf::from(ctx.str(cfg, "to")?),
+            },
+        ))
+    })?;
+
+    Ok(())
+}

@@ -1,0 +1,511 @@
+//! Distributed checkpointing + consolidation.
+//!
+//! Two formats, mirroring the paper's "PyTorch-native (distributed)
+//! checkpoints" vs "HF-compatible format" conversion routines:
+//!
+//! * **Sharded run checkpoint** (`<dir>/step_<n>/`): a JSON manifest
+//!   (step, world size, shard-group size, unit layout, config
+//!   fingerprint, model name) plus one binary file per rank holding its
+//!   parameter shards and sharded AdamW state. Written by the gym,
+//!   resumable bit-exactly.
+//! * **Consolidated checkpoint** (single `.mckpt` file): self-describing
+//!   parameter archive (names, shapes, contiguous f32 data) independent
+//!   of world size / sharding — the portable interchange artifact
+//!   (our HF-conversion analog). Convertible from any sharded
+//!   checkpoint offline, loadable into a [`ParamStore`].
+
+pub mod components;
+
+use crate::fsdp::FsdpEngine;
+use crate::model::ParamStore;
+use crate::util::bytesio::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+const RANK_MAGIC: u32 = 0x4d52_4b31; // "MRK1"
+const CONS_MAGIC: u32 = 0x4d43_4b50; // "MCKP"
+
+/// Sharded checkpoint manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptManifest {
+    pub step: u64,
+    pub world: usize,
+    pub shard_group_size: usize,
+    pub unit_elems: Vec<usize>,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub model_name: String,
+    pub config_fingerprint: String,
+}
+
+/// Save a sharded checkpoint of `engine` into `dir/step_<step>/`.
+pub fn save_sharded(
+    dir: &Path,
+    step: u64,
+    engine: &FsdpEngine,
+    params: &ParamStore,
+    model_name: &str,
+    config_fingerprint: &str,
+) -> Result<PathBuf> {
+    let out = dir.join(format!("step_{step:08}"));
+    std::fs::create_dir_all(&out)?;
+    let shard_group_size = match engine.cfg.strategy {
+        crate::fsdp::ShardStrategy::Full => engine.cfg.world,
+        crate::fsdp::ShardStrategy::Ddp => 1,
+        crate::fsdp::ShardStrategy::Hybrid { shard_size } => shard_size,
+    };
+
+    let manifest = Json::from_pairs(vec![
+        ("version", 1usize.into()),
+        ("step", (step as i64).into()),
+        ("world", engine.cfg.world.into()),
+        ("shard_group_size", shard_group_size.into()),
+        (
+            "unit_elems",
+            Json::Arr(engine.units.iter().map(|u| u.elems.into()).collect()),
+        ),
+        (
+            "param_names",
+            Json::Arr(params.names.iter().map(|n| n.as_str().into()).collect()),
+        ),
+        (
+            "param_shapes",
+            Json::Arr(
+                params
+                    .shapes
+                    .iter()
+                    .map(|s| Json::Arr(s.iter().map(|&d| d.into()).collect()))
+                    .collect(),
+            ),
+        ),
+        ("model_name", model_name.into()),
+        ("config_fingerprint", config_fingerprint.into()),
+        ("modalities_version", crate::VERSION.into()),
+    ]);
+    std::fs::write(out.join("manifest.json"), manifest.dumps_pretty())?;
+
+    for rank in 0..engine.cfg.world {
+        let mut w = ByteWriter::new();
+        w.u32(RANK_MAGIC);
+        w.u32(rank as u32);
+        let shards = engine.rank_shards(rank);
+        let opt = engine.rank_opt_state(rank);
+        w.u32(shards.len() as u32);
+        for (shard, (m, v, t)) in shards.iter().zip(&opt) {
+            w.u64(*t);
+            w.u32(shard.len() as u32);
+            w.f32s(shard);
+            w.f32s(m);
+            w.f32s(v);
+        }
+        std::fs::write(out.join(format!("rank_{rank:05}.bin")), &w.buf)?;
+    }
+    Ok(out)
+}
+
+/// Load a sharded checkpoint into an existing engine (topology must
+/// match). Returns the step to resume from.
+pub fn load_sharded(ckpt_dir: &Path, engine: &mut FsdpEngine) -> Result<u64> {
+    let manifest = read_manifest(ckpt_dir)?;
+    if manifest.world != engine.cfg.world {
+        bail!(
+            "checkpoint world {} != engine world {} (resharding requires consolidate + warm start)",
+            manifest.world,
+            engine.cfg.world
+        );
+    }
+    let engine_units: Vec<usize> = engine.units.iter().map(|u| u.elems).collect();
+    if manifest.unit_elems != engine_units {
+        bail!("checkpoint unit layout differs (unit_size_mb changed?); consolidate + warm start instead");
+    }
+    for rank in 0..manifest.world {
+        let path = ckpt_dir.join(format!("rank_{rank:05}.bin"));
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut r = ByteReader::new(&raw);
+        if r.u32()? != RANK_MAGIC {
+            bail!("{}: bad rank-file magic", path.display());
+        }
+        if r.u32()? as usize != rank {
+            bail!("{}: rank id mismatch", path.display());
+        }
+        let n_units = r.u32()? as usize;
+        let mut shards = Vec::with_capacity(n_units);
+        let mut opt_states = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let t = r.u64()?;
+            let len = r.u32()? as usize;
+            let shard = r.f32s(len)?;
+            let m = r.f32s(len)?;
+            let v = r.f32s(len)?;
+            shards.push(shard);
+            opt_states.push((m, v, t));
+        }
+        engine
+            .restore_rank_shards(rank, shards)
+            .with_context(|| format!("restoring rank {rank}"))?;
+        engine.restore_rank_opt_state(rank, opt_states)?;
+    }
+    Ok(manifest.step)
+}
+
+pub fn read_manifest(ckpt_dir: &Path) -> Result<CkptManifest> {
+    let path = ckpt_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = Json::parse(&text)?;
+    let get_usize = |k: &str| -> Result<usize> {
+        v.get(k).and_then(|n| n.as_usize()).ok_or_else(|| anyhow::anyhow!("manifest: missing {k}"))
+    };
+    Ok(CkptManifest {
+        step: get_usize("step")? as u64,
+        world: get_usize("world")?,
+        shard_group_size: get_usize("shard_group_size")?,
+        unit_elems: v
+            .get("unit_elems")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default(),
+        param_names: v
+            .get("param_names")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+        param_shapes: v
+            .get("param_shapes")
+            .and_then(|a| a.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| {
+                        x.as_arr().map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default(),
+        model_name: v.get("model_name").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+        config_fingerprint: v
+            .get("config_fingerprint")
+            .and_then(|s| s.as_str())
+            .unwrap_or("")
+            .to_string(),
+    })
+}
+
+/// Latest `step_*` subdirectory of a run dir (resume discovery).
+pub fn latest_checkpoint(run_dir: &Path) -> Option<PathBuf> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    if let Ok(entries) = std::fs::read_dir(run_dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(num) = name.strip_prefix("step_") {
+                if let Ok(step) = num.parse::<u64>() {
+                    if e.path().join("manifest.json").exists()
+                        && best.as_ref().map(|(b, _)| step > *b).unwrap_or(true)
+                    {
+                        best = Some((step, e.path()));
+                    }
+                }
+            }
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+// ---- consolidation -----------------------------------------------------------
+
+/// Convert a sharded checkpoint into a single consolidated `.mckpt`
+/// file. Works offline from the files alone (no engine needed):
+/// reassembles each unit from the shard-group slots, then splits units
+/// back into named parameter tensors.
+pub fn consolidate(ckpt_dir: &Path, out_file: &Path) -> Result<()> {
+    let manifest = read_manifest(ckpt_dir)?;
+    let g = manifest.shard_group_size;
+
+    // Read shard slot files (ranks 0..g hold one full copy).
+    let mut slot_shards: Vec<Vec<Vec<f32>>> = Vec::with_capacity(g); // [slot][unit]
+    for slot in 0..g {
+        let path = ckpt_dir.join(format!("rank_{slot:05}.bin"));
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut r = ByteReader::new(&raw);
+        if r.u32()? != RANK_MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let _rank = r.u32()?;
+        let n_units = r.u32()? as usize;
+        let mut shards = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let _t = r.u64()?;
+            let len = r.u32()? as usize;
+            shards.push(r.f32s(len)?);
+            let _ = r.f32s(len)?; // skip m
+            let _ = r.f32s(len)?; // skip v
+        }
+        slot_shards.push(shards);
+    }
+
+    // Reassemble the flat parameter stream: units in order, each the
+    // concatenation of its slots.
+    let mut flat = Vec::new();
+    for u in 0..manifest.unit_elems.len() {
+        for slot in 0..g {
+            flat.extend_from_slice(&slot_shards[slot][u]);
+        }
+    }
+    let expect: usize = manifest
+        .param_shapes
+        .iter()
+        .map(|s| s.iter().product::<usize>())
+        .sum();
+    if flat.len() != expect {
+        bail!("consolidation produced {} elements, expected {expect}", flat.len());
+    }
+
+    write_consolidated(out_file, &manifest, &flat)
+}
+
+fn write_consolidated(out_file: &Path, manifest: &CkptManifest, flat: &[f32]) -> Result<()> {
+    let mut w = ByteWriter::with_capacity(64 + flat.len() * 4);
+    w.u32(CONS_MAGIC);
+    w.u32(1); // version
+    w.u64(manifest.step);
+    w.str(&manifest.model_name);
+    w.str(&manifest.config_fingerprint);
+    w.u32(manifest.param_names.len() as u32);
+    for (name, shape) in manifest.param_names.iter().zip(&manifest.param_shapes) {
+        w.str(name);
+        w.u32(shape.len() as u32);
+        for &d in shape {
+            w.u64(d as u64);
+        }
+    }
+    w.f32s(flat);
+    std::fs::write(out_file, &w.buf)
+        .with_context(|| format!("writing {}", out_file.display()))?;
+    Ok(())
+}
+
+/// Save a [`ParamStore`] directly as a consolidated checkpoint (export
+/// without a sharded intermediate — single-rank runs).
+pub fn save_consolidated(
+    out_file: &Path,
+    params: &ParamStore,
+    step: u64,
+    model_name: &str,
+    config_fingerprint: &str,
+) -> Result<()> {
+    let manifest = CkptManifest {
+        step,
+        world: 1,
+        shard_group_size: 1,
+        unit_elems: vec![],
+        param_names: params.names.clone(),
+        param_shapes: params.shapes.clone(),
+        model_name: model_name.to_string(),
+        config_fingerprint: config_fingerprint.to_string(),
+    };
+    write_consolidated(out_file, &manifest, &params.flatten())
+}
+
+/// A loaded consolidated checkpoint.
+pub struct Consolidated {
+    pub step: u64,
+    pub model_name: String,
+    pub config_fingerprint: String,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub flat: Vec<f32>,
+}
+
+pub fn load_consolidated(path: &Path) -> Result<Consolidated> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut r = ByteReader::new(&raw);
+    if r.u32()? != CONS_MAGIC {
+        bail!("{}: not a consolidated checkpoint (bad magic)", path.display());
+    }
+    if r.u32()? != 1 {
+        bail!("{}: unsupported version", path.display());
+    }
+    let step = r.u64()?;
+    let model_name = r.str()?;
+    let config_fingerprint = r.str()?;
+    let n = r.u32()? as usize;
+    let mut names = Vec::with_capacity(n);
+    let mut shapes = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for _ in 0..n {
+        names.push(r.str()?);
+        let ndim = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        total += shape.iter().product::<usize>();
+        shapes.push(shape);
+    }
+    let flat = r.f32s(total)?;
+    if r.remaining() != 0 {
+        bail!("{}: trailing bytes", path.display());
+    }
+    Ok(Consolidated { step, model_name, config_fingerprint, names, shapes, flat })
+}
+
+/// Load consolidated parameters into a matching [`ParamStore`].
+pub fn warm_start_params(params: &mut ParamStore, cons: &Consolidated) -> Result<()> {
+    if cons.names != params.names || cons.shapes != params.shapes {
+        bail!(
+            "consolidated checkpoint does not match model: ckpt has {} params for model '{}'",
+            cons.names.len(),
+            cons.model_name
+        );
+    }
+    params.unflatten_from(&cons.flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fsdp::{FsdpConfig, ShardStrategy};
+    use crate::model::InitScheme;
+    use crate::optim::components::OptimizerSpec;
+    use crate::runtime::pjrt::ModelArtifacts;
+
+    fn arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "t".into(),
+            vocab_size: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 8,
+            batch_size: 2,
+            num_params: 0,
+            flops_per_token: 0,
+            param_shapes: vec![
+                ("a".into(), vec![16, 8]),
+                ("b".into(), vec![2, 8]),
+                ("c".into(), vec![8]),
+            ],
+            files: Default::default(),
+        }
+    }
+
+    fn opt() -> OptimizerSpec {
+        OptimizerSpec::AdamW { lr: 0.01, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modalities-ckpt-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn grads(params: &ParamStore, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Pcg64::new(seed);
+        params.bufs.iter().map(|b| (0..b.len()).map(|_| rng.next_f32() - 0.5).collect()).collect()
+    }
+
+    #[test]
+    fn sharded_save_load_resume_exact() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 1);
+        let cfg = FsdpConfig { world: 3, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg.clone(), &opt()).unwrap();
+        let g: Vec<Vec<Vec<f32>>> = (0..3).map(|r| grads(&params, r as u64)).collect();
+        eng.apply_grads(&g, 1.0, None).unwrap();
+
+        let dir = tmpdir("sharded");
+        let ckpt = save_sharded(&dir, 17, &eng, &params, "t", "fp").unwrap();
+        assert!(latest_checkpoint(&dir).unwrap().ends_with("step_00000017"));
+
+        let mut eng2 = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let step = load_sharded(&ckpt, &mut eng2).unwrap();
+        assert_eq!(step, 17);
+
+        // Continued training must be bit-identical.
+        let g2: Vec<Vec<Vec<f32>>> = (0..3).map(|r| grads(&params, 100 + r as u64)).collect();
+        eng.apply_grads(&g2, 1.0, None).unwrap();
+        eng2.apply_grads(&g2, 1.0, None).unwrap();
+        let (mut o1, mut o2) = (params.clone(), params.clone());
+        eng.unshard_into(&mut o1).unwrap();
+        eng2.unshard_into(&mut o2).unwrap();
+        assert_eq!(o1.flatten(), o2.flatten());
+    }
+
+    #[test]
+    fn world_mismatch_rejected() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 2);
+        let eng3 = FsdpEngine::new(
+            &params,
+            FsdpConfig { world: 3, ..Default::default() },
+            &opt(),
+        )
+        .unwrap();
+        let dir = tmpdir("mismatch");
+        let ckpt = save_sharded(&dir, 1, &eng3, &params, "t", "fp").unwrap();
+        let mut eng2 = FsdpEngine::new(
+            &params,
+            FsdpConfig { world: 2, ..Default::default() },
+            &opt(),
+        )
+        .unwrap();
+        let e = load_sharded(&ckpt, &mut eng2).err().map(|e| e.to_string()).unwrap();
+        assert!(e.contains("world"), "{e}");
+    }
+
+    #[test]
+    fn consolidation_reconstructs_params() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 5);
+        for strategy in [ShardStrategy::Full, ShardStrategy::Hybrid { shard_size: 2 }] {
+            let cfg = FsdpConfig { world: 4, unit_bytes: 200, strategy, ..Default::default() };
+            let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+            let g: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, r as u64)).collect();
+            eng.apply_grads(&g, 1.0, None).unwrap();
+            let mut truth = params.clone();
+            eng.unshard_into(&mut truth).unwrap();
+
+            let dir = tmpdir(&format!("cons-{strategy:?}"));
+            let ckpt = save_sharded(&dir, 9, &eng, &params, "t", "fp").unwrap();
+            let out = dir.join("model.mckpt");
+            consolidate(&ckpt, &out).unwrap();
+            let cons = load_consolidated(&out).unwrap();
+            assert_eq!(cons.step, 9);
+            assert_eq!(cons.names, params.names);
+            assert_eq!(cons.flat, truth.flatten(), "strategy {strategy:?}");
+
+            // warm start into a fresh store
+            let mut fresh = ParamStore::init(&a, InitScheme::Zeros, 0);
+            warm_start_params(&mut fresh, &cons).unwrap();
+            assert_eq!(fresh.flatten(), truth.flatten());
+        }
+    }
+
+    #[test]
+    fn save_consolidated_direct() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 8);
+        let dir = tmpdir("direct");
+        let f = dir.join("direct.mckpt");
+        save_consolidated(&f, &params, 3, "t", "fp").unwrap();
+        let cons = load_consolidated(&f).unwrap();
+        assert_eq!(cons.flat, params.flatten());
+        // Mismatched model rejected on warm start.
+        let mut other = ParamStore::init(&a, InitScheme::Zeros, 0);
+        other.names[0] = "renamed".into();
+        assert!(warm_start_params(&mut other, &cons).is_err());
+    }
+
+    #[test]
+    fn corrupt_files_rejected() {
+        let dir = tmpdir("corrupt");
+        std::fs::write(dir.join("x.mckpt"), b"junk").unwrap();
+        assert!(load_consolidated(&dir.join("x.mckpt")).is_err());
+        assert!(read_manifest(&dir).is_err());
+        assert!(latest_checkpoint(&dir).is_none());
+    }
+}

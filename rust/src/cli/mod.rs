@@ -1,0 +1,131 @@
+//! Minimal CLI argument substrate (no `clap` in the offline vendor
+//! set): positional subcommands + `--key value` options + `--flag`
+//! switches + repeatable `--set path=value` overrides.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand chain first).
+    pub positional: Vec<String>,
+    /// `--key value` options (last occurrence wins) …
+    pub options: BTreeMap<String, String>,
+    /// … except `--set`, which accumulates.
+    pub sets: Vec<String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+/// Option keys that take a value.
+const VALUE_KEYS: &[&str] = &[
+    "config", "out", "from", "to", "corpus", "vocab", "workers", "docs", "model", "steps",
+    "world", "prompt", "ckpt", "run-dir", "seq-len", "batch-docs", "merges", "seed",
+    "mean-words", "unit-mb",
+];
+
+pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.into_iter();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            if key == "set" {
+                let v = it.next().ok_or_else(|| anyhow::anyhow!("--set needs path=value"))?;
+                args.sets.push(v);
+            } else if VALUE_KEYS.contains(&key) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("option --{key} needs a value"))?;
+                args.options.insert(key.to_string(), v);
+            } else {
+                args.flags.push(key.to_string());
+            }
+        } else {
+            args.positional.push(a);
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn need(&self, key: &str) -> Result<&str> {
+        self.opt(key).ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} must be an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, f: &str) -> bool {
+        self.flags.iter().any(|x| x == f)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+pub fn usage() -> &'static str {
+    "modalities — PyTorch-native-style LLM training framework (rust + JAX + Pallas reproduction)
+
+USAGE:
+  modalities train      --config <yaml> [--set path=value ...] [--resume]
+  modalities sweep      --config <yaml> [--dry-run] [--set ...]
+  modalities data gen   --out <jsonl> [--docs N] [--mean-words N] [--seed N]
+  modalities data index --corpus <jsonl>
+  modalities data train-vocab --corpus <jsonl> --out <bpe> [--merges N]
+  modalities data tokenize --corpus <jsonl> --vocab <bpe> --out <mmtok> [--workers N]
+  modalities data info  --corpus <mmtok>
+  modalities convert    --from <ckpt_dir> --to <out.mckpt>
+  modalities generate   --config <yaml> --ckpt <mckpt> --prompt <text>
+  modalities components                     # list registered components
+  modalities config resolve --config <yaml> # print interpolated config
+  modalities tune       --world N [--model llama3_8b]
+  modalities trace pp   [--set stages=4] [--set micros=16]
+  modalities version
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &[&str]) -> Args {
+        parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = p(&[
+            "train", "--config", "c.yaml", "--set", "a.b=1", "--set", "c=2", "--resume",
+        ]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.opt("config"), Some("c.yaml"));
+        assert_eq!(a.sets, vec!["a.b=1", "c=2"]);
+        assert!(a.has_flag("resume"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(["--config".to_string()]).is_err());
+        assert!(parse(["--set".to_string()]).is_err());
+    }
+
+    #[test]
+    fn need_and_defaults() {
+        let a = p(&["data", "gen", "--docs", "100"]);
+        assert_eq!(a.positional, vec!["data", "gen"]);
+        assert_eq!(a.opt_usize("docs", 5).unwrap(), 100);
+        assert_eq!(a.opt_usize("workers", 5).unwrap(), 5);
+        assert!(a.need("out").is_err());
+        assert!(p(&["x", "--docs", "abc"]).opt_usize("docs", 1).is_err());
+    }
+}

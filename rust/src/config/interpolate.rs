@@ -1,0 +1,240 @@
+//! Config interpolation pass.
+//!
+//! Two substitution forms inside string scalars:
+//!
+//! * `${env:VAR}` / `${env:VAR:-default}` — environment lookup (missing
+//!   variable without default is a hard error: configs must be fully
+//!   resolvable to be self-contained).
+//! * `${cfg:path.to.key}` — reference another config value. If the whole
+//!   scalar is a single reference the referenced *node* is copied
+//!   (preserving its type, including mappings/sequences); otherwise the
+//!   referenced scalar is stringified into place.
+//!
+//! `cfg:` references may chain (a references b references c) but cycles
+//! are detected and reported with the participating paths.
+
+use super::Config;
+use crate::yaml::{Node, Value};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashSet;
+
+pub fn interpolate(cfg: &mut Config) -> Result<()> {
+    // Iterate until fixpoint (chained refs), with a cycle guard.
+    for _round in 0..16 {
+        let mut changed = false;
+        let snapshot = cfg.root.clone();
+        let source = cfg.source.clone();
+        walk(&mut cfg.root, &snapshot, &source, &mut changed, &mut Vec::new())?;
+        if !changed {
+            return Ok(());
+        }
+    }
+    bail!("{}: interpolation did not converge (reference cycle?)", cfg.source);
+}
+
+fn walk(
+    node: &mut Node,
+    root: &Node,
+    source: &str,
+    changed: &mut bool,
+    stack: &mut Vec<String>,
+) -> Result<()> {
+    match &mut node.value {
+        Value::Map(entries) => {
+            for (_, v) in entries.iter_mut() {
+                walk(v, root, source, changed, stack)?;
+            }
+        }
+        Value::Seq(items) => {
+            for v in items.iter_mut() {
+                walk(v, root, source, changed, stack)?;
+            }
+        }
+        Value::Str(s) => {
+            if let Some(new) = substitute(s, root, source, node.line, stack)? {
+                *changed = true;
+                node.value = new;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Returns Some(new value) if the string contained substitutions.
+fn substitute(
+    s: &str,
+    root: &Node,
+    source: &str,
+    line: usize,
+    stack: &mut Vec<String>,
+) -> Result<Option<Value>> {
+    if !s.contains("${") {
+        return Ok(None);
+    }
+    // Whole-string single reference → typed copy.
+    if s.starts_with("${") && s.ends_with('}') && s.matches("${").count() == 1 {
+        let inner = &s[2..s.len() - 1];
+        if let Some(path) = inner.strip_prefix("cfg:") {
+            let n = resolve_cfg(path.trim(), root, source, line, stack)?;
+            return Ok(Some(n.value));
+        }
+    }
+    // Otherwise: textual splice of each ${...} occurrence.
+    let mut out = String::new();
+    let mut rest = s;
+    while let Some(start) = rest.find("${") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        let end = after
+            .find('}')
+            .ok_or_else(|| anyhow!("{source}:{line}: unterminated '${{' in '{s}'"))?;
+        let expr = &after[..end];
+        let text = eval_expr(expr, root, source, line, stack)?;
+        out.push_str(&text);
+        rest = &after[end + 1..];
+    }
+    out.push_str(rest);
+    Ok(Some(crate::yaml::parse(&out).map(|n| n.value).unwrap_or(Value::Str(out))))
+}
+
+fn eval_expr(
+    expr: &str,
+    root: &Node,
+    source: &str,
+    line: usize,
+    stack: &mut Vec<String>,
+) -> Result<String> {
+    if let Some(envspec) = expr.strip_prefix("env:") {
+        let (var, default) = match envspec.split_once(":-") {
+            Some((v, d)) => (v.trim(), Some(d)),
+            None => (envspec.trim(), None),
+        };
+        match std::env::var(var) {
+            Ok(v) => Ok(v),
+            Err(_) => default.map(|d| d.to_string()).ok_or_else(|| {
+                anyhow!("{source}:{line}: environment variable '{var}' is not set and no default given")
+            }),
+        }
+    } else if let Some(path) = expr.strip_prefix("cfg:") {
+        let n = resolve_cfg(path.trim(), root, source, line, stack)?;
+        match &n.value {
+            Value::Map(_) | Value::Seq(_) => bail!(
+                "{source}:{line}: '${{cfg:{path}}}' used inside a string must reference a scalar"
+            ),
+            v => Ok(format!("{v}")),
+        }
+    } else {
+        bail!("{source}:{line}: unknown interpolation '${{{expr}}}' (use env: or cfg:)")
+    }
+}
+
+fn resolve_cfg(
+    path: &str,
+    root: &Node,
+    source: &str,
+    line: usize,
+    stack: &mut Vec<String>,
+) -> Result<Node> {
+    if stack.iter().any(|p| p == path) {
+        bail!(
+            "{source}:{line}: config reference cycle: {} -> {path}",
+            stack.join(" -> ")
+        );
+    }
+    let n = root
+        .at_path(path)
+        .ok_or_else(|| anyhow!("{source}:{line}: '${{cfg:{path}}}' does not resolve"))?
+        .clone();
+    // Referenced node may itself contain references — they resolve in the
+    // next fixpoint round; we only guard the direct cycle here.
+    let mut seen: HashSet<&str> = HashSet::new();
+    seen.insert(path);
+    stack.push(path.to_string());
+    stack.pop();
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+
+    #[test]
+    fn env_with_default() {
+        std::env::remove_var("MODALITIES_TEST_UNSET");
+        let c = Config::from_str_named(
+            "a: ${env:MODALITIES_TEST_UNSET:-fallback}\n",
+            "<t>",
+        )
+        .unwrap();
+        assert_eq!(c.str("a").unwrap(), "fallback");
+    }
+
+    #[test]
+    fn env_set() {
+        std::env::set_var("MODALITIES_TEST_SET", "42");
+        let c = Config::from_str_named("a: ${env:MODALITIES_TEST_SET}\n", "<t>").unwrap();
+        // Spliced text re-parses as a scalar: numeric env values become ints.
+        assert_eq!(c.i64("a").unwrap(), 42);
+    }
+
+    #[test]
+    fn env_missing_is_error() {
+        std::env::remove_var("MODALITIES_TEST_UNSET2");
+        let e = Config::from_str_named("a: ${env:MODALITIES_TEST_UNSET2}\n", "<t>");
+        assert!(e.is_err());
+        assert!(e.unwrap_err().to_string().contains("not set"));
+    }
+
+    #[test]
+    fn cfg_scalar_and_typed_copy() {
+        let c = Config::from_str_named(
+            "base:\n  hidden: 128\n  name: tiny\nmodel:\n  width: ${cfg:base.hidden}\n  tag: model-${cfg:base.name}\n",
+            "<t>",
+        )
+        .unwrap();
+        assert_eq!(c.usize("model.width").unwrap(), 128);
+        assert_eq!(c.str("model.tag").unwrap(), "model-tiny");
+    }
+
+    #[test]
+    fn cfg_copies_collections() {
+        let c = Config::from_str_named(
+            "defaults:\n  opt:\n    lr: 1e-3\n    betas: [0.9, 0.95]\nrun:\n  optimizer: ${cfg:defaults.opt}\n",
+            "<t>",
+        )
+        .unwrap();
+        assert_eq!(c.f64("run.optimizer.lr").unwrap(), 1e-3);
+        assert_eq!(c.seq("run.optimizer.betas").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chained_refs_resolve() {
+        let c = Config::from_str_named(
+            "a: 7\nb: ${cfg:a}\nc: ${cfg:b}\n",
+            "<t>",
+        )
+        .unwrap();
+        assert_eq!(c.i64("c").unwrap(), 7);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let e = Config::from_str_named("a: ${cfg:b}\nb: ${cfg:a}\n", "<t>");
+        assert!(e.is_err());
+        let msg = e.unwrap_err().to_string();
+        assert!(msg.contains("converge") || msg.contains("cycle"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_scheme_rejected() {
+        let e = Config::from_str_named("a: ${magic:x}\n", "<t>");
+        assert!(e.unwrap_err().to_string().contains("unknown interpolation"));
+    }
+
+    #[test]
+    fn missing_cfg_path_rejected() {
+        let e = Config::from_str_named("a: ${cfg:no.such}\n", "<t>");
+        assert!(e.unwrap_err().to_string().contains("does not resolve"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Declarative configuration layer.
+//!
+//! A [`Config`] is a validated, interpolated YAML document describing a
+//! *complete* training setup (the paper's "self-contained configuration"
+//! principle: the config plus the data is the experiment; the code is
+//! generic). This module provides:
+//!
+//! * loading + interpolation (`${env:VAR}`, `${env:VAR:-default}`, and
+//!   config-internal `${cfg:path.to.key}` substitution),
+//! * typed, path-addressed accessors whose errors carry the YAML source
+//!   line (misconfiguration flagging),
+//! * stable fingerprinting (config hash recorded into run manifests and
+//!   checkpoints for reproducibility),
+//! * CLI overrides (`--set a.b.c=value`),
+//! * declarative sweep expansion (grid axes → list of resolved configs),
+//!   the tooling the paper motivates for "systematic ablations".
+
+mod interpolate;
+mod sweep;
+
+pub use sweep::{expand_sweep, SweepPoint};
+
+use crate::util::bytesio::fnv1a64;
+use crate::yaml::{self, Node, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A loaded, interpolated configuration document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub root: Node,
+    /// Where it was loaded from (diagnostics; "<inline>" for strings).
+    pub source: String,
+}
+
+impl Config {
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot read config {}", path.display()))?;
+        Self::from_str_named(&text, &path.display().to_string())
+    }
+
+    pub fn from_str_named(text: &str, source: &str) -> Result<Config> {
+        let root = yaml::parse(text).map_err(|e| anyhow!("{source}: {e}"))?;
+        if !matches!(root.value, Value::Map(_)) {
+            bail!("{source}: top-level config must be a mapping, got {}", root.kind());
+        }
+        let mut cfg = Config { root, source: source.to_string() };
+        interpolate::interpolate(&mut cfg)?;
+        Ok(cfg)
+    }
+
+    /// Stable 64-bit fingerprint of the resolved config (canonical
+    /// serialization → FNV-1a). Key order in the YAML file does not
+    /// affect the hash of semantically-reordered *values*, but map entry
+    /// order is preserved by design — two configs are "the same
+    /// experiment" iff their canonical form matches.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(canonical(&self.root).as_bytes())
+    }
+
+    /// Short hex fingerprint for run directories.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:016x}", self.fingerprint())
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn node(&self, path: &str) -> Result<&Node> {
+        self.root
+            .at_path(path)
+            .ok_or_else(|| anyhow!("{}: missing config key '{path}'", self.source))
+    }
+
+    pub fn opt(&self, path: &str) -> Option<&Node> {
+        self.root.at_path(path).filter(|n| !n.is_null())
+    }
+
+    pub fn str(&self, path: &str) -> Result<&str> {
+        let n = self.node(path)?;
+        n.as_str().ok_or_else(|| self.type_err(path, n, "string"))
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.opt(path).and_then(|n| n.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, path: &str) -> Result<usize> {
+        let n = self.node(path)?;
+        n.as_usize().ok_or_else(|| self.type_err(path, n, "non-negative integer"))
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> Result<usize> {
+        match self.opt(path) {
+            None => Ok(default),
+            Some(n) => n.as_usize().ok_or_else(|| self.type_err(path, n, "non-negative integer")),
+        }
+    }
+
+    pub fn i64(&self, path: &str) -> Result<i64> {
+        let n = self.node(path)?;
+        n.as_i64().ok_or_else(|| self.type_err(path, n, "integer"))
+    }
+
+    pub fn f64(&self, path: &str) -> Result<f64> {
+        let n = self.node(path)?;
+        n.as_f64().ok_or_else(|| self.type_err(path, n, "number"))
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> Result<f64> {
+        match self.opt(path) {
+            None => Ok(default),
+            Some(n) => n.as_f64().ok_or_else(|| self.type_err(path, n, "number")),
+        }
+    }
+
+    pub fn f32(&self, path: &str) -> Result<f32> {
+        Ok(self.f64(path)? as f32)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        match self.opt(path) {
+            None => Ok(default),
+            Some(n) => n.as_bool().ok_or_else(|| self.type_err(path, n, "bool")),
+        }
+    }
+
+    pub fn seq(&self, path: &str) -> Result<&[Node]> {
+        let n = self.node(path)?;
+        n.as_seq().ok_or_else(|| self.type_err(path, n, "sequence"))
+    }
+
+    fn type_err(&self, path: &str, n: &Node, want: &str) -> anyhow::Error {
+        anyhow!(
+            "{}:{}: config key '{path}' must be a {want}, got {} ({})",
+            self.source,
+            n.line,
+            n.kind(),
+            n.value
+        )
+    }
+
+    // ---- overrides ---------------------------------------------------------
+
+    /// Apply a `path=value` override (CLI `--set`). Creates intermediate
+    /// mappings as needed; the value is parsed with full YAML scalar/flow
+    /// rules (`--set train.lr=3e-4`, `--set data.files=[a,b]`).
+    pub fn set_override(&mut self, assignment: &str) -> Result<()> {
+        let (path, raw) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be 'path=value', got '{assignment}'"))?;
+        let value_doc = yaml::parse(raw.trim())
+            .map_err(|e| anyhow!("override value for '{path}': {e}"))?;
+        let mut cur = &mut self.root;
+        let segs: Vec<&str> = path.split('.').collect();
+        for (i, seg) in segs.iter().enumerate() {
+            if i + 1 == segs.len() {
+                cur.set(seg, value_doc);
+                break;
+            }
+            if cur.get(seg).is_none() || !matches!(cur.get(seg).unwrap().value, Value::Map(_)) {
+                cur.set(seg, Node::new(Value::Map(vec![]), 0));
+            }
+            cur = cur.get_mut(seg).unwrap();
+        }
+        Ok(())
+    }
+
+    /// Serialize the resolved config (debugging / provenance: written
+    /// into the run directory so the experiment is self-describing).
+    pub fn to_yaml(&self) -> String {
+        self.root.to_yaml()
+    }
+}
+
+/// Canonical form: block YAML with sorted mapping keys (order-insensitive
+/// fingerprints), recursion depth bounded by config nesting.
+fn canonical(node: &Node) -> String {
+    fn walk(n: &Node, out: &mut String) {
+        match &n.value {
+            Value::Map(m) => {
+                let mut keys: Vec<&(String, Node)> = m.iter().collect();
+                keys.sort_by(|a, b| a.0.cmp(&b.0));
+                out.push('{');
+                for (k, v) in keys {
+                    out.push_str(k);
+                    out.push('=');
+                    walk(v, out);
+                    out.push(';');
+                }
+                out.push('}');
+            }
+            Value::Seq(s) => {
+                out.push('[');
+                for v in s {
+                    walk(v, out);
+                    out.push(';');
+                }
+                out.push(']');
+            }
+            v => out.push_str(&format!("{v}")),
+        }
+    }
+    let mut out = String::new();
+    walk(node, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(src: &str) -> Config {
+        Config::from_str_named(src, "<test>").unwrap()
+    }
+
+    #[test]
+    fn typed_access_and_errors() {
+        let c = cfg("train:\n  lr: 3e-4\n  steps: 100\n  name: run\n  flag: true\n");
+        assert_eq!(c.f64("train.lr").unwrap(), 3e-4);
+        assert_eq!(c.usize("train.steps").unwrap(), 100);
+        assert_eq!(c.str("train.name").unwrap(), "run");
+        assert!(c.bool_or("train.flag", false).unwrap());
+        assert!(c.bool_or("train.missing", true).unwrap());
+        let e = c.usize("train.name").unwrap_err().to_string();
+        assert!(e.contains("train.name") && e.contains("integer"), "{e}");
+        let e = c.str("nope").unwrap_err().to_string();
+        assert!(e.contains("missing config key"));
+    }
+
+    #[test]
+    fn fingerprint_stable_and_order_insensitive_keys() {
+        let a = cfg("a: 1\nb: 2\n");
+        let b = cfg("b: 2\na: 1\n");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = cfg("a: 1\nb: 3\n");
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_types() {
+        assert_ne!(cfg("a: 1\n").fingerprint(), cfg("a: '1'\n").fingerprint());
+        assert_ne!(cfg("a: null\n").fingerprint(), cfg("a: 0\n").fingerprint());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = cfg("train:\n  lr: 1e-3\n");
+        c.set_override("train.lr=5e-4").unwrap();
+        c.set_override("model.hidden=128").unwrap();
+        c.set_override("data.files=[a.jsonl, b.jsonl]").unwrap();
+        assert_eq!(c.f64("train.lr").unwrap(), 5e-4);
+        assert_eq!(c.usize("model.hidden").unwrap(), 128);
+        assert_eq!(c.seq("data.files").unwrap().len(), 2);
+        assert!(c.set_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn top_level_must_be_mapping() {
+        assert!(Config::from_str_named("- 1\n- 2\n", "<t>").is_err());
+        assert!(Config::from_str_named("42\n", "<t>").is_err());
+    }
+
+    #[test]
+    fn resolved_yaml_roundtrips() {
+        let c = cfg("m:\n  h: 8\n  xs: [1, 2]\n");
+        let re = Config::from_str_named(&c.to_yaml(), "<re>").unwrap();
+        assert_eq!(re.usize("m.h").unwrap(), 8);
+        assert_eq!(c.fingerprint(), re.fingerprint());
+    }
+}

@@ -1,0 +1,235 @@
+//! Declarative sweep expansion — the paper's "systematic ablations at
+//! scale" workflow. A config may carry a `sweep:` section:
+//!
+//! ```yaml
+//! sweep:
+//!   axes:
+//!     - path: optimizer.lr
+//!       values: [1e-3, 3e-4, 1e-4]
+//!     - path: model.hidden_dim
+//!       values: [128, 256]
+//!   include:            # optional explicit extra points
+//!     - {optimizer.lr: 5e-4, model.hidden_dim: 384}
+//!   exclude:            # optional predicate points to drop
+//!     - {optimizer.lr: 1e-3, model.hidden_dim: 256}
+//! ```
+//!
+//! Expansion returns the cartesian product of the axes (plus includes,
+//! minus excludes) as fully-resolved standalone configs, each with the
+//! `sweep` section removed and a `sweep_point` provenance record
+//! injected under `settings.sweep_point`. Every expanded config is a
+//! complete, self-contained experiment definition — reproducible in
+//! isolation, which is precisely the property the paper argues for.
+
+use super::Config;
+use crate::yaml::{Node, Value};
+use anyhow::{bail, Context, Result};
+
+/// One expanded point: the override assignments that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    pub assignments: Vec<(String, Node)>,
+}
+
+impl SweepPoint {
+    pub fn label(&self) -> String {
+        self.assignments
+            .iter()
+            .map(|(p, v)| format!("{}={}", p.rsplit('.').next().unwrap_or(p), v.value))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Expand `cfg` into its sweep points. A config without a `sweep`
+/// section expands to itself (one point, empty assignments).
+pub fn expand_sweep(cfg: &Config) -> Result<Vec<(Config, SweepPoint)>> {
+    let Some(sweep) = cfg.root.at_path("sweep") else {
+        return Ok(vec![(cfg.clone(), SweepPoint { assignments: vec![] })]);
+    };
+    let axes_node = sweep
+        .get("axes")
+        .context("sweep section requires 'axes'")?;
+    let axes = axes_node.as_seq().context("sweep.axes must be a sequence")?;
+
+    let mut parsed_axes: Vec<(String, Vec<Node>)> = Vec::new();
+    for (i, axis) in axes.iter().enumerate() {
+        let path = axis
+            .get("path")
+            .and_then(|n| n.as_str())
+            .with_context(|| format!("sweep.axes.{i} requires a string 'path'"))?;
+        let values = axis
+            .get("values")
+            .and_then(|n| n.as_seq())
+            .with_context(|| format!("sweep.axes.{i} requires a 'values' sequence"))?;
+        if values.is_empty() {
+            bail!("sweep.axes.{i} ({path}): empty values");
+        }
+        if parsed_axes.iter().any(|(p, _)| p == path) {
+            bail!("sweep axis path '{path}' appears twice");
+        }
+        // Every axis path must exist in the base config: sweeps override,
+        // they do not invent structure (catches typos at expansion time).
+        if cfg.root.at_path(path).is_none() {
+            bail!("sweep axis path '{path}' does not exist in the base config");
+        }
+        parsed_axes.push((path.to_string(), values.to_vec()));
+    }
+
+    // Cartesian product.
+    let mut points: Vec<Vec<(String, Node)>> = vec![vec![]];
+    for (path, values) in &parsed_axes {
+        let mut next = Vec::with_capacity(points.len() * values.len());
+        for p in &points {
+            for v in values {
+                let mut q = p.clone();
+                q.push((path.clone(), v.clone()));
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+
+    // Includes / excludes.
+    let parse_point_map = |n: &Node| -> Result<Vec<(String, Node)>> {
+        let m = n.as_map().context("sweep include/exclude entries must be mappings")?;
+        Ok(m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+    };
+    if let Some(inc) = sweep.get("include").and_then(|n| n.as_seq()) {
+        for n in inc {
+            points.push(parse_point_map(n)?);
+        }
+    }
+    if let Some(exc) = sweep.get("exclude").and_then(|n| n.as_seq()) {
+        let mut excluded: Vec<Vec<(String, Node)>> = Vec::new();
+        for n in exc {
+            excluded.push(parse_point_map(n)?);
+        }
+        points.retain(|p| {
+            !excluded.iter().any(|e| {
+                e.iter().all(|(ek, ev)| p.iter().any(|(pk, pv)| pk == ek && pv == ev))
+            })
+        });
+    }
+
+    // Materialize configs.
+    let mut out = Vec::with_capacity(points.len());
+    for assignments in points {
+        let mut c = cfg.clone();
+        // Drop the sweep section: each point is a plain experiment.
+        if let Value::Map(m) = &mut c.root.value {
+            m.retain(|(k, _)| k != "sweep");
+        }
+        for (path, v) in &assignments {
+            set_path(&mut c.root, path, v.clone());
+        }
+        // Provenance record.
+        let mut point_map = Node::new(Value::Map(vec![]), 0);
+        for (path, v) in &assignments {
+            point_map.set(path, v.clone());
+        }
+        if c.root.get("settings").is_none() {
+            c.root.set("settings", Node::new(Value::Map(vec![]), 0));
+        }
+        c.root.get_mut("settings").unwrap().set("sweep_point", point_map);
+        out.push((c, SweepPoint { assignments }));
+    }
+    Ok(out)
+}
+
+fn set_path(root: &mut Node, path: &str, v: Node) {
+    let segs: Vec<&str> = path.split('.').collect();
+    let mut cur = root;
+    for (i, seg) in segs.iter().enumerate() {
+        if i + 1 == segs.len() {
+            cur.set(seg, v);
+            return;
+        }
+        if cur.get(seg).is_none() {
+            cur.set(seg, Node::new(Value::Map(vec![]), 0));
+        }
+        cur = cur.get_mut(seg).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = "\
+model:
+  hidden_dim: 64
+optimizer:
+  lr: 1e-3
+sweep:
+  axes:
+    - path: optimizer.lr
+      values: [1e-3, 3e-4]
+    - path: model.hidden_dim
+      values: [64, 128, 256]
+";
+
+    #[test]
+    fn grid_expansion() {
+        let cfg = Config::from_str_named(BASE, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 6);
+        // Each point is standalone: no sweep section, overrides applied.
+        for (c, p) in &pts {
+            assert!(c.opt("sweep").is_none());
+            assert_eq!(p.assignments.len(), 2);
+            let lr = c.f64("optimizer.lr").unwrap();
+            assert!(lr == 1e-3 || lr == 3e-4);
+        }
+        // All six combos distinct.
+        let mut fps: Vec<u64> = pts.iter().map(|(c, _)| c.fingerprint()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 6);
+    }
+
+    #[test]
+    fn provenance_recorded() {
+        let cfg = Config::from_str_named(BASE, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        let (c, p) = &pts[0];
+        assert!(c.opt("settings.sweep_point").is_some());
+        assert!(!p.label().is_empty());
+    }
+
+    #[test]
+    fn include_exclude() {
+        let src = format!(
+            "{BASE}  include:\n    - {{optimizer.lr: 5e-4}}\n  exclude:\n    - {{optimizer.lr: 1e-3, model.hidden_dim: 256}}\n"
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        // 6 grid - 1 excluded + 1 included = 6
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().any(|(c, _)| c.f64("optimizer.lr").unwrap() == 5e-4));
+        assert!(!pts.iter().any(|(c, _)| c.f64("optimizer.lr").unwrap() == 1e-3
+            && c.usize("model.hidden_dim").unwrap() == 256));
+    }
+
+    #[test]
+    fn no_sweep_is_identity() {
+        let cfg = Config::from_str_named("a: 1\n", "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].0, cfg);
+    }
+
+    #[test]
+    fn typo_axis_path_rejected() {
+        let src = "model:\n  h: 1\nsweep:\n  axes:\n    - path: model.hdden\n      values: [1]\n";
+        let e = expand_sweep(&Config::from_str_named(src, "<t>").unwrap());
+        assert!(e.unwrap_err().to_string().contains("does not exist"));
+    }
+
+    #[test]
+    fn duplicate_axis_rejected() {
+        let src = "a: 1\nsweep:\n  axes:\n    - path: a\n      values: [1]\n    - path: a\n      values: [2]\n";
+        let e = expand_sweep(&Config::from_str_named(src, "<t>").unwrap());
+        assert!(e.unwrap_err().to_string().contains("twice"));
+    }
+}

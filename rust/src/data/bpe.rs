@@ -1,0 +1,525 @@
+//! Byte-level BPE tokenizer (GPT-2 family) — trainer + encoder.
+//!
+//! The paper benchmarks its data pipeline with the HF LLaMa-3 tokenizer;
+//! offline we substitute an in-repo byte-level BPE of the same
+//! algorithmic class (see DESIGN.md §Substitutions). Both the Modalities
+//! pipeline and the Megatron-style baseline use *this* tokenizer, so the
+//! throughput comparison isolates pipeline design, not tokenizer choice.
+//!
+//! Design notes:
+//! * **Byte-level**: every UTF-8 byte is a base token (ids 0..255), so
+//!   `decode(encode(s)) == s` for arbitrary input — a property test.
+//! * **Pre-tokenization** splits text into "words" (runs of letters,
+//!   digits, or other characters, with a preceding space attached, GPT-2
+//!   style). Merges never cross word boundaries, which keeps the encode
+//!   hot loop local and cacheable.
+//! * **Encode hot path**: per-word greedy lowest-rank merging with a
+//!   thread-local word→ids cache. Natural-language corpora repeat words
+//!   heavily (Zipf), so the cache converts the O(n·m) merge loop into a
+//!   hash lookup for the bulk of tokens — this is the single biggest
+//!   contributor to the pipeline's throughput (§Perf).
+
+use crate::util::bytesio::{ByteReader, ByteWriter};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::path::Path;
+
+/// FNV-1a hasher for the encode word cache: the keys are short byte
+/// strings and the cache lookup is the single hottest operation of the
+/// tokenization pipeline; FNV beats SipHash ~2x there (§Perf i1). Not
+/// DoS-resistant — fine for a cache keyed by corpus content.
+#[derive(Default)]
+pub struct FnvHasher(u64);
+
+impl Hasher for FnvHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+}
+
+type FnvMap<K, V> = HashMap<K, V, BuildHasherDefault<FnvHasher>>;
+
+/// Token id type. u32 covers any practical vocab.
+pub type TokenId = u32;
+
+/// Reserved special tokens appended after byte + merge tokens.
+pub const SPECIAL_TOKENS: [&str; 4] = ["<|endoftext|>", "<|pad|>", "<|bos|>", "<|unk|>"];
+
+/// A trained byte-level BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct BpeVocab {
+    /// merge list in rank order: (left_id, right_id) -> new id (256+rank)
+    pub merges: Vec<(TokenId, TokenId)>,
+    /// rank lookup: (left, right) -> rank
+    ranks: HashMap<(TokenId, TokenId), u32>,
+    /// id -> byte sequence (materialized for O(1) decode)
+    pieces: Vec<Vec<u8>>,
+}
+
+impl BpeVocab {
+    /// Base vocabulary: 256 byte tokens, no merges.
+    pub fn byte_fallback() -> Self {
+        Self::from_merges(Vec::new())
+    }
+
+    pub fn from_merges(merges: Vec<(TokenId, TokenId)>) -> Self {
+        let mut pieces: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut ranks = HashMap::with_capacity(merges.len());
+        for (rank, &(l, r)) in merges.iter().enumerate() {
+            let mut p = pieces[l as usize].clone();
+            p.extend_from_slice(&pieces[r as usize]);
+            pieces.push(p);
+            ranks.insert((l, r), rank as u32);
+        }
+        for s in SPECIAL_TOKENS {
+            pieces.push(s.as_bytes().to_vec());
+        }
+        Self { merges, ranks, pieces }
+    }
+
+    /// Total vocabulary size (bytes + merges + specials).
+    pub fn size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    pub fn special_id(&self, name: &str) -> Option<TokenId> {
+        SPECIAL_TOKENS
+            .iter()
+            .position(|s| *s == name)
+            .map(|i| (256 + self.merges.len() + i) as TokenId)
+    }
+
+    pub fn eot_id(&self) -> TokenId {
+        self.special_id("<|endoftext|>").unwrap()
+    }
+
+    pub fn pad_id(&self) -> TokenId {
+        self.special_id("<|pad|>").unwrap()
+    }
+
+    /// Byte content of a token id.
+    pub fn piece(&self, id: TokenId) -> Option<&[u8]> {
+        self.pieces.get(id as usize).map(|v| v.as_slice())
+    }
+
+    // ---- persistence ------------------------------------------------------
+
+    const MAGIC: u32 = 0x4250_4531; // "BPE1"
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = ByteWriter::with_capacity(16 + self.merges.len() * 8);
+        w.u32(Self::MAGIC);
+        w.u32(self.merges.len() as u32);
+        for &(l, r) in &self.merges {
+            w.u32(l);
+            w.u32(r);
+        }
+        std::fs::write(path, &w.buf)
+            .with_context(|| format!("writing vocab to {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading vocab from {}", path.display()))?;
+        let mut r = ByteReader::new(&raw);
+        if r.u32()? != Self::MAGIC {
+            bail!("{}: not a BPE vocab file (bad magic)", path.display());
+        }
+        let n = r.u32()? as usize;
+        let mut merges = Vec::with_capacity(n);
+        for _ in 0..n {
+            let l = r.u32()?;
+            let rr = r.u32()?;
+            // Validate: a merge may only reference byte tokens or earlier
+            // merge results — corrupt files fail here, not at encode time.
+            let limit = (256 + merges.len()) as TokenId;
+            if l >= limit || rr >= limit {
+                bail!("{}: merge {} references future token", path.display(), merges.len());
+            }
+            merges.push((l, rr));
+        }
+        Ok(Self::from_merges(merges))
+    }
+}
+
+/// Pre-tokenizer: split into words — a run of letters, digits, or
+/// non-alphanumerics, with one preceding space attached (GPT-2 style,
+/// simplified: no regex crate needed on the hot path).
+pub fn pretokenize(text: &str) -> impl Iterator<Item = &str> {
+    PreTok { text, pos: 0 }
+}
+
+struct PreTok<'a> {
+    text: &'a str,
+    pos: usize,
+}
+
+#[derive(PartialEq, Clone, Copy)]
+enum Class {
+    Letter,
+    Digit,
+    Space,
+    Other,
+}
+
+fn classify(c: char) -> Class {
+    if c.is_alphabetic() {
+        Class::Letter
+    } else if c.is_ascii_digit() {
+        Class::Digit
+    } else if c == ' ' {
+        Class::Space
+    } else if c.is_whitespace() {
+        Class::Other // \n, \t grouped separately from ' '
+    } else {
+        Class::Other
+    }
+}
+
+impl<'a> Iterator for PreTok<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        let rest = &self.text[self.pos..];
+        if rest.is_empty() {
+            return None;
+        }
+        let mut chars = rest.char_indices();
+        let (_, first) = chars.next().unwrap();
+        let start = self.pos;
+        let mut lead = first;
+        let mut body_start = 0;
+        // A single leading space attaches to the following word.
+        if first == ' ' {
+            match chars.next() {
+                Some((i, c)) => {
+                    lead = c;
+                    body_start = i;
+                }
+                None => {
+                    self.pos = self.text.len();
+                    return Some(rest);
+                }
+            }
+        }
+        if lead == ' ' {
+            // Multiple spaces: emit the space run as one word.
+            let mut end = rest.len();
+            for (i, c) in rest.char_indices() {
+                if c != ' ' {
+                    end = i;
+                    break;
+                }
+            }
+            // Keep one space for the next word if it directly precedes a
+            // non-space (GPT-2 behaviour: " a" merges space into the word).
+            let keep = if end < rest.len() && end >= 1 { end - 1 } else { end };
+            let cut = if keep == 0 { end } else { keep };
+            self.pos = start + cut;
+            return Some(&rest[..cut]);
+        }
+        let cls = classify(lead);
+        let mut end = rest.len();
+        for (i, c) in rest[body_start..].char_indices().skip(1) {
+            if classify(c) != cls || c == ' ' {
+                end = body_start + i;
+                break;
+            }
+        }
+        self.pos = start + end;
+        Some(&rest[..end])
+    }
+}
+
+/// Encoder with a per-instance word cache. Not `Sync` (each pipeline
+/// worker owns one); cloning shares the vocab (Arc'd by the caller).
+pub struct BpeEncoder {
+    vocab: std::sync::Arc<BpeVocab>,
+    cache: FnvMap<Box<[u8]>, Vec<TokenId>>,
+    cache_cap: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl BpeEncoder {
+    pub fn new(vocab: std::sync::Arc<BpeVocab>) -> Self {
+        Self { vocab, cache: FnvMap::default(), cache_cap: 1 << 18, cache_hits: 0, cache_misses: 0 }
+    }
+
+    pub fn vocab(&self) -> &BpeVocab {
+        &self.vocab
+    }
+
+    /// Encode a full text: pre-tokenize, per-word merge (cached).
+    pub fn encode(&mut self, text: &str) -> Vec<TokenId> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 4);
+        for word in pretokenize(text) {
+            self.encode_word_into(word.as_bytes(), &mut out);
+        }
+        out
+    }
+
+    pub fn encode_into(&mut self, text: &str, out: &mut Vec<TokenId>) {
+        for word in pretokenize(text) {
+            self.encode_word_into(word.as_bytes(), out);
+        }
+    }
+
+    fn encode_word_into(&mut self, word: &[u8], out: &mut Vec<TokenId>) {
+        if let Some(ids) = self.cache.get(word) {
+            self.cache_hits += 1;
+            out.extend_from_slice(ids);
+            return;
+        }
+        self.cache_misses += 1;
+        let ids = merge_word(&self.vocab, word);
+        out.extend_from_slice(&ids);
+        if self.cache.len() < self.cache_cap && word.len() <= 64 {
+            self.cache.insert(word.to_vec().into_boxed_slice(), ids);
+        }
+    }
+
+    /// Decode ids back to bytes (lossless inverse of encode for ids the
+    /// vocab knows; unknown ids are skipped).
+    pub fn decode(&self, ids: &[TokenId]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(ids.len() * 3);
+        for &id in ids {
+            if let Some(p) = self.vocab.piece(id) {
+                out.extend_from_slice(p);
+            }
+        }
+        out
+    }
+
+    pub fn decode_string(&self, ids: &[TokenId]) -> String {
+        String::from_utf8_lossy(&self.decode(ids)).into_owned()
+    }
+}
+
+/// Greedy lowest-rank merge of one word.
+fn merge_word(vocab: &BpeVocab, word: &[u8]) -> Vec<TokenId> {
+    let mut ids: Vec<TokenId> = word.iter().map(|&b| b as TokenId).collect();
+    if ids.len() < 2 {
+        return ids;
+    }
+    loop {
+        // Find the lowest-rank adjacent pair.
+        let mut best: Option<(u32, usize)> = None;
+        for i in 0..ids.len() - 1 {
+            if let Some(&rank) = vocab.ranks.get(&(ids[i], ids[i + 1])) {
+                if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                    best = Some((rank, i));
+                }
+            }
+        }
+        let Some((rank, i)) = best else { break };
+        let new_id = 256 + rank;
+        ids[i] = new_id;
+        ids.remove(i + 1);
+        if ids.len() < 2 {
+            break;
+        }
+    }
+    ids
+}
+
+/// BPE trainer: learn `num_merges` merges from sample text.
+///
+/// Classic algorithm over word frequency tables (the training corpus is
+/// pre-tokenized; pair counts are word-frequency weighted). Suitable for
+/// the vocab sizes the examples use (≤ 8k merges) — vocabulary training
+/// is a preprocessing step, not a hot path.
+pub fn train_bpe(texts: &[&str], num_merges: usize) -> BpeVocab {
+    // Word frequency table.
+    let mut word_freq: HashMap<&str, u64> = HashMap::new();
+    for t in texts {
+        for w in pretokenize(t) {
+            *word_freq.entry(w).or_insert(0) += 1;
+        }
+    }
+    // Represent each distinct word as a token sequence.
+    let mut words: Vec<(Vec<TokenId>, u64)> = word_freq
+        .iter()
+        .map(|(w, &f)| (w.bytes().map(|b| b as TokenId).collect(), f))
+        .collect();
+    words.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0))); // deterministic
+
+    let mut merges: Vec<(TokenId, TokenId)> = Vec::with_capacity(num_merges);
+    for merge_idx in 0..num_merges {
+        // Count adjacent pairs.
+        let mut pair_counts: HashMap<(TokenId, TokenId), u64> = HashMap::new();
+        for (ids, f) in &words {
+            for win in ids.windows(2) {
+                *pair_counts.entry((win[0], win[1])).or_insert(0) += f;
+            }
+        }
+        // Deterministic argmax: highest count, then smallest pair ids.
+        let Some((&pair, &count)) = pair_counts
+            .iter()
+            .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+        else {
+            break;
+        };
+        if count < 2 {
+            break; // no productive merges left
+        }
+        let new_id = (256 + merge_idx) as TokenId;
+        merges.push(pair);
+        // Apply the merge to every word.
+        for (ids, _) in &mut words {
+            let mut i = 0;
+            while i + 1 < ids.len() {
+                if ids[i] == pair.0 && ids[i + 1] == pair.1 {
+                    ids[i] = new_id;
+                    ids.remove(i + 1);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    BpeVocab::from_merges(merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Cases};
+    use std::sync::Arc;
+
+    fn sample_vocab() -> Arc<BpeVocab> {
+        let corpus = "the quick brown fox jumps over the lazy dog. \
+                      the quick brown fox likes the lazy dog. \
+                      pack my box with five dozen liquor jugs. \
+                      the dog and the fox and the jugs. hello hello world world";
+        Arc::new(train_bpe(&[corpus], 200))
+    }
+
+    #[test]
+    fn pretokenize_splits_and_rejoins() {
+        let text = "Hello world,  this is  a test!\nNew line\tand 123 numbers.";
+        let words: Vec<&str> = pretokenize(text).collect();
+        assert_eq!(words.concat(), text, "pretokenizer must partition the text");
+        assert!(words.iter().any(|w| w.starts_with(' ')), "spaces attach to words");
+    }
+
+    #[test]
+    fn pretokenize_edge_cases() {
+        for text in ["", " ", "   ", "a", " a", "a ", "é中文😀", "\n\n\t", "  leading", "trail  "] {
+            let words: Vec<&str> = pretokenize(text).collect();
+            assert_eq!(words.concat(), text, "case {text:?} / words {words:?}");
+        }
+    }
+
+    #[test]
+    fn byte_fallback_roundtrip() {
+        let v = Arc::new(BpeVocab::byte_fallback());
+        let mut enc = BpeEncoder::new(v);
+        let s = "any text — ünïcode 中文 😀";
+        let ids = enc.encode(s);
+        assert_eq!(ids.len(), s.len()); // byte-level, no merges
+        assert_eq!(enc.decode_string(&ids), s);
+    }
+
+    #[test]
+    fn trained_vocab_compresses() {
+        let v = sample_vocab();
+        let mut enc = BpeEncoder::new(v);
+        let s = "the quick brown fox jumps over the lazy dog.";
+        let ids = enc.encode(s);
+        assert!(ids.len() < s.len(), "{} tokens for {} bytes", ids.len(), s.len());
+        assert_eq!(enc.decode_string(&ids), s);
+    }
+
+    #[test]
+    fn encode_deterministic_and_cache_transparent() {
+        let v = sample_vocab();
+        let mut a = BpeEncoder::new(v.clone());
+        let mut b = BpeEncoder::new(v);
+        let s = "the fox likes the dog and the fox likes jugs";
+        let first = a.encode(s);
+        let second = a.encode(s); // cache hit path
+        let cold = b.encode(s);
+        assert_eq!(first, second);
+        assert_eq!(first, cold);
+        assert!(a.cache_hits > 0);
+    }
+
+    #[test]
+    fn special_tokens_have_stable_ids() {
+        let v = sample_vocab();
+        assert_eq!(v.eot_id(), (256 + v.merges.len()) as TokenId);
+        assert_eq!(v.pad_id(), v.eot_id() + 1);
+        assert_eq!(v.size(), 256 + v.merges.len() + SPECIAL_TOKENS.len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("modalities-bpe-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.bpe");
+        let v = sample_vocab();
+        v.save(&path).unwrap();
+        let loaded = BpeVocab::load(&path).unwrap();
+        assert_eq!(loaded.merges, v.merges);
+        let mut e1 = BpeEncoder::new(v);
+        let mut e2 = BpeEncoder::new(Arc::new(loaded));
+        let s = "pack my box with five dozen liquor jugs";
+        assert_eq!(e1.encode(s), e2.encode(s));
+    }
+
+    #[test]
+    fn corrupt_vocab_rejected() {
+        let dir = std::env::temp_dir().join("modalities-bpe-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bpe");
+        std::fs::write(&path, b"garbage!").unwrap();
+        assert!(BpeVocab::load(&path).is_err());
+        // Merge referencing a future token:
+        let mut w = crate::util::bytesio::ByteWriter::new();
+        w.u32(0x4250_4531);
+        w.u32(1);
+        w.u32(9999);
+        w.u32(0);
+        let path2 = dir.join("bad2.bpe");
+        std::fs::write(&path2, &w.buf).unwrap();
+        assert!(BpeVocab::load(&path2).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_utf8() {
+        let v = sample_vocab();
+        forall(Cases::default().cases(128), |g| {
+            let s = g.string(80);
+            let mut enc = BpeEncoder::new(v.clone());
+            let ids = enc.encode(&s);
+            assert_eq!(enc.decode_string(&ids), s, "roundtrip failed for {s:?}");
+        });
+    }
+
+    #[test]
+    fn prop_token_ids_in_range() {
+        let v = sample_vocab();
+        let size = v.size() as TokenId;
+        forall(Cases::default().cases(64), |g| {
+            let s = g.string(60);
+            let mut enc = BpeEncoder::new(v.clone());
+            for id in enc.encode(&s) {
+                assert!(id < size);
+            }
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Registry factories for the data stack: datasets, samplers,
+//! dataloaders, tokenizers and pipeline definitions — the pluggable
+//! components a config composes into its data dependency graph.
+
+use super::bpe::BpeVocab;
+use super::dataset::{
+    DataLoader, Dataset, DistributedSampler, PackedDataset, Sampler, SequentialSampler,
+    ShuffledSampler, SyntheticDataset,
+};
+use super::pipeline::PipelineConfig;
+use crate::registry::{BuildCtx, Component, ComponentRegistry};
+use crate::yaml::Node;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Shared handles stored in the object graph.
+pub struct DatasetComponent(pub Arc<dyn Dataset>);
+pub struct SamplerComponent(pub Arc<dyn Sampler>);
+pub struct TokenizerComponent(pub Arc<BpeVocab>);
+
+/// Dataloader component: dataset + sampler + batch size.
+pub struct DataLoaderComponent(pub Arc<DataLoader>);
+
+/// Declarative pipeline definition (run by `modalities data tokenize`).
+pub struct DataPipelineComponent {
+    pub config: PipelineConfig,
+    pub vocab_path: Option<PathBuf>,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("dataset", "packed_memmap", |ctx, cfg| {
+        let path = ctx.str(cfg, "path")?.to_string();
+        let seq_len = ctx.usize(cfg, "seq_len")?;
+        let ds = PackedDataset::open(std::path::Path::new(&path), seq_len)?;
+        Ok(Component::new("dataset", "packed_memmap", DatasetComponent(Arc::new(ds))))
+    })?;
+
+    reg.register("dataset", "synthetic_lm", |ctx, cfg| {
+        let vocab_size = ctx.usize(cfg, "vocab_size")? as u32;
+        let seq_len = ctx.usize(cfg, "seq_len")?;
+        let num_samples = ctx.usize(cfg, "num_samples")?;
+        let noise = ctx.f64_or(cfg, "noise", 0.05)?;
+        let seed = ctx.setting_u64("seed", 0) ^ ctx.usize_or(cfg, "seed", 0)? as u64;
+        let ds = SyntheticDataset::new(vocab_size, seq_len, num_samples, noise, seed);
+        Ok(Component::new("dataset", "synthetic_lm", DatasetComponent(Arc::new(ds))))
+    })?;
+
+    reg.register("sampler", "sequential", |ctx, cfg| {
+        let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
+        let s = SequentialSampler { len: ds.0.len() };
+        Ok(Component::new("sampler", "sequential", SamplerComponent(Arc::new(s))))
+    })?;
+
+    reg.register("sampler", "shuffled", |ctx, cfg| {
+        let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
+        let seed = ctx.setting_u64("seed", 0) ^ ctx.usize_or(cfg, "seed", 0)? as u64;
+        let s = ShuffledSampler { len: ds.0.len(), seed };
+        Ok(Component::new("sampler", "shuffled", SamplerComponent(Arc::new(s))))
+    })?;
+
+    reg.register("sampler", "distributed", |ctx, cfg| {
+        let inner: Arc<SamplerComponent> = ctx.typed_field(cfg, "sampler", "sampler")?;
+        let rank = ctx.usize(cfg, "rank")?;
+        let world = ctx.usize(cfg, "world_size")?;
+        let s = DistributedSampler::new(inner.0.clone(), rank, world)?;
+        Ok(Component::new("sampler", "distributed", SamplerComponent(Arc::new(s))))
+    })?;
+
+    reg.register("dataloader", "default", |ctx, cfg| {
+        let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
+        let sampler: Arc<SamplerComponent> = ctx.typed_field(cfg, "sampler", "sampler")?;
+        let batch_size = ctx.usize(cfg, "batch_size")?;
+        let dl = DataLoader::new(ds.0.clone(), sampler.0.clone(), batch_size)?;
+        Ok(Component::new("dataloader", "default", DataLoaderComponent(Arc::new(dl))))
+    })?;
+
+    reg.register("tokenizer", "byte_bpe", |ctx, cfg| {
+        let vocab = match cfg.get("vocab_path").and_then(|n| n.as_str()) {
+            Some(p) => BpeVocab::load(std::path::Path::new(p))?,
+            None => BpeVocab::byte_fallback(),
+        };
+        let _ = ctx; // accessor parity
+        Ok(Component::new("tokenizer", "byte_bpe", TokenizerComponent(Arc::new(vocab))))
+    })?;
+
+    reg.register("data_pipeline", "producer_consumer", |ctx, cfg| {
+        let config = pipeline_config_from(ctx, cfg)?;
+        let vocab_path = cfg.get("vocab_path").and_then(|n| n.as_str()).map(PathBuf::from);
+        Ok(Component::new(
+            "data_pipeline",
+            "producer_consumer",
+            DataPipelineComponent { config, vocab_path },
+        ))
+    })?;
+
+    reg.register("collate_fn", "gpt_shift", |_ctx, _cfg| {
+        // The shift collate is the DataLoader default; registered so
+        // configs can name it explicitly (and alternatives can plug in).
+        Ok(Component::new("collate_fn", "gpt_shift", ()))
+    })?;
+
+    Ok(())
+}
+
+fn pipeline_config_from(ctx: &mut BuildCtx<'_>, cfg: &Node) -> Result<PipelineConfig> {
+    let d = PipelineConfig::default();
+    Ok(PipelineConfig {
+        num_workers: ctx.usize_or(cfg, "num_workers", d.num_workers)?,
+        batch_docs: ctx.usize_or(cfg, "batch_docs", d.batch_docs)?,
+        queue_depth: ctx.usize_or(cfg, "queue_depth", d.queue_depth)?,
+        append_eot: ctx.bool_or(cfg, "append_eot", d.append_eot)?,
+        token_width: ctx.usize_or(cfg, "token_width", d.token_width)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn synthetic_data_stack_builds_from_config() {
+        let src = "\
+settings:
+  seed: 7
+components:
+  train_ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config:
+      vocab_size: 64
+      seq_len: 16
+      num_samples: 100
+  train_sampler:
+    component_key: sampler
+    variant_key: shuffled
+    config:
+      dataset: {instance_key: train_ds}
+  loader:
+    component_key: dataloader
+    variant_key: default
+    config:
+      dataset: {instance_key: train_ds}
+      sampler: {instance_key: train_sampler}
+      batch_size: 4
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let dl = g.get::<super::DataLoaderComponent>("loader").unwrap();
+        let b = dl.0.batch(0, 0);
+        assert_eq!(b.inputs.len(), 4 * 16);
+        assert_eq!(dl.0.batches_per_epoch(0), 25);
+    }
+
+    #[test]
+    fn distributed_sampler_from_config() {
+        let src = "\
+components:
+  ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 32, seq_len: 8, num_samples: 40}
+  base:
+    component_key: sampler
+    variant_key: sequential
+    config: {dataset: {instance_key: ds}}
+  rank0:
+    component_key: sampler
+    variant_key: distributed
+    config: {sampler: {instance_key: base}, rank: 0, world_size: 4}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let s = g.get::<super::SamplerComponent>("rank0").unwrap();
+        assert_eq!(s.0.epoch_indices(0).len(), 10);
+    }
+}

@@ -1,0 +1,319 @@
+//! `.mmtok` — the memory-mapped packed token store.
+//!
+//! Output of the tokenization pipeline and input to training: all
+//! documents' token ids concatenated, plus a document offset table, so
+//! that both *document-level* access (O(1), for inspection/debugging)
+//! and *token-level* access (O(1), for packed-sequence sampling) are
+//! pointer arithmetic over an mmap.
+//!
+//! Layout (little-endian):
+//! ```text
+//! [0..4)   magic "MMTK"
+//! [4..8)   version (1)
+//! [8..12)  token width in bytes (2 or 4)
+//! [12..16) reserved (0)
+//! [16..24) document count D
+//! [24..32) total token count T
+//! [32..40) vocab fingerprint (FNV of the merge table; integrity check)
+//! [40..40+8(D+1))  doc offset table: token index of each doc start,
+//!                  D+1 entries (last = T)
+//! [...]    token data: T * width bytes
+//! ```
+
+use crate::util::bytesio::{u32_at, u64_at, ByteWriter};
+use crate::util::mmap::Mmap;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const TOK_MAGIC: u32 = 0x4d4d_544b; // "MMTK"
+const TOK_VERSION: u32 = 1;
+const HEADER_LEN: usize = 40;
+
+/// Streaming writer: documents are appended in order; the offset table
+/// is buffered in memory (8 bytes/doc) and spliced on `finish`.
+pub struct MmtokWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    path: std::path::PathBuf,
+    tmp_path: std::path::PathBuf,
+    width: usize,
+    offsets: Vec<u64>,
+    total_tokens: u64,
+    vocab_fp: u64,
+}
+
+impl MmtokWriter {
+    /// `width` is 2 (u16 tokens, vocab < 65536) or 4 (u32).
+    pub fn create(path: &Path, width: usize, vocab_fp: u64) -> Result<Self> {
+        if width != 2 && width != 4 {
+            bail!("token width must be 2 or 4, got {width}");
+        }
+        let tmp_path = path.with_extension("mmtok.tmp");
+        let file = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating {}", tmp_path.display()))?;
+        Ok(Self {
+            file: std::io::BufWriter::with_capacity(1 << 20, file),
+            path: path.to_path_buf(),
+            tmp_path,
+            width,
+            offsets: vec![0],
+            total_tokens: 0,
+            vocab_fp,
+        })
+    }
+
+    /// Append one document's tokens.
+    pub fn write_doc(&mut self, tokens: &[u32]) -> Result<()> {
+        if self.width == 2 {
+            // Validate range once here rather than corrupting silently.
+            let mut buf = Vec::with_capacity(tokens.len() * 2);
+            for &t in tokens {
+                if t > u16::MAX as u32 {
+                    bail!("token id {t} exceeds u16 store width");
+                }
+                buf.extend_from_slice(&(t as u16).to_le_bytes());
+            }
+            self.file.write_all(&buf)?;
+        } else {
+            let mut buf = Vec::with_capacity(tokens.len() * 4);
+            for &t in tokens {
+                buf.extend_from_slice(&t.to_le_bytes());
+            }
+            self.file.write_all(&buf)?;
+        }
+        self.total_tokens += tokens.len() as u64;
+        self.offsets.push(self.total_tokens);
+        Ok(())
+    }
+
+    pub fn docs_written(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Flush user-space buffering down to the OS. Used by the
+    /// Megatron-style baseline to model per-document write syscalls.
+    pub fn flush_os(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn tokens_written(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// Finalize: write header + offset table + token data into the real
+    /// file (token data was streamed to a tmp file to keep memory flat).
+    pub fn finish(mut self) -> Result<MmtokSummary> {
+        self.file.flush()?;
+        drop(self.file);
+
+        let mut header = ByteWriter::with_capacity(HEADER_LEN + self.offsets.len() * 8);
+        header.u32(TOK_MAGIC);
+        header.u32(TOK_VERSION);
+        header.u32(self.width as u32);
+        header.u32(0);
+        header.u64((self.offsets.len() - 1) as u64);
+        header.u64(self.total_tokens);
+        header.u64(self.vocab_fp);
+        for &o in &self.offsets {
+            header.u64(o);
+        }
+
+        let mut out = std::io::BufWriter::with_capacity(
+            1 << 20,
+            std::fs::File::create(&self.path)
+                .with_context(|| format!("creating {}", self.path.display()))?,
+        );
+        out.write_all(&header.buf)?;
+        let mut tmp = std::fs::File::open(&self.tmp_path)?;
+        std::io::copy(&mut tmp, &mut out)?;
+        out.flush()?;
+        std::fs::remove_file(&self.tmp_path).ok();
+        Ok(MmtokSummary {
+            docs: (self.offsets.len() - 1) as u64,
+            tokens: self.total_tokens,
+            bytes: HEADER_LEN as u64 + self.offsets.len() as u64 * 8 + self.total_tokens * self.width as u64,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MmtokSummary {
+    pub docs: u64,
+    pub tokens: u64,
+    pub bytes: u64,
+}
+
+/// Memory-mapped reader with O(1) doc and token access.
+pub struct MmtokReader {
+    mmap: Mmap,
+    width: usize,
+    docs: usize,
+    tokens: u64,
+    vocab_fp: u64,
+    data_start: usize,
+}
+
+impl MmtokReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mmap = Mmap::open(path)?;
+        let b = mmap.as_slice();
+        if b.len() < HEADER_LEN {
+            bail!("{}: truncated .mmtok header", path.display());
+        }
+        if u32_at(b, 0) != TOK_MAGIC {
+            bail!("{}: not a .mmtok file (bad magic)", path.display());
+        }
+        if u32_at(b, 4) != TOK_VERSION {
+            bail!("{}: unsupported .mmtok version {}", path.display(), u32_at(b, 4));
+        }
+        let width = u32_at(b, 8) as usize;
+        if width != 2 && width != 4 {
+            bail!("{}: invalid token width {width}", path.display());
+        }
+        let docs = u64_at(b, 16) as usize;
+        let tokens = u64_at(b, 24);
+        let vocab_fp = u64_at(b, 32);
+        let data_start = HEADER_LEN + (docs + 1) * 8;
+        let need = data_start as u64 + tokens * width as u64;
+        if (b.len() as u64) < need {
+            bail!("{}: file truncated ({} < {need})", path.display(), b.len());
+        }
+        Ok(Self { mmap, width, docs, tokens, vocab_fp, data_start })
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.docs
+    }
+
+    pub fn num_tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn vocab_fingerprint(&self) -> u64 {
+        self.vocab_fp
+    }
+
+    pub fn token_width(&self) -> usize {
+        self.width
+    }
+
+    /// Token index at which document `i` starts. O(1).
+    pub fn doc_start(&self, i: usize) -> u64 {
+        assert!(i <= self.docs);
+        u64_at(self.mmap.as_slice(), HEADER_LEN + i * 8)
+    }
+
+    /// Document `i`'s tokens (copied out of the mmap). O(doc len).
+    pub fn doc_tokens(&self, i: usize) -> Vec<u32> {
+        assert!(i < self.docs, "doc {i} out of range {}", self.docs);
+        let start = self.doc_start(i);
+        let end = self.doc_start(i + 1);
+        self.read_tokens(start, (end - start) as usize)
+    }
+
+    /// Read `len` tokens starting at global token index `start`. O(len),
+    /// straight off the mmap — this is the training dataloader hot path.
+    pub fn read_tokens(&self, start: u64, len: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len);
+        self.read_tokens_into(start, len, &mut out);
+        out
+    }
+
+    /// Allocation-free variant for reusable batch buffers.
+    pub fn read_tokens_into(&self, start: u64, len: usize, out: &mut Vec<u32>) {
+        assert!(start + len as u64 <= self.tokens, "token range OOB");
+        let b = self.mmap.as_slice();
+        let base = self.data_start + start as usize * self.width;
+        match self.width {
+            2 => {
+                for i in 0..len {
+                    let off = base + i * 2;
+                    out.push(u16::from_le_bytes(b[off..off + 2].try_into().unwrap()) as u32);
+                }
+            }
+            4 => {
+                for i in 0..len {
+                    out.push(u32_at(b, base + i * 4));
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("modalities-mmtok-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn write_read_roundtrip_u16() {
+        let p = tmp("a.mmtok");
+        let mut w = MmtokWriter::create(&p, 2, 0xabcd).unwrap();
+        w.write_doc(&[1, 2, 3]).unwrap();
+        w.write_doc(&[]).unwrap();
+        w.write_doc(&[65535, 0, 7, 9]).unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.docs, 3);
+        assert_eq!(s.tokens, 7);
+
+        let r = MmtokReader::open(&p).unwrap();
+        assert_eq!(r.num_docs(), 3);
+        assert_eq!(r.num_tokens(), 7);
+        assert_eq!(r.vocab_fingerprint(), 0xabcd);
+        assert_eq!(r.doc_tokens(0), vec![1, 2, 3]);
+        assert_eq!(r.doc_tokens(1), Vec::<u32>::new());
+        assert_eq!(r.doc_tokens(2), vec![65535, 0, 7, 9]);
+        // token-level access crosses doc boundaries transparently
+        assert_eq!(r.read_tokens(2, 3), vec![3, 65535, 0]);
+    }
+
+    #[test]
+    fn write_read_roundtrip_u32() {
+        let p = tmp("b.mmtok");
+        let mut w = MmtokWriter::create(&p, 4, 1).unwrap();
+        w.write_doc(&[70000, 1 << 30]).unwrap();
+        w.finish().unwrap();
+        let r = MmtokReader::open(&p).unwrap();
+        assert_eq!(r.doc_tokens(0), vec![70000, 1 << 30]);
+    }
+
+    #[test]
+    fn u16_overflow_rejected() {
+        let p = tmp("c.mmtok");
+        let mut w = MmtokWriter::create(&p, 2, 0).unwrap();
+        assert!(w.write_doc(&[70000]).is_err());
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let p = tmp("bad.mmtok");
+        std::fs::write(&p, b"short").unwrap();
+        assert!(MmtokReader::open(&p).is_err());
+        // Claim more tokens than the file holds:
+        let mut w = ByteWriter::new();
+        w.u32(TOK_MAGIC);
+        w.u32(TOK_VERSION);
+        w.u32(2);
+        w.u32(0);
+        w.u64(1);
+        w.u64(1_000_000);
+        w.u64(0);
+        w.u64(0);
+        w.u64(1_000_000);
+        std::fs::write(&p, &w.buf).unwrap();
+        let e = MmtokReader::open(&p).err().map(|e| e.to_string()).unwrap();
+        assert!(e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn invalid_width_rejected() {
+        assert!(MmtokWriter::create(&tmp("w.mmtok"), 3, 0).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! The data pipeline (§2 "Data Pipeline" of the paper): JSONL
+//! indexation → producer/consumer tokenization → memory-mapped packed
+//! token stores with O(1) random document access → packed-sequence
+//! datasets with global shuffling and distributed sampling.
+//!
+//! Submodules:
+//! * [`jsonl`] — document-boundary indexation over raw JSONL (mmap'd)
+//! * [`bpe`] — in-repo byte-level BPE (trainer + cached encoder)
+//! * [`pipeline`] — single-reader / N-worker / single-writer tokenizer
+//! * [`baseline`] — Megatron-LM-style comparator for the 7× claim
+//! * [`mmtok`] — the packed token store format
+//! * [`dataset`] — packed/synthetic datasets, samplers, dataloader
+//! * [`synthetic`] — Zipf corpus generation (FineWeb stand-in)
+//! * [`components`] — registry factories for all of the above
+
+pub mod baseline;
+pub mod bpe;
+pub mod components;
+pub mod dataset;
+pub mod jsonl;
+pub mod mmtok;
+pub mod pipeline;
+pub mod synthetic;

@@ -1,0 +1,155 @@
+//! Synthetic JSONL corpus generation — the stand-in for FineWeb in the
+//! offline environment (DESIGN.md §Substitutions). Documents are built
+//! from a Zipf-distributed vocabulary of pseudo-words with sentence/
+//! paragraph structure, so the byte/token statistics that matter to the
+//! pipeline benchmarks (word repetition → cache hit rate, doc length
+//! variance → batching behaviour) resemble web text.
+
+use crate::util::prng::Pcg64;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Corpus shape parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub num_docs: usize,
+    /// Mean document length in words (doc lengths are log-normal-ish).
+    pub mean_doc_words: usize,
+    /// Size of the pseudo-word vocabulary.
+    pub vocab_words: usize,
+    /// Zipf exponent for word frequencies (≈1.0 for natural text).
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self { num_docs: 1000, mean_doc_words: 200, vocab_words: 5000, zipf_s: 1.05, seed: 0 }
+    }
+}
+
+/// Deterministic pseudo-word list: letter patterns varied enough that
+/// BPE finds productive merges.
+fn make_words(n: usize, rng: &mut Pcg64) -> Vec<String> {
+    const SYLLABLES: [&str; 24] = [
+        "ta", "ko", "mi", "ra", "sun", "ber", "lin", "mo", "da", "sel", "qui", "ver", "an",
+        "tor", "el", "ish", "gra", "pen", "ur", "ny", "chi", "zo", "fal", "wes",
+    ];
+    (0..n)
+        .map(|_| {
+            let syls = 1 + rng.next_below(3) as usize;
+            let mut w = String::new();
+            for _ in 0..=syls {
+                w.push_str(SYLLABLES[rng.next_below(SYLLABLES.len() as u64) as usize]);
+            }
+            w
+        })
+        .collect()
+}
+
+/// Generate one document's text.
+fn gen_doc(words: &[String], weights: &[f64], rng: &mut Pcg64, mean_words: usize) -> String {
+    let n_words = 1 + (rng.next_f64() * 2.0 * mean_words as f64) as usize;
+    let mut text = String::with_capacity(n_words * 7);
+    let mut sentence_len = 0usize;
+    for i in 0..n_words {
+        let w = &words[rng.sample_weighted(weights)];
+        if i > 0 {
+            text.push(' ');
+        }
+        if sentence_len == 0 {
+            // Capitalize sentence starts.
+            let mut c = w.chars();
+            if let Some(f) = c.next() {
+                text.extend(f.to_uppercase());
+                text.push_str(c.as_str());
+            }
+        } else {
+            text.push_str(w);
+        }
+        sentence_len += 1;
+        if sentence_len > 4 && rng.next_f64() < 0.18 {
+            text.push('.');
+            sentence_len = 0;
+        } else if rng.next_f64() < 0.06 {
+            text.push(',');
+        }
+    }
+    text.push('.');
+    text
+}
+
+/// Write a synthetic JSONL corpus to `path`. Returns (docs, bytes).
+pub fn generate_corpus(path: &Path, spec: &CorpusSpec) -> Result<(usize, u64)> {
+    let mut rng = Pcg64::new(spec.seed ^ 0xC0_7015);
+    let words = make_words(spec.vocab_words, &mut rng);
+    let weights: Vec<f64> =
+        (1..=spec.vocab_words).map(|r| 1.0 / (r as f64).powf(spec.zipf_s)).collect();
+    let mut f = std::io::BufWriter::with_capacity(
+        1 << 20,
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    let mut bytes = 0u64;
+    for i in 0..spec.num_docs {
+        let text = gen_doc(&words, &weights, &mut rng, spec.mean_doc_words);
+        let line = crate::util::json::Json::from_pairs(vec![
+            ("id", (i as i64).into()),
+            ("text", text.into()),
+            ("source", "synthetic".into()),
+        ])
+        .dumps();
+        bytes += line.len() as u64 + 1;
+        writeln!(f, "{line}")?;
+    }
+    f.flush()?;
+    Ok((spec.num_docs, bytes))
+}
+
+/// Sample texts (in memory) for vocabulary training.
+pub fn sample_texts(spec: &CorpusSpec, n: usize) -> Vec<String> {
+    let mut rng = Pcg64::new(spec.seed ^ 0xC0_7015);
+    let words = make_words(spec.vocab_words, &mut rng);
+    let weights: Vec<f64> =
+        (1..=spec.vocab_words).map(|r| 1.0 / (r as f64).powf(spec.zipf_s)).collect();
+    (0..n).map(|_| gen_doc(&words, &weights, &mut rng, spec.mean_doc_words)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::jsonl::JsonlCorpus;
+
+    #[test]
+    fn corpus_is_valid_jsonl_and_deterministic() {
+        let dir = std::env::temp_dir().join("modalities-synth-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("s1.jsonl");
+        let p2 = dir.join("s2.jsonl");
+        let spec = CorpusSpec { num_docs: 20, mean_doc_words: 30, ..Default::default() };
+        let (n1, b1) = generate_corpus(&p1, &spec).unwrap();
+        let (n2, b2) = generate_corpus(&p2, &spec).unwrap();
+        assert_eq!((n1, b1), (n2, b2));
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let _ = std::fs::remove_file(crate::data::jsonl::default_index_path(&p1));
+        let c = JsonlCorpus::open(&p1).unwrap();
+        assert_eq!(c.len(), 20);
+        for i in 0..20 {
+            let t = c.doc_text(i).unwrap();
+            assert!(!t.is_empty());
+        }
+    }
+
+    #[test]
+    fn zipf_repeats_words() {
+        let spec = CorpusSpec { num_docs: 4, mean_doc_words: 200, ..Default::default() };
+        let texts = sample_texts(&spec, 4);
+        let all = texts.join(" ").to_lowercase();
+        let mut freq = std::collections::HashMap::new();
+        for w in all.split_whitespace() {
+            *freq.entry(w.trim_matches(['.', ','])).or_insert(0u32) += 1;
+        }
+        let max = freq.values().max().copied().unwrap_or(0);
+        assert!(max > 5, "Zipf head words should repeat (max {max})");
+    }
+}

@@ -1,0 +1,112 @@
+//! Registry factories for parallelization strategies and sharding
+//! policies — the paper's "parallelization strategies as swappable
+//! components".
+
+use super::{CommDtype, FsdpConfig, ShardStrategy};
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+/// Parallel-strategy spec stored in the object graph; the gym combines
+/// it with the model's parameter count to instantiate [`super::FsdpEngine`].
+#[derive(Clone, Debug)]
+pub struct ParallelSpec {
+    pub dp: usize,
+    pub strategy: ShardStrategy,
+    pub unit_bytes: usize,
+    pub comm_dtype: CommDtype,
+}
+
+impl ParallelSpec {
+    pub fn fsdp_config(&self) -> FsdpConfig {
+        FsdpConfig {
+            world: self.dp,
+            unit_bytes: self.unit_bytes,
+            strategy: self.strategy,
+            comm_dtype: self.comm_dtype,
+        }
+    }
+}
+
+/// FSDP unit-size ("wrapping") policy component.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardingPolicy {
+    pub unit_bytes: usize,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    let parse_common = |ctx: &mut crate::registry::BuildCtx<'_>,
+                        cfg: &crate::yaml::Node,
+                        strategy: ShardStrategy|
+     -> Result<ParallelSpec> {
+        let dp = ctx.usize_or(cfg, "dp_degree", 1)?;
+        let unit_mb = ctx.f64_or(cfg, "unit_size_mb", 4.0)?;
+        let comm = match ctx.str_or(cfg, "comm_dtype", "f32").as_str() {
+            "f32" => CommDtype::F32,
+            "bf16" => CommDtype::Bf16,
+            other => anyhow::bail!("unknown comm_dtype '{other}' (f32|bf16)"),
+        };
+        Ok(ParallelSpec {
+            dp,
+            strategy,
+            unit_bytes: (unit_mb * 1024.0 * 1024.0) as usize,
+            comm_dtype: comm,
+        })
+    };
+
+    reg.register("parallel_strategy", "fsdp", move |ctx, cfg| {
+        let spec = parse_common(ctx, cfg, ShardStrategy::Full)?;
+        Ok(Component::new("parallel_strategy", "fsdp", spec))
+    })?;
+
+    reg.register("parallel_strategy", "hsdp", move |ctx, cfg| {
+        let shard_size = ctx.usize(cfg, "shard_group_size")?;
+        let spec = parse_common(ctx, cfg, ShardStrategy::Hybrid { shard_size })?;
+        Ok(Component::new("parallel_strategy", "hsdp", spec))
+    })?;
+
+    reg.register("parallel_strategy", "ddp", move |ctx, cfg| {
+        let spec = parse_common(ctx, cfg, ShardStrategy::Ddp)?;
+        Ok(Component::new("parallel_strategy", "ddp", spec))
+    })?;
+
+    reg.register("sharding_policy", "unit_size", |ctx, cfg| {
+        let unit_mb = ctx.f64_or(cfg, "unit_size_mb", 4.0)?;
+        Ok(Component::new(
+            "sharding_policy",
+            "unit_size",
+            ShardingPolicy { unit_bytes: (unit_mb * 1024.0 * 1024.0) as usize },
+        ))
+    })?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn strategies_from_config() {
+        let src = "\
+components:
+  p1:
+    component_key: parallel_strategy
+    variant_key: fsdp
+    config: {dp_degree: 8, unit_size_mb: 16}
+  p2:
+    component_key: parallel_strategy
+    variant_key: hsdp
+    config: {dp_degree: 8, shard_group_size: 4, comm_dtype: bf16}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let p1 = g.get::<super::ParallelSpec>("p1").unwrap();
+        assert_eq!(p1.dp, 8);
+        assert_eq!(p1.unit_bytes, 16 << 20);
+        let p2 = g.get::<super::ParallelSpec>("p2").unwrap();
+        assert!(matches!(p2.strategy, super::ShardStrategy::Hybrid { shard_size: 4 }));
+        assert_eq!(p2.comm_dtype, super::CommDtype::Bf16);
+    }
+}

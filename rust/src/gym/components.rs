@@ -1,0 +1,326 @@
+//! Gym factory: assembles the [`GymSpec`] from referenced components —
+//! the final composition step of the object graph. `ObjectGraph::into_gym`
+//! is defined here as well.
+
+use super::{Gym, GymSpec};
+use crate::registry::{Component, ComponentRegistry, ObjectGraph};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("gym", "spmd", |ctx, cfg| {
+        let model: Arc<crate::model::ModelSpec> = ctx.typed_field(cfg, "model", "model")?;
+        let dl: Arc<crate::data::components::DataLoaderComponent> =
+            ctx.typed_field(cfg, "dataloader", "dataloader")?;
+        let eval_dl = match ctx.component_field_opt(cfg, "eval_dataloader", "dataloader")? {
+            Some(c) => {
+                Some(c.downcast::<crate::data::components::DataLoaderComponent>()?.0.clone())
+            }
+            None => None,
+        };
+        let optimizer: Arc<crate::optim::components::OptimizerSpec> =
+            ctx.typed_field(cfg, "optimizer", "optimizer")?;
+        let scheduler: Arc<crate::optim::LrSchedule> =
+            match ctx.component_field_opt(cfg, "lr_scheduler", "lr_scheduler")? {
+                Some(c) => c.downcast()?,
+                None => Arc::new(crate::optim::LrSchedule::Constant),
+            };
+        let parallel: Arc<crate::fsdp::components::ParallelSpec> =
+            match ctx.component_field_opt(cfg, "parallel", "parallel_strategy")? {
+                Some(c) => c.downcast()?,
+                None => Arc::new(crate::fsdp::components::ParallelSpec {
+                    dp: 1,
+                    strategy: crate::fsdp::ShardStrategy::Full,
+                    unit_bytes: 4 << 20,
+                    comm_dtype: crate::fsdp::CommDtype::F32,
+                }),
+            };
+        let runtime: Arc<crate::runtime::components::RuntimeSpec> =
+            match ctx.component_field_opt(cfg, "runtime", "runtime")? {
+                Some(c) => c.downcast()?,
+                None => Arc::new(crate::runtime::components::RuntimeSpec { backend: "cpu".into() }),
+            };
+        let checkpoint_policy =
+            match ctx.component_field_opt(cfg, "checkpointing", "checkpointing")? {
+                Some(c) => Some(c.downcast::<crate::checkpoint::components::CheckpointPolicy>()?),
+                None => None,
+            };
+        let warm_start = match ctx.component_field_opt(cfg, "warm_start", "warm_start")? {
+            Some(c) => Some(c.downcast::<crate::model::components::WarmStartSpec>()?),
+            None => None,
+        };
+        let clip = match ctx.component_field_opt(cfg, "gradient_clipper", "gradient_clipper")? {
+            Some(c) => Some(c.downcast::<crate::optim::components::ClipSpec>()?.max_norm),
+            None => None,
+        };
+
+        let steps = ctx.usize(cfg, "steps")? as u64;
+        let grad_accum = ctx.usize_or(cfg, "grad_accum", 1)?.max(1);
+        let log_every = ctx.usize_or(cfg, "log_every", 10)? as u64;
+        let eval_every = {
+            let e = ctx.usize_or(cfg, "eval_every", 0)? as u64;
+            if e == 0 { None } else { Some(e) }
+        };
+        let eval_batches = ctx.usize_or(cfg, "eval_batches", 8)?;
+        let run_name = ctx
+            .setting_str("run_name")
+            .map(String::from)
+            .unwrap_or_else(|| "run".to_string());
+        let run_dir = PathBuf::from(ctx.str_or(cfg, "run_dir", &format!("runs/{run_name}")));
+        let resume = ctx.bool_or(cfg, "resume", false)?;
+
+        Ok(Component::new(
+            "gym",
+            "spmd",
+            GymSpecSeed {
+                model,
+                dataloader: dl.0.clone(),
+                eval_dataloader: eval_dl,
+                optimizer,
+                scheduler,
+                parallel,
+                runtime,
+                checkpoint_policy,
+                warm_start,
+                steps,
+                grad_accum,
+                log_every,
+                eval_every,
+                eval_batches,
+                max_grad_norm: clip,
+                run_dir,
+                run_name,
+                resume,
+            },
+        ))
+    })?;
+    reg.register("subscriber", "console", |ctx, cfg| {
+        let log_every = ctx.usize_or(cfg, "log_every", 10)? as u64;
+        Ok(Component::new(
+            "subscriber",
+            "console",
+            SubscriberSpec::Console { log_every },
+        ))
+    })?;
+
+    reg.register("subscriber", "jsonl", |ctx, cfg| {
+        let path = ctx.str_or(cfg, "path", "metrics.jsonl");
+        Ok(Component::new("subscriber", "jsonl", SubscriberSpec::Jsonl { path }))
+    })?;
+
+    reg.register("evaluator", "perplexity", |ctx, cfg| {
+        let max_batches = ctx.usize_or(cfg, "max_batches", 8)?;
+        Ok(Component::new("evaluator", "perplexity", EvaluatorSpec { max_batches }))
+    })?;
+
+    reg.register("trainer", "default", |_ctx, _cfg| {
+        Ok(Component::new("trainer", "default", ()))
+    })?;
+
+    reg.register("progress", "tokens", |_ctx, _cfg| {
+        Ok(Component::new("progress", "tokens", ()))
+    })?;
+
+    reg.register("generation", "greedy", |ctx, cfg| {
+        let max_new = ctx.usize_or(cfg, "max_new_tokens", 32)?;
+        Ok(Component::new("generation", "greedy", GenerationSpec { max_new }))
+    })?;
+
+    reg.register("number_conversion", "tokens_steps", |ctx, cfg| {
+        // Converts between tokens / steps / samples given batch geometry —
+        // the paper's "number conversion" utility for config authoring.
+        let batch_size = ctx.usize(cfg, "batch_size")?;
+        let seq_len = ctx.usize(cfg, "seq_len")?;
+        let dp = ctx.usize_or(cfg, "dp_degree", 1)?;
+        let accum = ctx.usize_or(cfg, "grad_accum", 1)?;
+        Ok(Component::new(
+            "number_conversion",
+            "tokens_steps",
+            NumberConversion { tokens_per_step: (batch_size * seq_len * dp * accum) as u64 },
+        ))
+    })?;
+
+    reg.register("loss", "cross_entropy", |_ctx, _cfg| {
+        // The CE loss is fused into the AOT artifact (L1 kernel); this
+        // component documents/selects it for IF-completeness.
+        Ok(Component::new("loss", "cross_entropy", ()))
+    })?;
+
+    Ok(())
+}
+
+/// Subscriber component spec (instantiated by the gym at run start).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubscriberSpec {
+    Console { log_every: u64 },
+    Jsonl { path: String },
+}
+
+/// Evaluator spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvaluatorSpec {
+    pub max_batches: usize,
+}
+
+/// Generation spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenerationSpec {
+    pub max_new: usize,
+}
+
+/// Token/step/sample conversion helper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumberConversion {
+    pub tokens_per_step: u64,
+}
+
+impl NumberConversion {
+    pub fn steps_for_tokens(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.tokens_per_step)
+    }
+}
+
+/// GymSpec minus config provenance (filled by `into_gym` from the graph).
+pub struct GymSpecSeed {
+    pub model: Arc<crate::model::ModelSpec>,
+    pub dataloader: Arc<crate::data::dataset::DataLoader>,
+    pub eval_dataloader: Option<Arc<crate::data::dataset::DataLoader>>,
+    pub optimizer: Arc<crate::optim::components::OptimizerSpec>,
+    pub scheduler: Arc<crate::optim::LrSchedule>,
+    pub parallel: Arc<crate::fsdp::components::ParallelSpec>,
+    pub runtime: Arc<crate::runtime::components::RuntimeSpec>,
+    pub checkpoint_policy: Option<Arc<crate::checkpoint::components::CheckpointPolicy>>,
+    pub warm_start: Option<Arc<crate::model::components::WarmStartSpec>>,
+    pub steps: u64,
+    pub grad_accum: usize,
+    pub log_every: u64,
+    pub eval_every: Option<u64>,
+    pub eval_batches: usize,
+    pub max_grad_norm: Option<f32>,
+    pub run_dir: PathBuf,
+    pub run_name: String,
+    pub resume: bool,
+}
+
+impl ObjectGraph {
+    /// Find the (single) gym component and turn the graph into a
+    /// runnable [`Gym`] with default subscribers.
+    pub fn into_gym(&self) -> Result<Gym> {
+        let gyms = self.of_interface("gym");
+        let (name, comp) = match gyms.as_slice() {
+            [] => bail!("config defines no 'gym' component"),
+            [one] => *one,
+            many => bail!(
+                "config defines {} gym components ({}); exactly one expected",
+                many.len(),
+                many.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let seed: Arc<GymSpecSeed> =
+            comp.downcast().with_context(|| format!("gym component '{name}'"))?;
+        let spec = GymSpec {
+            model: seed.model.clone(),
+            dataloader: seed.dataloader.clone(),
+            eval_dataloader: seed.eval_dataloader.clone(),
+            optimizer: seed.optimizer.clone(),
+            scheduler: seed.scheduler.clone(),
+            parallel: seed.parallel.clone(),
+            runtime: seed.runtime.clone(),
+            checkpoint_policy: seed.checkpoint_policy.clone(),
+            warm_start: seed.warm_start.clone(),
+            steps: seed.steps,
+            grad_accum: seed.grad_accum,
+            log_every: seed.log_every,
+            eval_every: seed.eval_every,
+            eval_batches: seed.eval_batches,
+            max_grad_norm: seed.max_grad_norm,
+            run_dir: seed.run_dir.clone(),
+            run_name: seed.run_name.clone(),
+            config_fingerprint: self.config.fingerprint_hex(),
+            config_yaml: self.config.to_yaml(),
+            resume: seed.resume,
+        };
+        Gym::new(spec).with_default_subscribers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    const SRC: &str = "\
+settings:
+  seed: 1
+  run_name: unit-test
+components:
+  ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 64, seq_len: 8, num_samples: 64}
+  sampler:
+    component_key: sampler
+    variant_key: shuffled
+    config: {dataset: {instance_key: ds}}
+  loader:
+    component_key: dataloader
+    variant_key: default
+    config:
+      dataset: {instance_key: ds}
+      sampler: {instance_key: sampler}
+      batch_size: 4
+  net:
+    component_key: model
+    variant_key: decoder_lm
+    config: {model_name: nano, artifact_dir: artifacts}
+  opt:
+    component_key: optimizer
+    variant_key: adamw
+    config: {lr: 1e-3}
+  trainer:
+    component_key: gym
+    variant_key: spmd
+    config:
+      model: {instance_key: net}
+      dataloader: {instance_key: loader}
+      optimizer: {instance_key: opt}
+      steps: 2
+      run_dir: /tmp/modalities-gym-spec-test
+";
+
+    #[test]
+    fn gym_spec_assembles() {
+        let cfg = Config::from_str_named(SRC, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let gym = g.into_gym().unwrap();
+        assert_eq!(gym.spec.steps, 2);
+        assert_eq!(gym.spec.parallel.dp, 1); // default
+        assert_eq!(gym.spec.run_name, "unit-test");
+        assert!(!gym.spec.config_fingerprint.is_empty());
+    }
+
+    #[test]
+    fn missing_gym_flagged() {
+        let src = "components:\n  opt:\n    component_key: optimizer\n    variant_key: adamw\n    config: {lr: 1e-3}\n";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let e = g.into_gym().err().map(|e| e.to_string()).unwrap();
+        assert!(e.contains("no 'gym' component"), "{e}");
+    }
+
+    #[test]
+    fn wrong_interface_in_gym_field_flagged() {
+        let src = SRC.replace(
+            "model: {instance_key: net}",
+            "model: {instance_key: opt}",
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let e = ObjectGraphBuilder::new(&reg).build(&cfg);
+        let msg = e.err().map(|e| e.root_cause().to_string()).unwrap();
+        assert!(msg.contains("expects interface 'model'"), "{msg}");
+    }
+}

@@ -1,0 +1,361 @@
+//! The **gym**: the generic SPMD training driver (Fig. 1 of the paper).
+//!
+//! The gym is deliberately dumb: it owns *no* experiment specifics.
+//! Everything — model, data, optimizer, schedule, parallelism,
+//! checkpointing, observability — arrives as components resolved from
+//! the declarative config, and the gym just turns the crank:
+//!
+//! ```text
+//! for step in resume_step..steps:
+//!     params ← all-gather(unit shards)            (FSDP unshard)
+//!     for rank in 0..dp: loss_r, grads_r ← PJRT train_step(batch_r)
+//!     grad ← reduce-scatter(mean grads)           (FSDP grad flow)
+//!     shard ← AdamW(shard, grad shard, lr(step))  (sharded optimizer)
+//!     subscribers.on_step(metrics)
+//!     eval / checkpoint hooks
+//! ```
+//!
+//! Rank compute is executed lockstep on one thread (PJRT handles are
+//! not Send; see DESIGN.md §Hardware-Adaptation) — collective semantics
+//! and data placement are identical to a real SPMD deployment.
+
+pub mod components;
+pub mod subscribers;
+
+use crate::checkpoint;
+use crate::data::dataset::{DataLoader, DistributedSampler, Sampler};
+use crate::fsdp::FsdpEngine;
+use crate::model::{LmModel, ModelSpec, ParamStore, TokenBatch};
+use crate::optim::components::OptimizerSpec;
+use crate::optim::LrSchedule;
+use crate::runtime::components::RuntimeSpec;
+use crate::runtime::pjrt::PjrtEngine;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use subscribers::{StepRecord, Subscriber};
+
+/// Everything the gym needs, resolved from the object graph.
+pub struct GymSpec {
+    pub model: Arc<ModelSpec>,
+    pub dataloader: Arc<DataLoader>,
+    pub eval_dataloader: Option<Arc<DataLoader>>,
+    pub optimizer: Arc<OptimizerSpec>,
+    pub scheduler: Arc<LrSchedule>,
+    pub parallel: Arc<crate::fsdp::components::ParallelSpec>,
+    pub runtime: Arc<RuntimeSpec>,
+    pub checkpoint_policy: Option<Arc<crate::checkpoint::components::CheckpointPolicy>>,
+    pub warm_start: Option<Arc<crate::model::components::WarmStartSpec>>,
+    // scalar settings
+    pub steps: u64,
+    pub grad_accum: usize,
+    pub log_every: u64,
+    pub eval_every: Option<u64>,
+    pub eval_batches: usize,
+    pub max_grad_norm: Option<f32>,
+    pub run_dir: PathBuf,
+    pub run_name: String,
+    pub config_fingerprint: String,
+    pub config_yaml: String,
+    pub resume: bool,
+}
+
+/// One (step, metric) curve point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: u64,
+    pub loss: f32,
+}
+
+/// Summary returned by [`Gym::run`].
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub final_loss: f32,
+    pub curve: Vec<CurvePoint>,
+    pub eval_curve: Vec<CurvePoint>,
+    pub steps: u64,
+    pub tokens_seen: u64,
+    pub elapsed_s: f64,
+    pub tokens_per_s: f64,
+    pub comm_bytes: u64,
+    pub world: usize,
+}
+
+/// The training driver.
+pub struct Gym {
+    pub spec: GymSpec,
+    subscribers: Vec<Box<dyn Subscriber>>,
+}
+
+impl Gym {
+    pub fn new(spec: GymSpec) -> Self {
+        Self { spec, subscribers: Vec::new() }
+    }
+
+    pub fn add_subscriber(&mut self, s: Box<dyn Subscriber>) {
+        self.subscribers.push(s);
+    }
+
+    /// Default observability: console every `log_every` + JSONL metrics
+    /// in the run dir.
+    pub fn with_default_subscribers(mut self) -> Result<Self> {
+        std::fs::create_dir_all(&self.spec.run_dir)?;
+        let console = subscribers::ConsoleSubscriber::new(self.spec.log_every);
+        let jsonl =
+            subscribers::JsonlSubscriber::create(&self.spec.run_dir.join("metrics.jsonl"))?;
+        self.subscribers.push(Box::new(console));
+        self.subscribers.push(Box::new(jsonl));
+        Ok(self)
+    }
+
+    /// Run the training loop to completion.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let spec = &self.spec;
+        let world = spec.parallel.dp;
+        std::fs::create_dir_all(&spec.run_dir)?;
+        // Provenance: the resolved config is the experiment record.
+        std::fs::write(spec.run_dir.join("config.resolved.yaml"), &spec.config_yaml)?;
+
+        let engine = spec.runtime.engine().context("creating PJRT engine")?;
+        let (model, mut params) = spec.model.materialize(&engine)?;
+
+        // Warm start (consolidated checkpoint) before sharding.
+        if let Some(ws) = &spec.warm_start {
+            let cons = checkpoint::load_consolidated(&ws.path)?;
+            checkpoint::warm_start_params(&mut params, &cons)
+                .with_context(|| format!("warm start from {}", ws.path.display()))?;
+            log::info!("warm-started from {} (step {})", ws.path.display(), cons.step);
+        }
+
+        let mut fsdp = FsdpEngine::new(&params, spec.parallel.fsdp_config(), &spec.optimizer)?;
+
+        // Resume from the latest sharded checkpoint in run_dir.
+        let mut start_step = 0u64;
+        if spec.resume {
+            if let Some(ckpt) = checkpoint::latest_checkpoint(&spec.run_dir) {
+                start_step = checkpoint::load_sharded(&ckpt, &mut fsdp)?;
+                log::info!("resumed from {} at step {start_step}", ckpt.display());
+            }
+        }
+
+        // Per-rank loaders: DistributedSampler over the configured
+        // sampler; identical seeds across ranks keep SPMD determinism.
+        let loaders: Vec<DataLoader> = (0..world)
+            .map(|rank| {
+                let s: Arc<dyn Sampler> = Arc::new(DistributedSampler::new(
+                    spec.dataloader.sampler.clone(),
+                    rank,
+                    world,
+                )?);
+                DataLoader::new(spec.dataloader.dataset.clone(), s, spec.dataloader.batch_size)
+            })
+            .collect::<Result<_>>()?;
+        let batches_per_epoch = loaders[0].batches_per_epoch(0).max(1);
+
+        let micro_tokens =
+            (spec.dataloader.batch_size * spec.dataloader.dataset.seq_len()) as u64;
+        let tokens_per_step = micro_tokens * world as u64 * spec.grad_accum as u64;
+
+        let timer = crate::util::stats::Timer::start();
+        let mut curve = Vec::new();
+        let mut eval_curve = Vec::new();
+        let mut final_loss = f32::NAN;
+        let mut tokens_seen = start_step * tokens_per_step;
+        let mut micro_idx = start_step * spec.grad_accum as u64;
+
+        for step in start_step..spec.steps {
+            let lr_scale = spec.scheduler.scale_at(step);
+            // Gather full params once per step (grads don't change them
+            // mid-accumulation).
+            fsdp.unshard_into(&mut params)?;
+
+            // Accumulate per-rank grads over microbatches.
+            let mut per_rank: Vec<Vec<Vec<f32>>> = Vec::with_capacity(world);
+            let mut loss_sum = 0f32;
+            for rank in 0..world {
+                let mut acc: Option<Vec<Vec<f32>>> = None;
+                for a in 0..spec.grad_accum {
+                    let global_micro = micro_idx + a as u64;
+                    let epoch = global_micro / batches_per_epoch as u64;
+                    let b = (global_micro % batches_per_epoch as u64) as usize;
+                    let batch = loaders[rank].batch(epoch, b);
+                    let tb = TokenBatch::from(&batch);
+                    let out = model
+                        .train_step(&engine, &params, &tb)
+                        .with_context(|| format!("step {step} rank {rank}"))?;
+                    if !out.loss.is_finite() {
+                        bail!("non-finite loss {} at step {step} rank {rank}", out.loss);
+                    }
+                    loss_sum += out.loss;
+                    match &mut acc {
+                        None => acc = Some(out.grads),
+                        Some(acc) => {
+                            for (a, g) in acc.iter_mut().zip(&out.grads) {
+                                for (x, y) in a.iter_mut().zip(g) {
+                                    *x += *y;
+                                }
+                            }
+                        }
+                    }
+                }
+                let mut grads = acc.unwrap();
+                if spec.grad_accum > 1 {
+                    let inv = 1.0 / spec.grad_accum as f32;
+                    for g in &mut grads {
+                        for x in g.iter_mut() {
+                            *x *= inv;
+                        }
+                    }
+                }
+                per_rank.push(grads);
+            }
+            micro_idx += spec.grad_accum as u64;
+
+            let comm_before = fsdp.comm.stats.total_bytes();
+            let grad_norm = fsdp.apply_grads(&per_rank, lr_scale, spec.max_grad_norm)?;
+            let loss = fsdp.comm.all_reduce_scalar(
+                &vec![loss_sum / (world * spec.grad_accum) as f32 / world as f32; world],
+            );
+            tokens_seen += tokens_per_step;
+            final_loss = loss;
+            curve.push(CurvePoint { step, loss });
+
+            let rec = StepRecord {
+                step,
+                loss,
+                lr: self.spec.optimizer.lr() * lr_scale,
+                grad_norm,
+                tokens_seen,
+                tokens_per_s: tokens_seen.saturating_sub(start_step * tokens_per_step) as f64
+                    / timer.elapsed_s(),
+                comm_bytes_step: fsdp.comm.stats.total_bytes() - comm_before,
+            };
+            for s in &mut self.subscribers {
+                s.on_step(&rec);
+            }
+
+            // Eval hook.
+            if let (Some(every), Some(eval_dl)) = (spec.eval_every, &spec.eval_dataloader) {
+                if every > 0 && (step + 1) % every == 0 {
+                    fsdp.unshard_into(&mut params)?;
+                    let eval_loss =
+                        evaluate(&engine, &model, &params, eval_dl, spec.eval_batches)?;
+                    eval_curve.push(CurvePoint { step, loss: eval_loss });
+                    for s in &mut self.subscribers {
+                        s.on_eval(step, eval_loss);
+                    }
+                }
+            }
+
+            // Checkpoint hook.
+            if let Some(policy) = &spec.checkpoint_policy {
+                if let Some(every) = policy.every_steps {
+                    if every > 0 && (step + 1) % every == 0 {
+                        checkpoint::save_sharded(
+                            &spec.run_dir,
+                            step + 1,
+                            &fsdp,
+                            &params,
+                            &spec.model.model_name,
+                            &spec.config_fingerprint,
+                        )?;
+                        prune_checkpoints(&spec.run_dir, policy.keep_last)?;
+                    }
+                }
+            }
+        }
+
+        // Final checkpoint if a policy is present.
+        if spec.checkpoint_policy.is_some() && spec.steps > start_step {
+            checkpoint::save_sharded(
+                &spec.run_dir,
+                spec.steps,
+                &fsdp,
+                &params,
+                &spec.model.model_name,
+                &spec.config_fingerprint,
+            )?;
+        }
+
+        let elapsed = timer.elapsed_s();
+        let summary = RunSummary {
+            final_loss,
+            curve,
+            eval_curve,
+            steps: spec.steps,
+            tokens_seen,
+            elapsed_s: elapsed,
+            tokens_per_s: tokens_seen.saturating_sub(start_step * tokens_per_step) as f64 / elapsed,
+            comm_bytes: fsdp.comm.stats.total_bytes(),
+            world,
+        };
+        for s in &mut self.subscribers {
+            s.on_end(&summary, &fsdp.comm.stats);
+        }
+        Ok(summary)
+    }
+}
+
+/// Mean loss over the first `max_batches` of the eval loader.
+pub fn evaluate(
+    engine: &PjrtEngine,
+    model: &LmModel,
+    params: &ParamStore,
+    dl: &DataLoader,
+    max_batches: usize,
+) -> Result<f32> {
+    let n = dl.batches_per_epoch(0).min(max_batches.max(1));
+    if n == 0 {
+        bail!("eval dataloader has no batches");
+    }
+    let mut sum = 0f32;
+    for b in 0..n {
+        let batch = dl.batch(0, b);
+        sum += model.loss(engine, params, &TokenBatch::from(&batch))?;
+    }
+    Ok(sum / n as f32)
+}
+
+fn prune_checkpoints(run_dir: &std::path::Path, keep_last: usize) -> Result<()> {
+    if keep_last == 0 {
+        return Ok(());
+    }
+    let mut ckpts: Vec<(u64, PathBuf)> = Vec::new();
+    for e in std::fs::read_dir(run_dir)?.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(num) = name.strip_prefix("step_") {
+            if let Ok(step) = num.parse::<u64>() {
+                ckpts.push((step, e.path()));
+            }
+        }
+    }
+    ckpts.sort_by_key(|(s, _)| *s);
+    while ckpts.len() > keep_last {
+        let (_, path) = ckpts.remove(0);
+        std::fs::remove_dir_all(path).ok();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prune_keeps_latest() {
+        let dir = std::env::temp_dir().join("modalities-gym-prune");
+        let _ = std::fs::remove_dir_all(&dir);
+        for s in [1u64, 5, 9, 12] {
+            std::fs::create_dir_all(dir.join(format!("step_{s:08}"))).unwrap();
+        }
+        prune_checkpoints(&dir, 2).unwrap();
+        let left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(left.len(), 2);
+        assert!(left.contains(&"step_00000009".to_string()));
+        assert!(left.contains(&"step_00000012".to_string()));
+    }
+}

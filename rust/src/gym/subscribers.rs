@@ -1,0 +1,177 @@
+//! Observability subscribers (the paper's "message subscriber" design:
+//! training emits structured records; sinks are pluggable components).
+
+use crate::dist::collectives::CommStats;
+use crate::util::human;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// One optimizer step's metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    pub grad_norm: f32,
+    pub tokens_seen: u64,
+    pub tokens_per_s: f64,
+    pub comm_bytes_step: u64,
+}
+
+/// Metrics sink interface.
+pub trait Subscriber: Send {
+    fn on_step(&mut self, rec: &StepRecord);
+    fn on_eval(&mut self, _step: u64, _loss: f32) {}
+    fn on_end(&mut self, _summary: &super::RunSummary, _comm: &CommStats) {}
+}
+
+/// Stdout progress lines every `log_every` steps.
+pub struct ConsoleSubscriber {
+    log_every: u64,
+}
+
+impl ConsoleSubscriber {
+    pub fn new(log_every: u64) -> Self {
+        Self { log_every: log_every.max(1) }
+    }
+}
+
+impl Subscriber for ConsoleSubscriber {
+    fn on_step(&mut self, r: &StepRecord) {
+        if r.step % self.log_every == 0 {
+            println!(
+                "step {:>6}  loss {:>8.4}  lr {:.2e}  gnorm {:>7.3}  tok {:>9}  {:>10}  comm/step {}",
+                r.step,
+                r.loss,
+                r.lr,
+                r.grad_norm,
+                human::count(r.tokens_seen),
+                human::rate(r.tokens_per_s, "tok"),
+                human::bytes(r.comm_bytes_step),
+            );
+        }
+    }
+
+    fn on_eval(&mut self, step: u64, loss: f32) {
+        println!("step {step:>6}  [eval] loss {loss:.4}");
+    }
+
+    fn on_end(&mut self, s: &super::RunSummary, comm: &CommStats) {
+        println!(
+            "done: {} steps, final loss {:.4}, {} tokens in {} ({}), comm total {}",
+            s.steps,
+            s.final_loss,
+            human::count(s.tokens_seen),
+            human::duration(s.elapsed_s),
+            human::rate(s.tokens_per_s, "tok"),
+            human::bytes(s.comm_bytes),
+        );
+        print!("{}", comm.report());
+    }
+}
+
+/// JSONL metrics file (one record per step) — machine-readable run log,
+/// consumed by the benches and by EXPERIMENTS.md table generation.
+pub struct JsonlSubscriber {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlSubscriber {
+    pub fn create(path: &Path) -> Result<Self> {
+        Ok(Self { out: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+}
+
+impl Subscriber for JsonlSubscriber {
+    fn on_step(&mut self, r: &StepRecord) {
+        let rec = Json::from_pairs(vec![
+            ("kind", "step".into()),
+            ("step", (r.step as i64).into()),
+            ("loss", (r.loss as f64).into()),
+            ("lr", (r.lr as f64).into()),
+            ("grad_norm", (r.grad_norm as f64).into()),
+            ("tokens_seen", (r.tokens_seen as i64).into()),
+            ("tokens_per_s", r.tokens_per_s.into()),
+            ("comm_bytes_step", (r.comm_bytes_step as i64).into()),
+        ]);
+        let _ = writeln!(self.out, "{}", rec.dumps());
+    }
+
+    fn on_eval(&mut self, step: u64, loss: f32) {
+        let rec = Json::from_pairs(vec![
+            ("kind", "eval".into()),
+            ("step", (step as i64).into()),
+            ("loss", (loss as f64).into()),
+        ]);
+        let _ = writeln!(self.out, "{}", rec.dumps());
+    }
+
+    fn on_end(&mut self, s: &super::RunSummary, comm: &CommStats) {
+        let rec = Json::from_pairs(vec![
+            ("kind", "summary".into()),
+            ("final_loss", (s.final_loss as f64).into()),
+            ("steps", (s.steps as i64).into()),
+            ("tokens_seen", (s.tokens_seen as i64).into()),
+            ("elapsed_s", s.elapsed_s.into()),
+            ("tokens_per_s", s.tokens_per_s.into()),
+            ("comm_bytes", (s.comm_bytes as i64).into()),
+            ("world", s.world.into()),
+            ("comm_total_messages", (comm.total_messages() as i64).into()),
+        ]);
+        let _ = writeln!(self.out, "{}", rec.dumps());
+        let _ = self.out.flush();
+    }
+}
+
+/// In-memory capture (tests / benches).
+#[derive(Default)]
+pub struct CaptureSubscriber {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<(u64, f32)>,
+}
+
+impl Subscriber for CaptureSubscriber {
+    fn on_step(&mut self, rec: &StepRecord) {
+        self.steps.push(*rec);
+    }
+
+    fn on_eval(&mut self, step: u64, loss: f32) {
+        self.evals.push((step, loss));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_records_parse() {
+        let dir = std::env::temp_dir().join("modalities-subscriber-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.jsonl");
+        {
+            let mut s = JsonlSubscriber::create(&path).unwrap();
+            s.on_step(&StepRecord {
+                step: 1,
+                loss: 2.5,
+                lr: 1e-3,
+                grad_norm: 0.7,
+                tokens_seen: 1024,
+                tokens_per_s: 100.0,
+                comm_bytes_step: 4096,
+            });
+            s.on_eval(1, 2.4);
+            drop(s);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("step"));
+        assert_eq!(v.get("loss").unwrap().as_f64(), Some(2.5));
+        let e = Json::parse(lines[1]).unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("eval"));
+    }
+}

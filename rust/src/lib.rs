@@ -1,0 +1,61 @@
+//! # modalities-rs
+//!
+//! A Rust + JAX + Pallas reproduction of *"Modalities, a PyTorch-native
+//! Framework For Large-scale LLM Training and Research"* (Lübbering et
+//! al., 2026).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the framework itself: declarative YAML
+//!   configuration resolved through a registry/factory/dependency-
+//!   injection mechanism into a validated object graph ([`registry`],
+//!   [`config`], [`yaml`]), a generic SPMD training driver ([`gym`]),
+//!   a distributed engine with real collectives and FSDP/HSDP/TP/PP
+//!   orchestration ([`dist`], [`fsdp`], [`pipeline`], [`tp`]), the
+//!   high-throughput data pipeline ([`data`]), distributed
+//!   checkpointing ([`checkpoint`]), and an interconnect performance
+//!   model used for the paper's scaling studies ([`perfmodel`]).
+//! * **L2 (python/compile/model.py)** — the JAX transformer forward/
+//!   backward graph, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused causal
+//!   attention, fused cross-entropy) called from L2.
+//!
+//! Python never runs on the training path: [`runtime`] loads the AOT
+//! artifacts via the PJRT C API and executes them from Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use modalities::config::Config;
+//! use modalities::registry::{ComponentRegistry, ObjectGraphBuilder};
+//!
+//! let cfg = Config::from_file("configs/quickstart.yaml").unwrap();
+//! let registry = ComponentRegistry::with_builtins();
+//! let graph = ObjectGraphBuilder::new(&registry).build(&cfg).unwrap();
+//! let mut gym = graph.into_gym().unwrap();
+//! gym.run().unwrap();
+//! ```
+
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dist;
+pub mod fsdp;
+pub mod gym;
+pub mod model;
+pub mod optim;
+pub mod perfmodel;
+pub mod pipeline;
+pub mod registry;
+pub mod runtime;
+pub mod tp;
+pub mod util;
+pub mod yaml;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and written into checkpoints /
+/// run manifests for provenance.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,320 @@
+//! `modalities` — the leader entrypoint / CLI.
+//!
+//! See `modalities --help` (or [`modalities::cli::usage`]) for the
+//! command surface. Every command is a thin shim over the library: the
+//! CLI parses arguments, loads + resolves the YAML config, builds the
+//! object graph against the builtin registry, and delegates.
+
+use anyhow::{bail, Context, Result};
+use modalities::checkpoint;
+use modalities::cli::{self, Args};
+use modalities::config::Config;
+use modalities::data::baseline::tokenize_corpus_baseline;
+use modalities::data::bpe::{train_bpe, BpeVocab};
+use modalities::data::jsonl::{index_jsonl, JsonlCorpus};
+use modalities::data::mmtok::MmtokReader;
+use modalities::data::pipeline::{tokenize_corpus, PipelineConfig};
+use modalities::data::synthetic::{generate_corpus, CorpusSpec};
+use modalities::registry::{ComponentRegistry, ObjectGraphBuilder};
+use modalities::util::human;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = cli::parse(argv)?;
+    if args.has_flag("help") || args.subcommand().is_none() {
+        print!("{}", cli::usage());
+        return Ok(());
+    }
+    match args.subcommand().unwrap() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "data" => cmd_data(&args),
+        "convert" => cmd_convert(&args),
+        "generate" => cmd_generate(&args),
+        "components" => cmd_components(),
+        "config" => cmd_config(&args),
+        "tune" => cmd_tune(&args),
+        "trace" => cmd_trace(&args),
+        "version" => {
+            println!("modalities {}", modalities::VERSION);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", cli::usage()),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::from_file(args.need("config")?)?;
+    for s in &args.sets {
+        cfg.set_override(s)?;
+    }
+    if args.has_flag("resume") {
+        cfg.set_override("components.trainer.config.resume=true").ok();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let reg = ComponentRegistry::with_builtins();
+    let graph = ObjectGraphBuilder::new(&reg).build(&cfg).context("building object graph")?;
+    println!(
+        "config {} → {} components resolved",
+        cfg.fingerprint_hex(),
+        graph.components.len()
+    );
+    let mut gym = graph.into_gym()?;
+    let summary = gym.run()?;
+    println!(
+        "run complete: final loss {:.4} after {} steps",
+        summary.final_loss, summary.steps
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let points = modalities::config::expand_sweep(&cfg)?;
+    println!("sweep expands to {} experiments", points.len());
+    let reg = ComponentRegistry::with_builtins();
+    for (i, (c, p)) in points.iter().enumerate() {
+        let label = if p.assignments.is_empty() { "base".to_string() } else { p.label() };
+        println!("--- [{}/{}] {label} (config {})", i + 1, points.len(), c.fingerprint_hex());
+        if args.has_flag("dry-run") {
+            continue;
+        }
+        let mut c = c.clone();
+        // Give each point its own run dir.
+        let run_dir = format!("runs/sweep/{}", c.fingerprint_hex());
+        c.set_override(&format!("components.trainer.config.run_dir={run_dir}"))?;
+        let graph = ObjectGraphBuilder::new(&reg).build(&c)?;
+        let mut gym = graph.into_gym()?;
+        let summary = gym.run()?;
+        println!("    final loss {:.4}", summary.final_loss);
+    }
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "gen" => {
+            let out = args.need("out")?;
+            let spec = CorpusSpec {
+                num_docs: args.opt_usize("docs", 10_000)?,
+                mean_doc_words: args.opt_usize("mean-words", 200)?,
+                seed: args.opt_usize("seed", 0)? as u64,
+                ..Default::default()
+            };
+            let t = modalities::util::stats::Timer::start();
+            let (docs, bytes) = generate_corpus(Path::new(out), &spec)?;
+            println!(
+                "wrote {docs} docs ({}) to {out} in {}",
+                human::bytes(bytes),
+                human::duration(t.elapsed_s())
+            );
+        }
+        "index" => {
+            let corpus = args.need("corpus")?;
+            let t = modalities::util::stats::Timer::start();
+            let n = index_jsonl(Path::new(corpus), None)?;
+            println!("indexed {n} documents in {}", human::duration(t.elapsed_s()));
+        }
+        "train-vocab" => {
+            let corpus = args.need("corpus")?;
+            let out = args.need("out")?;
+            let merges = args.opt_usize("merges", 4096)?;
+            let c = JsonlCorpus::open(Path::new(corpus))?;
+            // Sample up to 2000 docs for vocabulary training.
+            let n = c.len().min(2000);
+            let texts: Vec<String> =
+                (0..n).map(|i| c.doc_text(i)).collect::<Result<_>>()?;
+            let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+            let t = modalities::util::stats::Timer::start();
+            let vocab = train_bpe(&refs, merges);
+            vocab.save(Path::new(out))?;
+            println!(
+                "trained {} merges from {n} docs in {} → {out} (vocab size {})",
+                vocab.merges.len(),
+                human::duration(t.elapsed_s()),
+                vocab.size()
+            );
+        }
+        "tokenize" => {
+            let corpus = args.need("corpus")?;
+            let out = args.need("out")?;
+            let vocab = match args.opt("vocab") {
+                Some(v) => BpeVocab::load(Path::new(v))?,
+                None => BpeVocab::byte_fallback(),
+            };
+            let cfg = PipelineConfig {
+                num_workers: args.opt_usize("workers", 2)?,
+                batch_docs: args.opt_usize("batch-docs", 64)?,
+                ..Default::default()
+            };
+            let stats = if args.has_flag("baseline") {
+                tokenize_corpus_baseline(Path::new(corpus), Path::new(out), Arc::new(vocab), true, 4)?
+            } else {
+                tokenize_corpus(Path::new(corpus), Path::new(out), Arc::new(vocab), &cfg)?
+            };
+            println!(
+                "tokenized {} docs → {} tokens in {} ({}, cache hit rate {:.1}%)",
+                stats.docs,
+                human::count(stats.tokens),
+                human::duration(stats.elapsed_s),
+                human::rate(stats.tokens_per_s(), "tok"),
+                100.0 * stats.cache_hits as f64
+                    / (stats.cache_hits + stats.cache_misses).max(1) as f64
+            );
+        }
+        "info" => {
+            let path = args.need("corpus")?;
+            let r = MmtokReader::open(Path::new(path))?;
+            println!(
+                "{path}: {} docs, {} tokens, width {} bytes, vocab fp {:016x}",
+                r.num_docs(),
+                human::count(r.num_tokens()),
+                r.token_width(),
+                r.vocab_fingerprint()
+            );
+        }
+        other => bail!("unknown data subcommand '{other}'\n{}", cli::usage()),
+    }
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let from = Path::new(args.need("from")?);
+    let to = Path::new(args.need("to")?);
+    checkpoint::consolidate(from, to)?;
+    let cons = checkpoint::load_consolidated(to)?;
+    println!(
+        "consolidated {} (step {}, model '{}', {} params) → {}",
+        from.display(),
+        cons.step,
+        cons.model_name,
+        human::count(cons.flat.len() as u64),
+        to.display()
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use modalities::model::{greedy_generate, InitScheme, ModelSpec};
+    use modalities::runtime::pjrt::PjrtEngine;
+    let cfg = load_config(args)?;
+    let model_name = cfg.str_or("components.net.config.model_name", "nano");
+    let artifact_dir = cfg.str_or("components.net.config.artifact_dir", "artifacts");
+    let engine = PjrtEngine::cpu()?;
+    let spec = ModelSpec {
+        artifact_dir: artifact_dir.into(),
+        model_name,
+        init: InitScheme::ScaledNormal,
+        seed: 0,
+    };
+    let (model, mut params) = spec.materialize(&engine)?;
+    if let Some(ckpt) = args.opt("ckpt") {
+        let cons = checkpoint::load_consolidated(Path::new(ckpt))?;
+        checkpoint::warm_start_params(&mut params, &cons)?;
+    }
+    // Prompt: comma-separated token ids (framework-level demo; text
+    // round-trips go through `data train-vocab` + the tokenizer API).
+    let prompt: Vec<u32> = args
+        .need("prompt")?
+        .split(',')
+        .map(|t| t.trim().parse::<u32>().context("prompt must be comma-separated token ids"))
+        .collect::<Result<_>>()?;
+    let out = greedy_generate(&engine, &model, &params, &prompt, 32)?;
+    println!("{out:?}");
+    Ok(())
+}
+
+fn cmd_components() -> Result<()> {
+    let reg = ComponentRegistry::with_builtins();
+    println!(
+        "{} components over {} interfaces:",
+        reg.len(),
+        modalities::registry::INTERFACES.len()
+    );
+    let mut last = "";
+    for (iface, variant) in reg.list() {
+        if iface != last {
+            println!("{iface}:");
+        }
+        println!("  - {variant}");
+        last = Box::leak(iface.into_boxed_str());
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("resolve") => {
+            let cfg = load_config(args)?;
+            println!("# fingerprint: {}", cfg.fingerprint_hex());
+            print!("{}", cfg.to_yaml());
+            Ok(())
+        }
+        _ => bail!("usage: modalities config resolve --config <yaml>"),
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    use modalities::perfmodel::steptime::{tune, Workload};
+    use modalities::perfmodel::{GpuModel, InterconnectModel};
+    let world = args.opt_usize("world", 256)?;
+    let w = Workload::llama3_8b();
+    let ranked = tune(&w, world, &InterconnectModel::leonardo(), &GpuModel::a100_64g());
+    println!("throughput tuning for LLaMa-3-8B @ world={world} (modeled, Leonardo-like):");
+    println!("{:<44} {:>14}", "plan", "tok/s/GPU");
+    for (plan, tps) in ranked.iter().take(8) {
+        println!(
+            "unit={} blocks, hsdp_shard={:<14} {:>14.0}",
+            plan.unit_blocks,
+            plan.hsdp_shard.map(|g| g.to_string()).unwrap_or("full".into()),
+            tps
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("pp") => {
+            let mut stages = 4usize;
+            let mut micros = 16usize;
+            for s in &args.sets {
+                if let Some(v) = s.strip_prefix("stages=") {
+                    stages = v.parse()?;
+                }
+                if let Some(v) = s.strip_prefix("micros=") {
+                    micros = v.parse()?;
+                }
+            }
+            for kind in [
+                modalities::pipeline::Schedule::GPipe,
+                modalities::pipeline::Schedule::OneFOneB,
+            ] {
+                let sched = modalities::pipeline::schedule(kind, stages, micros)?;
+                println!(
+                    "{kind:?}: makespan {} clocks, bubble {:.1}%, stage-0 peak activations {}",
+                    modalities::pipeline::makespan(&sched),
+                    100.0 * modalities::pipeline::bubble_fraction(&sched, stages),
+                    modalities::pipeline::peak_inflight(&sched, 0)
+                );
+                println!("{}", modalities::pipeline::render(&sched, stages));
+            }
+            Ok(())
+        }
+        _ => bail!("usage: modalities trace pp [--set stages=4] [--set micros=16]"),
+    }
+}

@@ -1,0 +1,398 @@
+//! Model stack: descriptors, parameter stores, and the artifact-bound
+//! LM model executed through PJRT.
+//!
+//! Split of responsibilities:
+//! * [`ModelSpec`] — what the *object graph* holds: a pure-data
+//!   description (artifact dir, model name, init scheme, seed).
+//!   PJRT handles are not `Send`, so live executables never enter the
+//!   (Send+Sync) component graph; the gym materializes them on its
+//!   thread at run start ([`ModelSpec::materialize`]).
+//! * [`ParamStore`] — named f32 parameter buffers, owned by rust. Init
+//!   uses the in-repo PRNG (scaled-normal, residual-projection scaling
+//!   1/√(2L), norm weights at 1 — matching L2's scheme), so training is
+//!   reproducible from a seed without python.
+//! * [`LmModel`] — descriptor + compiled executables; `train_step`
+//!   is the hot path: literals in → (loss, grads) out.
+
+pub mod components;
+
+use crate::runtime::pjrt::{
+    literal_f32, to_f32_scalar, to_f32_vec, tokens_literal, Manifest, ModelArtifacts, PjrtEngine,
+};
+use crate::util::prng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Parameter initialization scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitScheme {
+    /// N(0, 0.02²), residual projections (wo, w_down) scaled by 1/√(2L),
+    /// norm weights = 1.
+    ScaledNormal,
+    /// All zeros (tests).
+    Zeros,
+}
+
+/// Pure-data model component stored in the object graph.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub artifact_dir: PathBuf,
+    pub model_name: String,
+    pub init: InitScheme,
+    pub seed: u64,
+}
+
+impl ModelSpec {
+    /// Load manifest, compile artifacts, init parameters — called on the
+    /// execution thread by the gym / examples.
+    pub fn materialize(&self, engine: &PjrtEngine) -> Result<(LmModel, ParamStore)> {
+        let manifest = Manifest::load(&self.artifact_dir)?;
+        let arts = manifest.model(&self.model_name)?.clone();
+        let model = LmModel::compile(engine, &manifest, &arts)
+            .with_context(|| format!("compiling model '{}'", self.model_name))?;
+        let params = ParamStore::init(&arts, self.init, self.seed);
+        Ok((model, params))
+    }
+}
+
+/// Named, shaped f32 parameter buffers.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    pub fn init(arts: &ModelArtifacts, scheme: InitScheme, seed: u64) -> ParamStore {
+        let mut rng = Pcg64::new(seed ^ 0x6d6f_64656c); // "model"
+        let n_layers = arts.n_layers.max(1) as f32;
+        let resid_scale = 1.0 / (2.0 * n_layers).sqrt();
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut bufs = Vec::new();
+        for (name, shape) in &arts.param_shapes {
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0f32; n];
+            match scheme {
+                InitScheme::Zeros => {}
+                InitScheme::ScaledNormal => {
+                    if name.ends_with("norm_w") {
+                        buf.fill(1.0);
+                    } else {
+                        let std = if name == "wo" || name == "w_down" {
+                            0.02 * resid_scale
+                        } else {
+                            0.02
+                        };
+                        rng.fill_normal_f32(&mut buf, std);
+                    }
+                }
+            }
+            names.push(name.clone());
+            shapes.push(shape.clone());
+            bufs.push(buf);
+        }
+        ParamStore { names, shapes, bufs }
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Flatten all parameters into one contiguous vector (FSDP flat
+    /// units / checkpoint consolidation).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_elems());
+        for b in &self.bufs {
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::flatten`].
+    pub fn unflatten_from(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.num_elems() {
+            bail!("unflatten: {} elements, expected {}", flat.len(), self.num_elems());
+        }
+        let mut off = 0;
+        for b in &mut self.bufs {
+            let n = b.len();
+            b.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Global L2 norm (diagnostics / tests).
+    pub fn l2_norm(&self) -> f64 {
+        self.bufs
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// A token batch on its way into the runtime.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub tokens: Vec<u32>,
+    pub targets: Vec<u32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl From<&crate::data::dataset::Batch> for TokenBatch {
+    fn from(b: &crate::data::dataset::Batch) -> Self {
+        TokenBatch {
+            tokens: b.inputs.clone(),
+            targets: b.targets.clone(),
+            batch_size: b.batch_size,
+            seq_len: b.seq_len,
+        }
+    }
+}
+
+/// Output of one train step.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Gradients in parameter order (same shapes as the param store).
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Compiled model bound to PJRT executables.
+pub struct LmModel {
+    pub arts: ModelArtifacts,
+    train_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    loss_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    fwd_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl LmModel {
+    pub fn compile(engine: &PjrtEngine, manifest: &Manifest, arts: &ModelArtifacts) -> Result<LmModel> {
+        let load = |variant: &str| -> Result<Option<Rc<xla::PjRtLoadedExecutable>>> {
+            match arts.files.get(variant) {
+                Some(_) => {
+                    let p = arts.artifact_path(&manifest.dir, variant)?;
+                    Ok(Some(engine.load_hlo(&p)?))
+                }
+                None => Ok(None),
+            }
+        };
+        Ok(LmModel {
+            arts: arts.clone(),
+            train_exe: load("train")?,
+            loss_exe: load("loss")?,
+            fwd_exe: load("fwd")?,
+        })
+    }
+
+    fn check_batch(&self, batch: &TokenBatch) -> Result<()> {
+        if batch.batch_size != self.arts.batch_size || batch.seq_len != self.arts.seq_len {
+            bail!(
+                "batch [{}, {}] does not match artifact's static shape [{}, {}]",
+                batch.batch_size,
+                batch.seq_len,
+                self.arts.batch_size,
+                self.arts.seq_len
+            );
+        }
+        Ok(())
+    }
+
+    fn param_literals(&self, params: &ParamStore) -> Result<Vec<xla::Literal>> {
+        let want: Vec<Vec<usize>> =
+            self.arts.param_shapes.iter().map(|(_, s)| s.clone()).collect();
+        if params.shapes != want {
+            bail!("param store shapes do not match artifact manifest");
+        }
+        params
+            .bufs
+            .iter()
+            .zip(&params.shapes)
+            .map(|(b, s)| literal_f32(b, s))
+            .collect()
+    }
+
+    /// Full train step: (loss, grads). The gradients come back in
+    /// parameter order (contract with L2's `train_step_fn`).
+    pub fn train_step(
+        &self,
+        engine: &PjrtEngine,
+        params: &ParamStore,
+        batch: &TokenBatch,
+    ) -> Result<StepOutput> {
+        self.check_batch(batch)?;
+        let exe = self
+            .train_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no train artifact", self.arts.name))?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens_literal(&batch.tokens, batch.batch_size, batch.seq_len)?);
+        inputs.push(tokens_literal(&batch.targets, batch.batch_size, batch.seq_len)?);
+        let mut outs = engine.run(exe, &inputs)?;
+        if outs.len() != 1 + params.bufs.len() {
+            bail!(
+                "train artifact returned {} outputs, expected {}",
+                outs.len(),
+                1 + params.bufs.len()
+            );
+        }
+        let loss = to_f32_scalar(&outs[0])?;
+        let grads = outs.drain(1..).map(|l| to_f32_vec(&l)).collect::<Result<Vec<_>>>()?;
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Loss only (validation).
+    pub fn loss(&self, engine: &PjrtEngine, params: &ParamStore, batch: &TokenBatch) -> Result<f32> {
+        self.check_batch(batch)?;
+        let exe = self
+            .loss_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no loss artifact", self.arts.name))?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens_literal(&batch.tokens, batch.batch_size, batch.seq_len)?);
+        inputs.push(tokens_literal(&batch.targets, batch.batch_size, batch.seq_len)?);
+        let outs = engine.run(exe, &inputs)?;
+        to_f32_scalar(&outs[0])
+    }
+
+    /// Forward pass → logits [B, S, V] flattened (generation / eval).
+    pub fn forward(
+        &self,
+        engine: &PjrtEngine,
+        params: &ParamStore,
+        tokens: &[u32],
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .fwd_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no fwd artifact", self.arts.name))?;
+        if tokens.len() != self.arts.batch_size * self.arts.seq_len {
+            bail!(
+                "forward: got {} tokens, expected {}",
+                tokens.len(),
+                self.arts.batch_size * self.arts.seq_len
+            );
+        }
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens_literal(tokens, self.arts.batch_size, self.arts.seq_len)?);
+        let outs = engine.run(exe, &inputs)?;
+        to_f32_vec(&outs[0])
+    }
+}
+
+/// Greedy autoregressive generation using the `fwd` artifact (batch
+/// row 0). The artifact has static [B, S] shape: the prompt occupies a
+/// prefix, padding fills the rest, and we read the logits at the last
+/// prompt position each iteration — O(n · fwd) but artifact-only (no
+/// incremental KV cache variant is exported yet).
+pub fn greedy_generate(
+    engine: &PjrtEngine,
+    model: &LmModel,
+    params: &ParamStore,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<Vec<u32>> {
+    let arts = &model.arts;
+    let (b, s, v) = (arts.batch_size, arts.seq_len, arts.vocab_size);
+    if prompt.is_empty() || prompt.len() >= s {
+        bail!("prompt length must be in [1, {})", s);
+    }
+    let mut seq: Vec<u32> = prompt.to_vec();
+    for _ in 0..max_new {
+        if seq.len() >= s {
+            break;
+        }
+        let mut tokens = vec![0u32; b * s];
+        tokens[..seq.len()].copy_from_slice(&seq);
+        let logits = model.forward(engine, params, &tokens)?;
+        let pos = seq.len() - 1;
+        let row = &logits[pos * v..(pos + 1) * v];
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        seq.push(best as u32);
+    }
+    Ok(seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "fake".into(),
+            vocab_size: 16,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 8,
+            seq_len: 4,
+            batch_size: 2,
+            num_params: 0,
+            flops_per_token: 0,
+            param_shapes: vec![
+                ("tok_emb".into(), vec![16, 4]),
+                ("attn_norm_w".into(), vec![2, 4]),
+                ("wo".into(), vec![2, 4, 4]),
+            ],
+            files: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_schemes() {
+        let arts = fake_arts();
+        let p = ParamStore::init(&arts, InitScheme::ScaledNormal, 1);
+        assert_eq!(p.bufs.len(), 3);
+        // norm weights are ones
+        assert!(p.bufs[1].iter().all(|&x| x == 1.0));
+        // embeddings are random, small
+        assert!(p.bufs[0].iter().any(|&x| x != 0.0));
+        assert!(p.bufs[0].iter().all(|&x| x.abs() < 0.2));
+        // residual projection has smaller variance than embeddings
+        let var0: f32 = p.bufs[0].iter().map(|x| x * x).sum::<f32>() / p.bufs[0].len() as f32;
+        let var2: f32 = p.bufs[2].iter().map(|x| x * x).sum::<f32>() / p.bufs[2].len() as f32;
+        assert!(var2 < var0);
+
+        let z = ParamStore::init(&arts, InitScheme::Zeros, 1);
+        assert_eq!(z.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let arts = fake_arts();
+        let a = ParamStore::init(&arts, InitScheme::ScaledNormal, 42);
+        let b = ParamStore::init(&arts, InitScheme::ScaledNormal, 42);
+        let c = ParamStore::init(&arts, InitScheme::ScaledNormal, 43);
+        assert_eq!(a.bufs, b.bufs);
+        assert_ne!(a.bufs, c.bufs);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let arts = fake_arts();
+        let mut p = ParamStore::init(&arts, InitScheme::ScaledNormal, 5);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.num_elems());
+        let orig = p.bufs.clone();
+        let mut modified = flat.clone();
+        for v in &mut modified {
+            *v += 1.0;
+        }
+        p.unflatten_from(&modified).unwrap();
+        assert_ne!(p.bufs, orig);
+        p.unflatten_from(&flat).unwrap();
+        assert_eq!(p.bufs, orig);
+        assert!(p.unflatten_from(&flat[1..]).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Registry factories for optimizers / schedulers / clippers. The
+//! components are pure specs (the engine instantiates sized state once
+//! the parameter count is known).
+
+use super::LrSchedule;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+/// Optimizer spec resolved at engine-build time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerSpec {
+    AdamW { lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32 },
+    Sgd { lr: f32, momentum: f32 },
+}
+
+impl OptimizerSpec {
+    pub fn lr(&self) -> f32 {
+        match self {
+            OptimizerSpec::AdamW { lr, .. } => *lr,
+            OptimizerSpec::Sgd { lr, .. } => *lr,
+        }
+    }
+}
+
+/// Gradient-clipping spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClipSpec {
+    pub max_norm: f32,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("optimizer", "adamw", |ctx, cfg| {
+        Ok(Component::new(
+            "optimizer",
+            "adamw",
+            OptimizerSpec::AdamW {
+                lr: ctx.f64(cfg, "lr")? as f32,
+                beta1: ctx.f32_or(cfg, "beta1", 0.9)?,
+                beta2: ctx.f32_or(cfg, "beta2", 0.95)?,
+                eps: ctx.f32_or(cfg, "eps", 1e-8)?,
+                weight_decay: ctx.f32_or(cfg, "weight_decay", 0.1)?,
+            },
+        ))
+    })?;
+
+    reg.register("optimizer", "sgd", |ctx, cfg| {
+        Ok(Component::new(
+            "optimizer",
+            "sgd",
+            OptimizerSpec::Sgd {
+                lr: ctx.f64(cfg, "lr")? as f32,
+                momentum: ctx.f32_or(cfg, "momentum", 0.9)?,
+            },
+        ))
+    })?;
+
+    reg.register("lr_scheduler", "constant", |_ctx, _cfg| {
+        Ok(Component::new("lr_scheduler", "constant", LrSchedule::Constant))
+    })?;
+
+    reg.register("lr_scheduler", "warmup_constant", |ctx, cfg| {
+        Ok(Component::new(
+            "lr_scheduler",
+            "warmup_constant",
+            LrSchedule::WarmupConstant { warmup: ctx.usize(cfg, "warmup_steps")? as u64 },
+        ))
+    })?;
+
+    reg.register("lr_scheduler", "warmup_cosine", |ctx, cfg| {
+        Ok(Component::new(
+            "lr_scheduler",
+            "warmup_cosine",
+            LrSchedule::WarmupCosine {
+                warmup: ctx.usize(cfg, "warmup_steps")? as u64,
+                total: ctx.usize(cfg, "total_steps")? as u64,
+                min_ratio: ctx.f32_or(cfg, "min_ratio", 0.1)?,
+            },
+        ))
+    })?;
+
+    reg.register("lr_scheduler", "warmup_linear", |ctx, cfg| {
+        Ok(Component::new(
+            "lr_scheduler",
+            "warmup_linear",
+            LrSchedule::WarmupLinear {
+                warmup: ctx.usize(cfg, "warmup_steps")? as u64,
+                total: ctx.usize(cfg, "total_steps")? as u64,
+                min_ratio: ctx.f32_or(cfg, "min_ratio", 0.0)?,
+            },
+        ))
+    })?;
+
+    reg.register("gradient_clipper", "global_norm", |ctx, cfg| {
+        Ok(Component::new(
+            "gradient_clipper",
+            "global_norm",
+            ClipSpec { max_norm: ctx.f32_or(cfg, "max_norm", 1.0)? },
+        ))
+    })?;
+
+    reg.register("mixed_precision", "f32", |_ctx, _cfg| {
+        Ok(Component::new("mixed_precision", "f32", crate::fsdp::CommDtype::F32))
+    })?;
+
+    reg.register("mixed_precision", "bf16_comm", |_ctx, _cfg| {
+        Ok(Component::new("mixed_precision", "bf16_comm", crate::fsdp::CommDtype::Bf16))
+    })?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn optimizer_and_scheduler_from_config() {
+        let src = "\
+components:
+  opt:
+    component_key: optimizer
+    variant_key: adamw
+    config: {lr: 3e-4, weight_decay: 0.05}
+  sched:
+    component_key: lr_scheduler
+    variant_key: warmup_cosine
+    config: {warmup_steps: 10, total_steps: 100}
+  clip:
+    component_key: gradient_clipper
+    variant_key: global_norm
+    config: {max_norm: 0.5}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let opt = g.get::<super::OptimizerSpec>("opt").unwrap();
+        assert!(matches!(&*opt, super::OptimizerSpec::AdamW { lr, weight_decay, .. }
+            if (*lr - 3e-4).abs() < 1e-9 && (*weight_decay - 0.05).abs() < 1e-9));
+        let clip = g.get::<super::ClipSpec>("clip").unwrap();
+        assert_eq!(clip.max_norm, 0.5);
+    }
+}

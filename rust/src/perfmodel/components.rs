@@ -1,0 +1,71 @@
+//! Registry factories for the performance-model stack.
+
+use super::{GpuModel, InterconnectModel, LinkParams};
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("interconnect_model", "leonardo", |_ctx, _cfg| {
+        Ok(Component::new("interconnect_model", "leonardo", InterconnectModel::leonardo()))
+    })?;
+
+    reg.register("interconnect_model", "alpha_beta", |ctx, cfg| {
+        let m = InterconnectModel {
+            intra: LinkParams {
+                latency_s: ctx.f64_or(cfg, "intra_latency_us", 1.5)? * 1e-6,
+                bandwidth_bps: ctx.f64_or(cfg, "intra_bandwidth_gbps", 250.0)? * 1e9,
+            },
+            inter: LinkParams {
+                latency_s: ctx.f64_or(cfg, "inter_latency_us", 5.0)? * 1e-6,
+                bandwidth_bps: ctx.f64_or(cfg, "inter_bandwidth_gbps", 12.5)? * 1e9,
+            },
+            node_size: ctx.usize_or(cfg, "node_size", 4)?,
+            rails: ctx.usize_or(cfg, "rails", 2)?,
+        };
+        Ok(Component::new("interconnect_model", "alpha_beta", m))
+    })?;
+
+    reg.register("profiler", "a100_64g", |_ctx, _cfg| {
+        Ok(Component::new("profiler", "a100_64g", GpuModel::a100_64g()))
+    })?;
+
+    reg.register("profiler", "gpu_model", |ctx, cfg| {
+        let g = GpuModel {
+            peak_flops: ctx.f64_or(cfg, "peak_tflops", 312.0)? * 1e12,
+            mfu: ctx.f64_or(cfg, "mfu", 0.45)?,
+            hbm_bytes: (ctx.f64_or(cfg, "hbm_gb", 64.0)? * (1u64 << 30) as f64) as u64,
+        };
+        Ok(Component::new("profiler", "gpu_model", g))
+    })?;
+
+    reg.register("tracer", "comm_stats", |_ctx, _cfg| {
+        // Communication tracing is always-on in the collective engine;
+        // this component flags that traces should be dumped at run end.
+        Ok(Component::new("tracer", "comm_stats", ()))
+    })?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn interconnect_from_config() {
+        let src = "\
+components:
+  net:
+    component_key: interconnect_model
+    variant_key: alpha_beta
+    config: {inter_latency_us: 10, rails: 4}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let m = g.get::<crate::perfmodel::InterconnectModel>("net").unwrap();
+        assert_eq!(m.rails, 4);
+        assert!((m.inter.latency_s - 10e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,312 @@
+//! Training step-time composition: FSDP / HSDP / TP / PP communication
+//! volumes + compute, over the interconnect model. Drives the Fig. 2b
+//! strong-scaling reproduction and the unit-size ablation (E5), and the
+//! throughput tuner (`modalities tune`).
+
+use super::{GpuModel, InterconnectModel};
+
+/// Workload description (model + batch), in paper terms.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Total trainable parameters.
+    pub params: f64,
+    /// Transformer blocks.
+    pub layers: usize,
+    /// Hidden dim (for TP/PP activation volumes).
+    pub d_model: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Per-GPU microbatch size (sequences).
+    pub micro_batch: usize,
+    /// Bytes per parameter on the wire (bf16 = 2).
+    pub wire_bytes_per_param: f64,
+}
+
+impl Workload {
+    /// LLaMa-3-8B as benchmarked in Fig. 2 (seq 8192).
+    pub fn llama3_8b() -> Self {
+        Self {
+            params: 8.0e9,
+            layers: 32,
+            d_model: 4096,
+            seq_len: 8192,
+            micro_batch: 1,
+            wire_bytes_per_param: 2.0,
+        }
+    }
+
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.params
+    }
+
+    pub fn tokens_per_gpu(&self) -> f64 {
+        (self.seq_len * self.micro_batch) as f64
+    }
+
+    /// Bytes of one transformer block's parameters on the wire.
+    pub fn block_bytes(&self) -> f64 {
+        self.params * self.wire_bytes_per_param / self.layers as f64
+    }
+}
+
+/// Parallelization plan under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plan {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    /// FSDP unit size in transformer blocks (the paper's adaptable
+    /// unit size; 1 = vanilla per-block wrapping).
+    pub unit_blocks: usize,
+    /// HSDP shard-group size (None = fully sharded across dp).
+    pub hsdp_shard: Option<usize>,
+    /// Fraction of communication that overlaps with compute (prefetch
+    /// of the next unit during the current unit's compute).
+    pub overlap: f64,
+}
+
+impl Plan {
+    pub fn fsdp(dp: usize, unit_blocks: usize) -> Self {
+        Self { dp, tp: 1, pp: 1, unit_blocks, hsdp_shard: None, overlap: 0.7 }
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+}
+
+/// Step-time breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTime {
+    pub compute_s: f64,
+    pub dp_comm_s: f64,
+    pub tp_comm_s: f64,
+    pub pp_bubble_s: f64,
+    pub exposed_comm_s: f64,
+    pub total_s: f64,
+}
+
+/// Per-GPU training throughput in tokens/s for a plan.
+pub fn tokens_per_gpu_per_s(w: &Workload, plan: &Plan, net: &InterconnectModel, gpu: &GpuModel) -> f64 {
+    let st = step_time(w, plan, net, gpu);
+    w.tokens_per_gpu() / st.total_s
+}
+
+/// Compose the full step time.
+///
+/// FSDP comm per step (per DP group of size `dp`):
+///   fwd all-gather (all units) + bwd all-gather (re-gather) +
+///   bwd reduce-scatter (grads) ⇒ 3 × params-bytes of ring traffic,
+///   issued unit-by-unit (unit_blocks × block_bytes per collective).
+/// HSDP: shard collectives within groups of g (cheaper, intra-node),
+///   plus one all-reduce of the sharded grads across dp/g replicas.
+/// TP: 4 all-reduces of activations per layer (fwd+bwd of attention +
+///   MLP) within the tp group.
+/// PP: GPipe-style bubble (pp-1)/(m) fraction with m microbatches, plus
+///   p2p activation transfers.
+pub fn step_time(w: &Workload, plan: &Plan, net: &InterconnectModel, gpu: &GpuModel) -> StepTime {
+    // Per-GPU compute: model is divided over tp*pp; each GPU computes
+    // its microbatch's share.
+    let flops_per_gpu = w.flops_per_token() * w.tokens_per_gpu() / (plan.tp * plan.pp) as f64;
+    let compute_s = flops_per_gpu / (gpu.peak_flops * gpu.mfu);
+
+    // ---- DP/FSDP communication --------------------------------------------
+    let layers_per_stage = (w.layers / plan.pp).max(1);
+    let unit_blocks = plan.unit_blocks.clamp(1, layers_per_stage);
+    let n_units = (layers_per_stage as f64 / unit_blocks as f64).ceil();
+    let unit_bytes = (w.block_bytes() * unit_blocks as f64 / plan.tp as f64) as u64;
+
+    let dp_comm_s = match plan.hsdp_shard {
+        None => {
+            // 2× all-gather + 1× reduce-scatter per unit over the dp group.
+            let per_unit = 2.0 * net.all_gather_time(unit_bytes, plan.dp)
+                + net.reduce_scatter_time(unit_bytes, plan.dp);
+            per_unit * n_units
+        }
+        Some(g) => {
+            let g = g.min(plan.dp).max(1);
+            let replicas = (plan.dp / g).max(1);
+            // shard-group collectives (intra-node if g ≤ node size)
+            let per_unit = 2.0 * net.all_gather_time(unit_bytes, g)
+                + net.reduce_scatter_time(unit_bytes, g);
+            // plus grad all-reduce across replicas on the sharded chunk
+            let shard_bytes = (unit_bytes as f64 / g as f64) as u64;
+            let ar = net.all_reduce_time(shard_bytes, replicas);
+            (per_unit + ar) * n_units
+        }
+    };
+
+    // ---- TP communication ---------------------------------------------------
+    let tp_comm_s = if plan.tp > 1 {
+        // 4 all-reduces per layer of [micro_batch, seq, d_model] activations
+        // (fwd attn, fwd mlp, bwd attn, bwd mlp).
+        let act_bytes =
+            (w.micro_batch * w.seq_len * w.d_model) as u64 * w.wire_bytes_per_param as u64;
+        4.0 * layers_per_stage as f64 * net.all_reduce_time(act_bytes, plan.tp)
+    } else {
+        0.0
+    };
+
+    // ---- PP bubble + p2p ----------------------------------------------------
+    let (pp_bubble_s, pp_p2p_s) = if plan.pp > 1 {
+        let m = 4 * plan.pp; // microbatches per step (1F1B convention)
+        let bubble_frac = (plan.pp - 1) as f64 / m as f64;
+        let act_bytes =
+            (w.micro_batch * w.seq_len * w.d_model) as u64 * w.wire_bytes_per_param as u64;
+        let p2p = 2.0 * (plan.pp - 1) as f64 * net.p2p_time(act_bytes, false) * m as f64
+            / plan.pp as f64;
+        (bubble_frac * compute_s, p2p)
+    } else {
+        (0.0, 0.0)
+    };
+
+    // ---- overlap -------------------------------------------------------------
+    // FSDP prefetch overlaps unit gathers with compute; TP all-reduces
+    // sit on the critical path; PP p2p partially overlaps.
+    let exposed_dp = dp_comm_s * (1.0 - plan.overlap);
+    let exposed = exposed_dp + tp_comm_s + pp_p2p_s * 0.5;
+    let total_s = compute_s + exposed + pp_bubble_s;
+
+    StepTime {
+        compute_s,
+        dp_comm_s,
+        tp_comm_s,
+        pp_bubble_s,
+        exposed_comm_s: exposed,
+        total_s,
+    }
+}
+
+/// Throughput-tuning search (the paper's "hyperparameter search
+/// functionality for scalability / throughput optimization"): scan
+/// unit sizes and HSDP shard sizes for a fixed world size, return plans
+/// ranked by modeled tokens/s/GPU.
+pub fn tune(
+    w: &Workload,
+    world: usize,
+    net: &InterconnectModel,
+    gpu: &GpuModel,
+) -> Vec<(Plan, f64)> {
+    let mut out = Vec::new();
+    for unit_blocks in [1usize, 2, 4, 8] {
+        for hsdp in [None, Some(net.node_size), Some(net.node_size * 4), Some(net.node_size * 16)] {
+            if let Some(g) = hsdp {
+                if world % g != 0 || g >= world {
+                    continue;
+                }
+            }
+            let plan = Plan { hsdp_shard: hsdp, ..Plan::fsdp(world, unit_blocks) };
+            out.push((plan, tokens_per_gpu_per_s(w, &plan, net, gpu)));
+        }
+    }
+    out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    out
+}
+
+/// Peak per-GPU memory estimate for a plan (params+grads+opt sharded,
+/// plus the unsharded working set of `unit_blocks`) — the memory side
+/// of the unit-size tradeoff (E5).
+pub fn per_gpu_memory_bytes(w: &Workload, plan: &Plan) -> f64 {
+    let shard_denom = plan.hsdp_shard.unwrap_or(plan.dp).max(1) as f64;
+    let stage_params = w.params / (plan.tp * plan.pp) as f64;
+    // fp32 master params + grads + AdamW m,v sharded; bf16 working copy.
+    let sharded_state = stage_params * (4.0 + 4.0 + 8.0) / shard_denom;
+    let unit_working = w.block_bytes() * plan.unit_blocks as f64 * 2.0 / plan.tp as f64; // params + grads of the gathered units
+    let activations =
+        (w.micro_batch * w.seq_len * w.d_model) as f64 * 2.0 * (w.layers / plan.pp).max(1) as f64 * 12.0
+            / plan.tp as f64;
+    sharded_state + unit_working + activations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Workload, InterconnectModel, GpuModel) {
+        (Workload::llama3_8b(), InterconnectModel::leonardo(), GpuModel::a100_64g())
+    }
+
+    #[test]
+    fn block_message_size_matches_paper() {
+        // Paper: ~0.4 MB per LLaMa-3-8B block per rank at dp=1024.
+        let w = Workload::llama3_8b();
+        let per_rank_chunk = w.block_bytes() / 1024.0;
+        assert!(
+            per_rank_chunk > 0.3e6 && per_rank_chunk < 0.6e6,
+            "per-rank chunk {per_rank_chunk:.2e} B should be ~0.4 MB"
+        );
+    }
+
+    #[test]
+    fn per_gpu_throughput_sags_at_high_dp_for_vanilla_fsdp() {
+        let (w, net, gpu) = setup();
+        let t8 = tokens_per_gpu_per_s(&w, &Plan::fsdp(8, 1), &net, &gpu);
+        let t1024 = tokens_per_gpu_per_s(&w, &Plan::fsdp(1024, 1), &net, &gpu);
+        assert!(
+            t1024 < 0.95 * t8,
+            "vanilla FSDP should degrade: {t8:.0} -> {t1024:.0} tok/s/gpu"
+        );
+    }
+
+    #[test]
+    fn unit_resize_recovers_throughput_at_scale() {
+        let (w, net, gpu) = setup();
+        let vanilla = tokens_per_gpu_per_s(&w, &Plan::fsdp(1024, 1), &net, &gpu);
+        let resized = tokens_per_gpu_per_s(&w, &Plan::fsdp(1024, 4), &net, &gpu);
+        assert!(
+            resized > vanilla,
+            "unit resize must help at dp=1024: {vanilla:.0} vs {resized:.0}"
+        );
+        // ...at a memory cost.
+        let m1 = per_gpu_memory_bytes(&w, &Plan::fsdp(1024, 1));
+        let m4 = per_gpu_memory_bytes(&w, &Plan::fsdp(1024, 4));
+        assert!(m4 > m1);
+    }
+
+    #[test]
+    fn hsdp_beats_vanilla_at_scale() {
+        let (w, net, gpu) = setup();
+        let vanilla = tokens_per_gpu_per_s(&w, &Plan::fsdp(1024, 1), &net, &gpu);
+        let hsdp = Plan { hsdp_shard: Some(64), ..Plan::fsdp(1024, 1) };
+        let t = tokens_per_gpu_per_s(&w, &hsdp, &net, &gpu);
+        assert!(t > vanilla, "HSDP should help: {vanilla:.0} vs {t:.0}");
+    }
+
+    #[test]
+    fn small_scale_is_compute_bound() {
+        let (w, net, gpu) = setup();
+        let st = step_time(&w, &Plan::fsdp(8, 1), &net, &gpu);
+        assert!(st.compute_s > st.exposed_comm_s, "{st:?}");
+        // Near-ideal scaling at dp=8 vs dp=16.
+        let t8 = tokens_per_gpu_per_s(&w, &Plan::fsdp(8, 1), &net, &gpu);
+        let t16 = tokens_per_gpu_per_s(&w, &Plan::fsdp(16, 1), &net, &gpu);
+        assert!((t8 - t16).abs() / t8 < 0.25);
+    }
+
+    #[test]
+    fn tp_and_pp_contribute() {
+        let (w, net, gpu) = setup();
+        let plain = step_time(&w, &Plan::fsdp(8, 1), &net, &gpu);
+        let tp = step_time(&w, &Plan { tp: 4, dp: 2, ..Plan::fsdp(8, 1) }, &net, &gpu);
+        assert!(tp.tp_comm_s > 0.0);
+        assert!(tp.compute_s < plain.compute_s); // model divided over tp
+        let pp = step_time(&w, &Plan { pp: 4, dp: 2, ..Plan::fsdp(8, 1) }, &net, &gpu);
+        assert!(pp.pp_bubble_s > 0.0);
+    }
+
+    #[test]
+    fn tune_prefers_bigger_units_at_scale() {
+        let (w, net, gpu) = setup();
+        let ranked = tune(&w, 1024, &net, &gpu);
+        assert!(!ranked.is_empty());
+        let best = ranked[0].0;
+        assert!(
+            best.unit_blocks > 1 || best.hsdp_shard.is_some(),
+            "at dp=1024 the tuner should not pick vanilla FSDP: {best:?}"
+        );
+        // tuner output is sorted descending
+        for w in ranked.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

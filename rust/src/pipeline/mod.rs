@@ -1,0 +1,276 @@
+//! Pipeline-parallel schedules: GPipe and 1F1B (interleaved-free)
+//! microbatch schedules with dependency validation and bubble
+//! accounting. The schedule generator feeds both the perf model's PP
+//! term and the `modalities trace` CLI (schedule visualization).
+
+use anyhow::{bail, Result};
+
+/// One scheduled cell: at `clock`, `stage` processes `micro` in `dir`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slot {
+    pub clock: usize,
+    pub stage: usize,
+    pub micro: usize,
+    pub dir: Dir,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// Schedule flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    GPipe,
+    OneFOneB,
+}
+
+/// Generate a schedule for `stages` pipeline stages and `micros`
+/// microbatches. Backward cost is assumed equal to forward cost (one
+/// clock each) — the bubble *fraction* is what matters.
+pub fn schedule(kind: Schedule, stages: usize, micros: usize) -> Result<Vec<Slot>> {
+    if stages == 0 || micros == 0 {
+        bail!("stages and micros must be > 0");
+    }
+    let mut slots = Vec::new();
+    match kind {
+        Schedule::GPipe => {
+            // All forwards, then all backwards (reverse order).
+            for m in 0..micros {
+                for s in 0..stages {
+                    slots.push(Slot { clock: m + s, stage: s, micro: m, dir: Dir::Fwd });
+                }
+            }
+            let fwd_end = micros + stages - 1;
+            for (i, m) in (0..micros).rev().enumerate() {
+                for s in (0..stages).rev() {
+                    slots.push(Slot {
+                        clock: fwd_end + i + (stages - 1 - s),
+                        stage: s,
+                        micro: m,
+                        dir: Dir::Bwd,
+                    });
+                }
+            }
+        }
+        Schedule::OneFOneB => {
+            // Event-driven greedy simulation honoring dependencies. Each
+            // stage, per clock, runs at most one op; once its in-flight
+            // count reaches its warmup depth (stages - s) it prefers
+            // backwards (the 1F1B steady state), draining bwd at the end.
+            let total = 2 * stages * micros;
+            let mut fwd_done: Vec<Vec<Option<usize>>> = vec![vec![None; stages]; micros];
+            let mut bwd_done: Vec<Vec<Option<usize>>> = vec![vec![None; stages]; micros];
+            let mut next_fwd = vec![0usize; stages];
+            let mut next_bwd = vec![0usize; stages];
+            let mut clock = 0usize;
+            while slots.len() < total {
+                for s in 0..stages {
+                    let inflight = next_fwd[s] - next_bwd[s];
+                    let prefer_bwd = inflight >= (stages - s) || next_fwd[s] >= micros;
+                    // Canonical 1F1B: once warmed up, a stage *waits* for
+                    // its backward rather than racing ahead with forwards —
+                    // that is what bounds activation memory to ~(stages-s).
+                    let candidates: &[(Dir, usize)] = if prefer_bwd {
+                        &[(Dir::Bwd, next_bwd[s])]
+                    } else {
+                        &[(Dir::Fwd, next_fwd[s]), (Dir::Bwd, next_bwd[s])]
+                    };
+                    for &(dir, m) in candidates {
+                        if m >= micros {
+                            continue;
+                        }
+                        let ready = match dir {
+                            Dir::Fwd => {
+                                s == 0
+                                    || fwd_done[m][s - 1].map(|c| c < clock).unwrap_or(false)
+                            }
+                            Dir::Bwd => {
+                                // this stage must have forwarded m already
+                                next_bwd[s] < next_fwd[s]
+                                    && if s == stages - 1 {
+                                        fwd_done[m][s].map(|c| c < clock).unwrap_or(false)
+                                    } else {
+                                        bwd_done[m][s + 1].map(|c| c < clock).unwrap_or(false)
+                                    }
+                            }
+                        };
+                        if ready {
+                            slots.push(Slot { clock, stage: s, micro: m, dir });
+                            match dir {
+                                Dir::Fwd => {
+                                    fwd_done[m][s] = Some(clock);
+                                    next_fwd[s] += 1;
+                                }
+                                Dir::Bwd => {
+                                    bwd_done[m][s] = Some(clock);
+                                    next_bwd[s] += 1;
+                                }
+                            }
+                            break;
+                        }
+                    }
+                }
+                clock += 1;
+                if clock > 8 * total + 16 {
+                    bail!("1F1B scheduler did not converge (stages={stages}, micros={micros})");
+                }
+            }
+        }
+    }
+    Ok(slots)
+}
+
+/// Total clocks used by the schedule.
+pub fn makespan(slots: &[Slot]) -> usize {
+    slots.iter().map(|s| s.clock).max().map(|c| c + 1).unwrap_or(0)
+}
+
+/// Bubble fraction: idle stage-clocks / total stage-clocks.
+pub fn bubble_fraction(slots: &[Slot], stages: usize) -> f64 {
+    let span = makespan(slots);
+    let busy = slots.len();
+    let total = span * stages;
+    (total - busy) as f64 / total as f64
+}
+
+/// Validate dependency order:
+/// * fwd(m, s) strictly after fwd(m, s-1)
+/// * bwd(m, s) strictly after bwd(m, s+1)
+/// * bwd(m, last) after fwd(m, last)
+/// * a stage never runs two things at one clock
+pub fn validate(slots: &[Slot], stages: usize, micros: usize) -> Result<()> {
+    let find = |micro: usize, stage: usize, dir: Dir| -> Result<usize> {
+        slots
+            .iter()
+            .find(|s| s.micro == micro && s.stage == stage && s.dir == dir)
+            .map(|s| s.clock)
+            .ok_or_else(|| anyhow::anyhow!("missing slot m{micro} s{stage} {dir:?}"))
+    };
+    for m in 0..micros {
+        for s in 1..stages {
+            if find(m, s, Dir::Fwd)? <= find(m, s - 1, Dir::Fwd)? {
+                bail!("fwd dependency violated for micro {m} stage {s}");
+            }
+        }
+        for s in (0..stages - 1).rev() {
+            if find(m, s, Dir::Bwd)? <= find(m, s + 1, Dir::Bwd)? {
+                bail!("bwd dependency violated for micro {m} stage {s}");
+            }
+        }
+        if find(m, stages - 1, Dir::Bwd)? <= find(m, stages - 1, Dir::Fwd)? {
+            bail!("bwd before fwd for micro {m}");
+        }
+    }
+    // No double-booking.
+    let mut seen = std::collections::HashSet::new();
+    for s in slots {
+        if !seen.insert((s.clock, s.stage)) {
+            bail!("stage {} double-booked at clock {}", s.stage, s.clock);
+        }
+    }
+    Ok(())
+}
+
+/// ASCII visualization (the `modalities trace --pp` output).
+pub fn render(slots: &[Slot], stages: usize) -> String {
+    let span = makespan(slots);
+    let mut grid = vec![vec!["  .".to_string(); span]; stages];
+    for s in slots {
+        grid[s.stage][s.clock] = match s.dir {
+            Dir::Fwd => format!("F{:<2}", s.micro),
+            Dir::Bwd => format!("B{:<2}", s.micro),
+        };
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        out.push_str(&format!("stage {i}: "));
+        out.push_str(&row.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Peak number of in-flight activations a stage must hold (the memory
+/// advantage of 1F1B over GPipe).
+pub fn peak_inflight(slots: &[Slot], stage: usize) -> usize {
+    let mut events: Vec<(usize, i32)> = Vec::new();
+    for s in slots.iter().filter(|s| s.stage == stage) {
+        match s.dir {
+            Dir::Fwd => events.push((s.clock, 1)),
+            Dir::Bwd => events.push((s.clock, -1)),
+        }
+    }
+    events.sort();
+    let mut cur = 0i32;
+    let mut peak = 0i32;
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Cases};
+
+    #[test]
+    fn prop_schedules_are_valid() {
+        forall(Cases::default().cases(40), |g| {
+            let stages = g.usize_in(1..6);
+            let micros = g.usize_in(1..9);
+            for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+                let s = schedule(kind, stages, micros).unwrap();
+                assert_eq!(s.len(), 2 * stages * micros, "{kind:?}");
+                validate(&s, stages, micros).unwrap_or_else(|e| {
+                    panic!("{kind:?} stages={stages} micros={micros}: {e}\n{}", render(&s, stages))
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_micros() {
+        let s4 = schedule(Schedule::GPipe, 4, 4).unwrap();
+        let s16 = schedule(Schedule::GPipe, 4, 16).unwrap();
+        assert!(bubble_fraction(&s16, 4) < bubble_fraction(&s4, 4));
+        // GPipe bubble ≈ (p-1)/(m+p-1) for fwd+bwd
+        let b = bubble_fraction(&s16, 4);
+        assert!(b > 0.05 && b < 0.25, "{b}");
+    }
+
+    #[test]
+    fn one_f_one_b_uses_less_activation_memory() {
+        let stages = 4;
+        let micros = 16;
+        let gp = schedule(Schedule::GPipe, stages, micros).unwrap();
+        let fb = schedule(Schedule::OneFOneB, stages, micros).unwrap();
+        // Stage 0 must hold all GPipe activations, but only ~stages in 1F1B.
+        assert_eq!(peak_inflight(&gp, 0), micros);
+        assert!(peak_inflight(&fb, 0) <= stages + 1);
+    }
+
+    #[test]
+    fn render_contains_cells() {
+        let s = schedule(Schedule::OneFOneB, 2, 3).unwrap();
+        let r = render(&s, 2);
+        assert!(r.contains("F0") && r.contains("B2"));
+    }
+
+    #[test]
+    fn degenerate_single_stage() {
+        let s = schedule(Schedule::OneFOneB, 1, 5).unwrap();
+        validate(&s, 1, 5).unwrap();
+        assert_eq!(bubble_fraction(&s, 1), 0.0);
+    }
+
+    #[test]
+    fn invalid_args() {
+        assert!(schedule(Schedule::GPipe, 0, 1).is_err());
+        assert!(schedule(Schedule::GPipe, 1, 0).is_err());
+    }
+}

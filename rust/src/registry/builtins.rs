@@ -1,0 +1,18 @@
+//! Central registration of all built-in components. Each subsystem
+//! exposes a `register(reg)` function; this module stitches them
+//! together so `ComponentRegistry::with_builtins()` covers the full
+//! framework.
+
+use super::ComponentRegistry;
+
+pub fn register_builtins(reg: &mut ComponentRegistry) {
+    crate::optim::components::register(reg).expect("optim builtins");
+    crate::data::components::register(reg).expect("data builtins");
+    crate::model::components::register(reg).expect("model builtins");
+    crate::dist::components::register(reg).expect("dist builtins");
+    crate::fsdp::components::register(reg).expect("fsdp builtins");
+    crate::gym::components::register(reg).expect("gym builtins");
+    crate::checkpoint::components::register(reg).expect("checkpoint builtins");
+    crate::perfmodel::components::register(reg).expect("perfmodel builtins");
+    crate::runtime::components::register(reg).expect("runtime builtins");
+}

@@ -1,0 +1,81 @@
+//! The framework's declared component interfaces.
+//!
+//! The paper ships "93 pluggable components each implementing one of the
+//! 32 pre-defined interfaces". This module declares our 32 interfaces;
+//! the registry refuses registrations against undeclared interfaces,
+//! which is what makes config validation *interface-level*: a reference
+//! site knows which interface it expects, and the object-graph builder
+//! can flag a mismatched component before any training starts.
+
+/// All component interfaces, in stable order.
+pub const INTERFACES: [&str; 32] = [
+    // model stack
+    "model",                 // trainable model bound to AOT artifacts
+    "model_descriptor",      // architecture shape/param metadata
+    "weight_init",           // parameter initialization scheme
+    "loss",                  // loss reduction applied to artifact outputs
+    // optimization
+    "optimizer",             // AdamW, SGD, ...
+    "lr_scheduler",          // cosine / linear warmup / constant
+    "gradient_clipper",      // norm / value clipping
+    "mixed_precision",      // parameter/grad dtype policy
+    // data stack
+    "dataset",               // packed memmap / synthetic / jsonl
+    "dataloader",            // batching + prefetch over a dataset
+    "sampler",               // sequential / shuffled / distributed
+    "collate_fn",            // batch assembly
+    "tokenizer",             // byte-level BPE & friends
+    "data_pipeline",         // indexation/tokenization pipeline defs
+    // distributed stack
+    "device_mesh",           // DP×TP×PP topology descriptor
+    "collective_backend",    // lockstep sim / modelled interconnect
+    "parallel_strategy",     // fsdp / hsdp / ddp / tp / pp composition
+    "sharding_policy",       // FSDP unit-size / wrapping policy
+    "interconnect_model",    // α-β link model for the perf simulator
+    // training driver
+    "gym",                   // the SPMD training driver
+    "trainer",               // inner train-loop behaviour
+    "evaluator",             // eval-loop behaviour
+    "checkpointing",         // save/load strategies
+    "checkpoint_conversion", // sharded ↔ consolidated converters
+    "warm_start",            // resume policies
+    // observability
+    "subscriber",            // metrics/progress sinks (console, jsonl)
+    "progress",              // progress estimation
+    "tracer",                // kernel/NCCL tracing hooks
+    "profiler",              // step-time breakdown collection
+    // integration / misc
+    "runtime",               // PJRT execution backends
+    "generation",            // greedy/sampling text generation
+    "number_conversion",     // token/step/sample count conversions
+];
+
+/// Is `name` a declared interface?
+pub fn interface_exists(name: &str) -> bool {
+    INTERFACES.contains(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_32_interfaces() {
+        assert_eq!(INTERFACES.len(), 32);
+    }
+
+    #[test]
+    fn no_duplicates() {
+        let mut v = INTERFACES.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        assert_eq!(v.len(), 32);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(interface_exists("model"));
+        assert!(interface_exists("collective_backend"));
+        assert!(!interface_exists("nonexistent"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Runtime layer: PJRT-backed execution of AOT artifacts.
+//!
+//! Python lowers the model once (`make artifacts`); this module loads
+//! the HLO text, compiles it on the PJRT CPU client, and executes it
+//! from the rust training loop. Python never runs at train time.
+
+pub mod pjrt;
+
+pub mod components {
+    //! Registry factory for runtime backends. The component is a pure
+    //! spec (PJRT handles are not Send); the engine is created on the
+    //! execution thread via [`RuntimeSpec::engine`].
+
+    use crate::registry::{Component, ComponentRegistry};
+    use anyhow::Result;
+
+    /// Runtime backend spec.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct RuntimeSpec {
+        pub backend: String,
+    }
+
+    impl RuntimeSpec {
+        /// Instantiate the engine (single-threaded use).
+        pub fn engine(&self) -> Result<super::pjrt::PjrtEngine> {
+            match self.backend.as_str() {
+                "cpu" => super::pjrt::PjrtEngine::cpu(),
+                other => anyhow::bail!("unknown runtime backend '{other}' (only 'cpu')"),
+            }
+        }
+    }
+
+    pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+        reg.register("runtime", "pjrt", |ctx, cfg| {
+            let backend = ctx.str_or(cfg, "backend", "cpu");
+            Ok(Component::new("runtime", "pjrt", RuntimeSpec { backend }))
+        })?;
+        Ok(())
+    }
+}

@@ -1,0 +1,285 @@
+//! PJRT execution backend: load AOT HLO-text artifacts, compile once,
+//! execute from the training hot path. Wraps the `xla` crate
+//! (xla_extension 0.5.1, CPU plugin).
+//!
+//! Design constraints honoured here:
+//! * **HLO text interchange** — `HloModuleProto::from_text_file`
+//!   reassigns instruction ids, avoiding the 64-bit-id proto
+//!   incompatibility (see python/compile/aot.py).
+//! * **Compile once** — executables are cached per artifact file;
+//!   compilation happens at object-graph build time so the train loop
+//!   never compiles.
+//! * **Single-threaded device access** — the PJRT handles are not
+//!   `Send`; the lockstep SPMD executor funnels all rank compute
+//!   through one thread (1-core testbed; see DESIGN.md).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A loaded artifact manifest (written by `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelArtifacts>,
+    pub dir: PathBuf,
+}
+
+/// Shapes + files of one model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub num_params: u64,
+    pub flops_per_token: u64,
+    /// (name, shape) in the rust↔jax parameter order contract.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// variant → file name ("train", "loss", "fwd").
+    pub files: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = HashMap::new();
+        let mobj = v
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest has no 'models' object"))?;
+        for (name, entry) in mobj {
+            let cfg = entry.get("config").ok_or_else(|| anyhow!("model {name}: no config"))?;
+            let geti = |k: &str| -> Result<usize> {
+                cfg.get(k)
+                    .and_then(|n| n.as_usize())
+                    .ok_or_else(|| anyhow!("model {name}: config.{k} missing"))
+            };
+            let mut param_shapes = Vec::new();
+            for p in entry
+                .get("param_shapes")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("model {name}: param_shapes missing"))?
+            {
+                let arr = p.as_arr().ok_or_else(|| anyhow!("bad param_shapes entry"))?;
+                let pname = arr[0].as_str().ok_or_else(|| anyhow!("bad param name"))?;
+                let shape: Vec<usize> = arr[1]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad param shape"))?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect();
+                param_shapes.push((pname.to_string(), shape));
+            }
+            let mut files = HashMap::new();
+            if let Some(fobj) = entry.get("files").and_then(|f| f.as_obj()) {
+                for (variant, fname) in fobj {
+                    if let Some(f) = fname.as_str() {
+                        files.insert(variant.clone(), f.to_string());
+                    }
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    name: name.clone(),
+                    vocab_size: geti("vocab_size")?,
+                    d_model: geti("d_model")?,
+                    n_layers: geti("n_layers")?,
+                    n_heads: geti("n_heads")?,
+                    d_ff: geti("d_ff")?,
+                    seq_len: geti("seq_len")?,
+                    batch_size: geti("batch_size")?,
+                    num_params: entry.get("num_params").and_then(|n| n.as_i64()).unwrap_or(0) as u64,
+                    flops_per_token: entry
+                        .get("flops_per_token")
+                        .and_then(|n| n.as_i64())
+                        .unwrap_or(0) as u64,
+                    param_shapes,
+                    files,
+                },
+            );
+        }
+        Ok(Manifest { models, dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not in manifest (have: {}); re-run `make artifacts`",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+impl ModelArtifacts {
+    /// Total parameter element count (f32 elements).
+    pub fn param_elems(&self) -> usize {
+        self.param_shapes.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn artifact_path(&self, dir: &Path, variant: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(variant)
+            .ok_or_else(|| anyhow!("model '{}' has no '{variant}' artifact", self.name))?;
+        Ok(dir.join(f))
+    }
+}
+
+/// The PJRT engine: one CPU client + an executable cache.
+///
+/// Interior mutability (`RefCell`) because executables are compiled
+/// lazily on first use from `&self` call sites; single-threaded by
+/// construction (`Rc` handle, not `Arc`).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load_hlo(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let t = crate::util::stats::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(wrap_xla)
+                .with_context(|| format!("XLA compile of {}", path.display()))?,
+        );
+        log::info!("compiled {} in {:.2}s", path.display(), t.elapsed_s());
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact: literals in → tuple elements out.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// output buffer is a tuple literal that we decompose.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs).map_err(wrap_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        lit.to_tuple().map_err(wrap_xla)
+    }
+}
+
+/// xla::Error is not std::error::Error-compatible with anyhow directly.
+pub fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+// ---- literal helpers --------------------------------------------------------
+
+/// f32 tensor literal with shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(wrap_xla)
+}
+
+/// i32 tensor literal with shape (token batches).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(wrap_xla)
+}
+
+/// u32 tokens → i32 literal [batch, seq].
+pub fn tokens_literal(tokens: &[u32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    let data: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    literal_i32(&data, &[batch, seq])
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap_xla)
+}
+
+/// Extract the scalar f32 (loss values).
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(wrap_xla)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("modalities-runtime-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+  "version": 1,
+  "models": {
+    "nano": {
+      "config": {"vocab_size": 512, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                 "d_ff": 256, "seq_len": 32, "batch_size": 4,
+                 "norm_eps": 1e-5, "rope_theta": 10000.0},
+      "param_order": ["tok_emb"],
+      "param_shapes": [["tok_emb", [512, 64]], ["wq", [2, 64, 64]]],
+      "num_params": 200000,
+      "flops_per_token": 1000000,
+      "files": {"train": "nano.train.hlo.txt"}
+    }
+  }
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.model("nano").unwrap();
+        assert_eq!(a.vocab_size, 512);
+        assert_eq!(a.param_shapes.len(), 2);
+        assert_eq!(a.param_shapes[1].1, vec![2, 64, 64]);
+        assert_eq!(a.param_elems(), 512 * 64 + 2 * 64 * 64);
+        assert!(m.model("ghost").is_err());
+        assert!(a.artifact_path(&m.dir, "train").is_ok());
+        assert!(a.artifact_path(&m.dir, "fwd").is_err());
+    }
+
+    #[test]
+    fn literal_helpers_validate_shapes() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/integration.rs (they need
+    // artifacts and are serialized on the single CPU device).
+}

@@ -1,0 +1,193 @@
+//! Tensor-parallel sharding math (Megatron-style column/row parallel
+//! linear layers).
+//!
+//! The lockstep engine executes whole-model artifacts per rank, so TP
+//! here serves two roles faithful to the paper: (1) the *sharding
+//! semantics* — verified by unit tests that column/row-parallel
+//! execution reproduces the dense result, including the partial-sum
+//! all-reduce of row-parallel layers; (2) the *communication volumes*
+//! consumed by the perf model's TP term (Fig. 2b composition).
+
+use crate::util::even_split;
+use anyhow::{bail, Result};
+
+/// Dense row-major matrix (minimal substrate — no external linalg).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out.data[i * rhs.cols + j] += a * rhs.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Column slice [c0, c0+n).
+    pub fn col_slice(&self, c0: usize, n: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows, n);
+        for r in 0..self.rows {
+            for c in 0..n {
+                out.data[r * n + c] = self.at(r, c0 + c);
+            }
+        }
+        out
+    }
+
+    /// Row slice [r0, r0+n).
+    pub fn row_slice(&self, r0: usize, n: usize) -> Mat {
+        Mat::new(n, self.cols, self.data[r0 * self.cols..(r0 + n) * self.cols].to_vec())
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn hcat(parts: &[Mat]) -> Mat {
+        let rows = parts[0].rows;
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut c0 = 0;
+        for p in parts {
+            assert_eq!(p.rows, rows);
+            for r in 0..rows {
+                for c in 0..p.cols {
+                    out.data[r * cols + c0 + c] = p.at(r, c);
+                }
+            }
+            c0 += p.cols;
+        }
+        out
+    }
+}
+
+/// Column-parallel linear: W split by output columns across `tp` ranks.
+/// Y_i = X · W_i; full Y = hcat(Y_i) (gathered or kept sharded for a
+/// following row-parallel layer). No collective needed on the forward.
+pub fn column_parallel_forward(x: &Mat, w: &Mat, tp: usize) -> Result<Vec<Mat>> {
+    if tp == 0 || w.cols < tp {
+        bail!("invalid tp degree {tp} for {} columns", w.cols);
+    }
+    Ok((0..tp)
+        .map(|r| {
+            let (c0, n) = even_split(w.cols, tp, r);
+            x.matmul(&w.col_slice(c0, n))
+        })
+        .collect())
+}
+
+/// Row-parallel linear: W split by input rows; inputs arrive sharded
+/// (e.g. from a column-parallel predecessor). Each rank computes a
+/// partial product; the **all-reduce of partials** yields the result —
+/// the collective the perf model charges per layer.
+pub fn row_parallel_forward(x_shards: &[Mat], w: &Mat, tp: usize) -> Result<Mat> {
+    if x_shards.len() != tp {
+        bail!("need {tp} input shards, got {}", x_shards.len());
+    }
+    let mut acc: Option<Mat> = None;
+    for (r, xs) in x_shards.iter().enumerate() {
+        let (r0, n) = even_split(w.rows, tp, r);
+        let partial = xs.matmul(&w.row_slice(r0, n));
+        match &mut acc {
+            None => acc = Some(partial),
+            Some(a) => a.add_assign(&partial), // the all-reduce
+        }
+    }
+    Ok(acc.unwrap())
+}
+
+/// Per-layer TP communication volume in bytes (fwd+bwd): 2 all-reduces
+/// forward (attention out-proj + MLP down-proj) and 2 backward.
+pub fn tp_comm_bytes_per_layer(batch: usize, seq: usize, d_model: usize, bytes_per_elem: usize) -> u64 {
+    4 * (batch * seq * d_model * bytes_per_elem) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Cases};
+
+    fn rand_mat(g: &mut crate::util::prop::G, rows: usize, cols: usize) -> Mat {
+        Mat::new(rows, cols, g.vec_f32(rows * cols, 1.0))
+    }
+
+    #[test]
+    fn prop_column_parallel_equals_dense() {
+        forall(Cases::default().cases(32), |g| {
+            let (m, k, n) = (g.usize_in(1..6), g.usize_in(1..6), g.usize_in(2..9));
+            let tp = g.usize_in(1..n.min(4) + 1);
+            let x = rand_mat(g, m, k);
+            let w = rand_mat(g, k, n);
+            let dense = x.matmul(&w);
+            let shards = column_parallel_forward(&x, &w, tp).unwrap();
+            let gathered = Mat::hcat(&shards);
+            for (a, b) in dense.data.iter().zip(&gathered.data) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_column_then_row_equals_dense_mlp() {
+        // The Megatron MLP pattern: Y = (X·A)·B with A column-split and
+        // B row-split; only one all-reduce at the end.
+        forall(Cases::default().cases(32), |g| {
+            let (m, k, h) = (g.usize_in(1..5), g.usize_in(1..5), g.usize_in(2..8));
+            let tp = g.usize_in(1..h.min(4) + 1);
+            let x = rand_mat(g, m, k);
+            let a = rand_mat(g, k, h);
+            let b = rand_mat(g, h, k);
+            let dense = x.matmul(&a).matmul(&b);
+            let h_shards = column_parallel_forward(&x, &a, tp).unwrap();
+            let y = row_parallel_forward(&h_shards, &b, tp).unwrap();
+            for (p, q) in dense.data.iter().zip(&y.data) {
+                assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+            }
+        });
+    }
+
+    #[test]
+    fn comm_volume_formula() {
+        // 4 all-reduces of [b, s, d] activations per layer.
+        assert_eq!(tp_comm_bytes_per_layer(1, 8192, 4096, 2), 4 * 8192 * 4096 * 2);
+    }
+
+    #[test]
+    fn invalid_degrees_rejected() {
+        let x = Mat::zeros(2, 2);
+        let w = Mat::zeros(2, 2);
+        assert!(column_parallel_forward(&x, &w, 0).is_err());
+        assert!(column_parallel_forward(&x, &w, 3).is_err());
+        assert!(row_parallel_forward(&[x], &w, 2).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Little-endian binary encode/decode helpers for the repo's on-disk
+//! formats (`.mmidx` document index, `.mmtok` token store, checkpoint
+//! shards). Everything is explicit-width and little-endian so the files
+//! are portable and mmap-readable without alignment assumptions.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian writer over a byte vector.
+#[derive(Default)]
+pub struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn bytes(&mut self, vs: &[u8]) {
+        self.buf.extend_from_slice(vs);
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length).
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Cursor-based little-endian reader over a byte slice.
+pub struct ByteReader<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("byte reader underrun: need {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)?.to_string())
+    }
+}
+
+/// Decode a `u32` at byte offset `off` from a (possibly mmap'd) slice.
+/// Used on the dataset random-access path; panics on OOB like slice
+/// indexing would (bounds are guaranteed by the validated index header).
+#[inline]
+pub fn u32_at(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+#[inline]
+pub fn u64_at(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+}
+
+/// FNV-1a 64-bit hash — stable content hashing for config fingerprints
+/// and checkpoint integrity checks (not cryptographic; collisions are
+/// acceptable for diagnostics).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(65535);
+        w.u32(123456789);
+        w.u64(u64::MAX - 3);
+        w.f32(-1.5);
+        w.f32s(&[1.0, 2.0, 3.0]);
+        w.str("héllo");
+        let mut r = ByteReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 65535);
+        assert_eq!(r.u32().unwrap(), 123456789);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f32s(3).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn offset_readers() {
+        let mut w = ByteWriter::new();
+        w.u32(0xAABBCCDD);
+        w.u64(42);
+        assert_eq!(u32_at(&w.buf, 0), 0xAABBCCDD);
+        assert_eq!(u64_at(&w.buf, 4), 42);
+    }
+
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), fnv1a64(b"a"));
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+}

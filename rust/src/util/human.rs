@@ -1,0 +1,95 @@
+//! Human-readable formatting for sizes, counts, rates and durations —
+//! used by the CLI, progress subscribers and bench reports.
+
+/// `1536 → "1.5 KiB"`, binary prefixes.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+/// `1_500_000 → "1.50M"`, decimal prefixes (token counts, params).
+pub fn count(n: u64) -> String {
+    if n < 1000 {
+        return format!("{n}");
+    }
+    let (v, u) = if n < 1_000_000 {
+        (n as f64 / 1e3, "K")
+    } else if n < 1_000_000_000 {
+        (n as f64 / 1e6, "M")
+    } else if n < 1_000_000_000_000 {
+        (n as f64 / 1e9, "B")
+    } else {
+        (n as f64 / 1e12, "T")
+    };
+    format!("{v:.2}{u}")
+}
+
+/// Seconds → `"1h 02m 03s"` / `"12.3s"` / `"340ms"`.
+pub fn duration(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.0}ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.1}s")
+    } else if secs < 3600.0 {
+        format!("{}m {:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+    } else {
+        format!("{}h {:02}m {:02.0}s", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64, secs % 60.0)
+    }
+}
+
+/// Rate formatting, e.g. tokens/s.
+pub fn rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G {unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M {unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}K {unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} {unit}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(1023), "1023 B");
+        assert_eq!(bytes(1536), "1.5 KiB");
+        assert_eq!(bytes(1 << 30), "1.0 GiB");
+    }
+
+    #[test]
+    fn count_fmt() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1_500_000), "1.50M");
+        assert_eq!(count(31_000_000), "31.00M");
+        assert_eq!(count(2_000_000_000_000), "2.00T");
+    }
+
+    #[test]
+    fn duration_fmt() {
+        assert_eq!(duration(0.34), "340ms");
+        assert_eq!(duration(12.34), "12.3s");
+        assert!(duration(62.0).starts_with("1m"));
+        assert!(duration(3723.0).starts_with("1h 02m"));
+    }
+
+    #[test]
+    fn rate_fmt() {
+        assert_eq!(rate(31e6, "tok"), "31.00M tok/s");
+        assert_eq!(rate(12.0, "req"), "12.0 req/s");
+    }
+}

@@ -1,0 +1,148 @@
+//! Read-only memory mapping via `libc` (no `memmap2` in the vendor set).
+//!
+//! The data pipeline's token files are memory-mapped so the dataset's
+//! O(1) random document access is a pointer add, not a read syscall —
+//! this is the property the paper's data pipeline section claims.
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A read-only memory-mapped file. Unmapped on drop.
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+// The mapping is read-only and the underlying pages are owned by the
+// kernel; sharing across threads is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Empty files yield an empty slice without
+    /// calling mmap (mmap(len=0) is EINVAL on Linux).
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let file = File::open(path)
+            .with_context(|| format!("mmap: cannot open {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("mmap: cannot stat {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        // SAFETY: standard read-only shared mapping of a regular file.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap of {} failed: {}", path.display(), std::io::Error::last_os_error());
+        }
+        // Hint sequential-friendly readahead off: access is random by design.
+        // Best-effort; ignore errors.
+        unsafe {
+            libc::madvise(ptr, len, libc::MADV_RANDOM);
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: valid for len bytes for the lifetime of the mapping.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// Advise the kernel that access will be sequential (used by the
+    /// streaming reader of the tokenization pipeline).
+    pub fn advise_sequential(&self) {
+        if self.len > 0 {
+            unsafe {
+                libc::madvise(self.ptr, self.len, libc::MADV_SEQUENTIAL);
+            }
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: ptr/len came from a successful mmap.
+            unsafe {
+                libc::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("modalities-mmap-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_contents() {
+        let p = tmpfile("a.bin", b"hello mmap");
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(&*m, b"hello mmap");
+        assert_eq!(m.len(), 10);
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let p = tmpfile("empty.bin", b"");
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), b"");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open(Path::new("/nonexistent/xyz.bin")).is_err());
+    }
+
+    #[test]
+    fn large_random_access() {
+        let data: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+        let p = tmpfile("big.bin", &data);
+        let m = Mmap::open(&p).unwrap();
+        for &i in &[0usize, 999_999, 500_000, 123_456] {
+            assert_eq!(m[i], (i % 251) as u8);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Utility substrates built in-repo (the offline vendor set has no
+//! `rand`, `serde`, or `criterion`, so PRNG, JSON, mmap, statistics and
+//! the property-test runner are first-class modules here).
+
+pub mod bytesio;
+pub mod human;
+pub mod json;
+pub mod mmap;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+/// Split `n` items into `parts` contiguous chunks as evenly as possible
+/// (the canonical sharding rule used by FSDP/TP/data sharding: the first
+/// `n % parts` chunks get one extra element).
+///
+/// Returns `(start, len)` for `part`.
+pub fn even_split(n: usize, parts: usize, part: usize) -> (usize, usize) {
+    assert!(parts > 0, "parts must be > 0");
+    assert!(part < parts, "part {part} out of range {parts}");
+    let base = n / parts;
+    let rem = n % parts;
+    let len = base + usize::from(part < rem);
+    let start = part * base + part.min(rem);
+    (start, len)
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_covers_exactly() {
+        for n in [0usize, 1, 7, 64, 65, 1023] {
+            for parts in [1usize, 2, 3, 7, 8] {
+                let mut covered = 0usize;
+                let mut expect_start = 0usize;
+                for p in 0..parts {
+                    let (s, l) = even_split(n, parts, p);
+                    assert_eq!(s, expect_start, "n={n} parts={parts} p={p}");
+                    expect_start += l;
+                    covered += l;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn even_split_balanced() {
+        let (_, l0) = even_split(10, 3, 0);
+        let (_, l2) = even_split(10, 3, 2);
+        assert_eq!(l0, 4);
+        assert_eq!(l2, 3);
+    }
+
+    #[test]
+    fn round_helpers() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+    }
+}

@@ -1,0 +1,169 @@
+//! `proptest`-lite: a small property-based testing runner (the offline
+//! vendor set has no `proptest`). Provides seeded case generation with
+//! per-case derived PRNG streams and a first-failure report that prints
+//! the reproducing seed. No shrinking — cases are kept small instead.
+//!
+//! Usage:
+//! ```no_run
+//! use modalities::util::prop::{forall, Cases};
+//! forall(Cases::default().cases(256), |g| {
+//!     let n = g.usize_in(0..100);
+//!     assert!(n < 100);
+//! });
+//! ```
+
+use crate::util::prng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Cases {
+    pub seed: u64,
+    pub cases: u32,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        // Honour MODALITIES_PROP_SEED for reproduction of CI failures.
+        let seed = std::env::var("MODALITIES_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x6d6f64616c697469); // "modaliti"
+        Self { seed, cases: 64 }
+    }
+}
+
+impl Cases {
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Per-case generator handle.
+pub struct G {
+    rng: Pcg64,
+    pub case: u32,
+}
+
+impl G {
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        range.start + self.rng.next_below((range.end - range.start) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, range: std::ops::Range<i64>) -> i64 {
+        assert!(range.end > range.start);
+        range.start + self.rng.next_below((range.end - range.start) as u64) as i64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    /// Vector of f32s with magnitude ~N(0, scale).
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.next_normal() as f32) * scale).collect()
+    }
+
+    /// Arbitrary (valid-UTF-8) string mixing ASCII, multibyte and
+    /// whitespace — exercises the tokenizer and JSON/YAML paths.
+    pub fn string(&mut self, max_chars: usize) -> String {
+        let n = self.usize_in(0..max_chars + 1);
+        let pool: &[char] = &[
+            'a', 'b', 'z', 'Z', '0', '9', ' ', '\n', '\t', '_', '-', '.', ',', '"', '\\',
+            'é', 'ü', 'ß', '中', '文', '😀', 'λ', 'Ω', '\u{7f}', '\u{1}',
+        ];
+        (0..n).map(|_| *self.pick(pool)).collect()
+    }
+
+    /// Arbitrary bytes.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.usize_in(0..max_len + 1);
+        (0..n).map(|_| (self.rng.next_u64() & 0xff) as u8).collect()
+    }
+}
+
+/// Run `prop` for `cfg.cases` cases; panics with the failing case's seed
+/// on the first failure (re-run with `MODALITIES_PROP_SEED=<seed>`).
+pub fn forall<F: FnMut(&mut G)>(cfg: Cases, mut prop: F) {
+    let mut root = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let rng = root.fork(case as u64);
+        let mut g = G { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(Cases::default().cases(32), |g| {
+            let n = g.usize_in(1..10);
+            assert!(n >= 1 && n < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        forall(Cases::default().cases(32), |g| {
+            assert!(g.usize_in(0..100) < 50, "too big");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall(Cases::default().cases(8).seed(99), |g| first.push(g.u64()));
+        let mut second = Vec::new();
+        forall(Cases::default().cases(8).seed(99), |g| second.push(g.u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn strings_are_valid_utf8() {
+        forall(Cases::default().cases(64), |g| {
+            let s = g.string(64);
+            assert!(std::str::from_utf8(s.as_bytes()).is_ok());
+        });
+    }
+}

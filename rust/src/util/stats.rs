@@ -1,0 +1,231 @@
+//! Statistics / timing substrate used by the metrics subscribers, the
+//! bench harness (no `criterion` offline), and the perf model's
+//! calibration pass.
+
+use std::time::{Duration, Instant};
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Exact percentile over a stored sample set (bench harness scale:
+/// thousands of samples, exact sort is fine).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self { xs: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Linear-interpolated percentile, `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let w = rank - lo as f64;
+            s[lo] * (1.0 - w) + s[hi] * w
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Minimal bench runner used by `rust/benches/*` (harness = false):
+/// warmup, then timed iterations, reporting mean/p50/p95.
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchReport {
+    pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter  {:>12.1} {unit}/s (p50 {:.3} ms, p95 {:.3} ms)",
+            self.name,
+            self.mean_s * 1e3,
+            per_iter / self.p50_s,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3
+        )
+    }
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchReport {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    let mut min_s = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        let s = t.elapsed_s();
+        samples.push(s);
+        min_s = min_s.min(s);
+    }
+    BenchReport {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.mean(),
+        p50_s: samples.median(),
+        p95_s: samples.percentile(95.0),
+        min_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 5);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.var() - 2.5).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(s.percentile(95.0) > 94.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+    }
+}

@@ -1,0 +1,383 @@
+//! In-repo YAML parser (block + flow subset).
+//!
+//! Modalities' headline design is the *declarative, self-contained YAML
+//! configuration*; with no `serde_yaml` in the offline vendor set the
+//! parser is a first-class substrate of this reproduction. It covers the
+//! YAML subset that training configs actually use:
+//!
+//! * block mappings and sequences, arbitrarily nested by indentation
+//! * compact sequence entries (`- key: value` starting a nested map)
+//! * plain / single-quoted / double-quoted scalars with escapes
+//! * `null`/`~`, booleans, integers (decimal, hex, underscores),
+//!   floats (incl. scientific notation, `.5`, `.inf`, `.nan`)
+//! * flow collections `[a, b, {k: v}]` on a single line
+//! * literal block scalars (`key: |`)
+//! * comments and blank lines
+//! * multi-document concatenation is **not** supported (configs are
+//!   self-contained single documents by design)
+//!
+//! Every node carries its source line for error reporting — config
+//! validation errors point at the offending YAML line, which is the
+//! usability property the paper's "misconfigurations are automatically
+//! flagged" claim rests on.
+
+mod parser;
+mod scalar;
+
+pub use parser::parse;
+
+use std::fmt;
+
+/// A parsed YAML node: value + source line (1-based).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub value: Value,
+    pub line: usize,
+}
+
+/// YAML value. Mappings preserve key order (important for deterministic
+/// config hashing of sweep expansions) while offering O(n) lookup —
+/// configs are small, clarity wins over hashing.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Node>),
+    Map(Vec<(String, Node)>),
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.value == other.value
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => true,
+            (Bool(a), Bool(b)) => a == b,
+            (Int(a), Int(b)) => a == b,
+            (Float(a), Float(b)) => a == b || (a.is_nan() && b.is_nan()),
+            (Str(a), Str(b)) => a == b,
+            (Seq(a), Seq(b)) => a == b,
+            (Map(a), Map(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Node {
+    pub fn new(value: Value, line: usize) -> Self {
+        Self { value, line }
+    }
+
+    pub fn null() -> Self {
+        Self { value: Value::Null, line: 0 }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self.value, Value::Null)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match &self.value {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.value {
+            Value::Bool(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Integer access; floats with zero fraction are accepted (YAML
+    /// round-trips and sweep math can produce `4.0` for `4`).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self.value {
+            Value::Int(i) => Some(i),
+            Value::Float(f) if f.fract() == 0.0 && f.abs() < 9.2e18 => Some(f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self.value {
+            Value::Float(f) => Some(f),
+            Value::Int(i) => Some(i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Node]> {
+        match &self.value {
+            Value::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Node)]> {
+        match &self.value {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Mapping lookup.
+    pub fn get(&self, key: &str) -> Option<&Node> {
+        self.as_map()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Mutable mapping lookup.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Node> {
+        match &mut self.value {
+            Value::Map(m) => m.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Insert/replace a key in a mapping (builder + sweep expansion).
+    pub fn set(&mut self, key: &str, node: Node) {
+        if let Value::Map(m) = &mut self.value {
+            if let Some(slot) = m.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = node;
+            } else {
+                m.push((key.to_string(), node));
+            }
+        } else {
+            panic!("Node::set on non-mapping");
+        }
+    }
+
+    /// Path lookup: `a.b.0.c` (integer segments index sequences).
+    pub fn at_path(&self, path: &str) -> Option<&Node> {
+        let mut cur = self;
+        for seg in path.split('.') {
+            cur = match &cur.value {
+                Value::Map(_) => cur.get(seg)?,
+                Value::Seq(s) => s.get(seg.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Type name for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self.value {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Str(_) => "string",
+            Value::Seq(_) => "sequence",
+            Value::Map(_) => "mapping",
+        }
+    }
+
+    /// Canonical serialization (used for config fingerprinting and the
+    /// `modalities config resolve` debug command). Emits block style.
+    pub fn to_yaml(&self) -> String {
+        let mut out = String::new();
+        emit(self, 0, &mut out, false);
+        out
+    }
+}
+
+fn needs_quotes(s: &str) -> bool {
+    if s.is_empty() {
+        return true;
+    }
+    // Strings that would re-parse as another scalar type, or contain
+    // YAML syntax characters, must be quoted.
+    let special = s.contains(':')
+        || s.contains('#')
+        || s.contains('\n')
+        || s.starts_with(['-', '[', ']', '{', '}', '&', '*', '!', '|', '>', '\'', '"', '%', '@'])
+        || s.trim() != s;
+    special || !matches!(scalar::parse_scalar(s), Value::Str(_))
+}
+
+fn emit_scalar(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => {
+            if f.is_nan() {
+                out.push_str(".nan");
+            } else if f.is_infinite() {
+                out.push_str(if *f > 0.0 { ".inf" } else { "-.inf" });
+            } else if f.fract() == 0.0 && f.abs() < 1e15 {
+                out.push_str(&format!("{:.1}", f));
+            } else {
+                out.push_str(&format!("{f}"));
+            }
+        }
+        Value::Str(s) => {
+            if needs_quotes(s) {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            } else {
+                out.push_str(s);
+            }
+        }
+        _ => unreachable!("emit_scalar on collection"),
+    }
+}
+
+fn emit(node: &Node, indent: usize, out: &mut String, inline_first: bool) {
+    let pad = "  ".repeat(indent);
+    match &node.value {
+        Value::Map(m) if m.is_empty() => out.push_str("{}\n"),
+        Value::Seq(s) if s.is_empty() => out.push_str("[]\n"),
+        Value::Map(m) => {
+            for (i, (k, v)) in m.iter().enumerate() {
+                if !(inline_first && i == 0) {
+                    out.push_str(&pad);
+                }
+                out.push_str(k);
+                out.push(':');
+                match &v.value {
+                    Value::Map(inner) if !inner.is_empty() => {
+                        out.push('\n');
+                        emit(v, indent + 1, out, false);
+                    }
+                    Value::Seq(inner) if !inner.is_empty() => {
+                        out.push('\n');
+                        emit(v, indent + 1, out, false);
+                    }
+                    _ => {
+                        out.push(' ');
+                        match &v.value {
+                            Value::Map(_) => out.push_str("{}\n"),
+                            Value::Seq(_) => out.push_str("[]\n"),
+                            _ => {
+                                emit_scalar(&v.value, out);
+                                out.push('\n');
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Value::Seq(s) => {
+            for v in s {
+                out.push_str(&pad);
+                out.push_str("- ");
+                match &v.value {
+                    Value::Map(inner) if !inner.is_empty() => {
+                        emit(v, indent + 1, out, true);
+                    }
+                    Value::Seq(inner) if !inner.is_empty() => {
+                        out.push('\n');
+                        emit(v, indent + 1, out, false);
+                    }
+                    _ => {
+                        emit_scalar(&v.value, out);
+                        out.push('\n');
+                    }
+                }
+            }
+        }
+        scalar => {
+            out.push_str(&pad);
+            emit_scalar(scalar, out);
+            out.push('\n');
+        }
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        match self {
+            Value::Seq(_) | Value::Map(_) => {
+                let n = Node::new(self.clone(), 0);
+                return f.write_str(n.to_yaml().trim_end());
+            }
+            v => emit_scalar(v, &mut s),
+        }
+        f.write_str(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(src: &str) -> Node {
+        parse(src).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let src = "\
+model:
+  hidden: 256
+  layers: [1, 2, 3]
+  name: tiny
+train:
+  lr: 0.0003
+  warmup: true
+";
+        let n = p(src);
+        let re = p(&n.to_yaml());
+        assert_eq!(n, re);
+    }
+
+    #[test]
+    fn emit_quotes_ambiguous_strings() {
+        let mut root = Node::new(Value::Map(vec![]), 0);
+        root.set("a", Node::new(Value::Str("true".into()), 0));
+        root.set("b", Node::new(Value::Str("07".into()), 0));
+        root.set("c", Node::new(Value::Str("plain".into()), 0));
+        let re = p(&root.to_yaml());
+        assert_eq!(re.get("a").unwrap().as_str(), Some("true"));
+        assert_eq!(re.get("b").unwrap().as_str(), Some("07"));
+        assert_eq!(re.get("c").unwrap().as_str(), Some("plain"));
+    }
+
+    #[test]
+    fn path_access() {
+        let n = p("a:\n  b:\n    - x: 1\n    - x: 2\n");
+        assert_eq!(n.at_path("a.b.1.x").unwrap().as_i64(), Some(2));
+        assert!(n.at_path("a.b.7.x").is_none());
+        assert!(n.at_path("a.q").is_none());
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let n = p("a: 1\nb:\n  c: 2\n");
+        assert_eq!(n.get("a").unwrap().line, 1);
+        assert_eq!(n.get("b").unwrap().get("c").unwrap().line, 3);
+    }
+}

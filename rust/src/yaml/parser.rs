@@ -1,0 +1,598 @@
+//! Block-structure parser. Lines are pre-split with their indentation;
+//! comment stripping happens at use-time so literal block scalars keep
+//! `#` characters intact.
+
+use super::scalar::{parse_scalar, unescape_double};
+use super::{Node, Value, YamlError};
+
+struct Line {
+    no: usize,
+    indent: usize,
+    /// Text after indentation, untrimmed on the right (literal blocks
+    /// preserve trailing content), comments NOT stripped.
+    text: String,
+}
+
+/// Parse a single YAML document into a [`Node`].
+pub fn parse(src: &str) -> Result<Node, YamlError> {
+    let mut lines: Vec<Line> = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no = i + 1;
+        if raw.trim() == "---" && lines.is_empty() {
+            continue; // tolerate a leading document marker
+        }
+        if raw.contains('\t') && raw.trim_start_matches([' ', '\t']).len() < raw.len() {
+            // Tabs in indentation are illegal YAML; catch early with a
+            // clear message instead of mis-nesting.
+            let lead = &raw[..raw.len() - raw.trim_start().len()];
+            if lead.contains('\t') {
+                return Err(YamlError { line: no, msg: "tab in indentation".into() });
+            }
+        }
+        let indent = raw.len() - raw.trim_start_matches(' ').len();
+        lines.push(Line { no, indent, text: raw[indent..].to_string() });
+    }
+    let mut p = Parser { lines, pos: 0 };
+    p.skip_blank();
+    if p.pos >= p.lines.len() {
+        return Ok(Node::new(Value::Null, 0));
+    }
+    let indent = p.lines[p.pos].indent;
+    let node = p.block(indent)?;
+    p.skip_blank();
+    if p.pos < p.lines.len() {
+        return Err(YamlError {
+            line: p.lines[p.pos].no,
+            msg: format!("unexpected content at indent {}", p.lines[p.pos].indent),
+        });
+    }
+    Ok(node)
+}
+
+struct Parser {
+    lines: Vec<Line>,
+    pos: usize,
+}
+
+/// Strip a trailing comment from a (non-literal) content string: ` #`
+/// starts a comment when not inside quotes.
+fn strip_comment(s: &str) -> &str {
+    let b = s.as_bytes();
+    let mut in_sq = false;
+    let mut in_dq = false;
+    let mut esc = false;
+    for i in 0..b.len() {
+        let c = b[i];
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            b'\\' if in_dq => esc = true,
+            b'\'' if !in_dq => in_sq = !in_sq,
+            b'"' if !in_sq => in_dq = !in_dq,
+            b'#' if !in_sq && !in_dq && (i == 0 || b[i - 1] == b' ' || b[i - 1] == b'\t') => {
+                return s[..i].trim_end();
+            }
+            _ => {}
+        }
+    }
+    s.trim_end()
+}
+
+impl Parser {
+    fn skip_blank(&mut self) {
+        while self.pos < self.lines.len() {
+            let t = strip_comment(&self.lines[self.pos].text);
+            if t.is_empty() {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Peek the next significant line; must have indent >= `min` to be
+    /// part of the current block.
+    fn peek(&mut self) -> Option<(usize, usize)> {
+        self.skip_blank();
+        if self.pos < self.lines.len() {
+            Some((self.lines[self.pos].indent, self.lines[self.pos].no))
+        } else {
+            None
+        }
+    }
+
+    fn block(&mut self, indent: usize) -> Result<Node, YamlError> {
+        self.skip_blank();
+        let no = self.lines[self.pos].no;
+        let text = strip_comment(&self.lines[self.pos].text).to_string();
+        if text == "-" || text.starts_with("- ") {
+            self.sequence(indent)
+        } else if is_mapping_line(&text) {
+            self.mapping(indent)
+        } else {
+            // Bare scalar document / block value.
+            let v = self.inline_value(&text, no)?;
+            self.pos += 1;
+            Ok(Node::new(v, no))
+        }
+    }
+
+    fn mapping(&mut self, indent: usize) -> Result<Node, YamlError> {
+        let mut entries: Vec<(String, Node)> = Vec::new();
+        let first_no = self.lines[self.pos].no;
+        loop {
+            match self.peek() {
+                Some((i, _)) if i == indent => {}
+                Some((i, no)) if i > indent => {
+                    return Err(YamlError { line: no, msg: "unexpected deeper indent".into() })
+                }
+                _ => break,
+            }
+            let no = self.lines[self.pos].no;
+            let text = strip_comment(&self.lines[self.pos].text).to_string();
+            let (key, rest) = split_key(&text, no)?;
+            if entries.iter().any(|(k, _)| *k == key) {
+                return Err(YamlError { line: no, msg: format!("duplicate key '{key}'") });
+            }
+            let rest = rest.trim();
+            if rest.is_empty() {
+                self.pos += 1;
+                // Nested block (deeper indent) or null.
+                match self.peek() {
+                    Some((i, _)) if i > indent => {
+                        let v = self.block(i)?;
+                        entries.push((key, v));
+                    }
+                    _ => entries.push((key, Node::new(Value::Null, no))),
+                }
+            } else if rest == "|" || rest == "|-" {
+                self.pos += 1;
+                let v = self.literal_block(indent, rest == "|-")?;
+                entries.push((key, Node::new(Value::Str(v), no)));
+            } else if rest == "-" || rest.starts_with("- ") {
+                return Err(YamlError {
+                    line: no,
+                    msg: "sequence must start on its own line".into(),
+                });
+            } else {
+                let v = self.inline_value(rest, no)?;
+                entries.push((key, Node::new(v, no)));
+                self.pos += 1;
+            }
+        }
+        Ok(Node::new(Value::Map(entries), first_no))
+    }
+
+    fn sequence(&mut self, indent: usize) -> Result<Node, YamlError> {
+        let mut items: Vec<Node> = Vec::new();
+        let first_no = self.lines[self.pos].no;
+        loop {
+            match self.peek() {
+                Some((i, _)) if i == indent => {}
+                Some((i, no)) if i > indent => {
+                    return Err(YamlError { line: no, msg: "unexpected deeper indent".into() })
+                }
+                _ => break,
+            }
+            let no = self.lines[self.pos].no;
+            let text = strip_comment(&self.lines[self.pos].text).to_string();
+            if text == "-" {
+                self.pos += 1;
+                match self.peek() {
+                    Some((i, _)) if i > indent => items.push(self.block(i)?),
+                    _ => items.push(Node::new(Value::Null, no)),
+                }
+                continue;
+            }
+            let Some(rest) = text.strip_prefix('-') else {
+                break; // not a sequence item at this indent — end of seq
+            };
+            let stripped = rest.trim_start();
+            let dash_offset = text.len() - stripped.len(); // "- " width incl. extra spaces
+            if is_mapping_line(stripped) {
+                // Compact form: `- key: value` opens a nested mapping whose
+                // keys align at indent + dash_offset. Rewrite the current
+                // line as the mapping's first line and recurse.
+                let item_indent = indent + dash_offset;
+                self.lines[self.pos].indent = item_indent;
+                self.lines[self.pos].text = stripped.to_string();
+                items.push(self.mapping(item_indent)?);
+            } else {
+                let v = self.inline_value(stripped, no)?;
+                items.push(Node::new(v, no));
+                self.pos += 1;
+            }
+        }
+        Ok(Node::new(Value::Seq(items), first_no))
+    }
+
+    /// Literal block scalar: all following lines with indent > parent.
+    fn literal_block(&mut self, parent_indent: usize, strip_final: bool) -> Result<String, YamlError> {
+        // Find content indent from the first non-blank line.
+        let mut content_indent: Option<usize> = None;
+        let mut out = String::new();
+        while self.pos < self.lines.len() {
+            let line = &self.lines[self.pos];
+            let blank = line.text.trim().is_empty();
+            if blank {
+                // Blank lines inside the block are kept (if the block
+                // continues after them).
+                if content_indent.is_some() {
+                    out.push('\n');
+                }
+                self.pos += 1;
+                continue;
+            }
+            if line.indent <= parent_indent {
+                break;
+            }
+            let ci = *content_indent.get_or_insert(line.indent);
+            if line.indent < ci {
+                break;
+            }
+            out.push_str(&" ".repeat(line.indent - ci));
+            out.push_str(line.text.trim_end());
+            out.push('\n');
+            self.pos += 1;
+        }
+        // Trailing blank lines inside the block collapse to the final \n.
+        while out.ends_with("\n\n") {
+            out.pop();
+        }
+        if strip_final && out.ends_with('\n') {
+            out.pop();
+        }
+        Ok(out)
+    }
+
+    /// Parse a single-line value: flow collection, quoted or plain scalar.
+    fn inline_value(&mut self, s: &str, line: usize) -> Result<Value, YamlError> {
+        let t = s.trim();
+        let mut fp = Flow { s: t.as_bytes(), pos: 0, line };
+        let v = fp.value()?;
+        fp.skip_ws();
+        if fp.pos != t.len() {
+            return Err(YamlError { line, msg: format!("trailing characters after value: '{}'", &t[fp.pos..]) });
+        }
+        Ok(v)
+    }
+}
+
+/// Does this line open a mapping entry (contains a key colon)?
+fn is_mapping_line(text: &str) -> bool {
+    find_key_colon(text).is_some()
+}
+
+/// Find the colon that terminates the key: first `:` at depth 0 (outside
+/// quotes/brackets) followed by space or end-of-line.
+fn find_key_colon(text: &str) -> Option<usize> {
+    let b = text.as_bytes();
+    let mut depth = 0i32;
+    let mut in_sq = false;
+    let mut in_dq = false;
+    let mut esc = false;
+    for i in 0..b.len() {
+        let c = b[i];
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            b'\\' if in_dq => esc = true,
+            b'\'' if !in_dq => in_sq = !in_sq,
+            b'"' if !in_sq => in_dq = !in_dq,
+            b'[' | b'{' if !in_sq && !in_dq => depth += 1,
+            b']' | b'}' if !in_sq && !in_dq => depth -= 1,
+            b':' if !in_sq && !in_dq && depth == 0 => {
+                if i + 1 == b.len() || b[i + 1] == b' ' {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split `key: rest`; supports quoted keys.
+fn split_key(text: &str, line: usize) -> Result<(String, &str), YamlError> {
+    let idx = find_key_colon(text)
+        .ok_or_else(|| YamlError { line, msg: format!("expected 'key: value', got '{text}'") })?;
+    let raw_key = text[..idx].trim();
+    let key = if let Some(q) = raw_key.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        unescape_double(q, line)?
+    } else if let Some(q) = raw_key.strip_prefix('\'').and_then(|r| r.strip_suffix('\'')) {
+        q.replace("''", "'")
+    } else {
+        if raw_key.is_empty() {
+            return Err(YamlError { line, msg: "empty mapping key".into() });
+        }
+        raw_key.to_string()
+    };
+    Ok((key, &text[idx + 1..]))
+}
+
+/// One-line flow parser: scalars, `[..]`, `{..}` with nesting.
+struct Flow<'a> {
+    s: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Flow<'a> {
+    fn err(&self, msg: &str) -> YamlError {
+        YamlError { line: self.line, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.s.get(self.pos), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, YamlError> {
+        self.skip_ws();
+        match self.s.get(self.pos) {
+            Some(b'[') => self.flow_seq(),
+            Some(b'{') => self.flow_map(),
+            Some(b'"') => {
+                let raw = self.quoted(b'"')?;
+                Ok(Value::Str(unescape_double(&raw, self.line)?))
+            }
+            Some(b'\'') => {
+                let raw = self.quoted(b'\'')?;
+                Ok(Value::Str(raw.replace("''", "'")))
+            }
+            Some(_) => {
+                let start = self.pos;
+                let mut depth = 0;
+                while let Some(&c) = self.s.get(self.pos) {
+                    match c {
+                        b',' | b']' | b'}' if depth == 0 => break,
+                        b'[' | b'{' => depth += 1,
+                        b']' | b'}' => depth -= 1,
+                        _ => {}
+                    }
+                    self.pos += 1;
+                }
+                let raw = std::str::from_utf8(&self.s[start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8"))?;
+                Ok(parse_scalar(raw))
+            }
+            None => Ok(Value::Null),
+        }
+    }
+
+    /// Consume a quoted run; returns the raw body (escapes unresolved).
+    fn quoted(&mut self, q: u8) -> Result<String, YamlError> {
+        self.pos += 1; // opening quote
+        let start = self.pos;
+        let mut esc = false;
+        while let Some(&c) = self.s.get(self.pos) {
+            if esc {
+                esc = false;
+                self.pos += 1;
+                continue;
+            }
+            if c == b'\\' && q == b'"' {
+                esc = true;
+                self.pos += 1;
+                continue;
+            }
+            if c == q {
+                // Single-quote doubling: '' is an escaped quote.
+                if q == b'\'' && self.s.get(self.pos + 1) == Some(&b'\'') {
+                    self.pos += 2;
+                    continue;
+                }
+                let body = std::str::from_utf8(&self.s[start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8"))?
+                    .to_string();
+                self.pos += 1; // closing quote
+                return Ok(body);
+            }
+            self.pos += 1;
+        }
+        Err(self.err("unterminated quoted string"))
+    }
+
+    fn flow_seq(&mut self) -> Result<Value, YamlError> {
+        self.pos += 1; // [
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.s.get(self.pos) == Some(&b']') {
+            self.pos += 1;
+            return Ok(Value::Seq(items));
+        }
+        loop {
+            let v = self.value()?;
+            items.push(Node::new(v, self.line));
+            self.skip_ws();
+            match self.s.get(self.pos) {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Seq(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in flow sequence")),
+            }
+        }
+    }
+
+    fn flow_map(&mut self) -> Result<Value, YamlError> {
+        self.pos += 1; // {
+        let mut entries: Vec<(String, Node)> = Vec::new();
+        self.skip_ws();
+        if self.s.get(self.pos) == Some(&b'}') {
+            self.pos += 1;
+            return Ok(Value::Map(entries));
+        }
+        loop {
+            self.skip_ws();
+            let key = match self.s.get(self.pos) {
+                Some(b'"') => unescape_double(&self.quoted(b'"')?, self.line)?,
+                Some(b'\'') => self.quoted(b'\'')?.replace("''", "'"),
+                _ => {
+                    let start = self.pos;
+                    while let Some(&c) = self.s.get(self.pos) {
+                        if c == b':' || c == b',' || c == b'}' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    std::str::from_utf8(&self.s[start..self.pos])
+                        .map_err(|_| self.err("invalid utf-8"))?
+                        .trim()
+                        .to_string()
+                }
+            };
+            self.skip_ws();
+            if self.s.get(self.pos) != Some(&b':') {
+                return Err(self.err("expected ':' in flow mapping"));
+            }
+            self.pos += 1;
+            let v = self.value()?;
+            if entries.iter().any(|(k, _)| *k == key) {
+                return Err(self.err(&format!("duplicate key '{key}' in flow mapping")));
+            }
+            entries.push((key, Node::new(v, self.line)));
+            self.skip_ws();
+            match self.s.get(self.pos) {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Map(entries));
+                }
+                _ => return Err(self.err("expected ',' or '}' in flow mapping")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(src: &str) -> Node {
+        parse(src).unwrap()
+    }
+
+    #[test]
+    fn nested_mappings() {
+        let n = p("a:\n  b:\n    c: 1\n  d: two\n");
+        assert_eq!(n.at_path("a.b.c").unwrap().as_i64(), Some(1));
+        assert_eq!(n.at_path("a.d").unwrap().as_str(), Some("two"));
+    }
+
+    #[test]
+    fn sequences_block_and_flow() {
+        let n = p("xs:\n  - 1\n  - 2\nys: [3, 4, five]\n");
+        let xs = n.get("xs").unwrap().as_seq().unwrap();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[1].as_i64(), Some(2));
+        let ys = n.get("ys").unwrap().as_seq().unwrap();
+        assert_eq!(ys[2].as_str(), Some("five"));
+    }
+
+    #[test]
+    fn compact_seq_of_maps() {
+        let n = p("items:\n  - name: a\n    val: 1\n  - name: b\n    val: 2\n");
+        let items = n.get("items").unwrap().as_seq().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(items[1].get("val").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn seq_of_seqs_and_nested_under_dash() {
+        let n = p("grid:\n  -\n    - 1\n    - 2\n  -\n    - 3\n");
+        let g = n.get("grid").unwrap().as_seq().unwrap();
+        assert_eq!(g[0].as_seq().unwrap()[1].as_i64(), Some(2));
+        assert_eq!(g[1].as_seq().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let n = p("# header\na: 1  # trailing\n\n# mid\nb: 'x # not comment'\n");
+        assert_eq!(n.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(n.get("b").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn quoted_scalars_and_keys() {
+        let n = p("\"weird key\": \"a\\nb\"\n'single': 'it''s'\nurl: http://x/y\n");
+        assert_eq!(n.get("weird key").unwrap().as_str(), Some("a\nb"));
+        assert_eq!(n.get("single").unwrap().as_str(), Some("it's"));
+        assert_eq!(n.get("url").unwrap().as_str(), Some("http://x/y"));
+    }
+
+    #[test]
+    fn flow_nested() {
+        let n = p("x: {a: [1, {b: 2}], c: \"s,]\"}\n");
+        assert_eq!(n.at_path("x.a.1.b").unwrap().as_i64(), Some(2));
+        assert_eq!(n.at_path("x.c").unwrap().as_str(), Some("s,]"));
+    }
+
+    #[test]
+    fn literal_block() {
+        let n = p("script: |\n  line one\n  line two\n\n  after blank\nnext: 1\n");
+        assert_eq!(
+            n.get("script").unwrap().as_str(),
+            Some("line one\nline two\n\nafter blank\n")
+        );
+        assert_eq!(n.get("next").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn literal_block_keeps_hash() {
+        let n = p("s: |\n  # not a comment\n  a: b\n");
+        assert_eq!(n.get("s").unwrap().as_str(), Some("# not a comment\na: b\n"));
+    }
+
+    #[test]
+    fn empty_doc_and_null_values() {
+        assert!(p("").is_null());
+        assert!(p("\n# only comments\n").is_null());
+        let n = p("a:\nb: 1\n");
+        assert!(n.get("a").unwrap().is_null());
+    }
+
+    #[test]
+    fn errors_carry_lines() {
+        let e = parse("a: 1\n  bad deeper\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("a: 1\na: 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+        let e = parse("\tx: 1\n").unwrap_err();
+        assert!(e.msg.contains("tab"));
+        let e = parse("a: [1, 2\n").unwrap_err();
+        assert!(e.msg.contains("expected"));
+    }
+
+    #[test]
+    fn top_level_sequence() {
+        let n = p("- 1\n- two\n- k: v\n");
+        let s = n.as_seq().unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[2].get("k").unwrap().as_str(), Some("v"));
+    }
+
+    #[test]
+    fn document_marker_tolerated() {
+        let n = p("---\na: 1\n");
+        assert_eq!(n.get("a").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn deeper_then_shallower_structure() {
+        let n = p("a:\n  b: 1\nc:\n  d:\n    e: 2\nf: 3\n");
+        assert_eq!(n.at_path("c.d.e").unwrap().as_i64(), Some(2));
+        assert_eq!(n.get("f").unwrap().as_i64(), Some(3));
+    }
+}

@@ -1,0 +1,149 @@
+//! Plain-scalar resolution (YAML 1.2 core-schema-ish, plus the
+//! pragmatic extensions configs rely on: `1_000_000` underscores and
+//! `0x` hex integers).
+
+use super::Value;
+
+/// Resolve an unquoted scalar string to a typed value.
+pub fn parse_scalar(s: &str) -> Value {
+    let t = s.trim();
+    match t {
+        "" | "~" | "null" | "Null" | "NULL" => return Value::Null,
+        "true" | "True" | "TRUE" => return Value::Bool(true),
+        "false" | "False" | "FALSE" => return Value::Bool(false),
+        ".inf" | ".Inf" | "+.inf" => return Value::Float(f64::INFINITY),
+        "-.inf" | "-.Inf" => return Value::Float(f64::NEG_INFINITY),
+        ".nan" | ".NaN" | ".NAN" => return Value::Float(f64::NAN),
+        _ => {}
+    }
+    if let Some(i) = parse_int(t) {
+        return Value::Int(i);
+    }
+    if let Some(f) = parse_float(t) {
+        return Value::Float(f);
+    }
+    Value::Str(t.to_string())
+}
+
+fn parse_int(t: &str) -> Option<i64> {
+    let (neg, body) = match t.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, t.strip_prefix('+').unwrap_or(t)),
+    };
+    if body.is_empty() {
+        return None;
+    }
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        if hex.is_empty() || !hex.chars().all(|c| c.is_ascii_hexdigit() || c == '_') {
+            return None;
+        }
+        i64::from_str_radix(&hex.replace('_', ""), 16).ok()?
+    } else {
+        // Leading zeros ("07") stay strings per YAML 1.2 (octal ambiguity),
+        // except plain "0".
+        if body.len() > 1 && body.starts_with('0') {
+            return None;
+        }
+        if !body.chars().all(|c| c.is_ascii_digit() || c == '_') {
+            return None;
+        }
+        if body.starts_with('_') || body.ends_with('_') {
+            return None;
+        }
+        body.replace('_', "").parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+fn parse_float(t: &str) -> Option<f64> {
+    let body = t.strip_prefix('+').unwrap_or(t);
+    // Must look like a number: digits with '.' and/or exponent.
+    let has_digit = body.chars().any(|c| c.is_ascii_digit());
+    let numeric_chars =
+        body.chars().all(|c| c.is_ascii_digit() || matches!(c, '.' | 'e' | 'E' | '+' | '-' | '_'));
+    if !has_digit || !numeric_chars {
+        return None;
+    }
+    // Require a '.' or exponent so plain ints don't fall through here
+    // (they are handled above; this also keeps "1-2" a string).
+    if !body.contains('.') && !body.contains('e') && !body.contains('E') {
+        return None;
+    }
+    body.replace('_', "").parse::<f64>().ok()
+}
+
+/// Unescape a double-quoted scalar body.
+pub fn unescape_double(s: &str, line: usize) -> Result<String, super::YamlError> {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match it.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('0') => out.push('\0'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('u') => {
+                let hex: String = (0..4).filter_map(|_| it.next()).collect();
+                if hex.len() != 4 {
+                    return Err(super::YamlError { line, msg: "short \\u escape".into() });
+                }
+                let cp = u32::from_str_radix(&hex, 16)
+                    .map_err(|_| super::YamlError { line, msg: "bad \\u escape".into() })?;
+                out.push(char::from_u32(cp).ok_or(super::YamlError {
+                    line,
+                    msg: "invalid codepoint".into(),
+                })?);
+            }
+            other => {
+                return Err(super::YamlError {
+                    line,
+                    msg: format!("unknown escape \\{}", other.map(String::from).unwrap_or_default()),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_scalars() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("-7"), Value::Int(-7));
+        assert_eq!(parse_scalar("1_000_000"), Value::Int(1_000_000));
+        assert_eq!(parse_scalar("0x10"), Value::Int(16));
+        assert_eq!(parse_scalar("3.5"), Value::Float(3.5));
+        assert_eq!(parse_scalar("1e-4"), Value::Float(1e-4));
+        assert_eq!(parse_scalar("2.5e3"), Value::Float(2500.0));
+        assert_eq!(parse_scalar(".5"), Value::Float(0.5));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("null"), Value::Null);
+        assert_eq!(parse_scalar("~"), Value::Null);
+        assert_eq!(parse_scalar(""), Value::Null);
+        assert_eq!(parse_scalar(".inf"), Value::Float(f64::INFINITY));
+    }
+
+    #[test]
+    fn strings_stay_strings() {
+        for s in ["hello", "07", "1-2", "v1.2.3", "1.2.3", "_1", "1_", "0xZZ", "-", "+", "e5"] {
+            assert_eq!(parse_scalar(s), Value::Str(s.to_string()), "{s}");
+        }
+    }
+
+    #[test]
+    fn double_quote_unescape() {
+        assert_eq!(unescape_double("a\\nb\\t\\\"q\\\"", 1).unwrap(), "a\nb\t\"q\"");
+        assert_eq!(unescape_double("\\u00e9", 1).unwrap(), "é");
+        assert!(unescape_double("\\q", 1).is_err());
+        assert!(unescape_double("\\u00", 1).is_err());
+    }
+}

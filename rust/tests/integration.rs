@@ -1,0 +1,240 @@
+//! End-to-end integration tests over real AOT artifacts + PJRT.
+//!
+//! Requires `make artifacts` (the `nano` model). These tests exercise
+//! the full stack: YAML config → registry/DI → object graph → gym →
+//! FSDP engine → PJRT train steps → checkpoint/resume.
+
+use modalities::checkpoint;
+use modalities::config::Config;
+use modalities::model::{InitScheme, ModelSpec, TokenBatch};
+use modalities::registry::{ComponentRegistry, ObjectGraphBuilder};
+use modalities::runtime::pjrt::{Manifest, PjrtEngine};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn nano_spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        artifact_dir: artifacts_dir(),
+        model_name: "nano".into(),
+        init: InitScheme::ScaledNormal,
+        seed,
+    }
+}
+
+fn random_batch(arts: &modalities::runtime::pjrt::ModelArtifacts, seed: u64) -> TokenBatch {
+    let mut rng = modalities::util::prng::Pcg64::new(seed);
+    let n = arts.batch_size * arts.seq_len;
+    let tokens: Vec<u32> = (0..n).map(|_| rng.next_below(arts.vocab_size as u64) as u32).collect();
+    let targets: Vec<u32> = (0..n).map(|_| rng.next_below(arts.vocab_size as u64) as u32).collect();
+    TokenBatch { tokens, targets, batch_size: arts.batch_size, seq_len: arts.seq_len }
+}
+
+#[test]
+fn train_step_loss_and_grads_sane() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = PjrtEngine::cpu().unwrap();
+    let (model, params) = nano_spec(1).materialize(&engine).unwrap();
+    let arts = model.arts.clone();
+    assert_eq!(arts.vocab_size, 512);
+
+    let batch = random_batch(&arts, 7);
+    let out = model.train_step(&engine, &params, &batch).unwrap();
+    // Random init + random targets → loss ≈ ln(V) = ln(512) ≈ 6.24
+    let expect = (arts.vocab_size as f32).ln();
+    assert!(
+        (out.loss - expect).abs() < 0.5,
+        "initial loss {} should be near ln(V) = {expect}",
+        out.loss
+    );
+    assert_eq!(out.grads.len(), params.bufs.len());
+    for (g, p) in out.grads.iter().zip(&params.bufs) {
+        assert_eq!(g.len(), p.len());
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+    // Gradients must not be all-zero.
+    let gnorm: f32 = out.grads.iter().flat_map(|g| g.iter()).map(|x| x * x).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-3, "grad norm {gnorm}");
+
+    // loss artifact agrees with the train artifact's loss output
+    let loss2 = model.loss(&engine, &params, &batch).unwrap();
+    assert!((loss2 - out.loss).abs() < 1e-4, "{loss2} vs {}", out.loss);
+
+    // forward logits have the right size
+    let logits = model.forward(&engine, &params, &batch.tokens).unwrap();
+    assert_eq!(logits.len(), arts.batch_size * arts.seq_len * arts.vocab_size);
+}
+
+#[test]
+fn deterministic_across_executions() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = PjrtEngine::cpu().unwrap();
+    let (model, params) = nano_spec(3).materialize(&engine).unwrap();
+    let batch = random_batch(&model.arts, 9);
+    let a = model.train_step(&engine, &params, &batch).unwrap();
+    let b = model.train_step(&engine, &params, &batch).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grads[0], b.grads[0]);
+}
+
+const GYM_CFG: &str = "\
+settings:
+  seed: 11
+  run_name: itest
+components:
+  ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 512, seq_len: 32, num_samples: 512, noise: 0.02}
+  sampler:
+    component_key: sampler
+    variant_key: shuffled
+    config: {dataset: {instance_key: ds}}
+  loader:
+    component_key: dataloader
+    variant_key: default
+    config:
+      dataset: {instance_key: ds}
+      sampler: {instance_key: sampler}
+      batch_size: 4
+  net:
+    component_key: model
+    variant_key: decoder_lm
+    config: {model_name: nano}
+  opt:
+    component_key: optimizer
+    variant_key: adamw
+    config: {lr: 3e-3}
+  sched:
+    component_key: lr_scheduler
+    variant_key: warmup_constant
+    config: {warmup_steps: 3}
+  clip:
+    component_key: gradient_clipper
+    variant_key: global_norm
+    config: {max_norm: 1.0}
+  parallel:
+    component_key: parallel_strategy
+    variant_key: fsdp
+    config: {dp_degree: 2, unit_size_mb: 0.25}
+  ckpt:
+    component_key: checkpointing
+    variant_key: interval
+    config: {every_steps: 5}
+  trainer:
+    component_key: gym
+    variant_key: spmd
+    config:
+      model: {instance_key: net}
+      dataloader: {instance_key: loader}
+      optimizer: {instance_key: opt}
+      lr_scheduler: {instance_key: sched}
+      gradient_clipper: {instance_key: clip}
+      parallel: {instance_key: parallel}
+      checkpointing: {instance_key: ckpt}
+      steps: 10
+      log_every: 1000
+      run_dir: RUN_DIR
+";
+
+fn run_gym(run_dir: &Path, steps: u64, resume: bool) -> modalities::gym::RunSummary {
+    let src = GYM_CFG
+        .replace("RUN_DIR", &run_dir.display().to_string())
+        .replace("steps: 10", &format!("steps: {steps}"))
+        + if resume { "      resume: true\n" } else { "" };
+    let cfg = Config::from_str_named(&src, "<itest>").unwrap();
+    let reg = ComponentRegistry::with_builtins();
+    let graph = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+    let mut gym = graph.into_gym().unwrap();
+    gym.run().unwrap()
+}
+
+#[test]
+fn gym_fsdp_training_reduces_loss_and_resumes_exactly() {
+    if !have_artifacts() {
+        return;
+    }
+    let base = std::env::temp_dir().join("modalities-itest");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // Straight 10-step run (dp=2 FSDP).
+    let run_a = base.join("a");
+    let sum_a = run_gym(&run_a, 10, false);
+    assert_eq!(sum_a.world, 2);
+    let first = sum_a.curve.first().unwrap().loss;
+    let last = sum_a.curve.last().unwrap().loss;
+    assert!(
+        last < first - 0.3,
+        "training must reduce loss: {first} -> {last}"
+    );
+    // Run artifacts exist: resolved config + metrics + checkpoints.
+    assert!(run_a.join("config.resolved.yaml").exists());
+    assert!(run_a.join("metrics.jsonl").exists());
+    assert!(checkpoint::latest_checkpoint(&run_a).is_some());
+
+    // Interrupted run: 5 steps, then resume to 10 — must match exactly.
+    let run_b = base.join("b");
+    let _ = run_gym(&run_b, 5, false);
+    let sum_b = run_gym(&run_b, 10, true);
+    assert_eq!(
+        sum_a.curve.last().unwrap().loss,
+        sum_b.curve.last().unwrap().loss,
+        "resumed run must be bit-identical to the uninterrupted run"
+    );
+}
+
+#[test]
+fn consolidated_checkpoint_warm_start_through_gym() {
+    if !have_artifacts() {
+        return;
+    }
+    let base = std::env::temp_dir().join("modalities-itest-warm");
+    let _ = std::fs::remove_dir_all(&base);
+    let run = base.join("run");
+    let _ = run_gym(&run, 4, false);
+    let ckpt = checkpoint::latest_checkpoint(&run).unwrap();
+    let cons_path = base.join("model.mckpt");
+    checkpoint::consolidate(&ckpt, &cons_path).unwrap();
+
+    let cons = checkpoint::load_consolidated(&cons_path).unwrap();
+    assert_eq!(cons.step, 4);
+    assert_eq!(cons.model_name, "nano");
+
+    // Warm-started params produce a different (trained) loss vs fresh.
+    let engine = PjrtEngine::cpu().unwrap();
+    let (model, mut params) = nano_spec(11).materialize(&engine).unwrap();
+    checkpoint::warm_start_params(&mut params, &cons).unwrap();
+    let batch = random_batch(&model.arts, 3);
+    let warm_loss = model.loss(&engine, &params, &batch).unwrap();
+    let (_, fresh) = nano_spec(11).materialize(&engine).unwrap();
+    let fresh_loss = model.loss(&engine, &fresh, &batch).unwrap();
+    assert!(warm_loss.is_finite() && fresh_loss.is_finite());
+    assert_ne!(warm_loss, fresh_loss, "warm start must actually load weights");
+}
+
+#[test]
+fn manifest_matches_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for (name, arts) in &m.models {
+        assert_eq!(&arts.name, name);
+        assert_eq!(arts.param_elems() as u64, arts.num_params, "{name}");
+        for variant in arts.files.keys() {
+            let p = arts.artifact_path(&m.dir, variant).unwrap();
+            assert!(p.exists(), "{name}/{variant} missing at {}", p.display());
+        }
+    }
+}
