@@ -1,0 +1,16 @@
+# Convenience targets. The rust crate builds standalone; `artifacts`
+# needs a Python environment with jax installed (L2/L1 lowering).
+
+.PHONY: artifacts build test check
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+check:
+	scripts/check.sh

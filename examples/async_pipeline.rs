@@ -1,0 +1,95 @@
+//! The async data pipeline end-to-end: raw JSONL → sharded
+//! multi-threaded tokenization → in-memory token windows → bounded
+//! prefetched batching — the full `dataloader/sharded_jsonl` path, run
+//! by hand so each stage is visible. Run with:
+//!
+//! ```sh
+//! cargo run --release --example async_pipeline
+//! ```
+
+use modalities::data::bpe::train_bpe;
+use modalities::data::dataset::{DataLoader, Dataset, Sampler, ShuffledSampler};
+use modalities::data::jsonl::JsonlCorpus;
+use modalities::data::prefetch::{
+    load_sharded_jsonl, PrefetchConfig, Prefetcher, ShardedJsonlConfig,
+};
+use modalities::data::synthetic::{generate_corpus, CorpusSpec};
+use modalities::util::human;
+use modalities::util::stats::Timer;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("runs/async_pipeline");
+    std::fs::create_dir_all(&dir)?;
+    let jsonl = dir.join("corpus.jsonl");
+
+    // 1. A small synthetic corpus (FineWeb stand-in).
+    let spec = CorpusSpec { num_docs: 3000, mean_doc_words: 120, seed: 9, ..Default::default() };
+    let (docs, bytes) = generate_corpus(&jsonl, &spec)?;
+    let _ = std::fs::remove_file(modalities::data::jsonl::default_index_path(&jsonl));
+    println!("[corpus]   {docs} docs, {}", human::bytes(bytes));
+
+    // 2. BPE vocabulary from a sample.
+    let corpus = JsonlCorpus::open(&jsonl)?;
+    let sample: Vec<String> = (0..500).map(|i| corpus.doc_text(i).unwrap()).collect();
+    let refs: Vec<&str> = sample.iter().map(|s| s.as_str()).collect();
+    let vocab = Arc::new(train_bpe(&refs, 1024));
+    drop(corpus);
+    println!("[vocab]    {} entries", vocab.size());
+
+    // 3. Sharded multi-threaded ingestion: worker lanes own disjoint
+    //    document shards (deterministic (rank, worker) assignment), so
+    //    the merged token stream is identical for any worker count.
+    let seq_len = 128;
+    for workers in [1usize, 2, 4] {
+        let cfg = ShardedJsonlConfig { num_workers: workers, ..Default::default() };
+        let t = Timer::start();
+        let ds = load_sharded_jsonl(&jsonl, vocab.clone(), seq_len, &cfg)?;
+        println!(
+            "[ingest]   {} workers: {} tokens -> {} samples in {}",
+            workers,
+            human::count(ds.num_tokens() as u64),
+            ds.len(),
+            human::duration(t.elapsed_s())
+        );
+    }
+    let shard = ShardedJsonlConfig { num_workers: 2, ..Default::default() };
+    let ds = load_sharded_jsonl(&jsonl, vocab, seq_len, &shard)?;
+    let ds: Arc<dyn Dataset> = Arc::new(ds);
+    let sampler: Arc<dyn Sampler> = Arc::new(ShuffledSampler { len: ds.len(), seed: 1 });
+    let loader = Arc::new(DataLoader::new(ds, sampler, 8)?);
+
+    // 4. Prefetched consumption vs the synchronous loop. The consumer
+    //    models a device step (sleep) the way the gym's PJRT dispatch
+    //    blocks the host thread; prefetch workers assemble batches
+    //    behind the bounded channel during that wait.
+    let batches = 200u64;
+    let bpe = loader.batches_per_epoch(0) as u64;
+    let step = std::time::Duration::from_micros(300);
+
+    let t = Timer::start();
+    let mut sink = 0u64;
+    for m in 0..batches {
+        let b = loader.batch(m / bpe, (m % bpe) as usize);
+        sink ^= b.inputs[0] as u64;
+        std::thread::sleep(step);
+    }
+    let sync_s = t.elapsed_s();
+    println!("[sync]     {batches} batches in {}", human::duration(sync_s));
+
+    let t = Timer::start();
+    let cfg = PrefetchConfig { depth: 4, num_workers: 2 };
+    let h = Prefetcher::spawn(loader.clone(), cfg, 0, batches)?;
+    for b in h {
+        sink ^= b.inputs[0] as u64;
+        std::thread::sleep(step);
+    }
+    let async_s = t.elapsed_s();
+    println!(
+        "[async]    {batches} batches in {} ({:.2}x, depth 4, 2 workers, sink {sink:x})",
+        human::duration(async_s),
+        sync_s / async_s
+    );
+    Ok(())
+}

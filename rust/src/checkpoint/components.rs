@@ -33,6 +33,15 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "checkpointing",
+        "interval",
+        "Sharded checkpoints every N steps, pruning to the latest K.",
+        &[
+            ("every_steps", "int", "0 (end only)", "checkpoint cadence in steps"),
+            ("keep_last", "int", "0 (keep all)", "checkpoints to retain"),
+        ],
+    );
 
     reg.register("checkpointing", "none", |_ctx, _cfg| {
         Ok(Component::new(
@@ -41,6 +50,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             CheckpointPolicy { every_steps: None, keep_last: 0 },
         ))
     })?;
+    reg.describe("checkpointing", "none", "Checkpoint only at run end.", &[]);
 
     reg.register("checkpoint_conversion", "consolidate", |ctx, cfg| {
         Ok(Component::new(
@@ -52,6 +62,15 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "checkpoint_conversion",
+        "consolidate",
+        "Sharded → consolidated checkpoint conversion (`modalities convert`).",
+        &[
+            ("from", "string", "required", "sharded checkpoint directory"),
+            ("to", "string", "required", "consolidated output path"),
+        ],
+    );
 
     Ok(())
 }

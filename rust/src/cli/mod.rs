@@ -87,6 +87,7 @@ USAGE:
   modalities convert    --from <ckpt_dir> --to <out.mckpt>
   modalities generate   --config <yaml> --ckpt <mckpt> --prompt <text>
   modalities components                     # list registered components
+  modalities docs       [--out <md>]        # generate docs/config_reference.md
   modalities config resolve --config <yaml> # print interpolated config
   modalities tune       --world N [--model llama3_8b]
   modalities trace pp   [--set stages=4] [--set micros=16]

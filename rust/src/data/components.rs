@@ -8,6 +8,7 @@ use super::dataset::{
     ShuffledSampler, SyntheticDataset,
 };
 use super::pipeline::PipelineConfig;
+use super::prefetch::{load_sharded_jsonl, PrefetchConfig, ShardedJsonlConfig};
 use crate::registry::{BuildCtx, Component, ComponentRegistry};
 use crate::yaml::Node;
 use anyhow::Result;
@@ -19,8 +20,14 @@ pub struct DatasetComponent(pub Arc<dyn Dataset>);
 pub struct SamplerComponent(pub Arc<dyn Sampler>);
 pub struct TokenizerComponent(pub Arc<BpeVocab>);
 
-/// Dataloader component: dataset + sampler + batch size.
-pub struct DataLoaderComponent(pub Arc<DataLoader>);
+/// Dataloader component: dataset + sampler + batch size, plus an
+/// optional prefetch policy. When `prefetch` is set the gym consumes
+/// batches through a [`crate::data::prefetch::Prefetcher`] instead of
+/// assembling them synchronously on the train thread.
+pub struct DataLoaderComponent {
+    pub loader: Arc<DataLoader>,
+    pub prefetch: Option<PrefetchConfig>,
+}
 
 /// Declarative pipeline definition (run by `modalities data tokenize`).
 pub struct DataPipelineComponent {
@@ -35,6 +42,15 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let ds = PackedDataset::open(std::path::Path::new(&path), seq_len)?;
         Ok(Component::new("dataset", "packed_memmap", DatasetComponent(Arc::new(ds))))
     })?;
+    reg.describe(
+        "dataset",
+        "packed_memmap",
+        "Packed-sequence dataset over a `.mmtok` store: O(1) mmap windows.",
+        &[
+            ("path", "string", "required", "path to the `.mmtok` token store"),
+            ("seq_len", "int", "required", "training sequence length (sample = seq_len + 1 tokens)"),
+        ],
+    );
 
     reg.register("dataset", "synthetic_lm", |ctx, cfg| {
         let vocab_size = ctx.usize(cfg, "vocab_size")? as u32;
@@ -45,12 +61,30 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let ds = SyntheticDataset::new(vocab_size, seq_len, num_samples, noise, seed);
         Ok(Component::new("dataset", "synthetic_lm", DatasetComponent(Arc::new(ds))))
     })?;
+    reg.describe(
+        "dataset",
+        "synthetic_lm",
+        "Deterministic learnable synthetic LM data (permutation transitions + noise).",
+        &[
+            ("vocab_size", "int", "required", "token id range"),
+            ("seq_len", "int", "required", "training sequence length"),
+            ("num_samples", "int", "required", "samples per epoch"),
+            ("noise", "float", "0.05", "probability a step ignores the transition table"),
+            ("seed", "int", "0", "xor-ed with `settings.seed`"),
+        ],
+    );
 
     reg.register("sampler", "sequential", |ctx, cfg| {
         let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
         let s = SequentialSampler { len: ds.0.len() };
         Ok(Component::new("sampler", "sequential", SamplerComponent(Arc::new(s))))
     })?;
+    reg.describe(
+        "sampler",
+        "sequential",
+        "In-order index stream over the dataset.",
+        &[("dataset", "component", "required", "dataset to sample")],
+    );
 
     reg.register("sampler", "shuffled", |ctx, cfg| {
         let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
@@ -58,6 +92,15 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let s = ShuffledSampler { len: ds.0.len(), seed };
         Ok(Component::new("sampler", "shuffled", SamplerComponent(Arc::new(s))))
     })?;
+    reg.describe(
+        "sampler",
+        "shuffled",
+        "Globally-shuffled sampler: seeded Fisher-Yates permutation per epoch.",
+        &[
+            ("dataset", "component", "required", "dataset to sample"),
+            ("seed", "int", "0", "xor-ed with `settings.seed`"),
+        ],
+    );
 
     reg.register("sampler", "distributed", |ctx, cfg| {
         let inner: Arc<SamplerComponent> = ctx.typed_field(cfg, "sampler", "sampler")?;
@@ -66,23 +109,134 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let s = DistributedSampler::new(inner.0.clone(), rank, world)?;
         Ok(Component::new("sampler", "distributed", SamplerComponent(Arc::new(s))))
     })?;
+    reg.describe(
+        "sampler",
+        "distributed",
+        "DP-rank slicing of an inner sampler (strided, drop-last to equal length).",
+        &[
+            ("sampler", "component", "required", "inner sampler to slice"),
+            ("rank", "int", "required", "this DP rank"),
+            ("world_size", "int", "required", "DP world size"),
+        ],
+    );
 
     reg.register("dataloader", "default", |ctx, cfg| {
         let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
         let sampler: Arc<SamplerComponent> = ctx.typed_field(cfg, "sampler", "sampler")?;
         let batch_size = ctx.usize(cfg, "batch_size")?;
         let dl = DataLoader::new(ds.0.clone(), sampler.0.clone(), batch_size)?;
-        Ok(Component::new("dataloader", "default", DataLoaderComponent(Arc::new(dl))))
+        Ok(Component::new(
+            "dataloader",
+            "default",
+            DataLoaderComponent { loader: Arc::new(dl), prefetch: None },
+        ))
     })?;
+    reg.describe(
+        "dataloader",
+        "default",
+        "Synchronous dataloader: batches assembled on the consumer thread.",
+        &[
+            ("dataset", "component", "required", "dataset to batch"),
+            ("sampler", "component", "required", "index stream"),
+            ("batch_size", "int", "required", "sequences per micro-batch"),
+        ],
+    );
+
+    reg.register("dataloader", "async_prefetch", |ctx, cfg| {
+        let ds: Arc<DatasetComponent> = ctx.typed_field(cfg, "dataset", "dataset")?;
+        let sampler: Arc<SamplerComponent> = ctx.typed_field(cfg, "sampler", "sampler")?;
+        let batch_size = ctx.usize(cfg, "batch_size")?;
+        let depth = ctx.usize_or(cfg, "prefetch_depth", 4)?;
+        let num_workers = ctx.usize_or(cfg, "num_workers", 2)?;
+        anyhow::ensure!(depth >= 1, "prefetch_depth must be >= 1");
+        anyhow::ensure!(num_workers >= 1, "num_workers must be >= 1");
+        let dl = DataLoader::new(ds.0.clone(), sampler.0.clone(), batch_size)?;
+        Ok(Component::new(
+            "dataloader",
+            "async_prefetch",
+            DataLoaderComponent {
+                loader: Arc::new(dl),
+                prefetch: Some(PrefetchConfig { depth, num_workers }),
+            },
+        ))
+    })?;
+    reg.describe(
+        "dataloader",
+        "async_prefetch",
+        "Async dataloader: worker threads assemble batches ahead of the trainer through a bounded channel (backpressure at `prefetch_depth`).",
+        &[
+            ("dataset", "component", "required", "dataset to batch"),
+            ("sampler", "component", "required", "index stream"),
+            ("batch_size", "int", "required", "sequences per micro-batch"),
+            ("prefetch_depth", "int", "4", "bounded channel depth in batches"),
+            ("num_workers", "int", "2", "batch-assembly worker threads"),
+        ],
+    );
+
+    reg.register("dataloader", "sharded_jsonl", |ctx, cfg| {
+        let path = ctx.str(cfg, "path")?.to_string();
+        let seq_len = ctx.usize(cfg, "seq_len")?;
+        let batch_size = ctx.usize(cfg, "batch_size")?;
+        let vocab = vocab_from_cfg(cfg)?;
+        let shard = ShardedJsonlConfig {
+            num_workers: ctx.usize_or(cfg, "reader_workers", 2)?,
+            append_eot: ctx.bool_or(cfg, "append_eot", true)?,
+            rank: ctx.usize_or(cfg, "rank", 0)?,
+            world: ctx.usize_or(cfg, "world_size", 1)?,
+        };
+        let ds = load_sharded_jsonl(std::path::Path::new(&path), Arc::new(vocab), seq_len, &shard)?;
+        let ds: Arc<dyn Dataset> = Arc::new(ds);
+        let seed = ctx.setting_u64("seed", 0) ^ ctx.usize_or(cfg, "seed", 0)? as u64;
+        let sampler: Arc<dyn Sampler> = if ctx.bool_or(cfg, "shuffle", true)? {
+            Arc::new(ShuffledSampler { len: ds.len(), seed })
+        } else {
+            Arc::new(SequentialSampler { len: ds.len() })
+        };
+        let dl = DataLoader::new(ds, sampler, batch_size)?;
+        let depth = ctx.usize_or(cfg, "prefetch_depth", 4)?;
+        let num_workers = ctx.usize_or(cfg, "num_workers", 2)?;
+        anyhow::ensure!(depth >= 1, "prefetch_depth must be >= 1");
+        anyhow::ensure!(num_workers >= 1, "num_workers must be >= 1");
+        Ok(Component::new(
+            "dataloader",
+            "sharded_jsonl",
+            DataLoaderComponent {
+                loader: Arc::new(dl),
+                prefetch: Some(PrefetchConfig { depth, num_workers }),
+            },
+        ))
+    })?;
+    reg.describe(
+        "dataloader",
+        "sharded_jsonl",
+        "End-to-end async loader over raw JSONL: sharded multi-threaded tokenization into an in-memory token stream, then prefetched batching.",
+        &[
+            ("path", "string", "required", "path to the JSONL corpus"),
+            ("seq_len", "int", "required", "training sequence length"),
+            ("batch_size", "int", "required", "sequences per micro-batch"),
+            ("vocab_path", "string", "byte fallback", "BPE vocabulary (`data train-vocab` output)"),
+            ("reader_workers", "int", "2", "sharded tokenizer reader threads"),
+            ("append_eot", "bool", "true", "append `<|endoftext|>` after each document"),
+            ("rank", "int", "0", "rank-sharded ingestion: this rank"),
+            ("world_size", "int", "1", "rank-sharded ingestion: DP world size"),
+            ("shuffle", "bool", "true", "shuffled vs sequential sampler"),
+            ("seed", "int", "0", "xor-ed with `settings.seed`"),
+            ("prefetch_depth", "int", "4", "bounded channel depth in batches"),
+            ("num_workers", "int", "2", "batch-assembly worker threads"),
+        ],
+    );
 
     reg.register("tokenizer", "byte_bpe", |ctx, cfg| {
-        let vocab = match cfg.get("vocab_path").and_then(|n| n.as_str()) {
-            Some(p) => BpeVocab::load(std::path::Path::new(p))?,
-            None => BpeVocab::byte_fallback(),
-        };
+        let vocab = vocab_from_cfg(cfg)?;
         let _ = ctx; // accessor parity
         Ok(Component::new("tokenizer", "byte_bpe", TokenizerComponent(Arc::new(vocab))))
     })?;
+    reg.describe(
+        "tokenizer",
+        "byte_bpe",
+        "In-repo byte-level BPE tokenizer (cached encoder).",
+        &[("vocab_path", "string", "byte fallback", "trained merge table, or pure byte vocab")],
+    );
 
     reg.register("data_pipeline", "producer_consumer", |ctx, cfg| {
         let config = pipeline_config_from(ctx, cfg)?;
@@ -93,14 +247,42 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             DataPipelineComponent { config, vocab_path },
         ))
     })?;
+    reg.describe(
+        "data_pipeline",
+        "producer_consumer",
+        "Offline tokenization pipeline: 1 reader, N workers, 1 order-restoring writer.",
+        &[
+            ("num_workers", "int", "2", "tokenizer worker count"),
+            ("batch_docs", "int", "64", "documents per queue batch"),
+            ("queue_depth", "int", "16", "bounded queue depth in batches"),
+            ("append_eot", "bool", "true", "append `<|endoftext|>` after each document"),
+            ("token_width", "int", "4", "token store width in bytes (2 or 4)"),
+            ("vocab_path", "string", "byte fallback", "BPE vocabulary to tokenize with"),
+        ],
+    );
 
     reg.register("collate_fn", "gpt_shift", |_ctx, _cfg| {
         // The shift collate is the DataLoader default; registered so
         // configs can name it explicitly (and alternatives can plug in).
         Ok(Component::new("collate_fn", "gpt_shift", ()))
     })?;
+    reg.describe(
+        "collate_fn",
+        "gpt_shift",
+        "Next-token shift collate (input = tokens[..seq], target = tokens[1..]).",
+        &[],
+    );
 
     Ok(())
+}
+
+/// Shared `vocab_path` resolution: a trained BPE merge table when
+/// given, the pure byte vocabulary otherwise.
+fn vocab_from_cfg(cfg: &Node) -> Result<BpeVocab> {
+    match cfg.get("vocab_path").and_then(|n| n.as_str()) {
+        Some(p) => BpeVocab::load(std::path::Path::new(p)),
+        None => Ok(BpeVocab::byte_fallback()),
+    }
 }
 
 fn pipeline_config_from(ctx: &mut BuildCtx<'_>, cfg: &Node) -> Result<PipelineConfig> {
@@ -149,9 +331,10 @@ components:
         let reg = ComponentRegistry::with_builtins();
         let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
         let dl = g.get::<super::DataLoaderComponent>("loader").unwrap();
-        let b = dl.0.batch(0, 0);
+        assert!(dl.prefetch.is_none());
+        let b = dl.loader.batch(0, 0);
         assert_eq!(b.inputs.len(), 4 * 16);
-        assert_eq!(dl.0.batches_per_epoch(0), 25);
+        assert_eq!(dl.loader.batches_per_epoch(0), 25);
     }
 
     #[test]
@@ -176,5 +359,77 @@ components:
         let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
         let s = g.get::<super::SamplerComponent>("rank0").unwrap();
         assert_eq!(s.0.epoch_indices(0).len(), 10);
+    }
+
+    #[test]
+    fn async_prefetch_loader_from_config() {
+        let src = "\
+components:
+  ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 64, seq_len: 8, num_samples: 64}
+  sampler:
+    component_key: sampler
+    variant_key: shuffled
+    config: {dataset: {instance_key: ds}}
+  loader:
+    component_key: dataloader
+    variant_key: async_prefetch
+    config:
+      dataset: {instance_key: ds}
+      sampler: {instance_key: sampler}
+      batch_size: 4
+      prefetch_depth: 3
+      num_workers: 2
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let dl = g.get::<super::DataLoaderComponent>("loader").unwrap();
+        let pf = dl.prefetch.expect("async_prefetch must carry a prefetch config");
+        assert_eq!(pf.depth, 3);
+        assert_eq!(pf.num_workers, 2);
+        // The async loader delivers the same batches as the sync path.
+        let want = dl.loader.batch(0, 0);
+        let mut h = crate::data::prefetch::Prefetcher::spawn(dl.loader.clone(), pf, 0, 1).unwrap();
+        assert_eq!(h.next_batch().unwrap(), want);
+    }
+
+    #[test]
+    fn sharded_jsonl_loader_from_config() {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join("modalities-components-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sj.jsonl");
+        let mut f = std::fs::File::create(&p).unwrap();
+        for i in 0..20 {
+            writeln!(f, "{{\"text\": \"component test doc {i}\"}}").unwrap();
+        }
+        drop(f);
+        let _ = std::fs::remove_file(crate::data::jsonl::default_index_path(&p));
+        let src = format!(
+            "\
+components:
+  loader:
+    component_key: dataloader
+    variant_key: sharded_jsonl
+    config:
+      path: {}
+      seq_len: 8
+      batch_size: 2
+      reader_workers: 3
+      prefetch_depth: 2
+",
+            p.display()
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let dl = g.get::<super::DataLoaderComponent>("loader").unwrap();
+        assert!(dl.prefetch.is_some());
+        assert!(dl.loader.batches_per_epoch(0) > 0);
+        let b = dl.loader.batch(0, 0);
+        assert_eq!(b.inputs.len(), 2 * 8);
     }
 }

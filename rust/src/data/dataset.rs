@@ -35,6 +35,13 @@ pub trait Dataset: Send + Sync {
     fn len(&self) -> usize;
     fn seq_len(&self) -> usize;
     fn sample(&self, i: usize) -> Vec<u32>;
+    /// Append sample `i`'s `seq_len + 1` tokens to `out`. Backing
+    /// stores with contiguous token memory (mmap, in-memory streams)
+    /// override this to skip the per-sample allocation `sample` pays —
+    /// the batch-assembly hot path of the async prefetcher.
+    fn sample_into(&self, i: usize, out: &mut Vec<u32>) {
+        out.extend_from_slice(&self.sample(i));
+    }
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -88,6 +95,12 @@ impl Dataset for PackedDataset {
         assert!(i < self.num_samples);
         let window = self.seq_len as u64 + 1;
         self.reader.read_tokens(i as u64 * window, self.seq_len + 1)
+    }
+
+    fn sample_into(&self, i: usize, out: &mut Vec<u32>) {
+        assert!(i < self.num_samples);
+        let window = self.seq_len as u64 + 1;
+        self.reader.read_tokens_into(i as u64 * window, self.seq_len + 1, out);
     }
 }
 
@@ -256,6 +269,16 @@ impl DataLoader {
     /// Materialize batch `b` of `epoch`. Input = tokens[..seq], target =
     /// tokens[1..seq+1] (next-token prediction shift at collate time).
     pub fn batch(&self, epoch: u64, b: usize) -> Batch {
+        let mut scratch = Vec::new();
+        self.batch_with_scratch(epoch, b, &mut scratch)
+    }
+
+    /// [`Self::batch`] with a caller-owned window buffer: each sample's
+    /// `seq_len + 1` token window lands in `scratch` (via
+    /// [`Dataset::sample_into`], allocation-free on mmap/in-memory
+    /// stores) and is sliced straight into the batch — no per-sample
+    /// `Vec`. Prefetch workers reuse one scratch across all batches.
+    pub fn batch_with_scratch(&self, epoch: u64, b: usize, scratch: &mut Vec<u32>) -> Batch {
         let idx = self.epoch_indices_cached(epoch);
         let seq = self.dataset.seq_len();
         let start = b * self.batch_size;
@@ -263,10 +286,11 @@ impl DataLoader {
         let mut inputs = Vec::with_capacity(self.batch_size * seq);
         let mut targets = Vec::with_capacity(self.batch_size * seq);
         for &i in &idx[start..start + self.batch_size] {
-            let toks = self.dataset.sample(i);
-            debug_assert_eq!(toks.len(), seq + 1);
-            inputs.extend_from_slice(&toks[..seq]);
-            targets.extend_from_slice(&toks[1..seq + 1]);
+            scratch.clear();
+            self.dataset.sample_into(i, scratch);
+            debug_assert_eq!(scratch.len(), seq + 1);
+            inputs.extend_from_slice(&scratch[..seq]);
+            targets.extend_from_slice(&scratch[1..seq + 1]);
         }
         Batch { inputs, targets, batch_size: self.batch_size, seq_len: seq }
     }

@@ -10,6 +10,7 @@
 //! * [`baseline`] — Megatron-LM-style comparator for the 7× claim
 //! * [`mmtok`] — the packed token store format
 //! * [`dataset`] — packed/synthetic datasets, samplers, dataloader
+//! * [`prefetch`] — async sharded readers + bounded-channel prefetcher
 //! * [`synthetic`] — Zipf corpus generation (FineWeb stand-in)
 //! * [`components`] — registry factories for all of the above
 
@@ -20,4 +21,5 @@ pub mod dataset;
 pub mod jsonl;
 pub mod mmtok;
 pub mod pipeline;
+pub mod prefetch;
 pub mod synthetic;

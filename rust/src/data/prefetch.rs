@@ -1,0 +1,567 @@
+//! The async data pipeline: multi-threaded sharded readers and a
+//! bounded-channel prefetcher that keeps batch assembly off the train
+//! hot loop (the paper's "data path never blocks the trainer" claim,
+//! §2 Data Pipeline).
+//!
+//! Three pieces:
+//!
+//! * [`ShardAssignment`] — the deterministic `(rank, worker)` shard
+//!   rule every parallel reader uses: item `i` belongs to lane
+//!   `rank * num_workers + worker` iff `i % (world * num_workers)`
+//!   equals that lane. Assignment depends only on the indices, never on
+//!   thread scheduling, so any worker count produces the same split.
+//! * [`load_sharded_jsonl`] — a multi-threaded sharded JSONL reader:
+//!   worker lanes tokenize disjoint document shards straight off the
+//!   shared mmap, and the lane outputs are merged back in document
+//!   order into an [`InMemoryTokenDataset`] whose samples are `&[u32]`
+//!   windows over one contiguous token stream (zero-copy hand-off into
+//!   batch assembly via [`Dataset::sample_into`]).
+//! * [`Prefetcher`] — N worker threads assemble batches ahead of the
+//!   consumer and push them through a **bounded** channel of
+//!   `depth` batches (backpressure: producers block once the channel
+//!   is full, so memory stays at `depth + num_workers` batches).
+//!   Workers tag batches with their sequence number and the
+//!   [`PrefetchHandle`] restores order, so the delivered stream is
+//!   byte-identical to the synchronous loader for any worker count.
+//!   Dropping the handle early closes the channel; workers observe the
+//!   disconnect on their next send and exit (clean shutdown, asserted
+//!   by a test below).
+//!
+//! The registry exposes this as the `dataloader/async_prefetch` and
+//! `dataloader/sharded_jsonl` variants; the gym consumes the handle
+//! when its dataloader carries a [`PrefetchConfig`].
+
+use super::bpe::{BpeEncoder, BpeVocab};
+use super::dataset::{Batch, DataLoader, Dataset};
+use super::jsonl::{extract_text_fast, JsonlCorpus};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Prefetcher knobs carried by dataloader components.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefetchConfig {
+    /// Bounded channel depth in batches (backpressure threshold).
+    pub depth: usize,
+    /// Batch-assembly worker threads.
+    pub num_workers: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        Self { depth: 4, num_workers: 2 }
+    }
+}
+
+/// Deterministic `(rank, worker)` shard assignment over a global item
+/// stream: `world * num_workers` lanes, item `i` owned by lane
+/// `i % lanes`. Purely arithmetic — independent of thread scheduling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardAssignment {
+    pub rank: usize,
+    pub world: usize,
+    pub worker: usize,
+    pub num_workers: usize,
+}
+
+impl ShardAssignment {
+    pub fn new(rank: usize, world: usize, worker: usize, num_workers: usize) -> Result<Self> {
+        if world == 0 || rank >= world {
+            bail!("invalid rank {rank} / world {world}");
+        }
+        if num_workers == 0 || worker >= num_workers {
+            bail!("invalid worker {worker} / num_workers {num_workers}");
+        }
+        Ok(Self { rank, world, worker, num_workers })
+    }
+
+    /// Total lane count.
+    pub fn lanes(&self) -> usize {
+        self.world * self.num_workers
+    }
+
+    /// This assignment's lane index.
+    pub fn lane(&self) -> usize {
+        self.rank * self.num_workers + self.worker
+    }
+
+    /// Does this lane own global item `i`?
+    pub fn owns(&self, i: usize) -> bool {
+        i % self.lanes() == self.lane()
+    }
+
+    /// Items owned by this lane among `n` total, in stream order.
+    pub fn owned(&self, n: usize) -> impl Iterator<Item = usize> + '_ {
+        (self.lane()..n).step_by(self.lanes())
+    }
+}
+
+/// A training dataset over one contiguous in-memory token stream,
+/// produced by the sharded JSONL reader. Samples are non-overlapping
+/// `seq_len + 1` windows; [`Self::window`] exposes them as zero-copy
+/// `&[u32]` slices and `sample_into` copies a window straight into the
+/// batch buffer with no intermediate allocation.
+pub struct InMemoryTokenDataset {
+    tokens: Vec<u32>,
+    seq_len: usize,
+    num_samples: usize,
+}
+
+impl InMemoryTokenDataset {
+    pub fn new(tokens: Vec<u32>, seq_len: usize) -> Result<Self> {
+        if seq_len == 0 {
+            bail!("seq_len must be > 0");
+        }
+        let num_samples = tokens.len() / (seq_len + 1);
+        if num_samples == 0 {
+            bail!(
+                "token stream too small ({} tokens) for even one sample of seq_len {seq_len}",
+                tokens.len()
+            );
+        }
+        Ok(Self { tokens, seq_len, num_samples })
+    }
+
+    /// Sample `i` as a borrowed `seq_len + 1` token window.
+    pub fn window(&self, i: usize) -> &[u32] {
+        assert!(i < self.num_samples, "sample {i} out of range {}", self.num_samples);
+        let w = self.seq_len + 1;
+        &self.tokens[i * w..(i + 1) * w]
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+impl Dataset for InMemoryTokenDataset {
+    fn len(&self) -> usize {
+        self.num_samples
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, i: usize) -> Vec<u32> {
+        self.window(i).to_vec()
+    }
+
+    fn sample_into(&self, i: usize, out: &mut Vec<u32>) {
+        out.extend_from_slice(self.window(i));
+    }
+}
+
+/// Sharded JSONL reader configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardedJsonlConfig {
+    /// Tokenizer worker threads (lanes within this rank).
+    pub num_workers: usize,
+    /// Append `<|endoftext|>` after each document.
+    pub append_eot: bool,
+    /// This rank (for rank-sharded ingestion; 0 for a full view).
+    pub rank: usize,
+    /// DP world size (1 = this process sees every document).
+    pub world: usize,
+}
+
+impl Default for ShardedJsonlConfig {
+    fn default() -> Self {
+        Self { num_workers: 2, append_eot: true, rank: 0, world: 1 }
+    }
+}
+
+/// Multi-threaded sharded ingestion: JSONL → tokenized in-memory
+/// stream. Worker `w` of this rank tokenizes exactly the documents its
+/// [`ShardAssignment`] lane owns (slicing the shared corpus mmap, no
+/// I/O duplication), and lane outputs are merged back in document
+/// order — the result is identical for any worker count.
+pub fn load_sharded_jsonl(
+    path: &Path,
+    vocab: Arc<BpeVocab>,
+    seq_len: usize,
+    cfg: &ShardedJsonlConfig,
+) -> Result<InMemoryTokenDataset> {
+    let corpus = Arc::new(JsonlCorpus::open(path)?);
+    let ndocs = corpus.len();
+    let workers = cfg.num_workers.max(1);
+    let handles: Vec<JoinHandle<Result<Vec<Vec<u32>>>>> = (0..workers)
+        .map(|w| {
+            let assign = ShardAssignment::new(cfg.rank, cfg.world, w, workers)?;
+            let corpus = Arc::clone(&corpus);
+            let vocab = Arc::clone(&vocab);
+            let append_eot = cfg.append_eot;
+            Ok(std::thread::spawn(move || -> Result<Vec<Vec<u32>>> {
+                let eot = vocab.eot_id();
+                let mut enc = BpeEncoder::new(vocab);
+                let mut out = Vec::new();
+                for doc in assign.owned(ndocs) {
+                    let text = extract_text_fast(corpus.doc_raw(doc))
+                        .with_context(|| format!("doc {doc}"))?;
+                    let mut ids = enc.encode(&text);
+                    if append_eot {
+                        ids.push(eot);
+                    }
+                    out.push(ids);
+                }
+                Ok(out)
+            }))
+        })
+        .collect::<Result<_>>()?;
+    let mut per_worker: Vec<Vec<Vec<u32>>> = Vec::with_capacity(workers);
+    for h in handles {
+        per_worker.push(h.join().expect("sharded jsonl worker panicked")?);
+    }
+
+    // Deterministic merge: walk this rank's documents in stream order,
+    // pulling each from the lane that owned it.
+    let total: usize = per_worker.iter().flatten().map(|d| d.len()).sum();
+    let mut tokens = Vec::with_capacity(total);
+    let mut cursors = vec![0usize; workers];
+    let lanes = cfg.world * workers;
+    let mut doc = cfg.rank * workers;
+    while doc < ndocs {
+        for w in 0..workers {
+            if doc + w >= ndocs {
+                break;
+            }
+            tokens.extend_from_slice(&per_worker[w][cursors[w]]);
+            cursors[w] += 1;
+        }
+        doc += lanes;
+    }
+    InMemoryTokenDataset::new(tokens, seq_len).with_context(|| {
+        format!("sharded jsonl {} (rank {}/{})", path.display(), cfg.rank, cfg.world)
+    })
+}
+
+/// Spawns the prefetch workers.
+pub struct Prefetcher;
+
+impl Prefetcher {
+    /// Prefetch `count` batches — the global micro-batch sequence
+    /// `start_micro .. start_micro + count` of `loader` — through a
+    /// bounded channel of `cfg.depth` batches. Worker `w` of `W`
+    /// assembles micros where `seq % W == w` (deterministic
+    /// assignment); the handle restores sequence order.
+    pub fn spawn(
+        loader: Arc<DataLoader>,
+        cfg: PrefetchConfig,
+        start_micro: u64,
+        count: u64,
+    ) -> Result<PrefetchHandle> {
+        if cfg.depth == 0 {
+            bail!("prefetch depth must be >= 1");
+        }
+        let workers_n = cfg.num_workers.max(1);
+        let bpe = loader.batches_per_epoch(0).max(1) as u64;
+        let (tx, rx) = mpsc::sync_channel::<(u64, Batch)>(cfg.depth);
+        let workers: Vec<JoinHandle<()>> = (0..workers_n)
+            .map(|w| {
+                let tx = tx.clone();
+                let loader = Arc::clone(&loader);
+                std::thread::spawn(move || {
+                    let mut scratch: Vec<u32> = Vec::new();
+                    let mut seq = w as u64;
+                    while seq < count {
+                        let micro = start_micro + seq;
+                        let epoch = micro / bpe;
+                        let b = (micro % bpe) as usize;
+                        let batch = loader.batch_with_scratch(epoch, b, &mut scratch);
+                        // A send error means the consumer dropped the
+                        // handle — exit quietly (clean early shutdown).
+                        if tx.send((seq, batch)).is_err() {
+                            return;
+                        }
+                        seq += workers_n as u64;
+                    }
+                })
+            })
+            .collect();
+        Ok(PrefetchHandle {
+            rx: Some(rx),
+            pending: BTreeMap::new(),
+            next_seq: 0,
+            limit: count,
+            workers,
+        })
+    }
+}
+
+/// Consumer side of the prefetcher: an ordered iterator over the
+/// prefetched batches. Out-of-order arrivals (worker skew) sit in a
+/// small reorder buffer bounded by `depth + num_workers` entries.
+/// Dropping the handle joins the workers.
+pub struct PrefetchHandle {
+    rx: Option<mpsc::Receiver<(u64, Batch)>>,
+    pending: BTreeMap<u64, Batch>,
+    next_seq: u64,
+    limit: u64,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl PrefetchHandle {
+    /// Next batch in sequence order; `None` once `count` batches were
+    /// delivered (or if every worker died early, which only happens on
+    /// a worker panic).
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.next_seq >= self.limit {
+            return None;
+        }
+        loop {
+            if let Some(b) = self.pending.remove(&self.next_seq) {
+                self.next_seq += 1;
+                return Some(b);
+            }
+            match self.rx.as_ref()?.recv() {
+                Ok((seq, b)) => {
+                    self.pending.insert(seq, b);
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Batches delivered so far.
+    pub fn delivered(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+impl Iterator for PrefetchHandle {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        self.next_batch()
+    }
+}
+
+impl Drop for PrefetchHandle {
+    fn drop(&mut self) {
+        // Closing the receiver makes every blocked/future send fail,
+        // so workers exit even mid-stream; then join to release them.
+        drop(self.rx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{Sampler, SequentialSampler, ShuffledSampler, SyntheticDataset};
+    use std::io::Write;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn loader(num_samples: usize, batch_size: usize) -> Arc<DataLoader> {
+        let ds: Arc<dyn Dataset> = Arc::new(SyntheticDataset::new(64, 8, num_samples, 0.05, 7));
+        let sampler: Arc<dyn Sampler> = Arc::new(ShuffledSampler { len: num_samples, seed: 3 });
+        Arc::new(DataLoader::new(ds, sampler, batch_size).unwrap())
+    }
+
+    #[test]
+    fn shard_assignment_partitions_stream() {
+        let (world, workers, n) = (2usize, 3usize, 100usize);
+        let mut owner_count = vec![0usize; n];
+        for rank in 0..world {
+            for w in 0..workers {
+                let a = ShardAssignment::new(rank, world, w, workers).unwrap();
+                for i in a.owned(n) {
+                    assert!(a.owns(i));
+                    owner_count[i] += 1;
+                }
+            }
+        }
+        assert!(owner_count.iter().all(|&c| c == 1), "each item has exactly one owner lane");
+        assert!(ShardAssignment::new(2, 2, 0, 1).is_err());
+        assert!(ShardAssignment::new(0, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn prefetch_matches_sync_loader_for_any_worker_count() {
+        let dl = loader(64, 4);
+        let bpe = dl.batches_per_epoch(0) as u64;
+        let count = 2 * bpe + 3; // crosses an epoch boundary
+        let reference: Vec<Batch> = (0..count)
+            .map(|m| dl.batch(m / bpe, (m % bpe) as usize))
+            .collect();
+        for workers in [1usize, 2, 4] {
+            let cfg = PrefetchConfig { depth: 2, num_workers: workers };
+            let h = Prefetcher::spawn(dl.clone(), cfg, 0, count).unwrap();
+            let got: Vec<Batch> = h.collect();
+            assert_eq!(got.len(), reference.len(), "workers={workers}");
+            assert_eq!(got, reference, "workers={workers}: order must be deterministic");
+        }
+    }
+
+    #[test]
+    fn prefetch_honors_start_micro() {
+        let dl = loader(64, 4);
+        let bpe = dl.batches_per_epoch(0) as u64;
+        let start = bpe + 2; // resume mid-epoch-1
+        let mut h =
+            Prefetcher::spawn(dl.clone(), PrefetchConfig::default(), start, 4).unwrap();
+        for k in 0..4u64 {
+            let m = start + k;
+            let want = dl.batch(m / bpe, (m % bpe) as usize);
+            assert_eq!(h.next_batch().unwrap(), want);
+        }
+        assert!(h.next_batch().is_none());
+    }
+
+    /// A dataset that counts sample reads — instruments how far ahead
+    /// the producers run.
+    struct CountingDataset {
+        reads: Arc<AtomicUsize>,
+        seq_len: usize,
+        len: usize,
+    }
+
+    impl Dataset for CountingDataset {
+        fn len(&self) -> usize {
+            self.len
+        }
+        fn seq_len(&self) -> usize {
+            self.seq_len
+        }
+        fn sample(&self, i: usize) -> Vec<u32> {
+            self.reads.fetch_add(1, Ordering::SeqCst);
+            vec![i as u32; self.seq_len + 1]
+        }
+    }
+
+    #[test]
+    fn bounded_depth_applies_backpressure() {
+        let reads = Arc::new(AtomicUsize::new(0));
+        let ds: Arc<dyn Dataset> =
+            Arc::new(CountingDataset { reads: reads.clone(), seq_len: 4, len: 1000 });
+        let sampler: Arc<dyn Sampler> = Arc::new(SequentialSampler { len: 1000 });
+        let dl = Arc::new(DataLoader::new(ds, sampler, 1).unwrap());
+        let (depth, workers) = (2usize, 1usize);
+        let cfg = PrefetchConfig { depth, num_workers: workers };
+        let mut h = Prefetcher::spawn(dl, cfg, 0, 1000).unwrap();
+
+        // Without consuming, producers may fill the channel (depth) and
+        // block holding one assembled batch each — but no more.
+        let cap = depth + workers;
+        for _ in 0..50 {
+            if reads.load(Ordering::SeqCst) >= cap {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let ahead = reads.load(Ordering::SeqCst);
+        assert!(ahead <= cap, "producers ran {ahead} batches ahead, bound is {cap}");
+
+        // Consuming k batches frees exactly k slots.
+        for _ in 0..10 {
+            h.next_batch().unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let ahead = reads.load(Ordering::SeqCst);
+        assert!(ahead <= 10 + cap, "after 10 consumed: {ahead} read, bound is {}", 10 + cap);
+        assert!(ahead >= 10, "prefetcher must have refilled after consumption");
+    }
+
+    #[test]
+    fn dropping_consumer_shuts_down_workers_cleanly() {
+        let dl = loader(1000, 2);
+        let cfg = PrefetchConfig { depth: 2, num_workers: 4 };
+        let mut h = Prefetcher::spawn(dl, cfg, 0, 100_000).unwrap();
+        for _ in 0..3 {
+            h.next_batch().unwrap();
+        }
+        // Drop mid-stream: workers are blocked on a full channel; the
+        // drop impl closes it and joins them. A hang here = deadlock.
+        let t0 = std::time::Instant::now();
+        drop(h);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "drop must not hang on blocked workers"
+        );
+    }
+
+    #[test]
+    fn zero_count_prefetch_is_empty() {
+        let dl = loader(16, 2);
+        let mut h = Prefetcher::spawn(dl, PrefetchConfig::default(), 0, 0).unwrap();
+        assert!(h.next_batch().is_none());
+    }
+
+    fn write_corpus(name: &str, docs: &[String]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("modalities-prefetch-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        for d in docs {
+            writeln!(f, "{{\"text\": \"{d}\"}}").unwrap();
+        }
+        let _ = std::fs::remove_file(crate::data::jsonl::default_index_path(&p));
+        p
+    }
+
+    #[test]
+    fn sharded_jsonl_is_worker_count_invariant_and_matches_serial() {
+        let docs: Vec<String> =
+            (0..37).map(|i| format!("doc {i} the cat sat on the mat")).collect();
+        let p = write_corpus("shard1.jsonl", &docs);
+        let vocab = Arc::new(BpeVocab::byte_fallback());
+
+        // Serial reference: tokenize in document order.
+        let eot = vocab.eot_id();
+        let mut enc = BpeEncoder::new(vocab.clone());
+        let mut want = Vec::new();
+        for d in &docs {
+            want.extend(enc.encode(d));
+            want.push(eot);
+        }
+
+        for workers in [1usize, 2, 4] {
+            let cfg = ShardedJsonlConfig { num_workers: workers, ..Default::default() };
+            let ds = load_sharded_jsonl(&p, vocab.clone(), 16, &cfg).unwrap();
+            assert_eq!(ds.num_tokens(), want.len(), "workers={workers}");
+            let got: Vec<u32> =
+                (0..ds.len()).flat_map(|i| ds.window(i).to_vec()).collect();
+            assert_eq!(&got[..], &want[..got.len()], "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn sharded_jsonl_rank_shards_partition_documents() {
+        let docs: Vec<String> = (0..24).map(|i| format!("short doc {i}")).collect();
+        let p = write_corpus("shard2.jsonl", &docs);
+        let vocab = Arc::new(BpeVocab::byte_fallback());
+        let full = load_sharded_jsonl(
+            &p,
+            vocab.clone(),
+            4,
+            &ShardedJsonlConfig { num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut shard_tokens = 0usize;
+        for rank in 0..2 {
+            let cfg = ShardedJsonlConfig { num_workers: 2, rank, world: 2, ..Default::default() };
+            let ds = load_sharded_jsonl(&p, vocab.clone(), 4, &cfg).unwrap();
+            shard_tokens += ds.num_tokens();
+        }
+        assert_eq!(shard_tokens, full.num_tokens(), "rank shards must cover the corpus");
+    }
+
+    #[test]
+    fn in_memory_dataset_windows() {
+        let ds = InMemoryTokenDataset::new((0..20).collect(), 3).unwrap();
+        assert_eq!(ds.len(), 5); // 20 / (3+1)
+        assert_eq!(ds.window(1), &[4, 5, 6, 7]);
+        assert_eq!(ds.sample(1), vec![4, 5, 6, 7]);
+        let mut out = Vec::new();
+        ds.sample_into(2, &mut out);
+        assert_eq!(out, vec![8, 9, 10, 11]);
+        assert!(InMemoryTokenDataset::new(vec![1, 2], 8).is_err());
+        assert!(InMemoryTokenDataset::new(vec![1, 2], 0).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Lockstep collectives with exact ring-traffic accounting.
+//!
+//! Semantics are those of NCCL's ring algorithms; execution is a
+//! single-threaded reduction over the ranks' buffers (all ranks live in
+//! this process). Traffic accounting is the ring formula over padded
+//! chunks — for a group of `n` ranks and a buffer of `len` elements:
+//!
+//! * reduce-scatter / all-gather: each rank sends `n-1` chunks of
+//!   `ceil(len/n)` elements → `n*(n-1)*ceil(len/n)` elements total;
+//! * all-reduce = reduce-scatter + all-gather → twice that.
+//!
+//! `bench_nccl` asserts these numbers match the α-β interconnect model
+//! exactly, so simulated step times and real engine traffic can be
+//! cross-checked.
+
+use crate::util::even_split;
+use std::collections::BTreeMap;
+
+/// Per-operation telemetry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpStats {
+    pub calls: u64,
+    pub bytes: u64,
+    pub messages: u64,
+}
+
+/// Aggregated communication statistics, keyed by operation name.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub ops: BTreeMap<String, OpStats>,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record(&mut self, op: &str, bytes: u64, messages: u64) {
+        let e = self.ops.entry(op.to_string()).or_default();
+        e.calls += 1;
+        e.bytes += bytes;
+        e.messages += messages;
+    }
+
+    /// Total bytes moved across all operations.
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.values().map(|o| o.bytes).sum()
+    }
+
+    /// Total point-to-point messages across all operations.
+    pub fn total_messages(&self) -> u64 {
+        self.ops.values().map(|o| o.messages).sum()
+    }
+
+    /// Human-readable per-op table (printed by the console subscriber
+    /// at run end).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16} {:>10} {:>14} {:>12}\n",
+            "collective", "calls", "bytes", "messages"
+        ));
+        for (op, s) in &self.ops {
+            out.push_str(&format!(
+                "{:<16} {:>10} {:>14} {:>12}\n",
+                op, s.calls, s.bytes, s.messages
+            ));
+        }
+        out
+    }
+}
+
+/// The lockstep collective engine: ring-semantics operations over
+/// in-process rank buffers, with exact traffic accounting in
+/// [`CommStats`].
+#[derive(Clone, Debug, Default)]
+pub struct Collectives {
+    pub stats: CommStats,
+}
+
+/// Ring traffic for one reduce-scatter *or* all-gather phase:
+/// `n*(n-1)*ceil(len/n)` elements, 4 bytes each.
+fn ring_phase_bytes(len: usize, n: usize) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    (n as u64) * (n as u64 - 1) * (len.div_ceil(n) as u64) * 4
+}
+
+fn ring_phase_messages(n: usize) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    (n as u64) * (n as u64 - 1)
+}
+
+impl Collectives {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All-gather: concatenate `shards` (one per rank of an `n`-rank
+    /// group, lengths may differ by one element — [`even_split`]) into
+    /// the full buffer every rank ends up holding.
+    pub fn all_gather(&mut self, shards: &[&[f32]], n: usize) -> Vec<f32> {
+        assert_eq!(shards.len(), n, "all_gather: {} shards for group of {n}", shards.len());
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for s in shards {
+            out.extend_from_slice(s);
+        }
+        self.stats.record("all_gather", ring_phase_bytes(total, n), ring_phase_messages(n));
+        out
+    }
+
+    /// All-reduce (sum) in place: every rank in `group` (indices into
+    /// `bufs`) ends up with the element-wise sum. Ring accounting:
+    /// reduce-scatter + all-gather.
+    pub fn all_reduce_sum(&mut self, bufs: &mut [Vec<f32>], group: &[usize]) {
+        let n = group.len();
+        assert!(n > 0, "all_reduce over empty group");
+        let len = bufs[group[0]].len();
+        let mut sum = vec![0f32; len];
+        for &r in group {
+            assert_eq!(bufs[r].len(), len, "all_reduce: rank {r} buffer length mismatch");
+            for (a, b) in sum.iter_mut().zip(&bufs[r]) {
+                *a += *b;
+            }
+        }
+        for &r in group {
+            bufs[r].copy_from_slice(&sum);
+        }
+        self.stats.record(
+            "all_reduce",
+            2 * ring_phase_bytes(len, n),
+            2 * ring_phase_messages(n),
+        );
+    }
+
+    /// Reduce-scatter (sum): the group's buffers are summed and the
+    /// result split into `group.len()` contiguous shards
+    /// ([`even_split`]); shard `s` is what group slot `s` keeps.
+    pub fn reduce_scatter_sum(&mut self, bufs: &mut [Vec<f32>], group: &[usize]) -> Vec<Vec<f32>> {
+        let n = group.len();
+        assert!(n > 0, "reduce_scatter over empty group");
+        let len = bufs[group[0]].len();
+        let mut sum = vec![0f32; len];
+        for &r in group {
+            assert_eq!(bufs[r].len(), len, "reduce_scatter: rank {r} buffer length mismatch");
+            for (a, b) in sum.iter_mut().zip(&bufs[r]) {
+                *a += *b;
+            }
+        }
+        let shards = (0..n)
+            .map(|slot| {
+                let (start, l) = even_split(len, n, slot);
+                sum[start..start + l].to_vec()
+            })
+            .collect();
+        self.stats.record("reduce_scatter", ring_phase_bytes(len, n), ring_phase_messages(n));
+        shards
+    }
+
+    /// Scalar all-reduce (sum) — loss averaging and similar metrics.
+    /// Returns the sum of the per-rank values.
+    pub fn all_reduce_scalar(&mut self, vals: &[f32]) -> f32 {
+        let n = vals.len();
+        self.stats.record(
+            "all_reduce_scalar",
+            2 * ring_phase_bytes(1, n),
+            2 * ring_phase_messages(n),
+        );
+        vals.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reduce_sums_and_broadcasts() {
+        let mut c = Collectives::new();
+        let mut bufs = vec![vec![1.0f32, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        c.all_reduce_sum(&mut bufs, &[0, 1, 2]);
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0]);
+        }
+        assert_eq!(c.stats.ops["all_reduce"].calls, 1);
+    }
+
+    #[test]
+    fn all_reduce_respects_subgroup() {
+        let mut c = Collectives::new();
+        let mut bufs = vec![vec![1.0f32], vec![2.0], vec![4.0], vec![8.0]];
+        c.all_reduce_sum(&mut bufs, &[1, 3]);
+        assert_eq!(bufs[0], vec![1.0]); // untouched
+        assert_eq!(bufs[1], vec![10.0]);
+        assert_eq!(bufs[2], vec![4.0]); // untouched
+        assert_eq!(bufs[3], vec![10.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_shards_cover_sum() {
+        let mut c = Collectives::new();
+        let mut bufs: Vec<Vec<f32>> = (0..3).map(|r| vec![r as f32 + 1.0; 10]).collect();
+        let shards = c.reduce_scatter_sum(&mut bufs, &[0, 1, 2]);
+        assert_eq!(shards.len(), 3);
+        let flat: Vec<f32> = shards.concat();
+        assert_eq!(flat, vec![6.0; 10]); // 1+2+3 everywhere
+        // even_split: 10 over 3 → 4,3,3
+        assert_eq!(shards[0].len(), 4);
+        assert_eq!(shards[2].len(), 3);
+    }
+
+    #[test]
+    fn all_gather_restores_reduce_scatter() {
+        let mut c = Collectives::new();
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 9]).collect();
+        let shards = c.reduce_scatter_sum(&mut bufs, &[0, 1, 2, 3]);
+        let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let full = c.all_gather(&refs, 4);
+        assert_eq!(full, vec![6.0; 9]); // 0+1+2+3
+    }
+
+    #[test]
+    fn ring_accounting_matches_alpha_beta_model() {
+        // all-reduce of `len` elems over n ranks must charge exactly
+        // 2*(n-1)*ceil(len/n)*4*n bytes (the model's ring formula).
+        for &n in &[2usize, 4, 8] {
+            for &len in &[1000usize, 100_000] {
+                let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; len]).collect();
+                let group: Vec<usize> = (0..n).collect();
+                let mut c = Collectives::new();
+                c.all_reduce_sum(&mut bufs, &group);
+                let model = (2 * (n - 1) * len.div_ceil(n) * 4 * n) as u64;
+                assert_eq!(c.stats.total_bytes(), model, "n={n} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_group_moves_no_bytes() {
+        let mut c = Collectives::new();
+        let mut bufs = vec![vec![3.0f32; 5]];
+        c.all_reduce_sum(&mut bufs, &[0]);
+        assert_eq!(bufs[0], vec![3.0; 5]);
+        assert_eq!(c.stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn report_lists_ops() {
+        let mut c = Collectives::new();
+        let mut bufs = vec![vec![1.0f32; 4], vec![1.0; 4]];
+        c.all_reduce_sum(&mut bufs, &[0, 1]);
+        let _ = c.reduce_scatter_sum(&mut bufs, &[0, 1]);
+        let r = c.stats.report();
+        assert!(r.contains("all_reduce"));
+        assert!(r.contains("reduce_scatter"));
+        assert!(c.stats.total_messages() > 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Registry factories for the distributed substrate: collective
+//! backends and device meshes.
+
+use super::topology::DeviceMesh;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+/// Collective-backend spec. The lockstep engine is the only backend on
+/// this testbed; the component exists so configs can name the backend
+/// explicitly and alternative transports can plug in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollectiveBackendSpec {
+    /// Charge α-β model time for each operation (scaling studies).
+    pub modeled_time: bool,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("collective_backend", "lockstep", |ctx, cfg| {
+        let modeled_time = ctx.bool_or(cfg, "modeled_time", false)?;
+        Ok(Component::new(
+            "collective_backend",
+            "lockstep",
+            CollectiveBackendSpec { modeled_time },
+        ))
+    })?;
+    reg.describe(
+        "collective_backend",
+        "lockstep",
+        "In-process lockstep collectives with exact ring-traffic accounting.",
+        &[(
+            "modeled_time",
+            "bool",
+            "false",
+            "also charge α-β interconnect model time per operation",
+        )],
+    );
+
+    reg.register("device_mesh", "dp_tp_pp", |ctx, cfg| {
+        let mesh = DeviceMesh::new(
+            ctx.usize_or(cfg, "dp_degree", 1)?,
+            ctx.usize_or(cfg, "tp_degree", 1)?,
+            ctx.usize_or(cfg, "pp_degree", 1)?,
+        )?;
+        Ok(Component::new("device_mesh", "dp_tp_pp", mesh))
+    })?;
+    reg.describe(
+        "device_mesh",
+        "dp_tp_pp",
+        "DP×TP×PP topology descriptor (lockstep testbed executes DP only).",
+        &[
+            ("dp_degree", "int", "1", "data-parallel degree"),
+            ("tp_degree", "int", "1", "tensor-parallel degree"),
+            ("pp_degree", "int", "1", "pipeline-parallel degree"),
+        ],
+    );
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn mesh_from_config() {
+        let src = "\
+components:
+  mesh:
+    component_key: device_mesh
+    variant_key: dp_tp_pp
+    config: {dp_degree: 4, tp_degree: 2}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let m = g.get::<super::DeviceMesh>("mesh").unwrap();
+        assert_eq!(m.world(), 8);
+    }
+}

@@ -1,0 +1,14 @@
+//! Distributed substrate: the lockstep collective engine and group
+//! topology helpers the FSDP/HSDP engine is built on.
+//!
+//! All ranks live in this process (the 1-core testbed; see DESIGN
+//! notes in [`crate::fsdp`]): collectives move real bytes between the
+//! ranks' buffers with ring semantics, and every operation is accounted
+//! in [`collectives::CommStats`] with exactly the traffic the α-β
+//! interconnect model ([`crate::perfmodel`]) charges — `bench_nccl`
+//! asserts the two agree byte-for-byte, which is what lets the paper's
+//! scaling studies run on modeled time but real communication volumes.
+
+pub mod collectives;
+pub mod components;
+pub mod topology;

@@ -1,0 +1,109 @@
+//! Process-group topology: HSDP shard/replica group construction and
+//! the DP×TP×PP device-mesh descriptor.
+
+use anyhow::{bail, Result};
+
+/// HSDP group structure over a flat rank list: consecutive
+/// `shard_size`-rank **shard groups** (reduce-scatter / all-gather run
+/// inside these), and slot-aligned **replica groups** across them
+/// (gradient all-reduce runs across these).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HsdpTopology {
+    pub shard_groups: Vec<Vec<usize>>,
+    pub replica_groups: Vec<Vec<usize>>,
+}
+
+/// Partition `ranks` into HSDP shard/replica groups.
+///
+/// `shard_size` must divide the rank count. For ranks `[0..8)` with
+/// `shard_size = 4`: shard groups `[0,1,2,3] [4,5,6,7]`, replica
+/// groups `[0,4] [1,5] [2,6] [3,7]`.
+pub fn hsdp_groups(ranks: &[usize], shard_size: usize) -> Result<HsdpTopology> {
+    if shard_size == 0 || ranks.len() % shard_size != 0 {
+        bail!(
+            "hsdp shard size {shard_size} must be > 0 and divide the rank count {}",
+            ranks.len()
+        );
+    }
+    let n_groups = ranks.len() / shard_size;
+    let shard_groups: Vec<Vec<usize>> =
+        ranks.chunks(shard_size).map(|c| c.to_vec()).collect();
+    let replica_groups: Vec<Vec<usize>> = (0..shard_size)
+        .map(|slot| (0..n_groups).map(|g| ranks[g * shard_size + slot]).collect())
+        .collect();
+    Ok(HsdpTopology { shard_groups, replica_groups })
+}
+
+/// DP×TP×PP topology descriptor (the `device_mesh` component). The
+/// lockstep testbed executes DP only; TP/PP sizes are carried for the
+/// perf model and for config-level validation of the mesh shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeviceMesh {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl DeviceMesh {
+    pub fn new(dp: usize, tp: usize, pp: usize) -> Result<Self> {
+        if dp == 0 || tp == 0 || pp == 0 {
+            bail!("device mesh degrees must all be >= 1 (got dp={dp} tp={tp} pp={pp})");
+        }
+        Ok(Self { dp, tp, pp })
+    }
+
+    /// Total world size of the mesh.
+    pub fn world(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hsdp_groups_partition_and_align() {
+        let ranks: Vec<usize> = (0..8).collect();
+        let t = hsdp_groups(&ranks, 4).unwrap();
+        assert_eq!(t.shard_groups, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(
+            t.replica_groups,
+            vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]]
+        );
+        // Every rank appears in exactly one shard group and one replica group.
+        let mut shard_seen: Vec<usize> = t.shard_groups.concat();
+        shard_seen.sort_unstable();
+        assert_eq!(shard_seen, ranks);
+        let mut rep_seen: Vec<usize> = t.replica_groups.concat();
+        rep_seen.sort_unstable();
+        assert_eq!(rep_seen, ranks);
+    }
+
+    #[test]
+    fn hsdp_degenerate_sizes() {
+        let ranks: Vec<usize> = (0..4).collect();
+        // shard_size == world → pure FSDP: one shard group, singleton replicas.
+        let full = hsdp_groups(&ranks, 4).unwrap();
+        assert_eq!(full.shard_groups.len(), 1);
+        assert_eq!(full.replica_groups.len(), 4);
+        // shard_size == 1 → pure DDP: singleton shards, one replica group.
+        let ddp = hsdp_groups(&ranks, 1).unwrap();
+        assert_eq!(ddp.shard_groups.len(), 4);
+        assert_eq!(ddp.replica_groups, vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn hsdp_invalid_sizes_rejected() {
+        let ranks: Vec<usize> = (0..6).collect();
+        assert!(hsdp_groups(&ranks, 4).is_err());
+        assert!(hsdp_groups(&ranks, 0).is_err());
+    }
+
+    #[test]
+    fn mesh_world_and_validation() {
+        let m = DeviceMesh::new(8, 2, 4).unwrap();
+        assert_eq!(m.world(), 64);
+        assert!(DeviceMesh::new(0, 1, 1).is_err());
+    }
+}

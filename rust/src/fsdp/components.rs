@@ -57,17 +57,48 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let spec = parse_common(ctx, cfg, ShardStrategy::Full)?;
         Ok(Component::new("parallel_strategy", "fsdp", spec))
     })?;
+    reg.describe(
+        "parallel_strategy",
+        "fsdp",
+        "Fully-sharded data parallel (FULL_SHARD) across the DP group.",
+        &[
+            ("dp_degree", "int", "1", "data-parallel world size"),
+            ("unit_size_mb", "float", "4.0", "flat-unit target size"),
+            ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+        ],
+    );
 
     reg.register("parallel_strategy", "hsdp", move |ctx, cfg| {
         let shard_size = ctx.usize(cfg, "shard_group_size")?;
         let spec = parse_common(ctx, cfg, ShardStrategy::Hybrid { shard_size })?;
         Ok(Component::new("parallel_strategy", "hsdp", spec))
     })?;
+    reg.describe(
+        "parallel_strategy",
+        "hsdp",
+        "Hybrid sharding: shard within groups, replicate across them.",
+        &[
+            ("dp_degree", "int", "1", "data-parallel world size"),
+            ("shard_group_size", "int", "required", "ranks per shard group (divides dp_degree)"),
+            ("unit_size_mb", "float", "4.0", "flat-unit target size"),
+            ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+        ],
+    );
 
     reg.register("parallel_strategy", "ddp", move |ctx, cfg| {
         let spec = parse_common(ctx, cfg, ShardStrategy::Ddp)?;
         Ok(Component::new("parallel_strategy", "ddp", spec))
     })?;
+    reg.describe(
+        "parallel_strategy",
+        "ddp",
+        "Plain data parallel (gradient all-reduce, no sharding) — baseline.",
+        &[
+            ("dp_degree", "int", "1", "data-parallel world size"),
+            ("unit_size_mb", "float", "4.0", "flat-unit target size"),
+            ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+        ],
+    );
 
     reg.register("sharding_policy", "unit_size", |ctx, cfg| {
         let unit_mb = ctx.f64_or(cfg, "unit_size_mb", 4.0)?;
@@ -77,6 +108,12 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ShardingPolicy { unit_bytes: (unit_mb * 1024.0 * 1024.0) as usize },
         ))
     })?;
+    reg.describe(
+        "sharding_policy",
+        "unit_size",
+        "FSDP flat-unit size policy (the paper's adaptable unit-size knob).",
+        &[("unit_size_mb", "float", "4.0", "target flat-unit size")],
+    );
 
     Ok(())
 }

@@ -14,9 +14,9 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let dl: Arc<crate::data::components::DataLoaderComponent> =
             ctx.typed_field(cfg, "dataloader", "dataloader")?;
         let eval_dl = match ctx.component_field_opt(cfg, "eval_dataloader", "dataloader")? {
-            Some(c) => {
-                Some(c.downcast::<crate::data::components::DataLoaderComponent>()?.0.clone())
-            }
+            Some(c) => Some(
+                c.downcast::<crate::data::components::DataLoaderComponent>()?.loader.clone(),
+            ),
             None => None,
         };
         let optimizer: Arc<crate::optim::components::OptimizerSpec> =
@@ -75,7 +75,8 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             "spmd",
             GymSpecSeed {
                 model,
-                dataloader: dl.0.clone(),
+                dataloader: dl.loader.clone(),
+                prefetch: dl.prefetch,
                 eval_dataloader: eval_dl,
                 optimizer,
                 scheduler,
@@ -95,6 +96,31 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "gym",
+        "spmd",
+        "The generic SPMD training driver: consumes every other component and turns the crank. Async dataloaders feed it through the bounded prefetcher.",
+        &[
+            ("model", "component", "required", "model spec to train"),
+            ("dataloader", "component", "required", "train dataloader (sync or prefetched)"),
+            ("optimizer", "component", "required", "optimizer spec"),
+            ("steps", "int", "required", "optimizer steps to run"),
+            ("eval_dataloader", "component", "none", "eval dataloader (consumed synchronously; a prefetch config here is ignored)"),
+            ("lr_scheduler", "component", "constant", "learning-rate schedule"),
+            ("parallel", "component", "dp=1 FSDP", "parallel strategy"),
+            ("runtime", "component", "cpu", "PJRT runtime backend"),
+            ("checkpointing", "component", "none", "checkpoint policy"),
+            ("warm_start", "component", "none", "consolidated checkpoint to warm-start from"),
+            ("gradient_clipper", "component", "none", "grad-norm clipping"),
+            ("grad_accum", "int", "1", "micro-batches per optimizer step"),
+            ("log_every", "int", "10", "console log cadence in steps"),
+            ("eval_every", "int", "0 (off)", "eval cadence in steps"),
+            ("eval_batches", "int", "8", "batches per eval pass"),
+            ("run_dir", "string", "runs/<run_name>", "output/checkpoint directory"),
+            ("resume", "bool", "false", "resume from latest sharded checkpoint"),
+        ],
+    );
+
     reg.register("subscriber", "console", |ctx, cfg| {
         let log_every = ctx.usize_or(cfg, "log_every", 10)? as u64;
         Ok(Component::new(
@@ -103,29 +129,60 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             SubscriberSpec::Console { log_every },
         ))
     })?;
+    reg.describe(
+        "subscriber",
+        "console",
+        "Stdout progress lines every `log_every` steps.",
+        &[("log_every", "int", "10", "log cadence in steps")],
+    );
 
     reg.register("subscriber", "jsonl", |ctx, cfg| {
         let path = ctx.str_or(cfg, "path", "metrics.jsonl");
         Ok(Component::new("subscriber", "jsonl", SubscriberSpec::Jsonl { path }))
     })?;
+    reg.describe(
+        "subscriber",
+        "jsonl",
+        "Machine-readable JSONL metrics sink (one record per step).",
+        &[("path", "string", "metrics.jsonl", "output file path")],
+    );
 
     reg.register("evaluator", "perplexity", |ctx, cfg| {
         let max_batches = ctx.usize_or(cfg, "max_batches", 8)?;
         Ok(Component::new("evaluator", "perplexity", EvaluatorSpec { max_batches }))
     })?;
+    reg.describe(
+        "evaluator",
+        "perplexity",
+        "Mean-loss evaluator over the first batches of the eval loader.",
+        &[("max_batches", "int", "8", "batches per eval pass")],
+    );
 
     reg.register("trainer", "default", |_ctx, _cfg| {
         Ok(Component::new("trainer", "default", ()))
     })?;
+    reg.describe(
+        "trainer",
+        "default",
+        "Default inner train-loop behaviour (fwd/bwd + sharded update).",
+        &[],
+    );
 
     reg.register("progress", "tokens", |_ctx, _cfg| {
         Ok(Component::new("progress", "tokens", ()))
     })?;
+    reg.describe("progress", "tokens", "Token-count based progress estimation.", &[]);
 
     reg.register("generation", "greedy", |ctx, cfg| {
         let max_new = ctx.usize_or(cfg, "max_new_tokens", 32)?;
         Ok(Component::new("generation", "greedy", GenerationSpec { max_new }))
     })?;
+    reg.describe(
+        "generation",
+        "greedy",
+        "Greedy decoding (`modalities generate`).",
+        &[("max_new_tokens", "int", "32", "tokens to generate")],
+    );
 
     reg.register("number_conversion", "tokens_steps", |ctx, cfg| {
         // Converts between tokens / steps / samples given batch geometry —
@@ -140,12 +197,29 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             NumberConversion { tokens_per_step: (batch_size * seq_len * dp * accum) as u64 },
         ))
     })?;
+    reg.describe(
+        "number_conversion",
+        "tokens_steps",
+        "Tokens ↔ steps ↔ samples conversion given batch geometry.",
+        &[
+            ("batch_size", "int", "required", "sequences per micro-batch"),
+            ("seq_len", "int", "required", "sequence length"),
+            ("dp_degree", "int", "1", "data-parallel degree"),
+            ("grad_accum", "int", "1", "micro-batches per step"),
+        ],
+    );
 
     reg.register("loss", "cross_entropy", |_ctx, _cfg| {
         // The CE loss is fused into the AOT artifact (L1 kernel); this
         // component documents/selects it for IF-completeness.
         Ok(Component::new("loss", "cross_entropy", ()))
     })?;
+    reg.describe(
+        "loss",
+        "cross_entropy",
+        "Cross-entropy loss (fused into the AOT artifact's L1 kernel).",
+        &[],
+    );
 
     Ok(())
 }
@@ -185,6 +259,7 @@ impl NumberConversion {
 pub struct GymSpecSeed {
     pub model: Arc<crate::model::ModelSpec>,
     pub dataloader: Arc<crate::data::dataset::DataLoader>,
+    pub prefetch: Option<crate::data::prefetch::PrefetchConfig>,
     pub eval_dataloader: Option<Arc<crate::data::dataset::DataLoader>>,
     pub optimizer: Arc<crate::optim::components::OptimizerSpec>,
     pub scheduler: Arc<crate::optim::LrSchedule>,
@@ -222,6 +297,7 @@ impl ObjectGraph {
         let spec = GymSpec {
             model: seed.model.clone(),
             dataloader: seed.dataloader.clone(),
+            prefetch: seed.prefetch,
             eval_dataloader: seed.eval_dataloader.clone(),
             optimizer: seed.optimizer.clone(),
             scheduler: seed.scheduler.clone(),
@@ -298,7 +374,19 @@ components:
         assert_eq!(gym.spec.steps, 2);
         assert_eq!(gym.spec.parallel.dp, 1); // default
         assert_eq!(gym.spec.run_name, "unit-test");
+        assert!(gym.spec.prefetch.is_none(), "default loader is synchronous");
         assert!(!gym.spec.config_fingerprint.is_empty());
+    }
+
+    #[test]
+    fn gym_spec_carries_prefetch_config() {
+        let src = SRC.replace("variant_key: default", "variant_key: async_prefetch");
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let gym = g.into_gym().unwrap();
+        let pf = gym.spec.prefetch.expect("async_prefetch loader must reach the gym");
+        assert_eq!(pf, crate::data::prefetch::PrefetchConfig::default());
     }
 
     #[test]

@@ -23,7 +23,8 @@ pub mod components;
 pub mod subscribers;
 
 use crate::checkpoint;
-use crate::data::dataset::{DataLoader, DistributedSampler, Sampler};
+use crate::data::dataset::{Batch, DataLoader, DistributedSampler, Sampler};
+use crate::data::prefetch::{PrefetchConfig, Prefetcher, PrefetchHandle};
 use crate::fsdp::FsdpEngine;
 use crate::model::{LmModel, ModelSpec, ParamStore, TokenBatch};
 use crate::optim::components::OptimizerSpec;
@@ -39,6 +40,9 @@ use subscribers::{StepRecord, Subscriber};
 pub struct GymSpec {
     pub model: Arc<ModelSpec>,
     pub dataloader: Arc<DataLoader>,
+    /// When set, per-rank batches are assembled ahead of the train loop
+    /// by [`Prefetcher`] workers behind a bounded channel.
+    pub prefetch: Option<PrefetchConfig>,
     pub eval_dataloader: Option<Arc<DataLoader>>,
     pub optimizer: Arc<OptimizerSpec>,
     pub scheduler: Arc<LrSchedule>,
@@ -140,17 +144,44 @@ impl Gym {
 
         // Per-rank loaders: DistributedSampler over the configured
         // sampler; identical seeds across ranks keep SPMD determinism.
-        let loaders: Vec<DataLoader> = (0..world)
+        let loaders: Vec<Arc<DataLoader>> = (0..world)
             .map(|rank| {
                 let s: Arc<dyn Sampler> = Arc::new(DistributedSampler::new(
                     spec.dataloader.sampler.clone(),
                     rank,
                     world,
                 )?);
-                DataLoader::new(spec.dataloader.dataset.clone(), s, spec.dataloader.batch_size)
+                Ok(Arc::new(DataLoader::new(
+                    spec.dataloader.dataset.clone(),
+                    s,
+                    spec.dataloader.batch_size,
+                )?))
             })
             .collect::<Result<_>>()?;
         let batches_per_epoch = loaders[0].batches_per_epoch(0).max(1);
+
+        // Batch feeds: synchronous, or one prefetch handle per rank.
+        // The prefetcher delivers exactly the micro-batch sequence the
+        // synchronous path would assemble (deterministic ordering), so
+        // the two modes are loss-curve identical — only overlap differs.
+        enum Feed {
+            Sync(Arc<DataLoader>),
+            Prefetch(PrefetchHandle),
+        }
+        let total_micros = (spec.steps.saturating_sub(start_step)) * spec.grad_accum as u64;
+        let start_micro = start_step * spec.grad_accum as u64;
+        let mut feeds: Vec<Feed> = loaders
+            .iter()
+            .map(|l| match spec.prefetch {
+                Some(cfg) if total_micros > 0 => Ok(Feed::Prefetch(Prefetcher::spawn(
+                    l.clone(),
+                    cfg,
+                    start_micro,
+                    total_micros,
+                )?)),
+                _ => Ok(Feed::Sync(l.clone())),
+            })
+            .collect::<Result<_>>()?;
 
         let micro_tokens =
             (spec.dataloader.batch_size * spec.dataloader.dataset.seq_len()) as u64;
@@ -176,9 +207,18 @@ impl Gym {
                 let mut acc: Option<Vec<Vec<f32>>> = None;
                 for a in 0..spec.grad_accum {
                     let global_micro = micro_idx + a as u64;
-                    let epoch = global_micro / batches_per_epoch as u64;
-                    let b = (global_micro % batches_per_epoch as u64) as usize;
-                    let batch = loaders[rank].batch(epoch, b);
+                    let batch: Batch = match &mut feeds[rank] {
+                        Feed::Sync(l) => {
+                            let epoch = global_micro / batches_per_epoch as u64;
+                            let b = (global_micro % batches_per_epoch as u64) as usize;
+                            l.batch(epoch, b)
+                        }
+                        Feed::Prefetch(h) => h.next_batch().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "prefetcher for rank {rank} ended early at micro {global_micro}"
+                            )
+                        })?,
+                    };
                     let tb = TokenBatch::from(&batch);
                     let out = model
                         .train_step(&engine, &params, &tb)

@@ -41,6 +41,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "convert" => cmd_convert(&args),
         "generate" => cmd_generate(&args),
         "components" => cmd_components(),
+        "docs" => cmd_docs(&args),
         "config" => cmd_config(&args),
         "tune" => cmd_tune(&args),
         "trace" => cmd_trace(&args),
@@ -253,6 +254,26 @@ fn cmd_components() -> Result<()> {
         println!("  - {variant}");
         last = Box::leak(iface.into_boxed_str());
     }
+    Ok(())
+}
+
+fn cmd_docs(args: &Args) -> Result<()> {
+    let out = args.opt("out").unwrap_or("docs/config_reference.md");
+    let reg = ComponentRegistry::with_builtins();
+    let text = modalities::registry::docs::render_reference(&reg);
+    let out_path = Path::new(out);
+    if let Some(parent) = out_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out_path, &text).with_context(|| format!("writing {out}"))?;
+    println!(
+        "wrote {} ({} variants over {} interfaces)",
+        out,
+        reg.len(),
+        modalities::registry::INTERFACES.len()
+    );
     Ok(())
 }
 

@@ -22,6 +22,17 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ModelSpec { artifact_dir, model_name, init, seed },
         ))
     })?;
+    reg.describe(
+        "model",
+        "decoder_lm",
+        "Decoder-only transformer LM bound to AOT-lowered PJRT artifacts.",
+        &[
+            ("model_name", "string", "required", "artifact name (e.g. `nano`) in the manifest"),
+            ("artifact_dir", "string", "artifacts", "directory with `make artifacts` output"),
+            ("init", "string", "scaled_normal", "weight init: `scaled_normal` or `zeros`"),
+            ("seed", "int", "0", "xor-ed with `settings.seed`"),
+        ],
+    );
 
     // "Any decoder-only model on HF is supported" analog: a model spec
     // that points at a consolidated checkpoint to warm-start from.
@@ -29,14 +40,27 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         let path = PathBuf::from(ctx.str(cfg, "path")?);
         Ok(Component::new("warm_start", "from_checkpoint", WarmStartSpec { path }))
     })?;
+    reg.describe(
+        "warm_start",
+        "from_checkpoint",
+        "Warm-start parameters from a consolidated `.mckpt` checkpoint.",
+        &[("path", "string", "required", "consolidated checkpoint path")],
+    );
 
     reg.register("weight_init", "scaled_normal", |_ctx, _cfg| {
         Ok(Component::new("weight_init", "scaled_normal", InitScheme::ScaledNormal))
     })?;
+    reg.describe(
+        "weight_init",
+        "scaled_normal",
+        "Depth-scaled normal initialization.",
+        &[],
+    );
 
     reg.register("weight_init", "zeros", |_ctx, _cfg| {
         Ok(Component::new("weight_init", "zeros", InitScheme::Zeros))
     })?;
+    reg.describe("weight_init", "zeros", "All-zeros initialization (tests).", &[]);
 
     Ok(())
 }

@@ -42,6 +42,18 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "optimizer",
+        "adamw",
+        "AdamW with decoupled weight decay (state sharded by the FSDP engine).",
+        &[
+            ("lr", "float", "required", "peak learning rate"),
+            ("beta1", "float", "0.9", "first-moment decay"),
+            ("beta2", "float", "0.95", "second-moment decay"),
+            ("eps", "float", "1e-8", "denominator epsilon"),
+            ("weight_decay", "float", "0.1", "decoupled weight decay"),
+        ],
+    );
 
     reg.register("optimizer", "sgd", |ctx, cfg| {
         Ok(Component::new(
@@ -53,10 +65,20 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "optimizer",
+        "sgd",
+        "SGD with momentum (executed as a zero-beta AdamW equivalent).",
+        &[
+            ("lr", "float", "required", "learning rate"),
+            ("momentum", "float", "0.9", "momentum coefficient"),
+        ],
+    );
 
     reg.register("lr_scheduler", "constant", |_ctx, _cfg| {
         Ok(Component::new("lr_scheduler", "constant", LrSchedule::Constant))
     })?;
+    reg.describe("lr_scheduler", "constant", "Constant learning rate.", &[]);
 
     reg.register("lr_scheduler", "warmup_constant", |ctx, cfg| {
         Ok(Component::new(
@@ -65,6 +87,12 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             LrSchedule::WarmupConstant { warmup: ctx.usize(cfg, "warmup_steps")? as u64 },
         ))
     })?;
+    reg.describe(
+        "lr_scheduler",
+        "warmup_constant",
+        "Linear warmup, then constant.",
+        &[("warmup_steps", "int", "required", "warmup length in steps")],
+    );
 
     reg.register("lr_scheduler", "warmup_cosine", |ctx, cfg| {
         Ok(Component::new(
@@ -77,6 +105,16 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "lr_scheduler",
+        "warmup_cosine",
+        "Linear warmup into a cosine decay to `min_ratio`.",
+        &[
+            ("warmup_steps", "int", "required", "warmup length in steps"),
+            ("total_steps", "int", "required", "schedule horizon in steps"),
+            ("min_ratio", "float", "0.1", "floor as a fraction of peak lr"),
+        ],
+    );
 
     reg.register("lr_scheduler", "warmup_linear", |ctx, cfg| {
         Ok(Component::new(
@@ -89,6 +127,16 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             },
         ))
     })?;
+    reg.describe(
+        "lr_scheduler",
+        "warmup_linear",
+        "Linear warmup into a linear decay to `min_ratio`.",
+        &[
+            ("warmup_steps", "int", "required", "warmup length in steps"),
+            ("total_steps", "int", "required", "schedule horizon in steps"),
+            ("min_ratio", "float", "0.0", "floor as a fraction of peak lr"),
+        ],
+    );
 
     reg.register("gradient_clipper", "global_norm", |ctx, cfg| {
         Ok(Component::new(
@@ -97,14 +145,27 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ClipSpec { max_norm: ctx.f32_or(cfg, "max_norm", 1.0)? },
         ))
     })?;
+    reg.describe(
+        "gradient_clipper",
+        "global_norm",
+        "Clip gradients to a global L2 norm.",
+        &[("max_norm", "float", "1.0", "clipping threshold")],
+    );
 
     reg.register("mixed_precision", "f32", |_ctx, _cfg| {
         Ok(Component::new("mixed_precision", "f32", crate::fsdp::CommDtype::F32))
     })?;
+    reg.describe("mixed_precision", "f32", "Full-precision (f32) gradient communication.", &[]);
 
     reg.register("mixed_precision", "bf16_comm", |_ctx, _cfg| {
         Ok(Component::new("mixed_precision", "bf16_comm", crate::fsdp::CommDtype::Bf16))
     })?;
+    reg.describe(
+        "mixed_precision",
+        "bf16_comm",
+        "bf16-rounded gradient communication (half traffic volume).",
+        &[],
+    );
 
     Ok(())
 }

@@ -8,6 +8,12 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
     reg.register("interconnect_model", "leonardo", |_ctx, _cfg| {
         Ok(Component::new("interconnect_model", "leonardo", InterconnectModel::leonardo()))
     })?;
+    reg.describe(
+        "interconnect_model",
+        "leonardo",
+        "Leonardo-like fabric preset for the α-β interconnect model.",
+        &[],
+    );
 
     reg.register("interconnect_model", "alpha_beta", |ctx, cfg| {
         let m = InterconnectModel {
@@ -24,10 +30,24 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         };
         Ok(Component::new("interconnect_model", "alpha_beta", m))
     })?;
+    reg.describe(
+        "interconnect_model",
+        "alpha_beta",
+        "Custom α-β link model (latency + bandwidth per link class).",
+        &[
+            ("intra_latency_us", "float", "1.5", "intra-node link latency"),
+            ("intra_bandwidth_gbps", "float", "250.0", "intra-node bandwidth"),
+            ("inter_latency_us", "float", "5.0", "inter-node link latency"),
+            ("inter_bandwidth_gbps", "float", "12.5", "inter-node bandwidth"),
+            ("node_size", "int", "4", "GPUs per node"),
+            ("rails", "int", "2", "inter-node rail count"),
+        ],
+    );
 
     reg.register("profiler", "a100_64g", |_ctx, _cfg| {
         Ok(Component::new("profiler", "a100_64g", GpuModel::a100_64g()))
     })?;
+    reg.describe("profiler", "a100_64g", "A100-64G GPU model preset.", &[]);
 
     reg.register("profiler", "gpu_model", |ctx, cfg| {
         let g = GpuModel {
@@ -37,12 +57,28 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
         };
         Ok(Component::new("profiler", "gpu_model", g))
     })?;
+    reg.describe(
+        "profiler",
+        "gpu_model",
+        "Custom GPU model for step-time estimation.",
+        &[
+            ("peak_tflops", "float", "312.0", "peak compute"),
+            ("mfu", "float", "0.45", "model FLOPs utilization"),
+            ("hbm_gb", "float", "64.0", "device memory"),
+        ],
+    );
 
     reg.register("tracer", "comm_stats", |_ctx, _cfg| {
         // Communication tracing is always-on in the collective engine;
         // this component flags that traces should be dumped at run end.
         Ok(Component::new("tracer", "comm_stats", ()))
     })?;
+    reg.describe(
+        "tracer",
+        "comm_stats",
+        "Dump per-op collective traffic statistics at run end.",
+        &[],
+    );
 
     Ok(())
 }

@@ -6,6 +6,9 @@
 use super::ComponentRegistry;
 
 pub fn register_builtins(reg: &mut ComponentRegistry) {
+    // NOTE: every register() below pairs with describe() calls at the
+    // registration sites — `modalities docs` renders the reference from
+    // those entries and a registry test enforces full coverage.
     crate::optim::components::register(reg).expect("optim builtins");
     crate::data::components::register(reg).expect("data builtins");
     crate::model::components::register(reg).expect("model builtins");

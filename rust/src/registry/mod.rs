@@ -44,9 +44,11 @@
 //! is the paper's extensibility claim (§2).
 
 mod builtins;
+pub mod docs;
 mod graph;
 mod interfaces;
 
+pub use docs::DocEntry;
 pub use graph::{BuildCtx, ObjectGraph, ObjectGraphBuilder};
 pub use interfaces::{interface_exists, INTERFACES};
 
@@ -91,10 +93,12 @@ impl std::fmt::Debug for Component {
 /// the [`BuildCtx`] to resolve nested components/references.
 pub type Factory = Arc<dyn Fn(&mut BuildCtx<'_>, &Node) -> Result<Component> + Send + Sync>;
 
-/// Registry: (interface, variant) → factory.
+/// Registry: (interface, variant) → factory, plus the doc entries the
+/// generated config reference is rendered from ([`docs`]).
 #[derive(Clone, Default)]
 pub struct ComponentRegistry {
     factories: BTreeMap<(String, String), Factory>,
+    docs: BTreeMap<(String, String), DocEntry>,
 }
 
 impl ComponentRegistry {
@@ -139,6 +143,26 @@ impl ComponentRegistry {
 
     pub fn lookup(&self, interface: &str, variant: &str) -> Option<Factory> {
         self.factories.get(&(interface.to_string(), variant.to_string())).cloned()
+    }
+
+    /// Attach documentation to a registered `(interface, variant)` —
+    /// summary plus `(name, type, default, description)` config fields.
+    /// Rendered into `docs/config_reference.md` by `modalities docs`;
+    /// a registry test fails if a builtin variant has no doc entry.
+    pub fn describe(
+        &mut self,
+        interface: &str,
+        variant: &str,
+        summary: &'static str,
+        fields: &'static [docs::FieldDoc],
+    ) {
+        self.docs
+            .insert((interface.to_string(), variant.to_string()), DocEntry { summary, fields });
+    }
+
+    /// Doc entry for `(interface, variant)`, if one was registered.
+    pub fn doc(&self, interface: &str, variant: &str) -> Option<&DocEntry> {
+        self.docs.get(&(interface.to_string(), variant.to_string()))
     }
 
     /// All registered (interface, variant) pairs — `modalities components`

@@ -35,6 +35,12 @@ pub mod components {
             let backend = ctx.str_or(cfg, "backend", "cpu");
             Ok(Component::new("runtime", "pjrt", RuntimeSpec { backend }))
         })?;
+        reg.describe(
+            "runtime",
+            "pjrt",
+            "PJRT execution backend for the AOT artifacts.",
+            &[("backend", "string", "cpu", "PJRT client (only `cpu` on this testbed)")],
+        );
         Ok(())
     }
 }

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints (warnings as errors), and rustdoc
+# (warnings as errors — keeps the module docs compilable).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (doc warnings as errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> docs/config_reference.md matches the registry"
+cargo run --release --quiet -- docs
+git diff --exit-code docs/config_reference.md
+
+echo "OK"
