@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check
+.PHONY: artifacts build test check sweep-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -14,3 +14,8 @@ test:
 
 check:
 	scripts/check.sh
+
+# Tiny 4-point grid on 2 workers: asserts every point completes and the
+# sweep report is byte-stable. Skips when artifacts are missing.
+sweep-smoke:
+	scripts/sweep_smoke.sh

@@ -1,0 +1,165 @@
+//! Registry wiring for the ablation orchestrator.
+//!
+//! The orchestrator is configured two ways, both landing in an
+//! [`OrchestratorSpec`]:
+//!
+//! * the top-level `ablation:` section of a sweep config (the normal
+//!   path — `modalities sweep run` reads it via
+//!   [`OrchestratorSpec::from_config`] and lets `--jobs` override it);
+//! * an `ablation/orchestrator` component definition under
+//!   `components:` for configs that want the spec resolved through the
+//!   object graph like everything else.
+
+use crate::config::Config;
+use crate::registry::{Component, ComponentRegistry};
+use crate::yaml::Value;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Resolved orchestrator settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OrchestratorSpec {
+    /// Concurrent points (worker threads).
+    pub jobs: usize,
+    /// Extra attempts after a point's first failure.
+    pub retries: u64,
+    /// Experiment store root; `None` derives `runs/ablation/<config
+    /// fingerprint>` so distinct sweeps never share a store.
+    pub run_root: Option<PathBuf>,
+}
+
+impl Default for OrchestratorSpec {
+    fn default() -> Self {
+        OrchestratorSpec { jobs: 1, retries: 0, run_root: None }
+    }
+}
+
+impl OrchestratorSpec {
+    /// Read the top-level `ablation:` section (all fields optional).
+    pub fn from_config(cfg: &Config) -> Result<OrchestratorSpec> {
+        Ok(OrchestratorSpec {
+            jobs: cfg.usize_or("ablation.jobs", 1)?.max(1),
+            retries: cfg.usize_or("ablation.retries", 0)? as u64,
+            run_root: cfg
+                .opt("ablation.run_root")
+                .and_then(|n| n.as_str())
+                .map(PathBuf::from),
+        })
+    }
+
+    /// The store root this sweep runs under: the configured
+    /// `run_root`, or a root derived from the *base* (unexpanded)
+    /// config fingerprint — stable across `run`/`status`/`report`/
+    /// `resume` invocations of the same sweep. Orchestrator knobs do
+    /// not affect experiment identity, so the `ablation:` section is
+    /// excluded from the fingerprint: tweaking `jobs`/`retries`
+    /// between invocations still resolves to the same store.
+    pub fn resolve_root(&self, base: &Config) -> PathBuf {
+        match &self.run_root {
+            Some(p) => p.clone(),
+            None => {
+                let mut c = base.clone();
+                if let Value::Map(m) = &mut c.root.value {
+                    m.retain(|(k, _)| k != "ablation");
+                }
+                PathBuf::from(format!("runs/ablation/{}", c.fingerprint_hex()))
+            }
+        }
+    }
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("ablation", "orchestrator", |ctx, cfg| {
+        let jobs = ctx.usize_or(cfg, "jobs", 1)?.max(1);
+        let retries = ctx.usize_or(cfg, "retries", 0)? as u64;
+        let run_root = {
+            let r = ctx.str_or(cfg, "run_root", "");
+            if r.is_empty() { None } else { Some(PathBuf::from(r)) }
+        };
+        Ok(Component::new(
+            "ablation",
+            "orchestrator",
+            OrchestratorSpec { jobs, retries, run_root },
+        ))
+    })?;
+    reg.describe(
+        "ablation",
+        "orchestrator",
+        "Sweep orchestrator: schedules expanded sweep points on a bounded worker pool with a crash-resumable experiment store and deterministic report generation (`modalities sweep run|status|report|resume`). Also configurable via the top-level `ablation:` section.",
+        &[
+            ("jobs", "int", "1", "concurrent points (worker threads)"),
+            ("retries", "int", "0", "extra attempts after a point's first failure"),
+            (
+                "run_root",
+                "string",
+                "runs/ablation/<config fingerprint>",
+                "experiment store root (one run dir per point)",
+            ),
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn from_config_reads_ablation_section_with_defaults() {
+        let cfg = Config::from_str_named("a: 1\n", "<t>").unwrap();
+        let spec = OrchestratorSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec, OrchestratorSpec::default());
+        assert_eq!(
+            spec.resolve_root(&cfg),
+            PathBuf::from(format!("runs/ablation/{}", cfg.fingerprint_hex()))
+        );
+
+        let cfg = Config::from_str_named(
+            "ablation:\n  jobs: 4\n  retries: 2\n  run_root: /tmp/sweeps/x\n",
+            "<t>",
+        )
+        .unwrap();
+        let spec = OrchestratorSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.jobs, 4);
+        assert_eq!(spec.retries, 2);
+        assert_eq!(spec.resolve_root(&cfg), PathBuf::from("/tmp/sweeps/x"));
+    }
+
+    #[test]
+    fn derived_root_ignores_orchestrator_knobs() {
+        // Changing only `ablation:` settings (e.g. bumping retries
+        // before a resume) must not re-point the sweep at a new store.
+        let a = Config::from_str_named("x: 1\nablation:\n  retries: 0\n", "<t>").unwrap();
+        let b = Config::from_str_named("x: 1\nablation:\n  retries: 3\n", "<t>").unwrap();
+        let c = Config::from_str_named("x: 2\nablation:\n  retries: 0\n", "<t>").unwrap();
+        let spec = OrchestratorSpec::default();
+        assert_eq!(spec.resolve_root(&a), spec.resolve_root(&b));
+        assert_ne!(spec.resolve_root(&a), spec.resolve_root(&c));
+    }
+
+    #[test]
+    fn orchestrator_resolves_through_the_object_graph() {
+        let src = "\
+components:
+  orch:
+    component_key: ablation
+    variant_key: orchestrator
+    config: {jobs: 3, retries: 1, run_root: runs/abl}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let spec = g.get::<OrchestratorSpec>("orch").unwrap();
+        assert_eq!(spec.jobs, 3);
+        assert_eq!(spec.retries, 1);
+        assert_eq!(spec.run_root, Some(PathBuf::from("runs/abl")));
+    }
+
+    #[test]
+    fn zero_jobs_clamped_to_one() {
+        let cfg =
+            Config::from_str_named("ablation:\n  jobs: 0\n", "<t>").unwrap();
+        assert_eq!(OrchestratorSpec::from_config(&cfg).unwrap().jobs, 1);
+    }
+}

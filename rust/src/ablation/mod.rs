@@ -1,0 +1,36 @@
+//! Ablation orchestration: schedule, execute, resume and report sweeps
+//! end-to-end.
+//!
+//! The paper's central complaint is that existing frameworks force
+//! researchers to hand-write wrappers around large-scale ablation
+//! studies; [`crate::config::expand_sweep`] answers the *declaration*
+//! half (one YAML `sweep:` section → N self-contained experiment
+//! configs) and this module answers the *execution* half:
+//!
+//! * [`store`] — an **experiment store** with one run directory per
+//!   point and an atomic `pending → running → complete | failed` state
+//!   journal; killed orchestrators are recovered by re-claiming stale
+//!   `running` entries.
+//! * [`scheduler`] — a **bounded worker pool** (`--jobs N`) that claims
+//!   points, injects a point-derived seed plus the store's run dir into
+//!   each config, runs the full gym loop per point, and journals
+//!   retries/failures.
+//! * [`report`] — a **report engine** folding the per-point
+//!   `metrics.jsonl` ledgers into a deterministic comparison: ranked
+//!   leaderboard, per-axis marginal means, per-point state table —
+//!   emitted as Markdown + JSON.
+//!
+//! The CLI front door is `modalities sweep run|status|report|resume`;
+//! the orchestrator's knobs live in the config's `ablation:` section
+//! (or an `ablation/orchestrator` component) — see
+//! [`components::OrchestratorSpec`].
+
+pub mod components;
+pub mod report;
+pub mod scheduler;
+pub mod store;
+
+pub use components::OrchestratorSpec;
+pub use report::{collect, SweepReport};
+pub use scheduler::{run_sweep, PointOutcome, PointRunner, SchedulerConfig};
+pub use store::{ExperimentStore, RunEntry, RunState};

@@ -1,0 +1,408 @@
+//! Report engine: aggregates the per-point `metrics.jsonl` ledgers and
+//! state journals of an [`ExperimentStore`] into one deterministic
+//! comparison report.
+//!
+//! The report answers the three questions an ablation exists to
+//! answer — *which point won* (ranked leaderboard on final loss),
+//! *what each axis contributed* (per-axis marginal means over complete
+//! points) and *what happened* (per-point state/attempt table) — and is
+//! emitted as both Markdown (humans) and JSON (downstream tooling).
+//! Determinism is a contract: points are keyed by fingerprint, floats
+//! are fixed-format, and nothing time- or rate-dependent (elapsed
+//! seconds, tokens/s) is included, so re-rendering the same store is
+//! byte-identical — CI diffs the report across invocations.
+
+use super::store::{ExperimentStore, RunState};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One point's aggregated view.
+#[derive(Clone, Debug)]
+pub struct PointReport {
+    pub fingerprint: String,
+    pub label: String,
+    pub assignments: Vec<(String, String)>,
+    pub state: RunState,
+    pub attempts: u64,
+    /// Loss journaled at completion (falls back to the ledger's last
+    /// step when the journal predates completion).
+    pub final_loss: Option<f64>,
+    /// Best (minimum) per-step loss seen in the ledger.
+    pub best_loss: Option<f64>,
+    /// Optimizer steps recorded in the ledger.
+    pub steps: Option<u64>,
+}
+
+/// The aggregated sweep report.
+#[derive(Clone, Debug, Default)]
+pub struct SweepReport {
+    /// All points, sorted by fingerprint.
+    pub points: Vec<PointReport>,
+}
+
+/// Aggregates of one run directory's `metrics.jsonl` ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LedgerStats {
+    /// Loss of the last `step` record.
+    pub last_loss: Option<f64>,
+    /// Minimum per-step loss.
+    pub best_loss: Option<f64>,
+    /// `steps` of the last `summary` record.
+    pub steps: Option<u64>,
+}
+
+/// One pass over a run directory's metrics ledger — the single parser
+/// for the subscriber's record format, shared by the report engine and
+/// the scheduler's crash-recovery fallback. A missing ledger yields
+/// empty stats; torn tail lines from a killed run are skipped.
+pub fn scan_ledger(run_dir: &Path) -> Result<LedgerStats> {
+    let ledger = run_dir.join("metrics.jsonl");
+    let mut stats = LedgerStats::default();
+    if !ledger.exists() {
+        return Ok(stats);
+    }
+    let text = std::fs::read_to_string(&ledger)
+        .with_context(|| format!("reading {}", ledger.display()))?;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let Ok(rec) = Json::parse(line) else {
+            continue; // a torn tail line from a killed run is not fatal
+        };
+        match rec.get("kind").and_then(|k| k.as_str()) {
+            Some("step") => {
+                if let Some(loss) = rec.get("loss").and_then(|l| l.as_f64()) {
+                    stats.last_loss = Some(loss);
+                    stats.best_loss = Some(match stats.best_loss {
+                        Some(b) => b.min(loss),
+                        None => loss,
+                    });
+                }
+            }
+            Some("summary") => {
+                if let Some(s) = rec.get("steps").and_then(|s| s.as_i64()) {
+                    stats.steps = Some(s as u64);
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(stats)
+}
+
+/// Read every journaled point of `store` and fold in its metrics
+/// ledger.
+pub fn collect(store: &ExperimentStore) -> Result<SweepReport> {
+    let mut points = Vec::new();
+    for entry in store.entries()? {
+        let stats = scan_ledger(&store.run_dir(&entry.fingerprint))?;
+        points.push(PointReport {
+            final_loss: entry.final_loss.or(stats.last_loss),
+            best_loss: stats.best_loss,
+            steps: stats.steps,
+            fingerprint: entry.fingerprint,
+            label: entry.label,
+            assignments: entry.assignments,
+            state: entry.state,
+            attempts: entry.attempts,
+        });
+    }
+    points.sort_by(|a, b| a.fingerprint.cmp(&b.fingerprint));
+    Ok(SweepReport { points })
+}
+
+impl SweepReport {
+    /// Complete points ranked by final loss (ascending), label as the
+    /// deterministic tie-break.
+    pub fn leaderboard(&self) -> Vec<&PointReport> {
+        let mut ranked: Vec<&PointReport> = self
+            .points
+            .iter()
+            .filter(|p| p.state == RunState::Complete && p.final_loss.is_some())
+            .collect();
+        ranked.sort_by(|a, b| {
+            a.final_loss
+                .partial_cmp(&b.final_loss)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.label.cmp(&b.label))
+        });
+        ranked
+    }
+
+    /// Per-axis marginal means of the final loss over complete points:
+    /// `(axis path, [(value, mean, count)])`, axes and values sorted.
+    pub fn marginals(&self) -> Vec<(String, Vec<(String, f64, usize)>)> {
+        use std::collections::BTreeMap;
+        let mut acc: BTreeMap<String, BTreeMap<String, (f64, usize)>> = BTreeMap::new();
+        for p in &self.points {
+            if p.state != RunState::Complete {
+                continue;
+            }
+            let Some(loss) = p.final_loss else { continue };
+            for (axis, value) in &p.assignments {
+                let slot = acc
+                    .entry(axis.clone())
+                    .or_default()
+                    .entry(value.clone())
+                    .or_insert((0.0, 0));
+                slot.0 += loss;
+                slot.1 += 1;
+            }
+        }
+        acc.into_iter()
+            .map(|(axis, values)| {
+                let vs = values
+                    .into_iter()
+                    .map(|(v, (sum, n))| (v, sum / n as f64, n))
+                    .collect();
+                (axis, vs)
+            })
+            .collect()
+    }
+
+    fn state_counts(&self) -> (usize, usize, usize) {
+        let complete =
+            self.points.iter().filter(|p| p.state == RunState::Complete).count();
+        let failed = self.points.iter().filter(|p| p.state == RunState::Failed).count();
+        (complete, failed, self.points.len() - complete - failed)
+    }
+
+    /// Render the Markdown report.
+    pub fn to_markdown(&self) -> String {
+        let fmt_loss = |l: Option<f64>| match l {
+            Some(l) => format!("{l:.4}"),
+            None => "-".to_string(),
+        };
+        let (complete, failed, open) = self.state_counts();
+        let mut out = String::new();
+        out.push_str("# Sweep report\n\n");
+        out.push_str(&format!(
+            "{} points: {complete} complete, {failed} failed, {open} pending/running.\n\n",
+            self.points.len()
+        ));
+
+        out.push_str("## Leaderboard\n\n");
+        let ranked = self.leaderboard();
+        if ranked.is_empty() {
+            out.push_str("_No complete points yet._\n\n");
+        } else {
+            out.push_str("| rank | point | final loss | best loss | steps |\n");
+            out.push_str("|---|---|---|---|---|\n");
+            for (i, p) in ranked.iter().enumerate() {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {} | {} |\n",
+                    i + 1,
+                    p.label,
+                    fmt_loss(p.final_loss),
+                    fmt_loss(p.best_loss),
+                    p.steps.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
+                ));
+            }
+            out.push('\n');
+        }
+
+        let marginals = self.marginals();
+        if !marginals.is_empty() {
+            out.push_str("## Marginal means (final loss)\n\n");
+            out.push_str("| axis | value | mean | n |\n");
+            out.push_str("|---|---|---|---|\n");
+            for (axis, values) in &marginals {
+                for (value, mean, n) in values {
+                    out.push_str(&format!("| `{axis}` | {value} | {mean:.4} | {n} |\n"));
+                }
+            }
+            out.push('\n');
+        }
+
+        out.push_str("## All points\n\n");
+        out.push_str("| point | state | attempts | final loss | fingerprint |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | `{}` |\n",
+                p.label,
+                p.state,
+                p.attempts,
+                fmt_loss(p.final_loss),
+                p.fingerprint,
+            ));
+        }
+        out
+    }
+
+    /// Render the JSON report (deterministic key and array order).
+    pub fn to_json(&self) -> Json {
+        let opt_num = |l: Option<f64>| match l {
+            Some(l) => Json::Num(l),
+            None => Json::Null,
+        };
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut assigns = Json::obj();
+                for (k, v) in &p.assignments {
+                    assigns.set(k, Json::Str(v.clone()));
+                }
+                Json::from_pairs(vec![
+                    ("fingerprint", Json::Str(p.fingerprint.clone())),
+                    ("label", Json::Str(p.label.clone())),
+                    ("assignments", assigns),
+                    ("state", Json::Str(p.state.as_str().to_string())),
+                    ("attempts", Json::Num(p.attempts as f64)),
+                    ("final_loss", opt_num(p.final_loss)),
+                    ("best_loss", opt_num(p.best_loss)),
+                    (
+                        "steps",
+                        match p.steps {
+                            Some(s) => Json::Num(s as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let leaderboard: Vec<Json> = self
+            .leaderboard()
+            .iter()
+            .map(|p| Json::Str(p.fingerprint.clone()))
+            .collect();
+        let mut marginals = Json::obj();
+        for (axis, values) in self.marginals() {
+            let mut per_value = Json::obj();
+            for (value, mean, n) in values {
+                per_value.set(
+                    &value,
+                    Json::from_pairs(vec![
+                        ("mean_final_loss", Json::Num(mean)),
+                        ("n", Json::Num(n as f64)),
+                    ]),
+                );
+            }
+            marginals.set(&axis, per_value);
+        }
+        Json::from_pairs(vec![
+            ("points", Json::Arr(points)),
+            ("leaderboard", Json::Arr(leaderboard)),
+            ("marginals", marginals),
+        ])
+    }
+
+    /// Write `report.md` + `report.json` into the store root and return
+    /// their paths.
+    pub fn write(
+        &self,
+        store: &ExperimentStore,
+    ) -> Result<(std::path::PathBuf, std::path::PathBuf)> {
+        let md = store.root().join("report.md");
+        let json = store.root().join("report.json");
+        std::fs::write(&md, self.to_markdown())
+            .with_context(|| format!("writing {}", md.display()))?;
+        std::fs::write(&json, self.to_json().dumps_pretty())
+            .with_context(|| format!("writing {}", json.display()))?;
+        Ok((md, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp_store(name: &str) -> ExperimentStore {
+        let d = std::env::temp_dir().join("modalities-ablation-report").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        ExperimentStore::open(&d).unwrap()
+    }
+
+    fn seed_point(
+        store: &ExperimentStore,
+        fp: &str,
+        label: &str,
+        assigns: &[(&str, &str)],
+        losses: &[f64],
+    ) {
+        let a: Vec<(String, String)> =
+            assigns.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        store.ensure(fp, label, &a, "a: 1\n").unwrap();
+        store.claim(fp).unwrap();
+        let mut f =
+            std::fs::File::create(store.run_dir(fp).join("metrics.jsonl")).unwrap();
+        for (i, loss) in losses.iter().enumerate() {
+            writeln!(f, "{{\"kind\":\"step\",\"step\":{i},\"loss\":{loss}}}").unwrap();
+        }
+        writeln!(f, "{{\"kind\":\"summary\",\"steps\":{}}}", losses.len()).unwrap();
+        store.mark_complete(fp, *losses.last().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn aggregates_leaderboard_and_marginals() {
+        let s = tmp_store("agg");
+        seed_point(&s, "aa", "lr=0.01", &[("opt.lr", "0.01")], &[3.0, 2.0]);
+        seed_point(&s, "bb", "lr=0.001", &[("opt.lr", "0.001")], &[3.0, 2.5, 1.0]);
+        let r = collect(&s).unwrap();
+        assert_eq!(r.points.len(), 2);
+        let ranked = r.leaderboard();
+        assert_eq!(ranked[0].fingerprint, "bb");
+        assert_eq!(ranked[0].final_loss, Some(1.0));
+        assert_eq!(ranked[0].best_loss, Some(1.0));
+        assert_eq!(ranked[0].steps, Some(3));
+        assert_eq!(ranked[1].best_loss, Some(2.0));
+        let m = r.marginals();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].0, "opt.lr");
+        // Values sorted lexicographically, one sample each.
+        assert_eq!(m[0].1.len(), 2);
+        assert!(m[0]
+            .1
+            .iter()
+            .any(|(v, mean, n)| v.as_str() == "0.01" && *mean == 2.0 && *n == 1));
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let s = tmp_store("determinism");
+        seed_point(&s, "aa", "v=1", &[("a.v", "1")], &[2.0]);
+        seed_point(&s, "bb", "v=2", &[("a.v", "2")], &[1.5]);
+        let a = collect(&s).unwrap();
+        let b = collect(&s).unwrap();
+        assert_eq!(a.to_markdown(), b.to_markdown());
+        assert_eq!(a.to_json().dumps(), b.to_json().dumps());
+        // And byte-stable through the writer.
+        let (md1, _) = a.write(&s).unwrap();
+        let first = std::fs::read(&md1).unwrap();
+        let (md2, _) = b.write(&s).unwrap();
+        assert_eq!(first, std::fs::read(&md2).unwrap());
+    }
+
+    #[test]
+    fn incomplete_and_failed_points_reported_not_ranked() {
+        let s = tmp_store("states");
+        seed_point(&s, "ok", "v=1", &[("a.v", "1")], &[2.0]);
+        s.ensure("bad", "v=2", &[("a.v".to_string(), "2".to_string())], "a: 1\n")
+            .unwrap();
+        s.claim("bad").unwrap();
+        s.mark_failed("bad", "boom").unwrap();
+        s.ensure("todo", "v=3", &[], "a: 1\n").unwrap();
+        let r = collect(&s).unwrap();
+        assert_eq!(r.points.len(), 3);
+        assert_eq!(r.leaderboard().len(), 1);
+        let md = r.to_markdown();
+        assert!(md.contains("3 points: 1 complete, 1 failed, 1 pending/running."), "{md}");
+        assert!(md.contains("| v=2 | failed |"), "{md}");
+        // Failed points contribute nothing to marginals.
+        assert_eq!(r.marginals()[0].1.len(), 1);
+    }
+
+    #[test]
+    fn torn_ledger_tail_tolerated() {
+        let s = tmp_store("torn");
+        seed_point(&s, "aa", "v=1", &[], &[2.0]);
+        // Simulate a kill mid-write: append a torn half-record.
+        let ledger = s.run_dir("aa").join("metrics.jsonl");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&ledger).unwrap();
+        write!(f, "{{\"kind\":\"st").unwrap();
+        drop(f);
+        let r = collect(&s).unwrap();
+        assert_eq!(r.points[0].final_loss, Some(2.0));
+    }
+}

@@ -1,0 +1,453 @@
+//! Sweep scheduler: drives expanded sweep points to completion on a
+//! bounded worker pool.
+//!
+//! The scheduler is deliberately separated from *how* a point executes:
+//! it owns claiming, retries and journaling, and delegates the actual
+//! run to a [`PointRunner`] — the CLI passes a runner that builds the
+//! object graph and turns the gym crank, tests pass a recording stub.
+//! That split is what lets crash/resume semantics be covered by fast
+//! unit tests with no PJRT artifacts in sight.
+//!
+//! Execution model: every point is registered in the
+//! [`ExperimentStore`]; entries journaled `complete` are skipped,
+//! everything else (fresh `pending`, stale `running` from a killed
+//! orchestrator, retryable `failed`) is queued. `jobs` worker threads
+//! pop points off the queue, claim them, and run them with a
+//! point-derived seed and the store's run directory injected into the
+//! config — re-claimed points resume from their latest sharded
+//! checkpoint because the gym is handed `resume: true`.
+
+use super::store::{ExperimentStore, RunEntry, RunState};
+use crate::config::{Config, SweepPoint};
+use crate::util::bytesio::fnv1a64;
+use crate::yaml::{Node, Value};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Scheduler knobs (the config's `ablation:` section / `--jobs`).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Concurrent worker threads.
+    pub jobs: usize,
+    /// Extra attempts after a first failure (0 = fail fast).
+    pub retries: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { jobs: 1, retries: 0 }
+    }
+}
+
+/// How one scheduled point ended up.
+#[derive(Clone, Debug)]
+pub struct PointOutcome {
+    pub fingerprint: String,
+    pub label: String,
+    pub state: RunState,
+    pub attempts: u64,
+    pub final_loss: Option<f64>,
+    /// True when the point was already `complete` and never executed
+    /// in this invocation (resume skipping finished work).
+    pub skipped: bool,
+}
+
+impl PointOutcome {
+    fn from_entry(e: &RunEntry, skipped: bool) -> PointOutcome {
+        PointOutcome {
+            fingerprint: e.fingerprint.clone(),
+            label: e.label.clone(),
+            state: e.state,
+            attempts: e.attempts,
+            final_loss: e.final_loss,
+            skipped,
+        }
+    }
+}
+
+/// Executes one point: receives the fully-overridden exec config and
+/// the point's run directory, returns the final loss.
+pub type PointRunner = dyn Fn(&Config, &Path) -> Result<f64> + Send + Sync;
+
+struct Job {
+    fingerprint: String,
+    label: String,
+    exec: Config,
+}
+
+/// Register `points` in the store and drive every unfinished one to
+/// `complete` or `failed` on `scfg.jobs` workers. Returns one outcome
+/// per point, sorted by fingerprint. Point failures are journaled, not
+/// propagated — the returned outcomes carry them; only store/journal
+/// I/O errors abort the sweep.
+pub fn run_sweep(
+    store: &ExperimentStore,
+    points: &[(Config, SweepPoint)],
+    scfg: &SchedulerConfig,
+    runner: &PointRunner,
+) -> Result<Vec<PointOutcome>> {
+    // Labels are disambiguated *across* points: two single-assignment
+    // includes like `{optimizer.lr: 1e-3}` and `{scheduler.lr: 1e-3}`
+    // each render as `lr=0.001` in isolation, so colliding labels get a
+    // fingerprint-prefix suffix before they reach the journal.
+    let mut labels: Vec<String> = points
+        .iter()
+        .map(|(_, p)| if p.assignments.is_empty() { "base".to_string() } else { p.label() })
+        .collect();
+    let fps: Vec<String> = points.iter().map(|(c, _)| c.fingerprint_hex()).collect();
+    let mut counts: std::collections::BTreeMap<&str, usize> = std::collections::BTreeMap::new();
+    for l in &labels {
+        *counts.entry(l.as_str()).or_insert(0) += 1;
+    }
+    let dup: Vec<bool> = labels.iter().map(|l| counts[l.as_str()] > 1).collect();
+    for (i, is_dup) in dup.iter().enumerate() {
+        if *is_dup {
+            labels[i] = format!("{}@{}", labels[i], &fps[i][..6]);
+        }
+    }
+
+    let mut queue: VecDeque<Job> = VecDeque::new();
+    let mut outcomes: Vec<PointOutcome> = Vec::new();
+    for (i, (cfg, point)) in points.iter().enumerate() {
+        let fp = fps[i].clone();
+        let label = labels[i].clone();
+        let assignments: Vec<(String, String)> = point
+            .assignments
+            .iter()
+            .map(|(p, v)| (p.clone(), format!("{}", v.value)))
+            .collect();
+        let entry = store.ensure(&fp, &label, &assignments, &cfg.to_yaml())?;
+        if entry.state == RunState::Complete {
+            outcomes.push(PointOutcome::from_entry(&entry, true));
+            continue;
+        }
+        let exec = exec_config(cfg, &fp, store);
+        queue.push_back(Job { fingerprint: fp, label, exec });
+    }
+
+    let workers = scfg.jobs.max(1).min(queue.len().max(1));
+    let queue = Mutex::new(queue);
+    let done: Mutex<Vec<PointOutcome>> = Mutex::new(Vec::new());
+    let io_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some(job) = job else { break };
+                match run_one(store, &job, scfg, runner) {
+                    Ok(o) => done.lock().unwrap().push(o),
+                    Err(e) => io_errors.lock().unwrap().push(format!("{e:#}")),
+                }
+            });
+        }
+    });
+    let io_errors = io_errors.into_inner().unwrap();
+    if let Some(first) = io_errors.first() {
+        anyhow::bail!("sweep aborted: {first}");
+    }
+    outcomes.extend(done.into_inner().unwrap());
+    outcomes.sort_by(|a, b| a.fingerprint.cmp(&b.fingerprint));
+    Ok(outcomes)
+}
+
+fn run_one(
+    store: &ExperimentStore,
+    job: &Job,
+    scfg: &SchedulerConfig,
+    runner: &PointRunner,
+) -> Result<PointOutcome> {
+    // Retry budget counts *failures in this invocation* — the journal's
+    // `attempts` counts lifetime claims, and a crash re-claim of a
+    // stale `running` entry must not consume a retry.
+    let mut failures = 0u64;
+    loop {
+        let entry = store.claim(&job.fingerprint)?;
+        println!(
+            "[sweep] running  {} ({}) attempt {}",
+            job.label, job.fingerprint, entry.attempts
+        );
+        match runner(&job.exec, &store.run_dir(&job.fingerprint)) {
+            Ok(loss) => {
+                // A point re-claimed after a crash that fell between its
+                // final checkpoint and `mark_complete` resumes with zero
+                // steps left and reports NaN — recover the loss from
+                // its metrics ledger instead of journaling null.
+                let loss = if loss.is_finite() {
+                    loss
+                } else {
+                    super::report::scan_ledger(&store.run_dir(&job.fingerprint))
+                        .ok()
+                        .and_then(|s| s.last_loss)
+                        .unwrap_or(loss)
+                };
+                let e = store.mark_complete(&job.fingerprint, loss)?;
+                println!("[sweep] complete {} final loss {loss:.4}", job.label);
+                return Ok(PointOutcome::from_entry(&e, false));
+            }
+            Err(err) => {
+                failures += 1;
+                let msg = format!("{err:#}");
+                let e = store.mark_failed(&job.fingerprint, &msg)?;
+                eprintln!(
+                    "[sweep] failed   {} (attempt {}): {msg}",
+                    job.label, e.attempts
+                );
+                if failures > scfg.retries {
+                    return Ok(PointOutcome::from_entry(&e, false));
+                }
+            }
+        }
+    }
+}
+
+/// Derive the execution config for one point: a point-derived seed
+/// (base `settings.seed` ⊕ a digest of the point fingerprint — every
+/// point gets an independent but reproducible random stream) and, when
+/// the config declares a gym, its run directory routed into the store
+/// with `resume: true` so re-claimed points continue from their latest
+/// sharded checkpoint instead of starting over.
+fn exec_config(cfg: &Config, fingerprint: &str, store: &ExperimentStore) -> Config {
+    let mut c = cfg.clone();
+    let base = c.opt("settings.seed").and_then(|n| n.as_i64()).unwrap_or(0) as u64;
+    let derived = base ^ (fnv1a64(fingerprint.as_bytes()) >> 33);
+    c.set_node("settings.seed", Node::new(Value::Int(derived as i64), 0));
+    if let Some(gym) = find_gym_component(&c) {
+        let dir = store.run_dir(fingerprint).display().to_string();
+        c.set_node(
+            &format!("components.{gym}.config.run_dir"),
+            Node::new(Value::Str(dir), 0),
+        );
+        c.set_node(
+            &format!("components.{gym}.config.resume"),
+            Node::new(Value::Bool(true), 0),
+        );
+    }
+    c
+}
+
+/// Name of the (single) component declared with `component_key: gym`.
+fn find_gym_component(cfg: &Config) -> Option<String> {
+    let comps = cfg.root.get("components")?.as_map()?;
+    comps
+        .iter()
+        .find(|(_, def)| def.get("component_key").and_then(|n| n.as_str()) == Some("gym"))
+        .map(|(name, _)| name.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::expand_sweep;
+
+    fn tmp_store(name: &str) -> ExperimentStore {
+        let d = std::env::temp_dir().join("modalities-ablation-sched").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        ExperimentStore::open(&d).unwrap()
+    }
+
+    const SWEEP: &str = "\
+settings:
+  seed: 5
+a:
+  v: 0
+sweep:
+  axes:
+    - path: a.v
+      values: [1, 2, 3, 4]
+";
+
+    fn points() -> Vec<(Config, SweepPoint)> {
+        let cfg = Config::from_str_named(SWEEP, "<t>").unwrap();
+        expand_sweep(&cfg).unwrap()
+    }
+
+    #[test]
+    fn all_points_complete_on_bounded_pool() {
+        let store = tmp_store("all-complete");
+        let calls: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let runner = |cfg: &Config, _dir: &Path| -> Result<f64> {
+            let v = cfg.f64("a.v")?;
+            calls.lock().unwrap().push(v);
+            Ok(10.0 - v)
+        };
+        let pts = points();
+        let outcomes = run_sweep(
+            &store,
+            &pts,
+            &SchedulerConfig { jobs: 2, retries: 0 },
+            &runner,
+        )
+        .unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.state == RunState::Complete && !o.skipped));
+        let mut ran = calls.into_inner().unwrap();
+        ran.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ran, vec![1.0, 2.0, 3.0, 4.0]);
+        // Journals agree.
+        assert!(store
+            .entries()
+            .unwrap()
+            .iter()
+            .all(|e| e.state == RunState::Complete && e.final_loss.is_some()));
+    }
+
+    #[test]
+    fn resume_runs_only_unfinished_points() {
+        let store = tmp_store("resume");
+        let noop = |cfg: &Config, _dir: &Path| -> Result<f64> { cfg.f64("a.v") };
+        let pts = points();
+        run_sweep(&store, &pts, &SchedulerConfig { jobs: 2, retries: 0 }, &noop).unwrap();
+
+        // Simulate a kill mid-sweep: one point left journaled `running`
+        // (the orchestrator died while executing it), one reset to
+        // `pending` (never started).
+        let fps: Vec<String> = pts.iter().map(|(c, _)| c.fingerprint_hex()).collect();
+        let mut stale = store.load(&fps[1]).unwrap();
+        stale.state = RunState::Running;
+        stale.final_loss = None;
+        store.write(&stale).unwrap();
+        let mut fresh = store.load(&fps[2]).unwrap();
+        fresh.state = RunState::Pending;
+        fresh.attempts = 0;
+        fresh.final_loss = None;
+        store.write(&fresh).unwrap();
+
+        let executed: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let recorder = |cfg: &Config, _dir: &Path| -> Result<f64> {
+            executed.lock().unwrap().push(cfg.fingerprint_hex());
+            cfg.f64("a.v")
+        };
+        let outcomes =
+            run_sweep(&store, &pts, &SchedulerConfig { jobs: 2, retries: 0 }, &recorder)
+                .unwrap();
+
+        // Only the stale-running and pending points executed; the two
+        // complete ones were skipped without touching the runner.
+        let ran = executed.into_inner().unwrap();
+        assert_eq!(ran.len(), 2);
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(outcomes.iter().filter(|o| o.skipped).count(), 2);
+        assert!(outcomes.iter().all(|o| o.state == RunState::Complete));
+        // Note: the runner sees the *exec* config (run-dir/seed
+        // overrides applied), so compare against journal identity via
+        // the store instead of raw fingerprints.
+        assert!(store.entries().unwrap().iter().all(|e| e.state == RunState::Complete));
+    }
+
+    #[test]
+    fn colliding_labels_across_points_disambiguated() {
+        // A grid point over `a.v` and an include over `b.v` both render
+        // as `v=1` in isolation; the journal must keep them apart.
+        let src = "\
+a:
+  v: 0
+b:
+  v: 0
+sweep:
+  axes:
+    - path: a.v
+      values: [1]
+  include:
+    - {b.v: 1}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 2);
+        let store = tmp_store("labels");
+        let noop = |_c: &Config, _d: &Path| -> Result<f64> { Ok(1.0) };
+        run_sweep(&store, &pts, &SchedulerConfig { jobs: 1, retries: 0 }, &noop).unwrap();
+        let labels: Vec<String> =
+            store.entries().unwrap().into_iter().map(|e| e.label).collect();
+        assert_eq!(labels.len(), 2);
+        assert_ne!(labels[0], labels[1], "{labels:?}");
+        assert!(labels.iter().all(|l| l.starts_with("v=1@")), "{labels:?}");
+    }
+
+    #[test]
+    fn failures_retry_then_journal() {
+        let store = tmp_store("failures");
+        let tries: Mutex<u64> = Mutex::new(0);
+        let runner = |cfg: &Config, _dir: &Path| -> Result<f64> {
+            let v = cfg.f64("a.v")?;
+            if v == 3.0 {
+                *tries.lock().unwrap() += 1;
+                anyhow::bail!("injected failure at v=3");
+            }
+            Ok(v)
+        };
+        let pts = points();
+        let outcomes = run_sweep(
+            &store,
+            &pts,
+            &SchedulerConfig { jobs: 2, retries: 1 },
+            &runner,
+        )
+        .unwrap();
+        assert_eq!(*tries.lock().unwrap(), 2, "retries=1 means two attempts");
+        let failed: Vec<&PointOutcome> =
+            outcomes.iter().filter(|o| o.state == RunState::Failed).collect();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].attempts, 2);
+        let e = store.load(&failed[0].fingerprint).unwrap();
+        assert!(e.error.as_deref().unwrap_or("").contains("injected failure"), "{e:?}");
+        assert_eq!(outcomes.iter().filter(|o| o.state == RunState::Complete).count(), 3);
+    }
+
+    #[test]
+    fn nan_final_loss_recovered_from_ledger() {
+        // Crash window: final checkpoint written, orchestrator killed
+        // before mark_complete. The re-claimed point has zero steps
+        // left, so the gym reports NaN — the journal must fall back to
+        // the ledger's last step loss instead of recording null.
+        let store = tmp_store("nan-recovery");
+        let pts = points();
+        for (c, _) in &pts {
+            let dir = store.run_dir(&c.fingerprint_hex());
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(
+                dir.join("metrics.jsonl"),
+                "{\"kind\":\"step\",\"step\":0,\"loss\":3.5}\n{\"kind\":\"step\",\"step\":1,\"loss\":2.25}\n",
+            )
+            .unwrap();
+        }
+        let runner = |_c: &Config, _d: &Path| -> Result<f64> { Ok(f64::NAN) };
+        let outcomes = run_sweep(
+            &store,
+            &pts,
+            &SchedulerConfig { jobs: 2, retries: 0 },
+            &runner,
+        )
+        .unwrap();
+        assert!(outcomes.iter().all(|o| o.state == RunState::Complete));
+        assert!(outcomes.iter().all(|o| o.final_loss == Some(2.25)), "{outcomes:?}");
+    }
+
+    #[test]
+    fn exec_config_injects_seed_run_dir_and_resume() {
+        let store = tmp_store("exec-cfg");
+        let src = "\
+settings:
+  seed: 9
+components:
+  trainer:
+    component_key: gym
+    variant_key: spmd
+    config:
+      steps: 2
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let fp = cfg.fingerprint_hex();
+        let exec = exec_config(&cfg, &fp, &store);
+        // Derived seed differs from the base but is deterministic.
+        let seed = exec.i64("settings.seed").unwrap();
+        assert_ne!(seed, 9);
+        assert_eq!(seed, exec_config(&cfg, &fp, &store).i64("settings.seed").unwrap());
+        assert_eq!(
+            exec.str("components.trainer.config.run_dir").unwrap(),
+            store.run_dir(&fp).display().to_string()
+        );
+        assert!(exec.bool_or("components.trainer.config.resume", false).unwrap());
+    }
+}

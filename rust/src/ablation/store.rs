@@ -1,0 +1,392 @@
+//! Experiment store: one run directory per sweep point, identified by
+//! the point config's fingerprint, with an **atomic state journal**
+//! (`state.json`, written tmp-then-rename) tracking the point through
+//! `pending → running → complete | failed`.
+//!
+//! The journal is the crash-resume substrate: an orchestrator that dies
+//! mid-sweep leaves its in-flight points journaled as `running`; the
+//! next invocation observes that no process owns them (the store is
+//! single-orchestrator by design) and re-claims them, while `complete`
+//! points are skipped. Each run directory also holds the point's
+//! self-contained config snapshot (`config.point.yaml`), the gym's
+//! resolved-config provenance record, its `metrics.jsonl` ledger and
+//! any sharded checkpoints — everything the report engine and a human
+//! need to audit the experiment.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Lifecycle state of one sweep point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    Pending,
+    Running,
+    Complete,
+    Failed,
+}
+
+impl RunState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunState::Pending => "pending",
+            RunState::Running => "running",
+            RunState::Complete => "complete",
+            RunState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RunState> {
+        Ok(match s {
+            "pending" => RunState::Pending,
+            "running" => RunState::Running,
+            "complete" => RunState::Complete,
+            "failed" => RunState::Failed,
+            other => bail!("unknown run state '{other}' in journal"),
+        })
+    }
+}
+
+impl std::fmt::Display for RunState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One journaled sweep point.
+#[derive(Clone, Debug)]
+pub struct RunEntry {
+    /// Point config fingerprint (hex) — the run directory name.
+    pub fingerprint: String,
+    /// Human-readable point label (`lr=0.001,hidden=128`).
+    pub label: String,
+    /// Sweep assignments as `(axis path, rendered value)` — the report
+    /// engine's marginal-mean grouping key.
+    pub assignments: Vec<(String, String)>,
+    pub state: RunState,
+    /// Times this point has been claimed for execution.
+    pub attempts: u64,
+    /// Last failure message, if any.
+    pub error: Option<String>,
+    /// Final loss journaled on completion.
+    pub final_loss: Option<f64>,
+}
+
+impl RunEntry {
+    fn to_json(&self) -> Json {
+        let mut assigns = Json::obj();
+        for (k, v) in &self.assignments {
+            assigns.set(k, Json::Str(v.clone()));
+        }
+        Json::from_pairs(vec![
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("label", Json::Str(self.label.clone())),
+            ("assignments", assigns),
+            ("state", Json::Str(self.state.as_str().to_string())),
+            ("attempts", Json::Num(self.attempts as f64)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "final_loss",
+                match self.final_loss {
+                    Some(l) => Json::Num(l),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<RunEntry> {
+        let str_field = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(|n| n.as_str())
+                .map(String::from)
+                .with_context(|| format!("journal missing string field '{k}'"))
+        };
+        let mut assignments = Vec::new();
+        if let Some(obj) = v.get("assignments").and_then(|a| a.as_obj()) {
+            for (k, val) in obj {
+                assignments
+                    .push((k.clone(), val.as_str().unwrap_or_default().to_string()));
+            }
+        }
+        Ok(RunEntry {
+            fingerprint: str_field("fingerprint")?,
+            label: str_field("label")?,
+            assignments,
+            state: RunState::parse(&str_field("state")?)?,
+            attempts: v.get("attempts").and_then(|n| n.as_i64()).unwrap_or(0) as u64,
+            error: v.get("error").and_then(|n| n.as_str()).map(String::from),
+            final_loss: v.get("final_loss").and_then(|n| n.as_f64()),
+        })
+    }
+}
+
+/// The on-disk store rooted at one sweep's run root.
+pub struct ExperimentStore {
+    root: PathBuf,
+}
+
+impl ExperimentStore {
+    /// Open (creating if needed) the store at `root`.
+    pub fn open(root: &Path) -> Result<ExperimentStore> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating sweep run root {}", root.display()))?;
+        Ok(ExperimentStore { root: root.to_path_buf() })
+    }
+
+    /// Open an existing store without creating anything — the
+    /// read-only commands (`sweep status`/`sweep report`) use this so
+    /// a query against a sweep that never ran errors instead of
+    /// littering an empty run root.
+    pub fn open_existing(root: &Path) -> Result<ExperimentStore> {
+        if !root.is_dir() {
+            bail!(
+                "no experiment store at {} (run `modalities sweep run` first)",
+                root.display()
+            );
+        }
+        Ok(ExperimentStore { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Run directory for one point.
+    pub fn run_dir(&self, fingerprint: &str) -> PathBuf {
+        self.root.join(fingerprint)
+    }
+
+    fn state_path(&self, fingerprint: &str) -> PathBuf {
+        self.run_dir(fingerprint).join("state.json")
+    }
+
+    /// Register a point: create its run dir, snapshot its standalone
+    /// config and journal it `pending` — unless a journal already
+    /// exists, in which case the current entry is returned untouched
+    /// (this is what makes `run` after a crash resume instead of
+    /// restarting).
+    pub fn ensure(
+        &self,
+        fingerprint: &str,
+        label: &str,
+        assignments: &[(String, String)],
+        config_yaml: &str,
+    ) -> Result<RunEntry> {
+        let dir = self.run_dir(fingerprint);
+        std::fs::create_dir_all(&dir)?;
+        let snapshot = dir.join("config.point.yaml");
+        if !snapshot.exists() {
+            std::fs::write(&snapshot, config_yaml)
+                .with_context(|| format!("writing {}", snapshot.display()))?;
+        }
+        if self.state_path(fingerprint).exists() {
+            return self.load(fingerprint);
+        }
+        let entry = RunEntry {
+            fingerprint: fingerprint.to_string(),
+            label: label.to_string(),
+            assignments: assignments.to_vec(),
+            state: RunState::Pending,
+            attempts: 0,
+            error: None,
+            final_loss: None,
+        };
+        self.write(&entry)?;
+        Ok(entry)
+    }
+
+    /// Load one journal entry.
+    pub fn load(&self, fingerprint: &str) -> Result<RunEntry> {
+        let path = self.state_path(fingerprint);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        RunEntry::from_json(&v).with_context(|| format!("decoding {}", path.display()))
+    }
+
+    /// Atomically persist a journal entry (tmp file + rename, so a
+    /// crash can never leave a torn `state.json` behind).
+    pub fn write(&self, entry: &RunEntry) -> Result<()> {
+        let dir = self.run_dir(&entry.fingerprint);
+        std::fs::create_dir_all(&dir)?;
+        let tmp = dir.join("state.json.tmp");
+        std::fs::write(&tmp, entry.to_json().dumps_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, dir.join("state.json"))
+            .with_context(|| format!("committing journal in {}", dir.display()))?;
+        Ok(())
+    }
+
+    /// Claim a point for execution: `pending`, stale `running` and
+    /// retryable `failed` entries transition to `running` with the
+    /// attempt counter bumped. Claiming a `complete` point is an error —
+    /// callers must skip those.
+    pub fn claim(&self, fingerprint: &str) -> Result<RunEntry> {
+        let mut e = self.load(fingerprint)?;
+        if e.state == RunState::Complete {
+            bail!("point {fingerprint} is already complete");
+        }
+        e.state = RunState::Running;
+        e.attempts += 1;
+        e.error = None;
+        self.write(&e)?;
+        Ok(e)
+    }
+
+    /// Journal successful completion.
+    pub fn mark_complete(&self, fingerprint: &str, final_loss: f64) -> Result<RunEntry> {
+        let mut e = self.load(fingerprint)?;
+        e.state = RunState::Complete;
+        e.error = None;
+        e.final_loss = Some(final_loss);
+        self.write(&e)?;
+        Ok(e)
+    }
+
+    /// Journal failure.
+    pub fn mark_failed(&self, fingerprint: &str, error: &str) -> Result<RunEntry> {
+        let mut e = self.load(fingerprint)?;
+        e.state = RunState::Failed;
+        e.error = Some(error.to_string());
+        self.write(&e)?;
+        Ok(e)
+    }
+
+    /// All journaled entries, sorted by fingerprint (deterministic).
+    pub fn entries(&self) -> Result<Vec<RunEntry>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(&self.root)
+            .with_context(|| format!("scanning {}", self.root.display()))?
+            .flatten()
+        {
+            if e.path().join("state.json").exists() {
+                out.push(self.load(&e.file_name().to_string_lossy())?);
+            }
+        }
+        out.sort_by(|a, b| a.fingerprint.cmp(&b.fingerprint));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> ExperimentStore {
+        let d = std::env::temp_dir().join("modalities-ablation-store").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        ExperimentStore::open(&d).unwrap()
+    }
+
+    fn assigns() -> Vec<(String, String)> {
+        vec![("optimizer.lr".to_string(), "0.001".to_string())]
+    }
+
+    #[test]
+    fn journal_roundtrip_through_lifecycle() {
+        let s = tmp_store("lifecycle");
+        let e = s.ensure("abc123", "lr=0.001", &assigns(), "a: 1\n").unwrap();
+        assert_eq!(e.state, RunState::Pending);
+        assert_eq!(e.attempts, 0);
+        assert!(s.run_dir("abc123").join("config.point.yaml").exists());
+
+        let e = s.claim("abc123").unwrap();
+        assert_eq!(e.state, RunState::Running);
+        assert_eq!(e.attempts, 1);
+
+        let e = s.mark_complete("abc123", 2.5).unwrap();
+        assert_eq!(e.state, RunState::Complete);
+        assert_eq!(e.final_loss, Some(2.5));
+
+        let loaded = s.load("abc123").unwrap();
+        assert_eq!(loaded.state, RunState::Complete);
+        assert_eq!(loaded.label, "lr=0.001");
+        assert_eq!(loaded.assignments, assigns());
+    }
+
+    #[test]
+    fn ensure_is_idempotent_and_preserves_progress() {
+        let s = tmp_store("idempotent");
+        s.ensure("p1", "l", &assigns(), "a: 1\n").unwrap();
+        s.claim("p1").unwrap();
+        s.mark_complete("p1", 1.0).unwrap();
+        // Re-registering the same point (a re-run of `sweep run`) must
+        // not reset its journal.
+        let e = s.ensure("p1", "l", &assigns(), "a: 1\n").unwrap();
+        assert_eq!(e.state, RunState::Complete);
+        assert_eq!(e.attempts, 1);
+    }
+
+    #[test]
+    fn claim_rejects_complete_and_reclaims_stale_running() {
+        let s = tmp_store("claims");
+        s.ensure("done", "d", &[], "a: 1\n").unwrap();
+        s.claim("done").unwrap();
+        s.mark_complete("done", 0.5).unwrap();
+        assert!(s.claim("done").is_err());
+
+        // A crash leaves `running` behind; the next claim re-owns it.
+        s.ensure("stale", "s", &[], "a: 1\n").unwrap();
+        s.claim("stale").unwrap();
+        let e = s.claim("stale").unwrap();
+        assert_eq!(e.state, RunState::Running);
+        assert_eq!(e.attempts, 2);
+    }
+
+    #[test]
+    fn failed_journals_error_and_is_retryable() {
+        let s = tmp_store("failed");
+        s.ensure("p", "l", &[], "a: 1\n").unwrap();
+        s.claim("p").unwrap();
+        s.mark_failed("p", "boom").unwrap();
+        let e = s.load("p").unwrap();
+        assert_eq!(e.state, RunState::Failed);
+        assert_eq!(e.error.as_deref(), Some("boom"));
+        // Retry clears the error.
+        let e = s.claim("p").unwrap();
+        assert_eq!(e.attempts, 2);
+        assert!(e.error.is_none());
+    }
+
+    #[test]
+    fn open_existing_refuses_missing_root() {
+        let d = std::env::temp_dir().join("modalities-ablation-store").join("missing");
+        let _ = std::fs::remove_dir_all(&d);
+        let e = ExperimentStore::open_existing(&d);
+        assert!(e.unwrap_err().to_string().contains("no experiment store"));
+        assert!(!d.exists(), "query must not create the root");
+        // After a real open() it succeeds.
+        ExperimentStore::open(&d).unwrap();
+        assert!(ExperimentStore::open_existing(&d).is_ok());
+    }
+
+    #[test]
+    fn entries_sorted_and_complete() {
+        let s = tmp_store("entries");
+        for fp in ["bbb", "aaa", "ccc"] {
+            s.ensure(fp, fp, &[], "a: 1\n").unwrap();
+        }
+        let es = s.entries().unwrap();
+        let fps: Vec<&str> = es.iter().map(|e| e.fingerprint.as_str()).collect();
+        assert_eq!(fps, vec!["aaa", "bbb", "ccc"]);
+    }
+
+    #[test]
+    fn torn_write_is_impossible_via_tmp_rename() {
+        let s = tmp_store("atomic");
+        s.ensure("p", "l", &[], "a: 1\n").unwrap();
+        // The tmp file never survives a successful write.
+        assert!(!s.run_dir("p").join("state.json.tmp").exists());
+        // A leftover tmp from a crashed writer is ignored by load().
+        std::fs::write(s.run_dir("p").join("state.json.tmp"), "{garbage").unwrap();
+        assert_eq!(s.load("p").unwrap().state, RunState::Pending);
+    }
+}

@@ -18,11 +18,13 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-/// Option keys that take a value.
+/// Option keys that take a value. Every `--key <value>` option
+/// documented in [`usage`] must appear here — a unit test below parses
+/// the usage text and fails if a new option silently becomes a flag.
 const VALUE_KEYS: &[&str] = &[
     "config", "out", "from", "to", "corpus", "vocab", "workers", "docs", "model", "steps",
     "world", "prompt", "ckpt", "run-dir", "seq-len", "batch-docs", "merges", "seed",
-    "mean-words", "unit-mb",
+    "mean-words", "unit-mb", "jobs", "filter", "report",
 ];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -78,18 +80,22 @@ pub fn usage() -> &'static str {
 
 USAGE:
   modalities train      --config <yaml> [--set path=value ...] [--resume]
-  modalities sweep      --config <yaml> [--dry-run] [--set ...]
-  modalities data gen   --out <jsonl> [--docs N] [--mean-words N] [--seed N]
+  modalities sweep      --config <yaml> [--filter <substr>]   # plan: list expanded points
+  modalities sweep run    --config <yaml> [--jobs <n>] [--filter <substr>] [--set ...]
+  modalities sweep resume --config <yaml> [--jobs <n>]  # finish unfinished points only
+  modalities sweep status --config <yaml>               # experiment store state table
+  modalities sweep report --config <yaml> [--report <md>]  # aggregate + write report
+  modalities data gen   --out <jsonl> [--docs <n>] [--mean-words <n>] [--seed <n>]
   modalities data index --corpus <jsonl>
-  modalities data train-vocab --corpus <jsonl> --out <bpe> [--merges N]
-  modalities data tokenize --corpus <jsonl> --vocab <bpe> --out <mmtok> [--workers N]
+  modalities data train-vocab --corpus <jsonl> --out <bpe> [--merges <n>]
+  modalities data tokenize --corpus <jsonl> --vocab <bpe> --out <mmtok> [--workers <n>]
   modalities data info  --corpus <mmtok>
   modalities convert    --from <ckpt_dir> --to <out.mckpt>
   modalities generate   --config <yaml> --ckpt <mckpt> --prompt <text>
   modalities components                     # list registered components
   modalities docs       [--out <md>]        # generate docs/config_reference.md
   modalities config resolve --config <yaml> # print interpolated config
-  modalities tune       --world N [--model llama3_8b]
+  modalities tune       --world <n> [--model <name>]
   modalities trace pp   [--set stages=4] [--set micros=16]
   modalities version
 "
@@ -118,6 +124,47 @@ mod tests {
     fn missing_value_is_error() {
         assert!(parse(["--config".to_string()]).is_err());
         assert!(parse(["--set".to_string()]).is_err());
+    }
+
+    /// Drift guard: every `--key <value>` option documented in the
+    /// usage text must be listed in [`VALUE_KEYS`], otherwise the
+    /// parser silently treats it as a bare flag and swallows nothing
+    /// (`--jobs 2` would leave `2` as a positional).
+    #[test]
+    fn every_documented_value_option_is_a_value_key() {
+        let tokens: Vec<&str> = usage().split_whitespace().collect();
+        let mut checked = 0;
+        for w in tokens.windows(2) {
+            let t = w[0].trim_start_matches('[');
+            let Some(key) = t.strip_prefix("--") else { continue };
+            let key = key.trim_end_matches(']');
+            // `--key <value>`: the next token names a value placeholder.
+            if !w[1].starts_with('<') || key == "set" {
+                continue;
+            }
+            assert!(
+                VALUE_KEYS.contains(&key),
+                "usage documents '--{key} <...>' but VALUE_KEYS is missing '{key}'"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 15, "usage scan only found {checked} value options");
+        // The sweep-orchestrator options are present explicitly.
+        for key in ["jobs", "filter", "report"] {
+            assert!(VALUE_KEYS.contains(&key), "missing '{key}'");
+        }
+    }
+
+    #[test]
+    fn sweep_subcommand_options_parse() {
+        let a = p(&[
+            "sweep", "run", "--config", "c.yaml", "--jobs", "4", "--filter", "lr=",
+        ]);
+        assert_eq!(a.positional, vec!["sweep", "run"]);
+        assert_eq!(a.opt_usize("jobs", 1).unwrap(), 4);
+        assert_eq!(a.opt("filter"), Some("lr="));
+        let r = p(&["sweep", "report", "--config", "c.yaml", "--report", "out.md"]);
+        assert_eq!(r.opt("report"), Some("out.md"));
     }
 
     #[test]

@@ -152,19 +152,28 @@ impl Config {
             .ok_or_else(|| anyhow!("override must be 'path=value', got '{assignment}'"))?;
         let value_doc = yaml::parse(raw.trim())
             .map_err(|e| anyhow!("override value for '{path}': {e}"))?;
-        let mut cur = &mut self.root;
+        self.set_node(path, value_doc);
+        Ok(())
+    }
+
+    /// Set `path` to an explicit node, creating intermediate mappings.
+    /// Unlike [`Config::set_override`] the value is *not* re-parsed as
+    /// YAML — callers that already hold typed values (the sweep
+    /// orchestrator injecting run dirs and derived seeds) use this to
+    /// avoid scalar re-interpretation.
+    pub fn set_node(&mut self, path: &str, v: Node) {
         let segs: Vec<&str> = path.split('.').collect();
+        let mut cur = &mut self.root;
         for (i, seg) in segs.iter().enumerate() {
             if i + 1 == segs.len() {
-                cur.set(seg, value_doc);
-                break;
+                cur.set(seg, v);
+                return;
             }
             if cur.get(seg).is_none() || !matches!(cur.get(seg).unwrap().value, Value::Map(_)) {
                 cur.set(seg, Node::new(Value::Map(vec![]), 0));
             }
             cur = cur.get_mut(seg).unwrap();
         }
-        Ok(())
     }
 
     /// Serialize the resolved config (debugging / provenance: written

@@ -32,10 +32,36 @@ pub struct SweepPoint {
 }
 
 impl SweepPoint {
+    /// Human-readable point label. Each assignment is rendered as
+    /// `name=value` where `name` is the *shortest unique path suffix*
+    /// among this point's axes: `optimizer.lr` alone renders as `lr`,
+    /// but alongside `scheduler.lr` both keep their qualifying segment
+    /// so two axes sharing a leaf name can never collide.
     pub fn label(&self) -> String {
+        let paths: Vec<Vec<&str>> = self
+            .assignments
+            .iter()
+            .map(|(p, _)| p.split('.').collect())
+            .collect();
         self.assignments
             .iter()
-            .map(|(p, v)| format!("{}={}", p.rsplit('.').next().unwrap_or(p), v.value))
+            .enumerate()
+            .map(|(i, (_, v))| {
+                let segs = &paths[i];
+                let mut take = 1;
+                while take < segs.len() {
+                    let suffix = &segs[segs.len() - take..];
+                    let collides = paths
+                        .iter()
+                        .enumerate()
+                        .any(|(j, other)| j != i && other.ends_with(suffix));
+                    if !collides {
+                        break;
+                    }
+                    take += 1;
+                }
+                format!("{}={}", segs[segs.len() - take..].join("."), v.value)
+            })
             .collect::<Vec<_>>()
             .join(",")
     }
@@ -90,9 +116,16 @@ pub fn expand_sweep(cfg: &Config) -> Result<Vec<(Config, SweepPoint)>> {
         points = next;
     }
 
-    // Includes / excludes.
+    // Includes / excludes. Their paths get the same existence check as
+    // axes — a typo'd include must not silently schedule a mislabeled
+    // duplicate of the base config.
     let parse_point_map = |n: &Node| -> Result<Vec<(String, Node)>> {
         let m = n.as_map().context("sweep include/exclude entries must be mappings")?;
+        for (k, _) in m {
+            if cfg.root.at_path(k).is_none() {
+                bail!("sweep include/exclude path '{k}' does not exist in the base config");
+            }
+        }
         Ok(m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
     };
     if let Some(inc) = sweep.get("include").and_then(|n| n.as_seq()) {
@@ -112,16 +145,27 @@ pub fn expand_sweep(cfg: &Config) -> Result<Vec<(Config, SweepPoint)>> {
         });
     }
 
-    // Materialize configs.
-    let mut out = Vec::with_capacity(points.len());
+    // Materialize configs, deduping on the *materialized* experiment
+    // (fingerprint before the provenance record is injected): an
+    // `include` restating a grid point — or a partial include whose
+    // unassigned axes equal the base values — must not schedule the
+    // same effective experiment twice.
+    let mut out: Vec<(Config, SweepPoint)> = Vec::with_capacity(points.len());
+    let mut seen = std::collections::BTreeSet::new();
     for assignments in points {
         let mut c = cfg.clone();
-        // Drop the sweep section: each point is a plain experiment.
+        // Drop the sweep section and the orchestrator's `ablation:`
+        // knobs: each point is a plain experiment, and its fingerprint
+        // is the sweep store's identity key — editing jobs/retries
+        // between `run` and `resume` must not re-key every point.
         if let Value::Map(m) = &mut c.root.value {
-            m.retain(|(k, _)| k != "sweep");
+            m.retain(|(k, _)| k != "sweep" && k != "ablation");
         }
         for (path, v) in &assignments {
-            set_path(&mut c.root, path, v.clone());
+            c.set_node(path, v.clone());
+        }
+        if !seen.insert(c.fingerprint()) {
+            continue;
         }
         // Provenance record.
         let mut point_map = Node::new(Value::Map(vec![]), 0);
@@ -135,21 +179,6 @@ pub fn expand_sweep(cfg: &Config) -> Result<Vec<(Config, SweepPoint)>> {
         out.push((c, SweepPoint { assignments }));
     }
     Ok(out)
-}
-
-fn set_path(root: &mut Node, path: &str, v: Node) {
-    let segs: Vec<&str> = path.split('.').collect();
-    let mut cur = root;
-    for (i, seg) in segs.iter().enumerate() {
-        if i + 1 == segs.len() {
-            cur.set(seg, v);
-            return;
-        }
-        if cur.get(seg).is_none() {
-            cur.set(seg, Node::new(Value::Map(vec![]), 0));
-        }
-        cur = cur.get_mut(seg).unwrap();
-    }
 }
 
 #[cfg(test)]
@@ -220,10 +249,151 @@ sweep:
     }
 
     #[test]
+    fn typo_include_path_rejected() {
+        let src = format!("{BASE}  include:\n    - {{optimzer.lr: 0.01}}\n");
+        let e = expand_sweep(&Config::from_str_named(&src, "<t>").unwrap());
+        let msg = e.unwrap_err().to_string();
+        assert!(msg.contains("include/exclude path 'optimzer.lr'"), "{msg}");
+    }
+
+    #[test]
     fn typo_axis_path_rejected() {
         let src = "model:\n  h: 1\nsweep:\n  axes:\n    - path: model.hdden\n      values: [1]\n";
         let e = expand_sweep(&Config::from_str_named(src, "<t>").unwrap());
         assert!(e.unwrap_err().to_string().contains("does not exist"));
+    }
+
+    #[test]
+    fn label_disambiguates_shared_leaf_names() {
+        // Two axes whose paths share the leaf `lr` must not both render
+        // as `lr=…`; each keeps its shortest unique suffix.
+        let src = "\
+optimizer:
+  lr: 1e-3
+scheduler:
+  lr: 1e-2
+sweep:
+  axes:
+    - path: optimizer.lr
+      values: [1e-3]
+    - path: scheduler.lr
+      values: [1e-2]
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 1);
+        let label = pts[0].1.label();
+        assert_eq!(label, "optimizer.lr=0.001,scheduler.lr=0.01");
+    }
+
+    #[test]
+    fn label_keeps_short_leaf_when_unique() {
+        let cfg = Config::from_str_named(BASE, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        // Leaves `lr` and `hidden_dim` are unique — no qualification.
+        assert!(pts[0].1.label().starts_with("lr="));
+        assert!(pts[0].1.label().contains(",hidden_dim="));
+    }
+
+    #[test]
+    fn label_handles_suffix_nested_paths() {
+        // One axis path being a suffix of another still yields distinct
+        // labels (`lr` vs the fully-qualified `optimizer.lr`).
+        let src = "\
+lr: 1
+optimizer:
+  lr: 2
+sweep:
+  axes:
+    - path: lr
+      values: [1]
+    - path: optimizer.lr
+      values: [2]
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts[0].1.label(), "lr=1,optimizer.lr=2");
+    }
+
+    #[test]
+    fn include_duplicating_grid_point_deduped() {
+        let src = format!(
+            "{BASE}  include:\n    - {{optimizer.lr: 1e-3, model.hidden_dim: 64}}\n"
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        // The include restates grid point (1e-3, 64): still 6 points,
+        // and every fingerprint is unique.
+        assert_eq!(pts.len(), 6);
+        let mut fps: Vec<u64> = pts.iter().map(|(c, _)| c.fingerprint()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 6);
+    }
+
+    #[test]
+    fn partial_include_matching_base_values_deduped() {
+        // The include assigns only lr; hidden_dim falls back to the
+        // base value 64, making it the same *effective* experiment as
+        // grid point (1e-3, 64) — dedup must catch that too.
+        let src = format!(
+            "{BASE}  include:\n    - {{optimizer.lr: 1e-3}}\n"
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 6, "partial include duplicating a grid point must dedup");
+    }
+
+    #[test]
+    fn exclude_removes_an_include() {
+        let src = format!(
+            "{BASE}  include:\n    - {{optimizer.lr: 5e-4}}\n  exclude:\n    - {{optimizer.lr: 5e-4}}\n"
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        // 6 grid + 1 include - the include excluded again = 6.
+        assert_eq!(pts.len(), 6);
+        assert!(!pts.iter().any(|(c, _)| c.f64("optimizer.lr").unwrap() == 5e-4));
+    }
+
+    #[test]
+    fn empty_axes_list_expands_to_base_point() {
+        let src = "a: 1\nsweep:\n  axes: []\n";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].1.assignments.is_empty());
+        // The point is still standalone: no sweep section survives.
+        assert!(pts[0].0.opt("sweep").is_none());
+    }
+
+    #[test]
+    fn orchestrator_knobs_do_not_rekey_points() {
+        // Same sweep, different `ablation:` settings: point fingerprints
+        // (the experiment-store keys) must be identical, or a
+        // tweak-retries-then-resume would re-run every complete point.
+        let a = format!("{BASE}ablation:\n  retries: 0\n");
+        let b = format!("{BASE}ablation:\n  retries: 3\n");
+        let pa = expand_sweep(&Config::from_str_named(&a, "<t>").unwrap()).unwrap();
+        let pb = expand_sweep(&Config::from_str_named(&b, "<t>").unwrap()).unwrap();
+        let fa: Vec<u64> = pa.iter().map(|(c, _)| c.fingerprint()).collect();
+        let fb: Vec<u64> = pb.iter().map(|(c, _)| c.fingerprint()).collect();
+        assert_eq!(fa, fb);
+        assert!(pa[0].0.opt("ablation").is_none(), "points must not carry ablation knobs");
+    }
+
+    #[test]
+    fn single_axis_sweep() {
+        let src = "opt:\n  lr: 1\nsweep:\n  axes:\n    - path: opt.lr\n      values: [1, 2, 3]\n";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let pts = expand_sweep(&cfg).unwrap();
+        assert_eq!(pts.len(), 3);
+        let lrs: Vec<f64> = pts.iter().map(|(c, _)| c.f64("opt.lr").unwrap()).collect();
+        assert_eq!(lrs, vec![1.0, 2.0, 3.0]);
+        for (_, p) in &pts {
+            assert_eq!(p.assignments.len(), 1);
+            assert!(p.label().starts_with("lr="));
+        }
     }
 
     #[test]

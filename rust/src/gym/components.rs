@@ -282,6 +282,17 @@ impl ObjectGraph {
     /// Find the (single) gym component and turn the graph into a
     /// runnable [`Gym`] with default subscribers.
     pub fn into_gym(&self) -> Result<Gym> {
+        self.build_gym(true)
+    }
+
+    /// [`Self::into_gym`] without the console subscriber — used by the
+    /// sweep orchestrator, whose workers run points concurrently and
+    /// keep only the JSONL metrics ledger per run directory.
+    pub fn into_gym_quiet(&self) -> Result<Gym> {
+        self.build_gym(false)
+    }
+
+    fn build_gym(&self, console: bool) -> Result<Gym> {
         let gyms = self.of_interface("gym");
         let (name, comp) = match gyms.as_slice() {
             [] => bail!("config defines no 'gym' component"),
@@ -317,7 +328,7 @@ impl ObjectGraph {
             config_yaml: self.config.to_yaml(),
             resume: seed.resume,
         };
-        Gym::new(spec).with_default_subscribers()
+        Gym::new(spec).with_standard_subscribers(console)
     }
 }
 

@@ -102,12 +102,27 @@ impl Gym {
 
     /// Default observability: console every `log_every` + JSONL metrics
     /// in the run dir.
-    pub fn with_default_subscribers(mut self) -> Result<Self> {
+    pub fn with_default_subscribers(self) -> Result<Self> {
+        self.with_standard_subscribers(true)
+    }
+
+    /// Standard sinks with the console optionally muted — the sweep
+    /// orchestrator runs many points concurrently and wants only the
+    /// per-point `metrics.jsonl` ledger, not interleaved step lines.
+    /// A run that will actually resume from a checkpoint appends to
+    /// its ledger so the pre-crash step history survives.
+    pub fn with_standard_subscribers(mut self, console: bool) -> Result<Self> {
         std::fs::create_dir_all(&self.spec.run_dir)?;
-        let console = subscribers::ConsoleSubscriber::new(self.spec.log_every);
-        let jsonl =
-            subscribers::JsonlSubscriber::create(&self.spec.run_dir.join("metrics.jsonl"))?;
-        self.subscribers.push(Box::new(console));
+        if console {
+            let c = subscribers::ConsoleSubscriber::new(self.spec.log_every);
+            self.subscribers.push(Box::new(c));
+        }
+        let resuming =
+            self.spec.resume && checkpoint::latest_checkpoint(&self.spec.run_dir).is_some();
+        let jsonl = subscribers::JsonlSubscriber::create_or_append(
+            &self.spec.run_dir.join("metrics.jsonl"),
+            resuming,
+        )?;
         self.subscribers.push(Box::new(jsonl));
         Ok(self)
     }

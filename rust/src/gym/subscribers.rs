@@ -80,7 +80,21 @@ pub struct JsonlSubscriber {
 
 impl JsonlSubscriber {
     pub fn create(path: &Path) -> Result<Self> {
-        Ok(Self { out: std::io::BufWriter::new(std::fs::File::create(path)?) })
+        Self::create_or_append(path, false)
+    }
+
+    /// With `append` the existing ledger is extended instead of
+    /// truncated — a resumed run keeps its pre-crash step history (the
+    /// ledger is an event log: a crash between checkpoint and kill can
+    /// leave a few step records that the resumed run re-emits; readers
+    /// aggregate by min/last, so duplicates are benign).
+    pub fn create_or_append(path: &Path, append: bool) -> Result<Self> {
+        let file = if append {
+            std::fs::OpenOptions::new().create(true).append(true).open(path)?
+        } else {
+            std::fs::File::create(path)?
+        };
+        Ok(Self { out: std::io::BufWriter::new(file) })
     }
 }
 

@@ -36,6 +36,7 @@
 //! gym.run().unwrap();
 //! ```
 
+pub mod ablation;
 pub mod checkpoint;
 pub mod cli;
 pub mod config;

@@ -82,25 +82,134 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fingerprints of the config's current sweep expansion, or `None`
+/// when it no longer expands (status/report must still work then).
+fn current_fingerprints(cfg: &Config) -> Option<std::collections::BTreeSet<String>> {
+    modalities::config::expand_sweep(cfg)
+        .ok()
+        .map(|pts| pts.iter().map(|(c, _)| c.fingerprint_hex()).collect())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use modalities::ablation::{self, ExperimentStore, OrchestratorSpec, SchedulerConfig};
+
+    let action = match args.positional.get(1).map(|s| s.as_str()) {
+        None => "plan",
+        Some(a @ ("run" | "resume" | "status" | "report" | "plan")) => a,
+        Some(other) => bail!("unknown sweep subcommand '{other}'\n{}", cli::usage()),
+    };
     let cfg = load_config(args)?;
-    let points = modalities::config::expand_sweep(&cfg)?;
-    println!("sweep expands to {} experiments", points.len());
-    let reg = ComponentRegistry::with_builtins();
-    for (i, (c, p)) in points.iter().enumerate() {
-        let label = if p.assignments.is_empty() { "base".to_string() } else { p.label() };
-        println!("--- [{}/{}] {label} (config {})", i + 1, points.len(), c.fingerprint_hex());
-        if args.has_flag("dry-run") {
-            continue;
+    let mut spec = OrchestratorSpec::from_config(&cfg)?;
+    spec.jobs = args.opt_usize("jobs", spec.jobs)?.max(1);
+    let root = spec.resolve_root(&cfg);
+
+    // `status`/`report` only read the store — they must keep working
+    // even if the sweep section no longer expands (e.g. after edits).
+    let expand_filtered = || -> Result<Vec<(Config, modalities::config::SweepPoint)>> {
+        let mut points = modalities::config::expand_sweep(&cfg)?;
+        if let Some(filter) = args.opt("filter") {
+            points.retain(|(_, p)| p.label().contains(filter));
+            if points.is_empty() {
+                bail!("--filter '{filter}' matches no sweep point");
+            }
         }
-        let mut c = c.clone();
-        // Give each point its own run dir.
-        let run_dir = format!("runs/sweep/{}", c.fingerprint_hex());
-        c.set_override(&format!("components.trainer.config.run_dir={run_dir}"))?;
-        let graph = ObjectGraphBuilder::new(&reg).build(&c)?;
-        let mut gym = graph.into_gym()?;
-        let summary = gym.run()?;
-        println!("    final loss {:.4}", summary.final_loss);
+        Ok(points)
+    };
+
+    match action {
+        "plan" => {
+            let points = expand_filtered()?;
+            println!("sweep expands to {} experiments (store: {})", points.len(), root.display());
+            for (i, (c, p)) in points.iter().enumerate() {
+                let label =
+                    if p.assignments.is_empty() { "base".to_string() } else { p.label() };
+                println!("  [{}/{}] {label} ({})", i + 1, points.len(), c.fingerprint_hex());
+            }
+        }
+        "run" | "resume" => {
+            let points = expand_filtered()?;
+            let store = ExperimentStore::open(&root)?;
+            println!(
+                "sweep {}: {} points on {} workers (store: {})",
+                action,
+                points.len(),
+                spec.jobs,
+                root.display()
+            );
+            let scfg = SchedulerConfig { jobs: spec.jobs, retries: spec.retries };
+            let runner = |c: &Config, _dir: &std::path::Path| -> Result<f64> {
+                let reg = ComponentRegistry::with_builtins();
+                let graph = ObjectGraphBuilder::new(&reg).build(c)?;
+                let mut gym = graph.into_gym_quiet()?;
+                Ok(gym.run()?.final_loss as f64)
+            };
+            let outcomes = ablation::run_sweep(&store, &points, &scfg, &runner)?;
+            let complete = outcomes
+                .iter()
+                .filter(|o| o.state == ablation::RunState::Complete)
+                .count();
+            let skipped = outcomes.iter().filter(|o| o.skipped).count();
+            println!(
+                "sweep {action} done: {complete}/{} complete ({skipped} already finished)",
+                outcomes.len()
+            );
+            let failed: Vec<&ablation::PointOutcome> = outcomes
+                .iter()
+                .filter(|o| o.state == ablation::RunState::Failed)
+                .collect();
+            if !failed.is_empty() {
+                for o in &failed {
+                    eprintln!("  failed: {} ({} attempts)", o.label, o.attempts);
+                }
+                bail!("{} of {} sweep points failed", failed.len(), outcomes.len());
+            }
+        }
+        "status" => {
+            let store = ExperimentStore::open_existing(&root)?;
+            let entries = store.entries()?;
+            let current = current_fingerprints(&cfg);
+            println!("store {} — {} journaled points", root.display(), entries.len());
+            println!("{:<40} {:>9} {:>8} {:>11}", "point", "state", "attempts", "final loss");
+            for e in &entries {
+                let stale = current
+                    .as_ref()
+                    .map(|c| !c.contains(&e.fingerprint))
+                    .unwrap_or(false);
+                println!(
+                    "{:<40} {:>9} {:>8} {:>11}{}",
+                    e.label,
+                    e.state.as_str(),
+                    e.attempts,
+                    e.final_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+                    if stale { "  (stale: not in current sweep)" } else { "" }
+                );
+            }
+        }
+        "report" => {
+            let store = ExperimentStore::open_existing(&root)?;
+            let mut report = ablation::collect(&store)?;
+            // A pinned run_root can accumulate points from earlier
+            // versions of the sweep; scope the comparison to the
+            // current expansion so stale entries don't pollute it.
+            if let Some(current) = current_fingerprints(&cfg) {
+                let before = report.points.len();
+                report.points.retain(|p| current.contains(&p.fingerprint));
+                let stale = before - report.points.len();
+                if stale > 0 {
+                    eprintln!(
+                        "note: excluded {stale} stale point(s) not in the current sweep"
+                    );
+                }
+            }
+            let (md_path, json_path) = report.write(&store)?;
+            if let Some(out) = args.opt("report") {
+                std::fs::write(out, report.to_markdown())
+                    .with_context(|| format!("writing {out}"))?;
+            }
+            print!("{}", report.to_markdown());
+            println!("\nwrote {} and {}", md_path.display(), json_path.display());
+        }
+        _ => unreachable!(),
     }
     Ok(())
 }

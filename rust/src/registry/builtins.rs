@@ -18,4 +18,5 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::checkpoint::components::register(reg).expect("checkpoint builtins");
     crate::perfmodel::components::register(reg).expect("perfmodel builtins");
     crate::runtime::components::register(reg).expect("runtime builtins");
+    crate::ablation::components::register(reg).expect("ablation builtins");
 }

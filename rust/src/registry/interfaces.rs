@@ -1,14 +1,16 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares our 32 interfaces;
-//! the registry refuses registrations against undeclared interfaces,
-//! which is what makes config validation *interface-level*: a reference
-//! site knows which interface it expects, and the object-graph builder
-//! can flag a mismatched component before any training starts.
+//! 32 pre-defined interfaces". This module declares those 32 plus one
+//! of our own (`ablation`, the sweep orchestrator — the layer the paper
+//! says everyone hand-rolls); the registry refuses registrations
+//! against undeclared interfaces, which is what makes config validation
+//! *interface-level*: a reference site knows which interface it
+//! expects, and the object-graph builder can flag a mismatched
+//! component before any training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 32] = [
+pub const INTERFACES: [&str; 33] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -48,6 +50,7 @@ pub const INTERFACES: [&str; 32] = [
     "runtime",               // PJRT execution backends
     "generation",            // greedy/sampling text generation
     "number_conversion",     // token/step/sample count conversions
+    "ablation",              // sweep orchestration (store/scheduler/report)
 ];
 
 /// Is `name` a declared interface?
@@ -60,8 +63,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn exactly_32_interfaces() {
-        assert_eq!(INTERFACES.len(), 32);
+    fn paper_interfaces_plus_ablation() {
+        // The paper's 32 interfaces plus our sweep-orchestration one.
+        assert_eq!(INTERFACES.len(), 33);
+        assert!(interface_exists("ablation"));
     }
 
     #[test]
@@ -69,7 +74,7 @@ mod tests {
         let mut v = INTERFACES.to_vec();
         v.sort_unstable();
         v.dedup();
-        assert_eq!(v.len(), 32);
+        assert_eq!(v.len(), INTERFACES.len());
     }
 
     #[test]

@@ -309,12 +309,19 @@ fn emit(node: &Node, indent: usize, out: &mut String, inline_first: bool) {
 }
 
 /// Parse error with line context.
-#[derive(Debug, thiserror::Error)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {

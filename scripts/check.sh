@@ -17,4 +17,7 @@ echo "==> docs/config_reference.md matches the registry"
 cargo run --release --quiet -- docs
 git diff --exit-code docs/config_reference.md
 
+echo "==> sweep orchestrator smoke (skips without artifacts)"
+scripts/sweep_smoke.sh
+
 echo "OK"

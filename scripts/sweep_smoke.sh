@@ -1,0 +1,111 @@
+#!/usr/bin/env bash
+# Sweep-orchestrator smoke test (`make sweep-smoke`): runs a tiny
+# 2x2 grid with --jobs 2, asserts every point reaches `complete`, and
+# asserts `sweep report` output is byte-stable across two invocations.
+# Skips (exit 0) when the AOT artifacts are absent, mirroring the
+# tier-1 integration tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f artifacts/manifest.json ]; then
+  echo "sweep-smoke: skipping (no AOT artifacts — run 'make artifacts' first)"
+  exit 0
+fi
+
+ROOT="$(mktemp -d)"
+trap 'rm -rf "$ROOT"' EXIT
+CFG="$ROOT/smoke.yaml"
+cat > "$CFG" <<EOF
+settings:
+  seed: 13
+  run_name: sweep-smoke
+ablation:
+  retries: 0
+  run_root: $ROOT/store
+sweep:
+  axes:
+    - path: components.opt.config.lr
+      values: [3e-3, 1e-3]
+    - path: components.parallel.config.unit_size_mb
+      values: [0.25, 1.0]
+components:
+  train_ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 512, seq_len: 32, num_samples: 256, noise: 0.02}
+  train_sampler:
+    component_key: sampler
+    variant_key: shuffled
+    config: {dataset: {instance_key: train_ds}}
+  loader:
+    component_key: dataloader
+    variant_key: default
+    config:
+      dataset: {instance_key: train_ds}
+      sampler: {instance_key: train_sampler}
+      batch_size: 4
+  net:
+    component_key: model
+    variant_key: decoder_lm
+    config: {model_name: nano, artifact_dir: artifacts}
+  opt:
+    component_key: optimizer
+    variant_key: adamw
+    config: {lr: 1e-3}
+  parallel:
+    component_key: parallel_strategy
+    variant_key: fsdp
+    config: {dp_degree: 2, unit_size_mb: 0.25}
+  ckpt:
+    component_key: checkpointing
+    variant_key: interval
+    config: {every_steps: 2, keep_last: 1}
+  trainer:
+    component_key: gym
+    variant_key: spmd
+    config:
+      model: {instance_key: net}
+      dataloader: {instance_key: loader}
+      optimizer: {instance_key: opt}
+      parallel: {instance_key: parallel}
+      checkpointing: {instance_key: ckpt}
+      steps: 4
+      log_every: 1000
+EOF
+
+run() { cargo run --release --quiet -- "$@"; }
+
+echo "==> sweep run (4 points, --jobs 2)"
+run sweep run --config "$CFG" --jobs 2
+
+echo "==> all points journaled complete"
+n_complete="$(run sweep status --config "$CFG" | grep -c ' complete ' || true)"
+if [ "$n_complete" -ne 4 ]; then
+  echo "sweep-smoke: expected 4 complete points, got $n_complete" >&2
+  run sweep status --config "$CFG" >&2
+  exit 1
+fi
+
+echo "==> resume on a finished sweep is a no-op"
+# (plain grep, not -q: -q exits at first match and the resulting
+# SIGPIPE would fail the pipeline under pipefail)
+run sweep resume --config "$CFG" | grep '(4 already finished)' > /dev/null || {
+  echo "sweep-smoke: resume re-ran finished points" >&2
+  exit 1
+}
+
+echo "==> report byte-stable across two invocations"
+run sweep report --config "$CFG" > /dev/null
+cp "$ROOT/store/report.md" "$ROOT/report.first.md"
+cp "$ROOT/store/report.json" "$ROOT/report.first.json"
+run sweep report --config "$CFG" > /dev/null
+cmp -s "$ROOT/store/report.md" "$ROOT/report.first.md" || {
+  echo "sweep-smoke: report.md not byte-stable" >&2
+  exit 1
+}
+cmp -s "$ROOT/store/report.json" "$ROOT/report.first.json" || {
+  echo "sweep-smoke: report.json not byte-stable" >&2
+  exit 1
+}
+
+echo "sweep-smoke: OK (4/4 complete, resume idempotent, report byte-stable)"
