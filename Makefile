@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke
+.PHONY: artifacts build test check sweep-smoke serve-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -19,3 +19,9 @@ check:
 # sweep report is byte-stable. Skips when artifacts are missing.
 sweep-smoke:
 	scripts/sweep_smoke.sh
+
+# 8 requests through a B=4 continuous-batching engine on the synthetic
+# provider: asserts all complete + byte-stable eval report. Needs no
+# artifacts.
+serve-smoke:
+	scripts/serve_smoke.sh

@@ -24,7 +24,8 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "config", "out", "from", "to", "corpus", "vocab", "workers", "docs", "model", "steps",
     "world", "prompt", "ckpt", "run-dir", "seq-len", "batch-docs", "merges", "seed",
-    "mean-words", "unit-mb", "jobs", "filter", "report",
+    "mean-words", "unit-mb", "jobs", "filter", "report", "max-new", "temperature", "top-k",
+    "top-p", "requests", "batches",
 ];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -66,6 +67,15 @@ impl Args {
         }
     }
 
+    pub fn opt_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{key} must be a number, got '{v}'"))
+            }
+        }
+    }
+
     pub fn has_flag(&self, f: &str) -> bool {
         self.flags.iter().any(|x| x == f)
     }
@@ -91,7 +101,10 @@ USAGE:
   modalities data tokenize --corpus <jsonl> --vocab <bpe> --out <mmtok> [--workers <n>]
   modalities data info  --corpus <mmtok>
   modalities convert    --from <ckpt_dir> --to <out.mckpt>
-  modalities generate   --config <yaml> --ckpt <mckpt> --prompt <text>
+  modalities generate   --config <yaml> --prompt <ids> [--ckpt <mckpt>] [--max-new <n>]
+                        [--temperature <t>] [--top-k <k>] [--top-p <p>] [--seed <n>]
+  modalities serve      --config <yaml> [--requests <file>] [--prompt <ids>] [--synthetic]
+  modalities eval       --config <yaml> [--batches <n>] [--report <md>] [--synthetic]
   modalities components                     # list registered components
   modalities docs       [--out <md>]        # generate docs/config_reference.md
   modalities config resolve --config <yaml> # print interpolated config
@@ -149,10 +162,32 @@ mod tests {
             checked += 1;
         }
         assert!(checked >= 15, "usage scan only found {checked} value options");
-        // The sweep-orchestrator options are present explicitly.
-        for key in ["jobs", "filter", "report"] {
+        // The sweep-orchestrator and serve-subsystem options are
+        // present explicitly.
+        for key in
+            ["jobs", "filter", "report", "max-new", "temperature", "top-k", "top-p", "requests", "batches"]
+        {
             assert!(VALUE_KEYS.contains(&key), "missing '{key}'");
         }
+    }
+
+    #[test]
+    fn generate_sampling_options_parse() {
+        let a = p(&[
+            "generate", "--config", "c.yaml", "--prompt", "1,2,3", "--max-new", "8",
+            "--temperature", "0.8", "--top-k", "40", "--top-p", "0.95",
+        ]);
+        assert_eq!(a.opt("prompt"), Some("1,2,3"));
+        assert_eq!(a.opt_usize("max-new", 32).unwrap(), 8);
+        assert_eq!(a.opt_f32("temperature", 0.0).unwrap(), 0.8);
+        assert_eq!(a.opt_usize("top-k", 0).unwrap(), 40);
+        assert_eq!(a.opt_f32("top-p", 1.0).unwrap(), 0.95);
+        assert_eq!(a.opt_f32("temperature", 0.5).unwrap(), 0.8);
+        assert!(p(&["x", "--top-p", "hot"]).opt_f32("top-p", 1.0).is_err());
+        let e = p(&["serve", "--config", "c.yaml", "--synthetic"]);
+        assert!(e.has_flag("synthetic"));
+        let v = p(&["eval", "--config", "c.yaml", "--batches", "4"]);
+        assert_eq!(v.opt_usize("batches", 8).unwrap(), 4);
     }
 
     #[test]

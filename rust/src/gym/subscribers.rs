@@ -55,7 +55,9 @@ impl Subscriber for ConsoleSubscriber {
     }
 
     fn on_eval(&mut self, step: u64, loss: f32) {
-        println!("step {step:>6}  [eval] loss {loss:.4}");
+        // Perplexity = exp(mean loss): same unit `modalities eval`
+        // reports, so training-time and standalone eval are comparable.
+        println!("step {step:>6}  [eval] loss {loss:.4}  ppl {:.2}", (loss as f64).exp());
     }
 
     fn on_end(&mut self, s: &super::RunSummary, comm: &CommStats) {
@@ -118,6 +120,7 @@ impl Subscriber for JsonlSubscriber {
             ("kind", "eval".into()),
             ("step", (step as i64).into()),
             ("loss", (loss as f64).into()),
+            ("ppl", (loss as f64).exp().into()),
         ]);
         let _ = writeln!(self.out, "{}", rec.dumps());
     }
@@ -187,5 +190,8 @@ mod tests {
         assert_eq!(v.get("loss").unwrap().as_f64(), Some(2.5));
         let e = Json::parse(lines[1]).unwrap();
         assert_eq!(e.get("kind").unwrap().as_str(), Some("eval"));
+        // Eval records carry perplexity = exp(loss) alongside raw loss.
+        let ppl = e.get("ppl").unwrap().as_f64().unwrap();
+        assert!((ppl - (2.4f32 as f64).exp()).abs() < 1e-9, "ppl={ppl}");
     }
 }

@@ -50,6 +50,7 @@ pub mod perfmodel;
 pub mod pipeline;
 pub mod registry;
 pub mod runtime;
+pub mod serve;
 pub mod tp;
 pub mod util;
 pub mod yaml;

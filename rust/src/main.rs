@@ -40,6 +40,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "data" => cmd_data(&args),
         "convert" => cmd_convert(&args),
         "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
         "components" => cmd_components(),
         "docs" => cmd_docs(&args),
         "config" => cmd_config(&args),
@@ -318,33 +320,208 @@ fn cmd_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    use modalities::model::{greedy_generate, InitScheme, ModelSpec};
-    use modalities::runtime::pjrt::PjrtEngine;
-    let cfg = load_config(args)?;
-    let model_name = cfg.str_or("components.net.config.model_name", "nano");
-    let artifact_dir = cfg.str_or("components.net.config.artifact_dir", "artifacts");
-    let engine = PjrtEngine::cpu()?;
+/// Parse a comma-separated token-id prompt (framework-level interface;
+/// text round-trips go through `data train-vocab` + the tokenizer API).
+fn parse_prompt(text: &str) -> Result<Vec<u32>> {
+    text.split(',')
+        .map(|t| t.trim().parse::<u32>().context("prompt must be comma-separated token ids"))
+        .collect()
+}
+
+/// Materialize the config's model (`components.net`) for inference,
+/// optionally warm-starting from a consolidated checkpoint.
+fn materialize_for_inference(
+    args: &Args,
+    cfg: &Config,
+    engine: &modalities::runtime::pjrt::PjrtEngine,
+) -> Result<(modalities::model::LmModel, modalities::model::ParamStore)> {
+    use modalities::model::{InitScheme, ModelSpec};
     let spec = ModelSpec {
-        artifact_dir: artifact_dir.into(),
-        model_name,
+        artifact_dir: cfg.str_or("components.net.config.artifact_dir", "artifacts").into(),
+        model_name: cfg.str_or("components.net.config.model_name", "nano"),
         init: InitScheme::ScaledNormal,
         seed: 0,
     };
-    let (model, mut params) = spec.materialize(&engine)?;
+    let (model, mut params) = spec.materialize(engine)?;
     if let Some(ckpt) = args.opt("ckpt") {
         let cons = checkpoint::load_consolidated(Path::new(ckpt))?;
         checkpoint::warm_start_params(&mut params, &cons)?;
     }
-    // Prompt: comma-separated token ids (framework-level demo; text
-    // round-trips go through `data train-vocab` + the tokenizer API).
-    let prompt: Vec<u32> = args
-        .need("prompt")?
-        .split(',')
-        .map(|t| t.trim().parse::<u32>().context("prompt must be comma-separated token ids"))
-        .collect::<Result<_>>()?;
-    let out = greedy_generate(&engine, &model, &params, &prompt, 32)?;
+    Ok((model, params))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use modalities::runtime::pjrt::PjrtEngine;
+    use modalities::serve::{generate_one, ModelLogitsProvider, SamplingParams, ServeSpec};
+    let cfg = load_config(args)?;
+    let spec = ServeSpec::from_config(&cfg)?;
+    let engine = PjrtEngine::cpu()?;
+    let (model, params) = materialize_for_inference(args, &cfg, &engine)?;
+    let prompt = parse_prompt(args.need("prompt")?)?;
+    let max_new = args.opt_usize("max-new", spec.max_new_tokens)?;
+    let sampling = SamplingParams {
+        temperature: args.opt_f32("temperature", spec.temperature)?,
+        top_k: args.opt_usize("top-k", spec.top_k)?,
+        top_p: args.opt_f32("top-p", spec.top_p)?,
+        seed: args.opt_usize("seed", spec.seed as usize)? as u64,
+    };
+    let mut provider = ModelLogitsProvider { engine: &engine, model: &model, params: &params };
+    let out = generate_one(&mut provider, &prompt, max_new, sampling, spec.eos_token)?;
     println!("{out:?}");
+    Ok(())
+}
+
+/// Gather the serve workload. CLI flags override the config:
+/// `--requests <file>` (one comma-separated prompt per line, `#`
+/// comments) or a single `--prompt` win over the config's
+/// `serve.requests` list. A present-but-mistyped `serve.requests` is
+/// an error, never silently ignored.
+fn serve_prompts(args: &Args, cfg: &Config) -> Result<Vec<Vec<u32>>> {
+    let mut prompts = Vec::new();
+    if let Some(path) = args.opt("requests") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        for line in text.lines().map(str::trim) {
+            if !line.is_empty() && !line.starts_with('#') {
+                prompts.push(parse_prompt(line)?);
+            }
+        }
+    } else if let Some(p) = args.opt("prompt") {
+        prompts.push(parse_prompt(p)?);
+    } else if cfg.opt("serve.requests").is_some() {
+        for n in cfg.seq("serve.requests")? {
+            let s = n
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("serve.requests entries must be strings"))?;
+            prompts.push(parse_prompt(s)?);
+        }
+    }
+    if prompts.is_empty() {
+        bail!("no requests: provide serve.requests in the config, --requests <file>, or --prompt");
+    }
+    Ok(prompts)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use modalities::runtime::pjrt::PjrtEngine;
+    use modalities::serve::{
+        BatchedEngine, LogitsProvider, ModelLogitsProvider, Request, ServeSpec,
+    };
+    let cfg = load_config(args)?;
+    let spec = ServeSpec::from_config(&cfg)?;
+    let prompts = serve_prompts(args, &cfg)?;
+
+    let drive = |provider: &mut dyn LogitsProvider, label: &str| -> Result<()> {
+        println!(
+            "serve: {} requests through a B={} continuous-batching engine \
+             (S={}, V={}, queue={}, {label})",
+            prompts.len(),
+            provider.batch_size(),
+            provider.seq_len(),
+            provider.vocab_size(),
+            spec.queue_capacity,
+        );
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                prompt: p.clone(),
+                max_new: spec.max_new_tokens,
+                sampling: spec.sampling_for(i as u64),
+                deadline_steps: spec.deadline_steps,
+            })
+            .collect();
+        let mut engine = BatchedEngine::new(provider, spec.engine_config())?;
+        let timer = modalities::util::stats::Timer::start();
+        let mut next = 0usize;
+        while next < reqs.len() || !engine.is_idle() {
+            while next < reqs.len() {
+                match engine.try_submit(reqs[next].clone())? {
+                    Some(_) => next += 1,
+                    None => break, // bounded queue full: decode a step first
+                }
+            }
+            engine.step()?;
+        }
+        let done = engine.run_until_idle()?;
+        let elapsed = timer.elapsed_s();
+        for c in &done {
+            let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
+            println!(
+                "[req {}] finish={} prompt {} + {} tokens: {}",
+                c.id,
+                c.finish,
+                c.prompt_len,
+                c.generated().len(),
+                toks.join(",")
+            );
+        }
+        let s = engine.stats;
+        println!(
+            "serve done: {}/{} complete, {} forwards, {} tokens generated, \
+             mean occupancy {:.2}, peak {}, {}",
+            s.completed,
+            reqs.len(),
+            s.forwards,
+            s.tokens_generated,
+            s.mean_occupancy(),
+            s.peak_active,
+            human::rate(s.tokens_generated as f64 / elapsed.max(1e-9), "tok"),
+        );
+        Ok(())
+    };
+
+    if args.has_flag("synthetic") {
+        let mut provider = spec.synthetic_provider(None);
+        drive(&mut provider, "synthetic provider")
+    } else {
+        let engine = PjrtEngine::cpu()?;
+        let (model, params) = materialize_for_inference(args, &cfg, &engine)?;
+        let mut provider =
+            ModelLogitsProvider { engine: &engine, model: &model, params: &params };
+        drive(&mut provider, "fwd artifact")
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    use modalities::data::components::DataLoaderComponent;
+    use modalities::runtime::pjrt::PjrtEngine;
+    use modalities::serve::{evaluate_loader, ModelLogitsProvider, ServeSpec};
+    let cfg = load_config(args)?;
+    let spec = ServeSpec::from_config(&cfg)?;
+    let reg = ComponentRegistry::with_builtins();
+    let graph = ObjectGraphBuilder::new(&reg).build(&cfg).context("building object graph")?;
+    let loader = match &spec.eval_loader {
+        Some(name) => graph.get::<DataLoaderComponent>(name)?.loader.clone(),
+        None => {
+            let dls = graph.of_interface("dataloader");
+            match dls.as_slice() {
+                [(_, one)] => one.downcast::<DataLoaderComponent>()?.loader.clone(),
+                [] => bail!("config defines no 'dataloader' component to evaluate"),
+                many => bail!(
+                    "config defines {} dataloaders ({}); set serve.eval_loader to pick one",
+                    many.len(),
+                    many.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                ),
+            }
+        }
+    };
+    let batches = args.opt_usize("batches", spec.eval_batches)?;
+    let report = if args.has_flag("synthetic") {
+        let mut provider = spec.synthetic_provider(Some(loader.dataset.seq_len()));
+        evaluate_loader(&mut provider, &loader, batches)?
+    } else {
+        let engine = PjrtEngine::cpu()?;
+        let (model, params) = materialize_for_inference(args, &cfg, &engine)?;
+        let mut provider =
+            ModelLogitsProvider { engine: &engine, model: &model, params: &params };
+        evaluate_loader(&mut provider, &loader, batches)?
+    };
+    let (md_path, json_path) = report.write(&spec.report_dir)?;
+    if let Some(out) = args.opt("report") {
+        std::fs::write(out, report.to_markdown()).with_context(|| format!("writing {out}"))?;
+    }
+    print!("{}", report.to_markdown());
+    println!("\nwrote {} and {}", md_path.display(), json_path.display());
     Ok(())
 }
 

@@ -286,11 +286,13 @@ impl LmModel {
     }
 }
 
-/// Greedy autoregressive generation using the `fwd` artifact (batch
-/// row 0). The artifact has static [B, S] shape: the prompt occupies a
-/// prefix, padding fills the rest, and we read the logits at the last
-/// prompt position each iteration — O(n · fwd) but artifact-only (no
-/// incremental KV cache variant is exported yet).
+/// Greedy autoregressive generation using the `fwd` artifact — a thin
+/// wrapper over the batched serving engine ([`crate::serve`]): one
+/// request on batch row 0, greedy sampling, same static-shape
+/// semantics as before (the result is capped at the artifact's
+/// `seq_len`). Batch-parallel workloads should drive
+/// [`crate::serve::BatchedEngine`] directly, which keeps all `B` rows
+/// busy with one shared forward per decode step.
 pub fn greedy_generate(
     engine: &PjrtEngine,
     model: &LmModel,
@@ -298,30 +300,14 @@ pub fn greedy_generate(
     prompt: &[u32],
     max_new: usize,
 ) -> Result<Vec<u32>> {
-    let arts = &model.arts;
-    let (b, s, v) = (arts.batch_size, arts.seq_len, arts.vocab_size);
-    if prompt.is_empty() || prompt.len() >= s {
-        bail!("prompt length must be in [1, {})", s);
-    }
-    let mut seq: Vec<u32> = prompt.to_vec();
-    for _ in 0..max_new {
-        if seq.len() >= s {
-            break;
-        }
-        let mut tokens = vec![0u32; b * s];
-        tokens[..seq.len()].copy_from_slice(&seq);
-        let logits = model.forward(engine, params, &tokens)?;
-        let pos = seq.len() - 1;
-        let row = &logits[pos * v..(pos + 1) * v];
-        let mut best = 0usize;
-        for (i, &x) in row.iter().enumerate() {
-            if x > row[best] {
-                best = i;
-            }
-        }
-        seq.push(best as u32);
-    }
-    Ok(seq)
+    let mut provider = crate::serve::ModelLogitsProvider { engine, model, params };
+    crate::serve::generate_one(
+        &mut provider,
+        prompt,
+        max_new,
+        crate::serve::SamplingParams::greedy(),
+        None,
+    )
 }
 
 #[cfg(test)]

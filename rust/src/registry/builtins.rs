@@ -19,4 +19,5 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::perfmodel::components::register(reg).expect("perfmodel builtins");
     crate::runtime::components::register(reg).expect("runtime builtins");
     crate::ablation::components::register(reg).expect("ablation builtins");
+    crate::serve::components::register(reg).expect("serve builtins");
 }

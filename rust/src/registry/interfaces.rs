@@ -1,16 +1,17 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares those 32 plus one
+//! 32 pre-defined interfaces". This module declares those 32 plus two
 //! of our own (`ablation`, the sweep orchestrator — the layer the paper
-//! says everyone hand-rolls); the registry refuses registrations
-//! against undeclared interfaces, which is what makes config validation
-//! *interface-level*: a reference site knows which interface it
-//! expects, and the object-graph builder can flag a mismatched
-//! component before any training starts.
+//! says everyone hand-rolls — and `serve`, the batched inference
+//! engine); the registry refuses registrations against undeclared
+//! interfaces, which is what makes config validation *interface-level*:
+//! a reference site knows which interface it expects, and the
+//! object-graph builder can flag a mismatched component before any
+//! training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 33] = [
+pub const INTERFACES: [&str; 34] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -51,6 +52,7 @@ pub const INTERFACES: [&str; 33] = [
     "generation",            // greedy/sampling text generation
     "number_conversion",     // token/step/sample count conversions
     "ablation",              // sweep orchestration (store/scheduler/report)
+    "serve",                 // batched inference engine + eval harness
 ];
 
 /// Is `name` a declared interface?
@@ -63,10 +65,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn paper_interfaces_plus_ablation() {
-        // The paper's 32 interfaces plus our sweep-orchestration one.
-        assert_eq!(INTERFACES.len(), 33);
+    fn paper_interfaces_plus_ours() {
+        // The paper's 32 interfaces plus our sweep-orchestration and
+        // batched-inference ones.
+        assert_eq!(INTERFACES.len(), 34);
         assert!(interface_exists("ablation"));
+        assert!(interface_exists("serve"));
     }
 
     #[test]

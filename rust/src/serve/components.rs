@@ -1,0 +1,291 @@
+//! Registry wiring for the serve subsystem.
+//!
+//! Like the ablation orchestrator, the engine is configured two ways,
+//! both landing in a [`ServeSpec`]:
+//!
+//! * the top-level `serve:` section of a config (the normal path —
+//!   `modalities serve` / `modalities eval` read it via
+//!   [`ServeSpec::from_config`], CLI flags override per invocation);
+//! * a `serve/batched_engine` component definition under `components:`
+//!   for configs that resolve everything through the object graph.
+//!
+//! The spec is pure data: PJRT handles are not `Send`, so the live
+//! engine is assembled on the execution thread from the spec plus a
+//! [`super::LogitsProvider`].
+
+use super::engine::{EngineConfig, SyntheticLogits};
+use super::sampling::SamplingParams;
+use crate::config::Config;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Resolved serving settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// Bounded admission queue capacity.
+    pub queue_capacity: usize,
+    /// Default per-request decode budget.
+    pub max_new_tokens: usize,
+    /// Token that terminates generation when emitted.
+    pub eos_token: Option<u32>,
+    /// Default per-request decode-step deadline.
+    pub deadline_steps: Option<u64>,
+    /// Sampling defaults (`0.0` temperature = greedy).
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    /// Base seed; request `i` samples from stream `seed + i`.
+    pub seed: u64,
+    /// Batches scored by `modalities eval`.
+    pub eval_batches: usize,
+    /// Dataloader instance scored by `modalities eval`; `None` uses
+    /// the config's only dataloader.
+    pub eval_loader: Option<String>,
+    /// Where eval reports land.
+    pub report_dir: PathBuf,
+    /// Artifact-free provider geometry (`--synthetic`); `seq_len` also
+    /// serves as the synthetic grid length for `modalities serve`.
+    pub synthetic_batch: usize,
+    pub synthetic_seq_len: usize,
+    pub synthetic_vocab: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            queue_capacity: 64,
+            max_new_tokens: 32,
+            eos_token: None,
+            deadline_steps: None,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            eval_batches: 8,
+            eval_loader: None,
+            report_dir: PathBuf::from("runs/serve"),
+            synthetic_batch: 4,
+            synthetic_seq_len: 32,
+            synthetic_vocab: 64,
+        }
+    }
+}
+
+/// Optional non-negative integer at `path`; present-but-mistyped is an
+/// error, absent is `None`.
+fn opt_usize(cfg: &Config, path: &str) -> Result<Option<usize>> {
+    match cfg.opt(path) {
+        None => Ok(None),
+        Some(n) => match n.as_usize() {
+            Some(v) => Ok(Some(v)),
+            None => bail!("{}: '{path}' must be a non-negative integer", cfg.source),
+        },
+    }
+}
+
+impl ServeSpec {
+    /// Read the top-level `serve:` section (all fields optional).
+    pub fn from_config(cfg: &Config) -> Result<ServeSpec> {
+        let d = ServeSpec::default();
+        Ok(ServeSpec {
+            queue_capacity: cfg.usize_or("serve.queue_capacity", d.queue_capacity)?.max(1),
+            max_new_tokens: cfg.usize_or("serve.max_new_tokens", d.max_new_tokens)?.max(1),
+            eos_token: opt_usize(cfg, "serve.eos_token")?.map(|v| v as u32),
+            deadline_steps: opt_usize(cfg, "serve.deadline_steps")?.map(|v| v as u64),
+            temperature: cfg.f64_or("serve.temperature", d.temperature as f64)? as f32,
+            top_k: cfg.usize_or("serve.top_k", d.top_k)?,
+            top_p: cfg.f64_or("serve.top_p", d.top_p as f64)? as f32,
+            seed: cfg.usize_or("serve.seed", d.seed as usize)? as u64,
+            eval_batches: cfg.usize_or("serve.eval_batches", d.eval_batches)?.max(1),
+            eval_loader: match cfg.opt("serve.eval_loader") {
+                None => None,
+                Some(n) => Some(
+                    n.as_str()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "{}: 'serve.eval_loader' must be a string",
+                                cfg.source
+                            )
+                        })?
+                        .to_string(),
+                ),
+            },
+            report_dir: PathBuf::from(
+                cfg.str_or("serve.report_dir", &d.report_dir.display().to_string()),
+            ),
+            synthetic_batch: cfg.usize_or("serve.synthetic_batch", d.synthetic_batch)?.max(1),
+            synthetic_seq_len: cfg
+                .usize_or("serve.synthetic_seq_len", d.synthetic_seq_len)?
+                .max(2),
+            synthetic_vocab: cfg.usize_or("serve.synthetic_vocab", d.synthetic_vocab)?.max(2),
+        })
+    }
+
+    /// Sampling defaults for request `index` (per-request stream seeds
+    /// stay distinct and reproducible).
+    pub fn sampling_for(&self, index: u64) -> SamplingParams {
+        SamplingParams {
+            temperature: self.temperature,
+            top_k: self.top_k,
+            top_p: self.top_p,
+            seed: self.seed.wrapping_add(index),
+        }
+    }
+
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig { eos_token: self.eos_token, queue_capacity: self.queue_capacity }
+    }
+
+    /// Artifact-free provider with the spec's synthetic geometry;
+    /// `seq_len` overrides the grid length (eval matches the dataset).
+    pub fn synthetic_provider(&self, seq_len: Option<usize>) -> SyntheticLogits {
+        SyntheticLogits {
+            batch: self.synthetic_batch,
+            seq: seq_len.unwrap_or(self.synthetic_seq_len),
+            vocab: self.synthetic_vocab,
+        }
+    }
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("serve", "batched_engine", |ctx, cfg| {
+        let d = ServeSpec::default();
+        let eos = match cfg.get("eos_token") {
+            None => None,
+            Some(n) if n.is_null() => None,
+            Some(n) => Some(n.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("'eos_token' must be a non-negative integer")
+            })? as u32),
+        };
+        let deadline = ctx.usize_or(cfg, "deadline_steps", 0)?;
+        let eval_loader = {
+            let s = ctx.str_or(cfg, "eval_loader", "");
+            if s.is_empty() { None } else { Some(s) }
+        };
+        Ok(Component::new(
+            "serve",
+            "batched_engine",
+            ServeSpec {
+                queue_capacity: ctx.usize_or(cfg, "queue_capacity", d.queue_capacity)?.max(1),
+                max_new_tokens: ctx.usize_or(cfg, "max_new_tokens", d.max_new_tokens)?.max(1),
+                eos_token: eos,
+                deadline_steps: if deadline == 0 { None } else { Some(deadline as u64) },
+                temperature: ctx.f32_or(cfg, "temperature", d.temperature)?,
+                top_k: ctx.usize_or(cfg, "top_k", d.top_k)?,
+                top_p: ctx.f32_or(cfg, "top_p", d.top_p)?,
+                seed: ctx.usize_or(cfg, "seed", d.seed as usize)? as u64,
+                eval_batches: ctx.usize_or(cfg, "eval_batches", d.eval_batches)?.max(1),
+                eval_loader,
+                report_dir: PathBuf::from(
+                    ctx.str_or(cfg, "report_dir", &d.report_dir.display().to_string()),
+                ),
+                synthetic_batch: ctx.usize_or(cfg, "synthetic_batch", d.synthetic_batch)?.max(1),
+                synthetic_seq_len: ctx
+                    .usize_or(cfg, "synthetic_seq_len", d.synthetic_seq_len)?
+                    .max(2),
+                synthetic_vocab: ctx.usize_or(cfg, "synthetic_vocab", d.synthetic_vocab)?.max(2),
+            },
+        ))
+    })?;
+    reg.describe(
+        "serve",
+        "batched_engine",
+        "Slot-based continuous-batching inference engine + batched eval harness: up to B concurrent requests on artifact batch rows, one shared forward per decode step, finished sequences swapped for queued ones between steps (`modalities serve` / `modalities eval`). Also configurable via the top-level `serve:` section.",
+        &[
+            ("queue_capacity", "int", "64", "bounded admission queue capacity"),
+            ("max_new_tokens", "int", "32", "default per-request decode budget"),
+            ("eos_token", "int", "none", "token that terminates generation when emitted"),
+            ("deadline_steps", "int", "none (0 = off)", "per-request decode-step deadline"),
+            ("temperature", "float", "0 (greedy)", "softmax temperature"),
+            ("top_k", "int", "0 (off)", "keep only the k highest-logit tokens"),
+            ("top_p", "float", "1.0 (off)", "nucleus sampling cumulative-mass cutoff"),
+            ("seed", "int", "0", "base sampling seed (request i uses seed + i)"),
+            ("eval_batches", "int", "8", "batches scored by `modalities eval`"),
+            ("eval_loader", "string", "the only dataloader", "dataloader instance to score"),
+            ("report_dir", "string", "runs/serve", "where eval reports are written"),
+            ("synthetic_batch", "int", "4", "artifact-free provider slots (`--synthetic`)"),
+            ("synthetic_seq_len", "int", "32", "artifact-free provider grid length"),
+            ("synthetic_vocab", "int", "64", "artifact-free provider vocabulary"),
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn from_config_defaults_and_overrides() {
+        let cfg = Config::from_str_named("a: 1\n", "<t>").unwrap();
+        assert_eq!(ServeSpec::from_config(&cfg).unwrap(), ServeSpec::default());
+
+        let cfg = Config::from_str_named(
+            "serve:\n  queue_capacity: 8\n  max_new_tokens: 12\n  eos_token: 5\n  \
+             deadline_steps: 20\n  temperature: 0.7\n  top_k: 40\n  top_p: 0.95\n  \
+             seed: 13\n  eval_batches: 4\n  eval_loader: eval_loader\n  \
+             report_dir: /tmp/sv\n  synthetic_vocab: 128\n",
+            "<t>",
+        )
+        .unwrap();
+        let s = ServeSpec::from_config(&cfg).unwrap();
+        assert_eq!(s.queue_capacity, 8);
+        assert_eq!(s.max_new_tokens, 12);
+        assert_eq!(s.eos_token, Some(5));
+        assert_eq!(s.deadline_steps, Some(20));
+        assert!((s.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(s.top_k, 40);
+        assert!((s.top_p - 0.95).abs() < 1e-6);
+        assert_eq!(s.seed, 13);
+        assert_eq!(s.eval_batches, 4);
+        assert_eq!(s.eval_loader.as_deref(), Some("eval_loader"));
+        assert_eq!(s.report_dir, PathBuf::from("/tmp/sv"));
+        assert_eq!(s.synthetic_vocab, 128);
+    }
+
+    #[test]
+    fn mistyped_optional_field_is_an_error() {
+        let cfg = Config::from_str_named("serve:\n  eos_token: stop\n", "<t>").unwrap();
+        assert!(ServeSpec::from_config(&cfg).is_err());
+        let cfg = Config::from_str_named("serve:\n  eval_loader:\n    - a\n", "<t>").unwrap();
+        assert!(ServeSpec::from_config(&cfg).is_err(), "non-string eval_loader must error");
+    }
+
+    #[test]
+    fn per_request_seeds_are_distinct() {
+        let s = ServeSpec { seed: 100, ..ServeSpec::default() };
+        assert_eq!(s.sampling_for(0).seed, 100);
+        assert_eq!(s.sampling_for(3).seed, 103);
+        assert_eq!(s.engine_config().queue_capacity, s.queue_capacity);
+    }
+
+    #[test]
+    fn synthetic_provider_geometry() {
+        let s = ServeSpec::default();
+        let p = s.synthetic_provider(None);
+        assert_eq!((p.batch, p.seq, p.vocab), (4, 32, 64));
+        assert_eq!(s.synthetic_provider(Some(16)).seq, 16, "eval matches the dataset");
+    }
+
+    #[test]
+    fn engine_spec_resolves_through_the_object_graph() {
+        let src = "\
+components:
+  srv:
+    component_key: serve
+    variant_key: batched_engine
+    config: {queue_capacity: 3, max_new_tokens: 9, eos_token: 2, temperature: 0.5}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let spec = g.get::<ServeSpec>("srv").unwrap();
+        assert_eq!(spec.queue_capacity, 3);
+        assert_eq!(spec.max_new_tokens, 9);
+        assert_eq!(spec.eos_token, Some(2));
+        assert!((spec.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(spec.deadline_steps, None);
+    }
+}

@@ -1,0 +1,292 @@
+//! Evaluation harness: per-token logprobs and corpus perplexity
+//! through the **same shared batched forward** the generation engine
+//! uses — `modalities eval` and the gym's training-time eval hook
+//! therefore report the same unit (mean NLL in nats/token, perplexity
+//! = `exp(mean NLL)`).
+//!
+//! A dataloader's batches are packed onto the provider's `B` grid rows
+//! in groups (one forward per group), each target token is scored with
+//! the full log-softmax ([`super::sampling::log_prob`]), and the
+//! aggregates land in an [`EvalReport`] rendered as Markdown + JSON.
+//! Determinism is a contract, exactly as for `ablation::report`: fixed
+//! float formats, no timestamps or rates — re-rendering the same
+//! provider + loader is byte-identical (`make serve-smoke` asserts it).
+
+use super::engine::LogitsProvider;
+use super::sampling;
+use crate::data::dataset::DataLoader;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Per-batch aggregate.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchEval {
+    pub index: usize,
+    pub tokens: u64,
+    pub mean_nll: f64,
+}
+
+impl BatchEval {
+    pub fn perplexity(&self) -> f64 {
+        self.mean_nll.exp()
+    }
+}
+
+/// Corpus-level evaluation results.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// Sequences scored.
+    pub rows: u64,
+    /// Target tokens scored.
+    pub tokens: u64,
+    /// Mean negative log-likelihood (nats/token).
+    pub mean_nll: f64,
+    /// `exp(mean_nll)`.
+    pub perplexity: f64,
+    /// Shared batched forwards executed.
+    pub forwards: u64,
+    pub per_batch: Vec<BatchEval>,
+}
+
+/// Score the first `max_batches` of `dl` (epoch 0) against `provider`.
+///
+/// The dataset's `seq_len` must match the provider's static grid; a
+/// batch wider than the provider's `B` is split into groups of `B`
+/// rows, one shared forward each (idle rows carry padding).
+pub fn evaluate_loader(
+    provider: &mut dyn LogitsProvider,
+    dl: &DataLoader,
+    max_batches: usize,
+) -> Result<EvalReport> {
+    let (b, s, v) = (provider.batch_size(), provider.seq_len(), provider.vocab_size());
+    if dl.dataset.seq_len() != s {
+        bail!(
+            "eval dataset seq_len {} does not match the provider's static seq_len {s}",
+            dl.dataset.seq_len()
+        );
+    }
+    let n = dl.batches_per_epoch(0).min(max_batches.max(1));
+    if n == 0 {
+        bail!("eval dataloader has no batches");
+    }
+    let mut grid = vec![0u32; b * s];
+    let mut total_nll = 0f64;
+    let (mut rows, mut tokens, mut forwards) = (0u64, 0u64, 0u64);
+    let mut per_batch = Vec::with_capacity(n);
+    for bi in 0..n {
+        let batch = dl.batch(0, bi);
+        let mut batch_nll = 0f64;
+        let mut batch_tokens = 0u64;
+        let mut r0 = 0usize;
+        while r0 < batch.batch_size {
+            let take = (batch.batch_size - r0).min(b);
+            grid.fill(0);
+            grid[..take * s].copy_from_slice(&batch.inputs[r0 * s..(r0 + take) * s]);
+            let logits = provider.forward(&grid)?;
+            if logits.len() != b * s * v {
+                bail!("provider returned {} logits, expected {}", logits.len(), b * s * v);
+            }
+            forwards += 1;
+            for j in 0..take {
+                for p in 0..s {
+                    let tgt = batch.targets[(r0 + j) * s + p] as usize;
+                    if tgt >= v {
+                        bail!("target token {tgt} out of vocabulary ({v})");
+                    }
+                    let row = &logits[(j * s + p) * v..(j * s + p + 1) * v];
+                    batch_nll -= sampling::log_prob(row, tgt) as f64;
+                }
+                rows += 1;
+                batch_tokens += s as u64;
+            }
+            r0 += take;
+        }
+        total_nll += batch_nll;
+        tokens += batch_tokens;
+        per_batch.push(BatchEval {
+            index: bi,
+            tokens: batch_tokens,
+            mean_nll: batch_nll / batch_tokens.max(1) as f64,
+        });
+    }
+    let mean_nll = total_nll / tokens.max(1) as f64;
+    Ok(EvalReport { rows, tokens, mean_nll, perplexity: mean_nll.exp(), forwards, per_batch })
+}
+
+impl EvalReport {
+    /// Render the Markdown report (deterministic, byte-stable).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Eval report\n\n");
+        out.push_str(&format!(
+            "Scored {} sequences ({} target tokens) in {} shared batched forwards.\n\n",
+            self.rows, self.tokens, self.forwards
+        ));
+        out.push_str("| metric | value |\n|---|---|\n");
+        out.push_str(&format!("| mean NLL (nats/token) | {:.6} |\n", self.mean_nll));
+        out.push_str(&format!("| perplexity | {:.4} |\n\n", self.perplexity));
+        out.push_str("## Per batch\n\n");
+        out.push_str("| batch | tokens | mean NLL | perplexity |\n|---|---|---|---|\n");
+        for bt in &self.per_batch {
+            out.push_str(&format!(
+                "| {} | {} | {:.6} | {:.4} |\n",
+                bt.index,
+                bt.tokens,
+                bt.mean_nll,
+                bt.perplexity()
+            ));
+        }
+        out
+    }
+
+    /// Render the JSON report (deterministic key and array order).
+    pub fn to_json(&self) -> Json {
+        let per_batch: Vec<Json> = self
+            .per_batch
+            .iter()
+            .map(|bt| {
+                Json::from_pairs(vec![
+                    ("batch", (bt.index as i64).into()),
+                    ("tokens", (bt.tokens as i64).into()),
+                    ("mean_nll", bt.mean_nll.into()),
+                    ("perplexity", bt.perplexity().into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("rows", (self.rows as i64).into()),
+            ("tokens", (self.tokens as i64).into()),
+            ("mean_nll", self.mean_nll.into()),
+            ("perplexity", self.perplexity.into()),
+            ("forwards", (self.forwards as i64).into()),
+            ("per_batch", Json::Arr(per_batch)),
+        ])
+    }
+
+    /// Write `eval_report.md` + `eval_report.json` into `dir` and
+    /// return their paths.
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let md = dir.join("eval_report.md");
+        let json = dir.join("eval_report.json");
+        std::fs::write(&md, self.to_markdown())
+            .with_context(|| format!("writing {}", md.display()))?;
+        std::fs::write(&json, self.to_json().dumps_pretty())
+            .with_context(|| format!("writing {}", json.display()))?;
+        Ok((md, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{Dataset, Sampler, SequentialSampler, SyntheticDataset};
+    use std::sync::Arc;
+
+    /// All-zero logits → a uniform distribution: every token scores
+    /// exactly `-ln(V)`, so the report's numbers are analytic.
+    struct UniformLogits {
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+    }
+
+    impl LogitsProvider for UniformLogits {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+        fn vocab_size(&self) -> usize {
+            self.vocab
+        }
+        fn forward(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+            assert_eq!(tokens.len(), self.batch * self.seq);
+            Ok(vec![0f32; self.batch * self.seq * self.vocab])
+        }
+    }
+
+    fn loader(vocab: u32, seq: usize, samples: usize, batch: usize) -> DataLoader {
+        let ds: Arc<dyn Dataset> =
+            Arc::new(SyntheticDataset::new(vocab, seq, samples, 0.02, 9));
+        let sampler: Arc<dyn Sampler> = Arc::new(SequentialSampler { len: samples });
+        DataLoader::new(ds, sampler, batch).unwrap()
+    }
+
+    #[test]
+    fn uniform_provider_scores_ln_v() {
+        let dl = loader(16, 4, 8, 2);
+        let mut p = UniformLogits { batch: 2, seq: 4, vocab: 16 };
+        let r = evaluate_loader(&mut p, &dl, 3).unwrap();
+        assert_eq!(r.rows, 6);
+        assert_eq!(r.tokens, 6 * 4);
+        assert_eq!(r.forwards, 3, "each 2-row batch fits one forward");
+        assert!((r.mean_nll - (16f64).ln()).abs() < 1e-4, "{}", r.mean_nll);
+        assert!((r.perplexity - 16.0).abs() < 1e-2, "{}", r.perplexity);
+        assert_eq!(r.per_batch.len(), 3);
+    }
+
+    #[test]
+    fn wide_batches_pack_into_provider_groups() {
+        // Loader rows per batch (5) exceed the provider's B (2): each
+        // batch needs ceil(5/2) = 3 shared forwards.
+        let dl = loader(16, 4, 10, 5);
+        let mut p = UniformLogits { batch: 2, seq: 4, vocab: 16 };
+        let r = evaluate_loader(&mut p, &dl, 2).unwrap();
+        assert_eq!(r.rows, 10);
+        assert_eq!(r.forwards, 6);
+        assert!((r.mean_nll - (16f64).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn seq_len_mismatch_rejected() {
+        let dl = loader(16, 8, 8, 2);
+        let mut p = UniformLogits { batch: 2, seq: 4, vocab: 16 };
+        let e = evaluate_loader(&mut p, &dl, 2).unwrap_err().to_string();
+        assert!(e.contains("seq_len"), "{e}");
+    }
+
+    #[test]
+    fn out_of_vocab_target_rejected() {
+        let dl = loader(32, 4, 8, 2); // dataset tokens in [0, 32)
+        let mut p = UniformLogits { batch: 2, seq: 4, vocab: 8 }; // provider only scores 8
+        let e = evaluate_loader(&mut p, &dl, 2).unwrap_err().to_string();
+        assert!(e.contains("out of vocabulary"), "{e}");
+    }
+
+    #[test]
+    fn report_is_byte_stable() {
+        let dl = loader(16, 4, 8, 2);
+        let run = || {
+            let mut p = UniformLogits { batch: 2, seq: 4, vocab: 16 };
+            evaluate_loader(&mut p, &dl, 4).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.to_markdown(), b.to_markdown());
+        assert_eq!(a.to_json().dumps(), b.to_json().dumps());
+
+        let dir = std::env::temp_dir().join("modalities-serve-eval-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (md1, js1) = a.write(&dir).unwrap();
+        let first_md = std::fs::read(&md1).unwrap();
+        let first_js = std::fs::read(&js1).unwrap();
+        let (md2, js2) = b.write(&dir).unwrap();
+        assert_eq!(first_md, std::fs::read(&md2).unwrap());
+        assert_eq!(first_js, std::fs::read(&js2).unwrap());
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let dl = loader(16, 4, 8, 2);
+        let mut p = UniformLogits { batch: 2, seq: 4, vocab: 16 };
+        let r = evaluate_loader(&mut p, &dl, 2).unwrap();
+        let v = Json::parse(&r.to_json().dumps()).unwrap();
+        assert_eq!(v.get("rows").unwrap().as_i64(), Some(r.rows as i64));
+        assert_eq!(v.get("forwards").unwrap().as_i64(), Some(2));
+        assert!(v.get("perplexity").unwrap().as_f64().unwrap() > 1.0);
+        assert_eq!(v.get("per_batch").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

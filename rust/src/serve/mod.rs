@@ -1,0 +1,40 @@
+//! Batched inference subsystem: the serving path of the framework.
+//!
+//! The training stack ends at a static-shape `fwd` artifact; this
+//! module turns it into a real serving layer (the north star's "serves
+//! heavy traffic" requirement) with three pieces:
+//!
+//! * [`engine`] — a **slot-based continuous-batching engine**
+//!   ([`BatchedEngine`]): up to `B` concurrent requests mapped onto
+//!   artifact batch rows, one shared forward per decode step, finished
+//!   sequences swapped out for queued requests between steps (no
+//!   drain-the-batch barrier), with a bounded admission queue and
+//!   per-request decode-step deadlines.
+//! * [`sampling`] — greedy / temperature / top-k / top-p behind a
+//!   seeded per-request RNG, so outputs are deterministic and
+//!   unit-testable without artifacts.
+//! * [`eval`] — per-token logprobs and corpus perplexity over a
+//!   dataloader, reusing the same shared batched forward and emitting a
+//!   deterministic Markdown + JSON report.
+//!
+//! The engine decodes against an injected [`LogitsProvider`] (the same
+//! trick the ablation scheduler uses for its runner): production wraps
+//! the compiled artifact in [`ModelLogitsProvider`]; tests, benches and
+//! the artifact-free `--synthetic` CLI mode use [`SyntheticLogits`].
+//! Entry points: `modalities serve` / `modalities eval`, the
+//! `serve/batched_engine` component + top-level `serve:` config section
+//! ([`components::ServeSpec`]), `examples/serve_batch.rs`, and
+//! `cargo bench --bench bench_generate`.
+
+pub mod components;
+pub mod engine;
+pub mod eval;
+pub mod sampling;
+
+pub use components::ServeSpec;
+pub use engine::{
+    generate_one, BatchedEngine, Completion, EngineConfig, EngineStats, FinishReason,
+    LogitsProvider, ModelLogitsProvider, Request, SyntheticLogits,
+};
+pub use eval::{evaluate_loader, BatchEval, EvalReport};
+pub use sampling::SamplingParams;

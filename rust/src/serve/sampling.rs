@@ -1,0 +1,240 @@
+//! Sampling suite for the batched inference engine: greedy, temperature,
+//! top-k and top-p (nucleus) decoding behind one [`SamplingParams`]
+//! struct, plus the log-softmax helper the evaluation harness shares.
+//!
+//! Determinism contract: sampling consumes randomness only from the
+//! caller-supplied [`Pcg64`] stream (one per request, seeded from the
+//! request's `seed`), so a request's output depends only on its own
+//! (prompt, params, seed) — never on admission order, slot index or
+//! batch composition. Ties break toward the lowest token id at every
+//! stage (argmax, candidate ordering), which keeps outputs stable
+//! across refactors of the underlying sort.
+
+use crate::util::prng::Pcg64;
+use anyhow::{bail, Result};
+
+/// Per-request sampling configuration. The default is greedy decoding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `0.0` selects greedy argmax decoding.
+    pub temperature: f32,
+    /// Keep only the `k` highest-logit tokens before sampling
+    /// (`0` disables the filter).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution with cumulative probability `>= top_p`
+    /// (`1.0` disables the filter).
+    pub top_p: f32,
+    /// Seed of the request's private sampling stream.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SamplingParams {
+    /// Greedy argmax decoding (no randomness consumed).
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("temperature must be finite and >= 0, got {}", self.temperature);
+        }
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            bail!("top_p must be in (0, 1], got {}", self.top_p);
+        }
+        Ok(())
+    }
+}
+
+/// Index of the maximum logit; the lowest index wins ties.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Log-probability of token `idx` under `softmax(logits)` — the
+/// untempered model distribution (what the evaluation harness scores).
+/// The sum runs in f64 so long vocab rows don't lose mass.
+pub fn log_prob(logits: &[f32], idx: usize) -> f32 {
+    debug_assert!(idx < logits.len());
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let sum: f64 = logits.iter().map(|&x| ((x - max) as f64).exp()).sum();
+    ((logits[idx] - max) as f64 - sum.ln()) as f32
+}
+
+/// Sample one token from `logits` under `params`, consuming randomness
+/// from `rng`. Returns `(token, logprob)` where `logprob` is the
+/// model's untempered log-probability of the chosen token.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Pcg64) -> (u32, f32) {
+    debug_assert!(!logits.is_empty());
+    let choice = if params.is_greedy() {
+        argmax(logits)
+    } else {
+        sample_filtered(logits, params, rng)
+    };
+    (choice as u32, log_prob(logits, choice))
+}
+
+/// Temperature + top-k + top-p sampling over `logits`.
+///
+/// Pipeline (the conventional composition order): sort candidates by
+/// logit (descending, id-ascending on ties) → truncate to the `top_k`
+/// best → temper + softmax over the survivors → truncate to the
+/// smallest nucleus with cumulative mass `>= top_p` → draw from the
+/// renormalized prefix.
+fn sample_filtered(logits: &[f32], params: &SamplingParams, rng: &mut Pcg64) -> usize {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    if params.top_k > 0 && params.top_k < idx.len() {
+        idx.truncate(params.top_k);
+    }
+    // Tempered softmax over the survivors; subtracting the max logit
+    // keeps every exponent <= 0, so small temperatures cannot overflow.
+    let inv_t = 1.0 / params.temperature as f64;
+    let max = logits[idx[0]] as f64;
+    let mut probs: Vec<f64> =
+        idx.iter().map(|&i| ((logits[i] as f64 - max) * inv_t).exp()).collect();
+    let total: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+    // Nucleus cut: at least one candidate always survives.
+    let mut keep = probs.len();
+    if (params.top_p as f64) < 1.0 {
+        let mut cum = 0.0;
+        for (n, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= params.top_p as f64 {
+                keep = n + 1;
+                break;
+            }
+        }
+    }
+    let mass: f64 = probs[..keep].iter().sum();
+    let mut t = rng.next_f64() * mass;
+    for (n, &p) in probs[..keep].iter().enumerate() {
+        t -= p;
+        if t < 0.0 {
+            return idx[n];
+        }
+    }
+    idx[keep - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draws(logits: &[f32], params: &SamplingParams, n: usize) -> Vec<u32> {
+        let mut rng = Pcg64::new(params.seed);
+        (0..n).map(|_| sample(logits, params, &mut rng).0).collect()
+    }
+
+    #[test]
+    fn greedy_argmax_ties_to_lowest_index() {
+        assert_eq!(argmax(&[0.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 2.0]), 0);
+        let (tok, lp) = sample(&[1.0, 5.0, 5.0], &SamplingParams::greedy(), &mut Pcg64::new(0));
+        assert_eq!(tok, 1, "tie breaks to the lowest id");
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn log_prob_uniform_is_neg_ln_v() {
+        let logits = vec![0.0f32; 8];
+        let lp = log_prob(&logits, 3);
+        assert!((lp + (8f32).ln()).abs() < 1e-6, "lp={lp}");
+        // Shifting every logit by a constant changes nothing.
+        let shifted = vec![5.0f32; 8];
+        assert!((log_prob(&shifted, 3) - lp).abs() < 1e-6);
+    }
+
+    #[test]
+    fn seeded_determinism() {
+        let logits = [0.1, 0.9, 0.5, 0.2, 0.7, 0.3];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 42 };
+        assert_eq!(draws(&logits, &p, 64), draws(&logits, &p, 64));
+        let q = SamplingParams { seed: 43, ..p };
+        assert_ne!(draws(&logits, &p, 64), draws(&logits, &q, 64), "seeds decorrelate");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy_regardless_of_seed() {
+        let logits = [0.3, 0.1, 2.0, 0.4];
+        for seed in 0..8 {
+            let p = SamplingParams { temperature: 1.5, top_k: 1, top_p: 1.0, seed };
+            assert!(draws(&logits, &p, 16).iter().all(|&t| t == 2));
+        }
+    }
+
+    #[test]
+    fn top_p_full_mass_keeps_every_token() {
+        // Uniform logits, p = 1.0: every token must remain reachable.
+        let logits = vec![0.0f32; 6];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 7 };
+        let seen: std::collections::BTreeSet<u32> = draws(&logits, &p, 600).into_iter().collect();
+        assert_eq!(seen.len(), 6, "p=1.0 must not truncate: saw {seen:?}");
+    }
+
+    #[test]
+    fn top_k_truncates_and_keeps_lowest_ids_on_ties() {
+        // Four-way tie at the top: k=2 must keep exactly ids {0, 1}.
+        let logits = [1.0, 1.0, 1.0, 1.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 2, top_p: 1.0, seed: 3 };
+        let seen: std::collections::BTreeSet<u32> = draws(&logits, &p, 200).into_iter().collect();
+        assert_eq!(seen, [0u32, 1].into_iter().collect());
+    }
+
+    #[test]
+    fn top_p_truncates_to_the_nucleus() {
+        // Token 0 holds ~all mass: any p selects only it.
+        let peaked = [10.0, 0.0, 0.0, 0.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 0.5, seed: 1 };
+        assert!(draws(&peaked, &p, 100).iter().all(|&t| t == 0));
+        // Two equal leaders at ~0.47 each: p=0.5 keeps both, drops the tail.
+        let pair = [3.0, 3.0, 0.0];
+        let seen: std::collections::BTreeSet<u32> = draws(&pair, &p, 300).into_iter().collect();
+        assert_eq!(seen, [0u32, 1].into_iter().collect());
+    }
+
+    #[test]
+    fn temperature_sharpens_toward_argmax() {
+        let logits = [1.0, 0.0, 0.5, 0.2];
+        let cold = SamplingParams { temperature: 0.05, top_k: 0, top_p: 1.0, seed: 5 };
+        let n_best = draws(&logits, &cold, 200).iter().filter(|&&t| t == 0).count();
+        assert!(n_best >= 199, "T→0 must concentrate on the argmax, got {n_best}/200");
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(SamplingParams { temperature: -1.0, ..SamplingParams::greedy() }
+            .validate()
+            .is_err());
+        assert!(SamplingParams { top_p: 0.0, ..SamplingParams::greedy() }.validate().is_err());
+        assert!(SamplingParams { top_p: 1.5, ..SamplingParams::greedy() }.validate().is_err());
+        assert!(SamplingParams { temperature: f32::NAN, ..SamplingParams::greedy() }
+            .validate()
+            .is_err());
+        assert!(SamplingParams::greedy().validate().is_ok());
+    }
+}

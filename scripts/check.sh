@@ -20,4 +20,7 @@ git diff --exit-code docs/config_reference.md
 echo "==> sweep orchestrator smoke (skips without artifacts)"
 scripts/sweep_smoke.sh
 
+echo "==> serve subsystem smoke (artifact-free synthetic provider)"
+scripts/serve_smoke.sh
+
 echo "OK"
