@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -25,3 +25,10 @@ sweep-smoke:
 # artifacts.
 serve-smoke:
 	scripts/serve_smoke.sh
+
+# 4-rank threaded HSDP train → checkpoint → kill → resume: asserts the
+# resumed run's metrics tail and final checkpoint shards are
+# byte-identical to an uninterrupted run. Skips when artifacts are
+# missing.
+dist-smoke:
+	scripts/dist_smoke.sh

@@ -10,7 +10,8 @@
 //!    degrees, reproducing the paper's motivation (0.4 MB messages at
 //!    dp=1024 are latency-bound; bigger units buy bandwidth).
 
-use modalities::fsdp::{build_units, FsdpConfig, FsdpEngine};
+use modalities::dist::process_group::BackendSpec;
+use modalities::fsdp::{build_units, FsdpConfig, FsdpEngine, ShardStrategy};
 use modalities::model::{InitScheme, ParamStore};
 use modalities::optim::components::OptimizerSpec;
 use modalities::perfmodel::steptime::{per_gpu_memory_bytes, step_time, Plan, Workload};
@@ -53,7 +54,7 @@ fn main() {
             }
             Some(r) => r.iter().zip(&flat).all(|(a, b)| (a - b).abs() < 1e-5),
         };
-        let rs = eng.comm.stats.ops["reduce_scatter"];
+        let rs = eng.comm_stats().ops["reduce_scatter"];
         println!(
             "{:>10} {:>7} {:>14} {:>12} {:>14} {:>12}",
             human::bytes((unit_kb * 1024) as u64),
@@ -65,6 +66,38 @@ fn main() {
         );
         assert!(same, "unit size must not change training math");
     }
+
+    // ---- collective backends head-to-head on the real engine ----------------
+    println!("\nengine step wall-clock by collective backend (dp={world}, HSDP shard 2):");
+    let bench_backend = |spec: BackendSpec| {
+        let cfg = FsdpConfig {
+            world,
+            unit_bytes: 256 * 1024,
+            strategy: ShardStrategy::Hybrid { shard_size: 2 },
+            ..Default::default()
+        };
+        let mut eng = FsdpEngine::with_backend(&params, cfg, &opt, spec).unwrap();
+        let timer = modalities::util::stats::Timer::start();
+        let iters = 5usize;
+        for _ in 0..iters {
+            eng.apply_grads(&grads, 1.0, None).unwrap();
+            let mut out = params.clone();
+            eng.unshard_into(&mut out).unwrap();
+        }
+        let dt = timer.elapsed_s() / iters as f64;
+        let mut out = params.clone();
+        eng.unshard_into(&mut out).unwrap();
+        (dt, out.flatten())
+    };
+    let (t_lock, p_lock) = bench_backend(BackendSpec::lockstep());
+    let (t_thr, p_thr) = bench_backend(BackendSpec::threaded());
+    assert_eq!(p_lock, p_thr, "backends must agree bitwise");
+    println!(
+        "  lockstep {:>8.2}ms/step   threaded {:>8.2}ms/step   ({:.2}x, bitwise identical)",
+        t_lock * 1e3,
+        t_thr * 1e3,
+        t_lock / t_thr
+    );
 
     // ---- modeled at 8B scale -------------------------------------------------
     let w = Workload::llama3_8b();

@@ -37,6 +37,10 @@ pub struct CkptManifest {
     pub param_shapes: Vec<Vec<usize>>,
     pub model_name: String,
     pub config_fingerprint: String,
+    /// Collective backend that produced the checkpoint (provenance
+    /// only: backends are bitwise-equivalent, so a checkpoint written
+    /// under `threaded` resumes under `lockstep` and vice versa).
+    pub backend: String,
 }
 
 /// Save a sharded checkpoint of `engine` into `dir/step_<step>/`.
@@ -81,6 +85,7 @@ pub fn save_sharded(
         ),
         ("model_name", model_name.into()),
         ("config_fingerprint", config_fingerprint.into()),
+        ("backend", engine.backend_name().into()),
         ("modalities_version", crate::VERSION.into()),
     ]);
     std::fs::write(out.join("manifest.json"), manifest.dumps_pretty())?;
@@ -189,6 +194,8 @@ pub fn read_manifest(ckpt_dir: &Path) -> Result<CkptManifest> {
             .and_then(|s| s.as_str())
             .unwrap_or("")
             .to_string(),
+        // Absent in pre-backend checkpoints: those were lockstep runs.
+        backend: v.get("backend").and_then(|s| s.as_str()).unwrap_or("lockstep").to_string(),
     })
 }
 
@@ -304,6 +311,7 @@ pub fn save_consolidated(
         param_shapes: params.shapes.clone(),
         model_name: model_name.to_string(),
         config_fingerprint: config_fingerprint.to_string(),
+        backend: "lockstep".to_string(),
     };
     write_consolidated(out_file, &manifest, &params.flatten())
 }
@@ -432,6 +440,35 @@ mod tests {
         let (mut o1, mut o2) = (params.clone(), params.clone());
         eng.unshard_into(&mut o1).unwrap();
         eng2.unshard_into(&mut o2).unwrap();
+        assert_eq!(o1.flatten(), o2.flatten());
+    }
+
+    /// Backends are bitwise-equivalent, so checkpoints are portable
+    /// across them: write under `threaded`, resume under `lockstep`,
+    /// and continued training matches the threaded run exactly.
+    #[test]
+    fn checkpoint_portable_across_backends() {
+        use crate::dist::process_group::BackendSpec;
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 4);
+        let cfg = FsdpConfig { world: 4, unit_bytes: 256, strategy: ShardStrategy::Hybrid { shard_size: 2 }, ..Default::default() };
+        let mut thr =
+            FsdpEngine::with_backend(&params, cfg.clone(), &opt(), BackendSpec::threaded()).unwrap();
+        let g: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, r as u64)).collect();
+        thr.apply_grads(&g, 1.0, None).unwrap();
+
+        let dir = tmpdir("cross-backend");
+        let ckpt = save_sharded(&dir, 3, &thr, &params, "t", "fp").unwrap();
+        assert_eq!(read_manifest(&ckpt).unwrap().backend, "threaded");
+
+        let mut lock = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        assert_eq!(load_sharded(&ckpt, &mut lock).unwrap(), 3);
+        let g2: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, 70 + r as u64)).collect();
+        thr.apply_grads(&g2, 1.0, None).unwrap();
+        lock.apply_grads(&g2, 1.0, None).unwrap();
+        let (mut o1, mut o2) = (params.clone(), params.clone());
+        thr.unshard_into(&mut o1).unwrap();
+        lock.unshard_into(&mut o2).unwrap();
         assert_eq!(o1.flatten(), o2.flatten());
     }
 

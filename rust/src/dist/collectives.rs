@@ -17,7 +17,7 @@ use crate::util::even_split;
 use std::collections::BTreeMap;
 
 /// Per-operation telemetry.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpStats {
     pub calls: u64,
     pub bytes: u64,
@@ -25,7 +25,7 @@ pub struct OpStats {
 }
 
 /// Aggregated communication statistics, keyed by operation name.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub ops: BTreeMap<String, OpStats>,
 }
@@ -35,11 +35,23 @@ impl CommStats {
         Self::default()
     }
 
-    fn record(&mut self, op: &str, bytes: u64, messages: u64) {
+    pub(crate) fn record(&mut self, op: &str, bytes: u64, messages: u64) {
         let e = self.ops.entry(op.to_string()).or_default();
         e.calls += 1;
         e.bytes += bytes;
         e.messages += messages;
+    }
+
+    /// Accumulate another stats table into this one (aggregating the
+    /// per-rank [`crate::dist::process_group::ProcessGroup`] tallies
+    /// into a communicator-wide view).
+    pub fn merge(&mut self, other: &CommStats) {
+        for (op, s) in &other.ops {
+            let e = self.ops.entry(op.clone()).or_default();
+            e.calls += s.calls;
+            e.bytes += s.bytes;
+            e.messages += s.messages;
+        }
     }
 
     /// Total bytes moved across all operations.

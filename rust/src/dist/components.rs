@@ -1,38 +1,68 @@
 //! Registry factories for the distributed substrate: collective
 //! backends and device meshes.
 
+use super::process_group::{BackendKind, BackendSpec};
 use super::topology::DeviceMesh;
 use crate::registry::{Component, ComponentRegistry};
 use anyhow::Result;
 
-/// Collective-backend spec. The lockstep engine is the only backend on
-/// this testbed; the component exists so configs can name the backend
-/// explicitly and alternative transports can plug in.
+/// Collective-backend component: selects which runtime executes a
+/// communicator's operations (the `dist/backend` config surface) and
+/// carries its rendezvous knobs. The same keys are accepted inline on
+/// every `parallel_strategy` variant, which is how the gym's engine is
+/// configured; this component exists so configs can name the backend as
+/// a first-class object and alternative transports can plug in.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CollectiveBackendSpec {
+    /// Backend kind + rendezvous timeout + schedule-fuzzer jitter.
+    pub backend: BackendSpec,
     /// Charge α-β model time for each operation (scaling studies).
     pub modeled_time: bool,
 }
 
 pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
-    reg.register("collective_backend", "lockstep", |ctx, cfg| {
-        let modeled_time = ctx.bool_or(cfg, "modeled_time", false)?;
-        Ok(Component::new(
-            "collective_backend",
-            "lockstep",
-            CollectiveBackendSpec { modeled_time },
-        ))
+    let parse = |ctx: &mut crate::registry::BuildCtx<'_>,
+                 cfg: &crate::yaml::Node,
+                 kind: BackendKind|
+     -> Result<CollectiveBackendSpec> {
+        Ok(CollectiveBackendSpec {
+            backend: BackendSpec {
+                kind,
+                timeout_ms: ctx.usize_or(cfg, "comm_timeout_ms", 30_000)? as u64,
+                jitter_us: ctx.usize_or(cfg, "comm_jitter_us", 0)? as u64,
+            },
+            modeled_time: ctx.bool_or(cfg, "modeled_time", false)?,
+        })
+    };
+
+    reg.register("collective_backend", "lockstep", move |ctx, cfg| {
+        let spec = parse(ctx, cfg, BackendKind::Lockstep)?;
+        Ok(Component::new("collective_backend", "lockstep", spec))
     })?;
     reg.describe(
         "collective_backend",
         "lockstep",
-        "In-process lockstep collectives with exact ring-traffic accounting.",
-        &[(
-            "modeled_time",
-            "bool",
-            "false",
-            "also charge α-β interconnect model time per operation",
-        )],
+        "Single-reducer rendezvous collectives with exact ring-traffic accounting — the bitwise-reference oracle behind the per-rank `ProcessGroup` handle.",
+        &[
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per collective (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
+            ("modeled_time", "bool", "false", "also charge α-β interconnect model time per operation"),
+        ],
+    );
+
+    reg.register("collective_backend", "threaded", move |ctx, cfg| {
+        let spec = parse(ctx, cfg, BackendKind::Threaded)?;
+        Ok(Component::new("collective_backend", "threaded", spec))
+    })?;
+    reg.describe(
+        "collective_backend",
+        "threaded",
+        "Rank-per-thread runtime: rendezvous collectives with per-member parallel reduction in a fixed fold order — bitwise identical to `lockstep`, ranks genuinely concurrent.",
+        &[
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per collective (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
+            ("modeled_time", "bool", "false", "also charge α-β interconnect model time per operation"),
+        ],
     );
 
     reg.register("device_mesh", "dp_tp_pp", |ctx, cfg| {
@@ -46,7 +76,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
     reg.describe(
         "device_mesh",
         "dp_tp_pp",
-        "DP×TP×PP topology descriptor (lockstep testbed executes DP only).",
+        "DP×TP×PP topology descriptor (the in-process testbed executes DP only).",
         &[
             ("dp_degree", "int", "1", "data-parallel degree"),
             ("tp_degree", "int", "1", "tensor-parallel degree"),
@@ -76,5 +106,30 @@ components:
         let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
         let m = g.get::<super::DeviceMesh>("mesh").unwrap();
         assert_eq!(m.world(), 8);
+    }
+
+    #[test]
+    fn backends_from_config() {
+        let src = "\
+components:
+  oracle:
+    component_key: collective_backend
+    variant_key: lockstep
+    config: {}
+  fast:
+    component_key: collective_backend
+    variant_key: threaded
+    config: {comm_timeout_ms: 1000, comm_jitter_us: 25}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let o = g.get::<super::CollectiveBackendSpec>("oracle").unwrap();
+        assert_eq!(o.backend.kind, crate::dist::process_group::BackendKind::Lockstep);
+        assert_eq!(o.backend.timeout_ms, 30_000);
+        let f = g.get::<super::CollectiveBackendSpec>("fast").unwrap();
+        assert_eq!(f.backend.kind, crate::dist::process_group::BackendKind::Threaded);
+        assert_eq!(f.backend.timeout_ms, 1000);
+        assert_eq!(f.backend.jitter_us, 25);
     }
 }

@@ -1,14 +1,25 @@
-//! Distributed substrate: the lockstep collective engine and group
-//! topology helpers the FSDP/HSDP engine is built on.
+//! Distributed substrate: collective engines and group topology
+//! helpers the FSDP/HSDP engine is built on.
 //!
-//! All ranks live in this process (the 1-core testbed; see DESIGN
-//! notes in [`crate::fsdp`]): collectives move real bytes between the
-//! ranks' buffers with ring semantics, and every operation is accounted
-//! in [`collectives::CommStats`] with exactly the traffic the α-β
-//! interconnect model ([`crate::perfmodel`]) charges — `bench_nccl`
+//! All ranks live in this process: collectives move real bytes between
+//! the ranks' buffers with ring semantics, and every operation is
+//! accounted in [`collectives::CommStats`] with exactly the traffic the
+//! α-β interconnect model ([`crate::perfmodel`]) charges — `bench_nccl`
 //! asserts the two agree byte-for-byte, which is what lets the paper's
 //! scaling studies run on modeled time but real communication volumes.
+//!
+//! Two execution backends sit behind the per-rank
+//! [`process_group::ProcessGroup`] handle:
+//!
+//! * `lockstep` — the historical single-reducer oracle
+//!   ([`collectives::Collectives`] behind a rendezvous adapter);
+//! * `threaded` — one OS thread per rank with per-member parallel
+//!   reduction, bitwise identical to lockstep by fixed fold order.
+//!
+//! See [`process_group`] for the rendezvous protocol, determinism
+//! argument, and failure semantics.
 
 pub mod collectives;
 pub mod components;
+pub mod process_group;
 pub mod topology;

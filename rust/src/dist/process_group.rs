@@ -1,0 +1,995 @@
+//! The rank-parallel execution backend: a per-rank [`ProcessGroup`]
+//! handle over two interchangeable collective runtimes.
+//!
+//! Historically every collective in this codebase was *lockstep*: one
+//! call received every rank's buffer and reduced them on the caller's
+//! thread ([`super::collectives::Collectives`]). That is a fine oracle
+//! but it means "ranks" never actually run concurrently and nothing
+//! exercises real synchronization. This module introduces the rank's
+//! view of the world — each rank holds a [`ProcessGroup`] handle and
+//! calls collectives with *only its own buffer* — with two backends:
+//!
+//! * [`LockstepGroup`] — an adapter over today's [`Collectives`]: all
+//!   members rendezvous, the last arrival assembles the group's buffers
+//!   and runs the unchanged lockstep reduction code under the comm
+//!   lock. Semantics and accounting are exactly the historical ones;
+//!   this is the bitwise-reference oracle.
+//! * [`ThreadedGroup`] — the rank-parallel runtime: one OS thread per
+//!   rank, rendezvous-based collectives where each member computes its
+//!   *own* output shard in parallel after all deposits arrive.
+//!
+//! ## Determinism
+//!
+//! Both backends reduce with the **same fixed fold order**: element
+//! sums are accumulated over group members in ascending group order
+//! (`acc += contribution[g0]; acc += contribution[g1]; …`), exactly the
+//! loop the lockstep oracle runs. f32 addition is not associative, so
+//! fixing the fold order is what makes threaded results bitwise
+//! identical to lockstep *regardless of thread arrival order* — the
+//! rendezvous only gates progress, it never influences the reduction
+//! order. The differential suite (`rust/tests/backend_equivalence.rs`)
+//! pins this across the FSDP/HSDP/TP grid.
+//!
+//! ## Failure semantics
+//!
+//! A rank that panics (or simply drops its handle) marks itself dead
+//! and wakes every waiter; peers blocked in a collective with the dead
+//! rank return a clean `Err` instead of deadlocking. All internal locks
+//! are taken poison-tolerantly, so a panicking peer can never turn into
+//! a poisoned-mutex abort. A configurable rendezvous timeout bounds the
+//! wait even when a peer wedges without dying.
+
+use super::collectives::{CommStats, Collectives};
+use crate::util::even_split;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Which collective runtime executes a group's operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Rendezvous adapter over the lockstep [`Collectives`] oracle.
+    Lockstep,
+    /// Rank-per-thread runtime with per-member parallel reduction.
+    Threaded,
+}
+
+/// Backend selection + runtime knobs (the `dist/backend` config
+/// surface: `backend`, `comm_timeout_ms`, `comm_jitter_us`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    /// Rendezvous timeout per collective (deadlock backstop).
+    pub timeout_ms: u64,
+    /// Max random per-rank start jitter injected by drivers before rank
+    /// work each step — a scheduling fuzzer used by the equivalence
+    /// suite to prove results are schedule-independent.
+    pub jitter_us: u64,
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        Self { kind: BackendKind::Lockstep, timeout_ms: 30_000, jitter_us: 0 }
+    }
+}
+
+impl BackendSpec {
+    pub fn lockstep() -> Self {
+        Self::default()
+    }
+
+    pub fn threaded() -> Self {
+        Self { kind: BackendKind::Threaded, ..Self::default() }
+    }
+
+    /// Parse the `backend:` config key.
+    pub fn parse_kind(s: &str) -> Result<BackendKind> {
+        match s {
+            "lockstep" => Ok(BackendKind::Lockstep),
+            "threaded" => Ok(BackendKind::Threaded),
+            other => bail!("unknown collective backend '{other}' (lockstep|threaded)"),
+        }
+    }
+
+    pub fn timeout(&self) -> Duration {
+        Duration::from_millis(self.timeout_ms)
+    }
+
+    /// Build one handle per rank for a `world`-rank communicator.
+    pub fn make(&self, world: usize) -> Vec<Box<dyn ProcessGroup>> {
+        match self.kind {
+            BackendKind::Lockstep => LockstepComm::new(world, self.timeout())
+                .into_iter()
+                .map(|g| Box::new(g) as Box<dyn ProcessGroup>)
+                .collect(),
+            BackendKind::Threaded => ThreadedComm::new(world, self.timeout())
+                .into_iter()
+                .map(|g| Box::new(g) as Box<dyn ProcessGroup>)
+                .collect(),
+        }
+    }
+}
+
+/// A rank's handle onto its communicator. Every collective is called
+/// with the caller's *own* buffer plus the participating `group` (a
+/// strictly-ascending rank list containing the caller); all members of
+/// a group must issue the same operations in the same order.
+pub trait ProcessGroup: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+
+    /// Concatenate the members' shards (in group order) into the full
+    /// buffer every member receives. Shard lengths may differ by rank
+    /// ([`even_split`]).
+    fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>>;
+
+    /// Element-wise sum across the group, in place on every member.
+    fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()>;
+
+    /// Sum across the group, then keep only this member's contiguous
+    /// shard (shard `s` of [`even_split`] for group position `s`).
+    fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>>;
+
+    /// Scalar sum across the group (loss / grad-norm folding).
+    fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32>;
+
+    /// Block until every member arrives.
+    fn barrier(&mut self, group: &[usize]) -> Result<()>;
+
+    /// This rank's communication telemetry.
+    fn stats(&self) -> &CommStats;
+
+    /// Mark this rank dead and wake all waiters — peers blocked in a
+    /// collective with it fail fast with a clean error. Called by
+    /// drivers on error/panic paths; also triggered by dropping the
+    /// handle.
+    fn abort(&mut self);
+}
+
+/// Boxed handles (what [`BackendSpec::make`] returns) are first-class
+/// group members: drivers can hold `Box<dyn ProcessGroup>` uniformly
+/// across backends.
+impl ProcessGroup for Box<dyn ProcessGroup> {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+
+    fn world(&self) -> usize {
+        (**self).world()
+    }
+
+    fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        (**self).all_gather(shard, group)
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        (**self).all_reduce_sum(buf, group)
+    }
+
+    fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        (**self).reduce_scatter_sum(buf, group)
+    }
+
+    fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
+        (**self).all_reduce_scalar(v, group)
+    }
+
+    fn barrier(&mut self, group: &[usize]) -> Result<()> {
+        (**self).barrier(group)
+    }
+
+    fn stats(&self) -> &CommStats {
+        (**self).stats()
+    }
+
+    fn abort(&mut self) {
+        (**self).abort()
+    }
+}
+
+/// Per-member ring traffic for one reduce-scatter *or* all-gather
+/// phase: `(n-1) * ceil(len/n)` elements, 4 bytes each. Summed over the
+/// `n` members this is exactly the group-level
+/// [`super::collectives::Collectives`] ring formula.
+pub fn rank_phase_bytes(len: usize, n: usize) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    (n as u64 - 1) * (len.div_ceil(n) as u64) * 4
+}
+
+/// Per-member message count for one ring phase.
+pub fn rank_phase_messages(n: usize) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    n as u64 - 1
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicking peer must never escalate into a poisoned-mutex abort
+    // here: the shared state is only ever mutated under short critical
+    // sections that cannot leave it torn.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Validate `group` (strictly ascending, in range) and return the
+/// caller's position in it.
+fn group_pos(rank: usize, world: usize, group: &[usize]) -> Result<usize> {
+    if group.is_empty() {
+        bail!("collective over an empty group");
+    }
+    let mut prev: Option<usize> = None;
+    for &g in group {
+        if g >= world {
+            bail!("group rank {g} out of range for world {world}");
+        }
+        if let Some(p) = prev {
+            if g <= p {
+                bail!("group {group:?} must be strictly ascending");
+            }
+        }
+        prev = Some(g);
+    }
+    group
+        .iter()
+        .position(|&g| g == rank)
+        .ok_or_else(|| anyhow!("rank {rank} is not a member of group {group:?}"))
+}
+
+// ---- rendezvous core --------------------------------------------------------
+
+/// Result of a centrally-computed (lockstep) collective.
+enum CentralResult {
+    /// Same output for every member (all-gather / all-reduce / scalar).
+    Shared(Arc<Vec<f32>>),
+    /// One output per member rank (reduce-scatter).
+    PerRank(BTreeMap<usize, Vec<f32>>),
+}
+
+/// One in-flight collective instance for a `(group, seq)` key.
+struct Cell {
+    op: &'static str,
+    deposits: BTreeMap<usize, Arc<Vec<f32>>>,
+    central: Option<CentralResult>,
+    /// Members that have taken their result (identity, not a count:
+    /// removal must tolerate members that die before taking).
+    takers: BTreeSet<usize>,
+}
+
+impl Cell {
+    fn new(op: &'static str) -> Self {
+        Self { op, deposits: BTreeMap::new(), central: None, takers: BTreeSet::new() }
+    }
+
+    /// A cell is finished once every member has either taken its
+    /// result or died — a dead member must not pin the cell (and its
+    /// deposited payloads) for the communicator's lifetime.
+    fn finished(&self, group: &[usize], dead: &BTreeSet<usize>) -> bool {
+        group.iter().all(|g| self.takers.contains(g) || dead.contains(g))
+    }
+}
+
+struct CoreState {
+    dead: BTreeSet<usize>,
+    cells: HashMap<(Vec<usize>, u64), Cell>,
+    /// The lockstep oracle engine (unused by the threaded backend).
+    oracle: Collectives,
+}
+
+/// State shared by all handles of one communicator.
+struct CommCore {
+    world: usize,
+    timeout: Duration,
+    state: Mutex<CoreState>,
+    cv: Condvar,
+}
+
+impl CommCore {
+    fn new(world: usize, timeout: Duration) -> Arc<Self> {
+        Arc::new(Self {
+            world,
+            timeout,
+            state: Mutex::new(CoreState {
+                dead: BTreeSet::new(),
+                cells: HashMap::new(),
+                oracle: Collectives::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Error if a group member is dead *and* its contribution to this
+    /// cell is still missing — a peer that deposited and then exited
+    /// must not fail a collective it already served.
+    fn check_dead(st: &CoreState, key: &(Vec<usize>, u64), group: &[usize], op: &str) -> Result<()> {
+        for &g in group {
+            if st.dead.contains(&g) {
+                let deposited = st
+                    .cells
+                    .get(key)
+                    .map(|c| c.deposits.contains_key(&g))
+                    .unwrap_or(false);
+                if !deposited {
+                    bail!("rank {g} died during {op} over group {group:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn abort(&self, rank: usize) {
+        let mut st = lock_ignore_poison(&self.state);
+        st.dead.insert(rank);
+        // Sweep cells the death just finished (the dead rank was the
+        // only member yet to take) so surviving subgroups don't leak
+        // them.
+        let CoreState { dead, cells, .. } = &mut *st;
+        cells.retain(|(group, _), cell| !cell.finished(group, dead));
+        self.cv.notify_all();
+    }
+
+    /// Deposit `payload` for `(group, seq)`; `on_complete` runs exactly
+    /// once (inside the lock, on whichever member's deposit completed
+    /// the set).
+    fn deposit(
+        &self,
+        rank: usize,
+        group: &[usize],
+        seq: u64,
+        op: &'static str,
+        payload: Vec<f32>,
+        on_complete: impl FnOnce(&mut CoreState, &[usize]) -> Result<()>,
+    ) -> Result<()> {
+        let key = (group.to_vec(), seq);
+        let mut st = lock_ignore_poison(&self.state);
+        Self::check_dead(&st, &key, group, op)?;
+        let complete = {
+            let cell = st.cells.entry(key).or_insert_with(|| Cell::new(op));
+            if cell.op != op {
+                bail!(
+                    "collective mismatch on group {group:?}: rank {rank} called {op} while peers called {}",
+                    cell.op
+                );
+            }
+            if cell.deposits.insert(rank, Arc::new(payload)).is_some() {
+                bail!("rank {rank} deposited twice for {op} (seq {seq}) on group {group:?}");
+            }
+            cell.deposits.len() == group.len()
+        };
+        if complete {
+            on_complete(&mut st, group)?;
+            self.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Wait until `done` yields `rank`'s result for the `(group, seq)`
+    /// cell, a group member dies before contributing, or the timeout
+    /// elapses.
+    fn wait_cell<R>(
+        &self,
+        rank: usize,
+        group: &[usize],
+        seq: u64,
+        op: &'static str,
+        mut done: impl FnMut(&mut Cell) -> Option<R>,
+    ) -> Result<R> {
+        let key = (group.to_vec(), seq);
+        let deadline = Instant::now() + self.timeout;
+        let mut st = lock_ignore_poison(&self.state);
+        loop {
+            let mut out: Option<R> = None;
+            let mut remove = false;
+            {
+                let CoreState { dead, cells, .. } = &mut *st;
+                if let Some(cell) = cells.get_mut(&key) {
+                    if let Some(r) = done(cell) {
+                        cell.takers.insert(rank);
+                        remove = cell.finished(group, dead);
+                        out = Some(r);
+                    }
+                }
+            }
+            if let Some(r) = out {
+                if remove {
+                    st.cells.remove(&key);
+                }
+                return Ok(r);
+            }
+            // Completion checked first: a peer that served this cell
+            // and then died must not poison it.
+            Self::check_dead(&st, &key, group, op)?;
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "{op} over group {group:?} timed out after {:?} (peer wedged or missing)",
+                    self.timeout
+                );
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+}
+
+// ---- handle plumbing shared by both backends --------------------------------
+
+struct HandleInner {
+    core: Arc<CommCore>,
+    rank: usize,
+    stats: CommStats,
+    /// Per-group rendezvous sequence numbers. All members of a group
+    /// issue the same ops in the same order, so their counters agree.
+    seqs: HashMap<Vec<usize>, u64>,
+    aborted: bool,
+}
+
+impl HandleInner {
+    fn new(core: Arc<CommCore>, rank: usize) -> Self {
+        Self { core, rank, stats: CommStats::new(), seqs: HashMap::new(), aborted: false }
+    }
+
+    fn next_seq(&mut self, group: &[usize]) -> u64 {
+        let c = self.seqs.entry(group.to_vec()).or_insert(0);
+        let s = *c;
+        *c += 1;
+        s
+    }
+
+    fn abort(&mut self) {
+        if !self.aborted {
+            self.aborted = true;
+            self.core.abort(self.rank);
+        }
+    }
+}
+
+impl Drop for HandleInner {
+    fn drop(&mut self) {
+        // A handle leaving the communicator (clean exit or panic
+        // unwind) must wake peers so they fail fast instead of waiting
+        // for the timeout.
+        self.abort();
+    }
+}
+
+// ---- the lockstep backend ---------------------------------------------------
+
+/// Rendezvous adapter over the lockstep [`Collectives`] oracle: members
+/// deposit their buffers; the member whose deposit completes the set
+/// runs the unchanged lockstep reduction code (under the comm lock) and
+/// publishes every member's result. Semantics and fold order are
+/// exactly the historical single-threaded engine's.
+pub struct LockstepGroup {
+    inner: HandleInner,
+}
+
+/// Constructor namespace for the lockstep communicator.
+pub struct LockstepComm;
+
+impl LockstepComm {
+    /// One handle per rank over a fresh communicator.
+    pub fn new(world: usize, timeout: Duration) -> Vec<LockstepGroup> {
+        let core = CommCore::new(world, timeout);
+        (0..world)
+            .map(|r| LockstepGroup { inner: HandleInner::new(core.clone(), r) })
+            .collect()
+    }
+}
+
+impl LockstepGroup {
+    /// Run one centrally-computed collective: deposit, let the last
+    /// arrival compute via the oracle, take this member's share.
+    fn central(
+        &mut self,
+        group: &[usize],
+        op: &'static str,
+        payload: Vec<f32>,
+        compute: impl FnOnce(&mut Collectives, Vec<Vec<f32>>) -> CentralResult,
+    ) -> Result<Vec<f32>> {
+        let rank = self.inner.rank;
+        group_pos(rank, self.inner.core.world, group)?;
+        let seq = self.inner.next_seq(group);
+        let core = self.inner.core.clone();
+        let key_group = group.to_vec();
+        core.deposit(rank, group, seq, op, payload, move |st, g| {
+            // Assemble the group's buffers in group order — the same
+            // `bufs` the historical oracle saw — and run its code.
+            let cell = st
+                .cells
+                .get(&(key_group.clone(), seq))
+                .expect("cell exists: we just deposited");
+            let bufs: Vec<Vec<f32>> =
+                g.iter().map(|r| cell.deposits[r].as_ref().clone()).collect();
+            let result = compute(&mut st.oracle, bufs);
+            let cell = st
+                .cells
+                .get_mut(&(key_group, seq))
+                .expect("cell exists: we just deposited");
+            cell.central = Some(result);
+            Ok(())
+        })?;
+        // Take a handle (or this member's own shard) under the lock;
+        // materializing the shared buffer happens outside it so the
+        // per-member copy never serializes the communicator.
+        enum Taken {
+            Shared(Arc<Vec<f32>>),
+            Own(Vec<f32>),
+        }
+        let taken = core.wait_cell(rank, group, seq, op, |cell| match cell.central.as_mut() {
+            Some(CentralResult::Shared(arc)) => Some(Taken::Shared(arc.clone())),
+            Some(CentralResult::PerRank(map)) => map.remove(&rank).map(Taken::Own),
+            None => None,
+        })?;
+        Ok(match taken {
+            Taken::Shared(arc) => arc.as_ref().clone(),
+            Taken::Own(v) => v,
+        })
+    }
+}
+
+impl ProcessGroup for LockstepGroup {
+    fn rank(&self) -> usize {
+        self.inner.rank
+    }
+
+    fn world(&self) -> usize {
+        self.inner.core.world
+    }
+
+    fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        let n = group.len();
+        if n == 1 {
+            group_pos(self.inner.rank, self.inner.core.world, group)?;
+            self.inner.stats.record("all_gather", 0, 0);
+            return Ok(shard.to_vec());
+        }
+        let out = self.central(group, "all_gather", shard.to_vec(), |orc, bufs| {
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            CentralResult::Shared(Arc::new(orc.all_gather(&refs, refs.len())))
+        })?;
+        self.inner
+            .stats
+            .record("all_gather", rank_phase_bytes(out.len(), n), rank_phase_messages(n));
+        Ok(out)
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        let n = group.len();
+        let len = buf.len();
+        if n == 1 {
+            group_pos(self.inner.rank, self.inner.core.world, group)?;
+            self.inner.stats.record("all_reduce", 0, 0);
+            return Ok(());
+        }
+        let out = self.central(group, "all_reduce", buf.to_vec(), |orc, mut bufs| {
+            let idx: Vec<usize> = (0..bufs.len()).collect();
+            orc.all_reduce_sum(&mut bufs, &idx);
+            CentralResult::Shared(Arc::new(bufs.swap_remove(0)))
+        })?;
+        buf.copy_from_slice(&out);
+        self.inner.stats.record(
+            "all_reduce",
+            2 * rank_phase_bytes(len, n),
+            2 * rank_phase_messages(n),
+        );
+        Ok(())
+    }
+
+    fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        let n = group.len();
+        let len = buf.len();
+        group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("reduce_scatter", 0, 0);
+            return Ok(buf.to_vec());
+        }
+        let members = group.to_vec();
+        let out = self.central(group, "reduce_scatter", buf.to_vec(), move |orc, mut bufs| {
+            let idx: Vec<usize> = (0..bufs.len()).collect();
+            let shards = orc.reduce_scatter_sum(&mut bufs, &idx);
+            CentralResult::PerRank(members.into_iter().zip(shards).collect())
+        })?;
+        self.inner
+            .stats
+            .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
+        Ok(out)
+    }
+
+    fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
+        let n = group.len();
+        if n == 1 {
+            group_pos(self.inner.rank, self.inner.core.world, group)?;
+            self.inner.stats.record("all_reduce_scalar", 0, 0);
+            return Ok(v);
+        }
+        let out = self.central(group, "all_reduce_scalar", vec![v], |orc, bufs| {
+            let vals: Vec<f32> = bufs.iter().map(|b| b[0]).collect();
+            CentralResult::Shared(Arc::new(vec![orc.all_reduce_scalar(&vals)]))
+        })?;
+        self.inner.stats.record(
+            "all_reduce_scalar",
+            2 * rank_phase_bytes(1, n),
+            2 * rank_phase_messages(n),
+        );
+        Ok(out[0])
+    }
+
+    fn barrier(&mut self, group: &[usize]) -> Result<()> {
+        let n = group.len();
+        if n == 1 {
+            group_pos(self.inner.rank, self.inner.core.world, group)?;
+            self.inner.stats.record("barrier", 0, 0);
+            return Ok(());
+        }
+        let _ = self.central(group, "barrier", Vec::new(), |_orc, _bufs| {
+            CentralResult::Shared(Arc::new(Vec::new()))
+        })?;
+        self.inner.stats.record("barrier", 0, rank_phase_messages(n));
+        Ok(())
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.inner.stats
+    }
+
+    fn abort(&mut self) {
+        self.inner.abort();
+    }
+}
+
+// ---- the threaded backend ---------------------------------------------------
+
+/// The rank-parallel runtime handle: collectives rendezvous on deposit,
+/// then every member computes its own output shard concurrently,
+/// folding contributions in ascending group order (the lockstep fold
+/// order) so results are bitwise schedule-independent.
+pub struct ThreadedGroup {
+    inner: HandleInner,
+}
+
+/// Constructor namespace for the threaded communicator.
+pub struct ThreadedComm;
+
+impl ThreadedComm {
+    /// One handle per rank over a fresh communicator. Hand each handle
+    /// to its rank's thread.
+    pub fn new(world: usize, timeout: Duration) -> Vec<ThreadedGroup> {
+        let core = CommCore::new(world, timeout);
+        (0..world)
+            .map(|r| ThreadedGroup { inner: HandleInner::new(core.clone(), r) })
+            .collect()
+    }
+}
+
+impl ThreadedGroup {
+    /// One rendezvous round: deposit `payload`, wait for the group,
+    /// return every member's contribution in group order.
+    fn round(
+        &mut self,
+        group: &[usize],
+        op: &'static str,
+        payload: Vec<f32>,
+    ) -> Result<Vec<Arc<Vec<f32>>>> {
+        let rank = self.inner.rank;
+        let seq = self.inner.next_seq(group);
+        let core = self.inner.core.clone();
+        core.deposit(rank, group, seq, op, payload, |_st, _g| Ok(()))?;
+        let n = group.len();
+        core.wait_cell(rank, group, seq, op, |cell| {
+            if cell.deposits.len() == n {
+                Some(group.iter().map(|r| cell.deposits[r].clone()).collect::<Vec<_>>())
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Fold this member's `[start, start+len)` shard of the deposits in
+    /// group order — bitwise identical to the oracle's whole-buffer
+    /// fold restricted to that range.
+    fn fold_shard(deposits: &[Arc<Vec<f32>>], start: usize, len: usize) -> Vec<f32> {
+        let mut shard = vec![0f32; len];
+        for d in deposits {
+            let d = &d[start..start + len];
+            for (a, b) in shard.iter_mut().zip(d) {
+                *a += *b;
+            }
+        }
+        shard
+    }
+}
+
+impl ProcessGroup for ThreadedGroup {
+    fn rank(&self) -> usize {
+        self.inner.rank
+    }
+
+    fn world(&self) -> usize {
+        self.inner.core.world
+    }
+
+    fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        let n = group.len();
+        group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("all_gather", 0, 0);
+            return Ok(shard.to_vec());
+        }
+        let deposits = self.round(group, "all_gather", shard.to_vec())?;
+        let total: usize = deposits.iter().map(|d| d.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for d in &deposits {
+            out.extend_from_slice(d);
+        }
+        self.inner
+            .stats
+            .record("all_gather", rank_phase_bytes(total, n), rank_phase_messages(n));
+        Ok(out)
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        let n = group.len();
+        let len = buf.len();
+        let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("all_reduce", 0, 0);
+            return Ok(());
+        }
+        // Phase 1 (reduce-scatter): every member folds its own shard in
+        // parallel.
+        let deposits = self.round(group, "all_reduce.rs", buf.to_vec())?;
+        let (start, slen) = even_split(len, n, pos);
+        let shard = Self::fold_shard(&deposits, start, slen);
+        drop(deposits);
+        // Phase 2 (all-gather the reduced shards).
+        let shards = self.round(group, "all_reduce.ag", shard)?;
+        let mut off = 0usize;
+        for s in &shards {
+            buf[off..off + s.len()].copy_from_slice(s);
+            off += s.len();
+        }
+        debug_assert_eq!(off, len);
+        self.inner.stats.record(
+            "all_reduce",
+            2 * rank_phase_bytes(len, n),
+            2 * rank_phase_messages(n),
+        );
+        Ok(())
+    }
+
+    fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>> {
+        let n = group.len();
+        let len = buf.len();
+        let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("reduce_scatter", 0, 0);
+            return Ok(buf.to_vec());
+        }
+        let deposits = self.round(group, "reduce_scatter", buf.to_vec())?;
+        let (start, slen) = even_split(len, n, pos);
+        let shard = Self::fold_shard(&deposits, start, slen);
+        self.inner
+            .stats
+            .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
+        Ok(shard)
+    }
+
+    fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
+        let n = group.len();
+        group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("all_reduce_scalar", 0, 0);
+            return Ok(v);
+        }
+        let deposits = self.round(group, "all_reduce_scalar", vec![v])?;
+        let mut sum = 0f32;
+        for d in &deposits {
+            sum += d[0];
+        }
+        self.inner.stats.record(
+            "all_reduce_scalar",
+            2 * rank_phase_bytes(1, n),
+            2 * rank_phase_messages(n),
+        );
+        Ok(sum)
+    }
+
+    fn barrier(&mut self, group: &[usize]) -> Result<()> {
+        let n = group.len();
+        group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            self.inner.stats.record("barrier", 0, 0);
+            return Ok(());
+        }
+        let _ = self.round(group, "barrier", Vec::new())?;
+        self.inner.stats.record("barrier", 0, rank_phase_messages(n));
+        Ok(())
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.inner.stats
+    }
+
+    fn abort(&mut self) {
+        self.inner.abort();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    const T: Duration = Duration::from_secs(10);
+
+    /// Drive `f(rank, handle)` on one thread per rank, collect results
+    /// in rank order.
+    fn drive<R: Send>(
+        handles: Vec<impl ProcessGroup + 'static>,
+        f: impl Fn(usize, &mut dyn ProcessGroup) -> R + Sync,
+    ) -> Vec<R> {
+        let f = &f;
+        thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .enumerate()
+                .map(|(r, mut h)| s.spawn(move || f(r, &mut h)))
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        })
+    }
+
+    fn both(world: usize) -> [Vec<Box<dyn ProcessGroup>>; 2] {
+        [
+            BackendSpec { kind: BackendKind::Lockstep, timeout_ms: 10_000, jitter_us: 0 }
+                .make(world),
+            BackendSpec { kind: BackendKind::Threaded, timeout_ms: 10_000, jitter_us: 0 }
+                .make(world),
+        ]
+    }
+
+    #[test]
+    fn all_reduce_matches_across_backends() {
+        for world in [1usize, 2, 3, 4, 8] {
+            let group: Vec<usize> = (0..world).collect();
+            let mut outs: Vec<Vec<Vec<f32>>> = Vec::new();
+            for handles in both(world) {
+                let group = group.clone();
+                let res = drive(handles, move |r, pg| {
+                    let mut buf: Vec<f32> =
+                        (0..10).map(|i| (r * 10 + i) as f32 * 0.37).collect();
+                    pg.all_reduce_sum(&mut buf, &group).unwrap();
+                    buf
+                });
+                outs.push(res);
+            }
+            assert_eq!(outs[0], outs[1], "world {world}");
+            // Every rank holds the same reduced buffer.
+            for r in 1..world {
+                assert_eq!(outs[0][0], outs[0][r]);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_gather_roundtrips() {
+        for world in [2usize, 3, 5] {
+            let group: Vec<usize> = (0..world).collect();
+            for handles in both(world) {
+                let group = group.clone();
+                let res = drive(handles, move |r, pg| {
+                    let buf: Vec<f32> = (0..9).map(|i| (i + r) as f32).collect();
+                    let shard = pg.reduce_scatter_sum(&buf, &group).unwrap();
+                    pg.all_gather(&shard, &group).unwrap()
+                });
+                let expect: Vec<f32> = (0..9)
+                    .map(|i| (0..world).map(|r| (i + r) as f32).sum())
+                    .collect();
+                for r in res {
+                    assert_eq!(r, expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_barrier() {
+        let group = [0usize, 1, 2];
+        for handles in both(3) {
+            let res = drive(handles, |r, pg| {
+                pg.barrier(&group).unwrap();
+                pg.all_reduce_scalar(r as f32 + 1.0, &group).unwrap()
+            });
+            assert_eq!(res, vec![6.0, 6.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn subgroups_are_independent() {
+        // Two disjoint groups reduce concurrently.
+        for handles in both(4) {
+            let res = drive(handles, |r, pg| {
+                let group = if r < 2 { vec![0usize, 1] } else { vec![2usize, 3] };
+                let mut buf = vec![r as f32; 4];
+                pg.all_reduce_sum(&mut buf, &group).unwrap();
+                buf[0]
+            });
+            assert_eq!(res, vec![1.0, 1.0, 5.0, 5.0]);
+        }
+    }
+
+    #[test]
+    fn per_rank_accounting_matches_closed_form() {
+        for world in 1..=8usize {
+            let group: Vec<usize> = (0..world).collect();
+            let len = 1000usize;
+            for handles in both(world) {
+                let group = group.clone();
+                let stats = drive(handles, move |r, pg| {
+                    let mut buf = vec![r as f32; len];
+                    pg.all_reduce_sum(&mut buf, &group).unwrap();
+                    let _ = pg.reduce_scatter_sum(&buf, &group).unwrap();
+                    let shard_len = even_split(len, group.len(), 0).1;
+                    let _ = pg.all_gather(&buf[..shard_len], &group).unwrap();
+                    pg.stats().clone()
+                });
+                for s in &stats {
+                    assert_eq!(
+                        s.ops["all_reduce"].bytes,
+                        2 * rank_phase_bytes(len, world),
+                        "world {world}"
+                    );
+                    assert_eq!(
+                        s.ops["reduce_scatter"].bytes,
+                        rank_phase_bytes(len, world)
+                    );
+                    assert_eq!(s.ops["all_reduce"].messages, 2 * rank_phase_messages(world));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_ops_rejected() {
+        let handles = ThreadedComm::new(2, T);
+        let res = drive(handles, |r, pg| {
+            let group = [0usize, 1];
+            if r == 0 {
+                pg.barrier(&group).map(|_| 0.0)
+            } else {
+                pg.all_reduce_scalar(1.0, &group)
+            }
+        });
+        // At least one side must report the op mismatch; neither hangs.
+        assert!(res.iter().filter(|r| r.is_err()).count() >= 1);
+    }
+
+    #[test]
+    fn invalid_groups_rejected() {
+        let mut h = ThreadedComm::new(2, T);
+        let pg = &mut h[0];
+        assert!(pg.barrier(&[]).is_err());
+        assert!(pg.barrier(&[1]).is_err()); // not a member
+        assert!(pg.barrier(&[0, 5]).is_err()); // out of range
+        assert!(pg.all_reduce_scalar(1.0, &[1, 0]).is_err()); // not ascending
+    }
+
+    #[test]
+    fn dropped_peer_unblocks_waiters() {
+        let mut handles = ThreadedComm::new(2, Duration::from_secs(30));
+        let h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        let t0 = Instant::now();
+        let j = thread::spawn(move || h0.barrier(&[0, 1]));
+        drop(h1); // rank 1 leaves without ever arriving
+        let res = j.join().unwrap();
+        assert!(res.is_err(), "waiter must get a clean error");
+        assert!(t0.elapsed() < Duration::from_secs(10), "must not wait for the timeout");
+    }
+}

@@ -3,6 +3,7 @@
 //! components".
 
 use super::{CommDtype, FsdpConfig, ShardStrategy};
+use crate::dist::process_group::BackendSpec;
 use crate::registry::{Component, ComponentRegistry};
 use anyhow::Result;
 
@@ -14,6 +15,9 @@ pub struct ParallelSpec {
     pub strategy: ShardStrategy,
     pub unit_bytes: usize,
     pub comm_dtype: CommDtype,
+    /// Collective execution backend (`lockstep` oracle or rank-per-
+    /// thread `threaded` runtime) plus its rendezvous knobs.
+    pub backend: BackendSpec,
 }
 
 impl ParallelSpec {
@@ -45,11 +49,17 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             "bf16" => CommDtype::Bf16,
             other => anyhow::bail!("unknown comm_dtype '{other}' (f32|bf16)"),
         };
+        let backend = BackendSpec {
+            kind: BackendSpec::parse_kind(&ctx.str_or(cfg, "backend", "lockstep"))?,
+            timeout_ms: ctx.usize_or(cfg, "comm_timeout_ms", 30_000)? as u64,
+            jitter_us: ctx.usize_or(cfg, "comm_jitter_us", 0)? as u64,
+        };
         Ok(ParallelSpec {
             dp,
             strategy,
             unit_bytes: (unit_mb * 1024.0 * 1024.0) as usize,
             comm_dtype: comm,
+            backend,
         })
     };
 
@@ -65,6 +75,9 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("dp_degree", "int", "1", "data-parallel world size"),
             ("unit_size_mb", "float", "4.0", "flat-unit target size"),
             ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+            ("backend", "string", "lockstep", "collective runtime: `lockstep` (oracle) or `threaded` (rank-per-thread)"),
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per collective (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
         ],
     );
 
@@ -82,6 +95,9 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("shard_group_size", "int", "required", "ranks per shard group (divides dp_degree)"),
             ("unit_size_mb", "float", "4.0", "flat-unit target size"),
             ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+            ("backend", "string", "lockstep", "collective runtime: `lockstep` (oracle) or `threaded` (rank-per-thread)"),
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per collective (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
         ],
     );
 
@@ -97,6 +113,9 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("dp_degree", "int", "1", "data-parallel world size"),
             ("unit_size_mb", "float", "4.0", "flat-unit target size"),
             ("comm_dtype", "string", "f32", "gradient comm dtype: `f32` or `bf16`"),
+            ("backend", "string", "lockstep", "collective runtime: `lockstep` (oracle) or `threaded` (rank-per-thread)"),
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per collective (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
         ],
     );
 
@@ -134,7 +153,7 @@ components:
   p2:
     component_key: parallel_strategy
     variant_key: hsdp
-    config: {dp_degree: 8, shard_group_size: 4, comm_dtype: bf16}
+    config: {dp_degree: 8, shard_group_size: 4, comm_dtype: bf16, backend: threaded, comm_timeout_ms: 5000, comm_jitter_us: 50}
 ";
         let cfg = Config::from_str_named(src, "<t>").unwrap();
         let reg = ComponentRegistry::with_builtins();
@@ -142,8 +161,28 @@ components:
         let p1 = g.get::<super::ParallelSpec>("p1").unwrap();
         assert_eq!(p1.dp, 8);
         assert_eq!(p1.unit_bytes, 16 << 20);
+        assert_eq!(p1.backend.kind, crate::dist::process_group::BackendKind::Lockstep);
         let p2 = g.get::<super::ParallelSpec>("p2").unwrap();
         assert!(matches!(p2.strategy, super::ShardStrategy::Hybrid { shard_size: 4 }));
         assert_eq!(p2.comm_dtype, super::CommDtype::Bf16);
+        assert_eq!(p2.backend.kind, crate::dist::process_group::BackendKind::Threaded);
+        assert_eq!(p2.backend.timeout_ms, 5000);
+        assert_eq!(p2.backend.jitter_us, 50);
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let src = "\
+components:
+  p:
+    component_key: parallel_strategy
+    variant_key: fsdp
+    config: {dp_degree: 2, backend: rdma}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let e = ObjectGraphBuilder::new(&reg).build(&cfg);
+        let msg = e.err().map(|e| e.root_cause().to_string()).unwrap();
+        assert!(msg.contains("unknown collective backend"), "{msg}");
     }
 }

@@ -19,20 +19,34 @@
 //!   → sharded AdamW update. HSDP shards within `shard_size`-rank
 //!   groups and all-reduces gradients across replica groups.
 //!
-//! Execution is *lockstep SPMD*: all ranks' shards live in this
-//! process, ranks run their compute sequentially (1-core testbed), and
-//! collectives move real bytes via [`crate::dist::collectives`] — the
-//! sharding math and communication volumes are exactly those of a real
-//! deployment (DESIGN.md §Hardware-Adaptation).
+//! Execution is **rank-parallel SPMD**: each rank is a [`RankEngine`]
+//! owning only its own shards + optimizer state and a
+//! [`ProcessGroup`] handle; it communicates with peers *only* through
+//! that handle. The [`FsdpEngine`] compatibility wrapper spins up all
+//! ranks in-process (one OS thread per rank for every collective phase)
+//! so the gym, checkpointing, ablation and the CLI keep their
+//! single-object view. Collective semantics, fold order and per-rank
+//! communication volumes are identical across the `lockstep` oracle and
+//! the `threaded` runtime — `rust/tests/backend_equivalence.rs` pins
+//! this bitwise.
+//!
+//! Numerics note: the global grad-norm is now folded across shard
+//! slots through an f32 scalar all-reduce (per-slot partials still
+//! accumulate in f64). This replaces the pre-`ProcessGroup` engine's
+//! single cross-slot f64 accumulator, so clip-active trajectories are
+//! not bit-continuous with metrics produced before this refactor —
+//! only the two current backends are bitwise-equal to *each other*.
 
 pub mod components;
 
-use crate::dist::collectives::Collectives;
+use crate::dist::collectives::CommStats;
+use crate::dist::process_group::{BackendKind, BackendSpec, ProcessGroup};
 use crate::dist::topology::hsdp_groups;
 use crate::model::ParamStore;
 use crate::optim::AdamW;
 use crate::util::even_split;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Communication dtype policy (mixed precision): f32, or bf16-rounded
 /// payloads (half traffic volume accounted, quantization applied for
@@ -67,6 +81,22 @@ pub struct FsdpConfig {
 impl Default for FsdpConfig {
     fn default() -> Self {
         Self { world: 1, unit_bytes: 4 << 20, strategy: ShardStrategy::Full, comm_dtype: CommDtype::F32 }
+    }
+}
+
+impl FsdpConfig {
+    /// Ranks per shard group under this config's strategy (validated).
+    pub fn shard_group_size(&self) -> Result<usize> {
+        match self.strategy {
+            ShardStrategy::Full => Ok(self.world),
+            ShardStrategy::Ddp => Ok(1),
+            ShardStrategy::Hybrid { shard_size } => {
+                if shard_size == 0 || self.world % shard_size != 0 {
+                    bail!("hsdp shard size {shard_size} must divide world {}", self.world);
+                }
+                Ok(shard_size)
+            }
+        }
     }
 }
 
@@ -114,69 +144,341 @@ pub struct FsdpStepStats {
     pub comm_messages: u64,
 }
 
-/// The sharded engine.
-pub struct FsdpEngine {
+// ---- the per-rank engine ----------------------------------------------------
+
+/// One rank's half of the sharded engine: its own unit shards, its own
+/// sharded AdamW state, and a [`ProcessGroup`] handle — the *only*
+/// channel to peer ranks. All ranks of a communicator run the same
+/// sequence of collectives (SPMD), so the engine is driven one instance
+/// per rank, concurrently.
+pub struct RankEngine {
     pub cfg: FsdpConfig,
     pub units: Vec<FlatUnit>,
-    /// `shards[u][rank]` — rank's shard of unit u's flat buffer.
-    shards: Vec<Vec<Vec<f32>>>,
-    /// Sharded AdamW state: one optimizer per (unit, rank) shard.
-    opts: Vec<Vec<AdamW>>,
-    pub comm: Collectives,
-    /// For HSDP: this rank's shard group / replica structure.
-    shard_group_size: usize,
+    /// `shards[u]` — this rank's shard of unit u's flat buffer.
+    shards: Vec<Vec<f32>>,
+    /// Sharded AdamW state, one optimizer per unit shard.
+    opts: Vec<AdamW>,
+    pg: Box<dyn ProcessGroup>,
+    /// Expected per-parameter gradient lengths (validation).
+    param_lens: Vec<usize>,
+    /// This rank's shard group (reduce-scatter / all-gather run here).
+    shard_group: Vec<usize>,
+    /// This rank's replica group (gradient all-reduce runs here).
+    replica_group: Vec<usize>,
 }
 
-impl FsdpEngine {
-    /// Shard `params` across the DP group. The param store itself is the
-    /// rank-0 gold copy; after construction every rank holds only its
-    /// shards (plus transient unsharded units during steps).
-    pub fn new(params: &ParamStore, cfg: FsdpConfig, opt_spec: &crate::optim::components::OptimizerSpec) -> Result<Self> {
+impl RankEngine {
+    /// Build rank `pg.rank()`'s engine: flatten `params` into units and
+    /// keep only this rank's shard slices (plus matching AdamW state).
+    pub fn new(
+        params: &ParamStore,
+        cfg: FsdpConfig,
+        opt_spec: &crate::optim::components::OptimizerSpec,
+        pg: Box<dyn ProcessGroup>,
+    ) -> Result<Self> {
         if cfg.world == 0 {
             bail!("world must be >= 1");
         }
-        let shard_group_size = match cfg.strategy {
-            ShardStrategy::Full => cfg.world,
-            ShardStrategy::Ddp => 1,
-            ShardStrategy::Hybrid { shard_size } => {
-                if shard_size == 0 || cfg.world % shard_size != 0 {
-                    bail!("hsdp shard size {shard_size} must divide world {}", cfg.world);
-                }
-                shard_size
-            }
-        };
+        if pg.world() != cfg.world {
+            bail!("process group world {} != engine world {}", pg.world(), cfg.world);
+        }
+        let rank = pg.rank();
+        let shard_group_size = cfg.shard_group_size()?;
+        let all: Vec<usize> = (0..cfg.world).collect();
+        let topo = hsdp_groups(&all, shard_group_size)?;
+        let slot = rank % shard_group_size;
+        let shard_group = topo.shard_groups[rank / shard_group_size].clone();
+        let replica_group = topo.replica_groups[slot].clone();
+
         let units = build_units(&params.shapes, cfg.unit_bytes);
         let lr = opt_spec.lr();
         let mut shards = Vec::with_capacity(units.len());
         let mut opts = Vec::with_capacity(units.len());
         for unit in &units {
-            // Flatten the unit from the param store.
             let mut flat = Vec::with_capacity(unit.elems);
             for &pid in &unit.param_ids {
                 flat.extend_from_slice(&params.bufs[pid]);
             }
-            let mut unit_shards = Vec::with_capacity(cfg.world);
-            let mut unit_opts = Vec::with_capacity(cfg.world);
-            for rank in 0..cfg.world {
-                let slot = rank % shard_group_size;
-                let (start, len) = even_split(unit.elems, shard_group_size, slot);
-                unit_shards.push(flat[start..start + len].to_vec());
-                let opt = match opt_spec {
-                    crate::optim::components::OptimizerSpec::AdamW {
-                        lr, beta1, beta2, eps, weight_decay,
-                    } => AdamW::new(len, *lr, *beta1, *beta2, *eps, *weight_decay),
-                    crate::optim::components::OptimizerSpec::Sgd { .. } => {
-                        // engine currently optimizes with AdamW state shape;
-                        // SGD supported via zero-beta AdamW equivalent.
-                        AdamW::new(len, lr, 0.0, 0.0, 1e-30, 0.0)
-                    }
-                };
-                unit_opts.push(opt);
-            }
-            shards.push(unit_shards);
-            opts.push(unit_opts);
+            let (start, len) = even_split(unit.elems, shard_group_size, slot);
+            shards.push(flat[start..start + len].to_vec());
+            let opt = match opt_spec {
+                crate::optim::components::OptimizerSpec::AdamW {
+                    lr, beta1, beta2, eps, weight_decay,
+                } => AdamW::new(len, *lr, *beta1, *beta2, *eps, *weight_decay),
+                crate::optim::components::OptimizerSpec::Sgd { .. } => {
+                    // engine currently optimizes with AdamW state shape;
+                    // SGD supported via zero-beta AdamW equivalent.
+                    AdamW::new(len, lr, 0.0, 0.0, 1e-30, 0.0)
+                }
+            };
+            opts.push(opt);
         }
-        Ok(Self { cfg, units, shards, opts, comm: Collectives::new(), shard_group_size })
+        let param_lens = params.bufs.iter().map(|b| b.len()).collect();
+        Ok(Self { cfg, units, shards, opts, pg, param_lens, shard_group, replica_group })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.pg.rank()
+    }
+
+    /// This rank's communication telemetry.
+    pub fn stats(&self) -> &CommStats {
+        self.pg.stats()
+    }
+
+    /// Mark this rank dead on its communicator, waking blocked peers.
+    pub fn abort(&mut self) {
+        self.pg.abort();
+    }
+
+    /// All-gather every unit into its full flat buffer (what this rank
+    /// sees for fwd/bwd). Singleton shard groups (DDP) gather locally.
+    pub fn unshard_flats(&mut self) -> Result<Vec<Vec<f32>>> {
+        let mut flats = Vec::with_capacity(self.units.len());
+        for shard in &self.shards {
+            let flat = if self.shard_group.len() > 1 {
+                self.pg.all_gather(shard, &self.shard_group)?
+            } else {
+                shard.clone()
+            };
+            flats.push(flat);
+        }
+        Ok(flats)
+    }
+
+    /// Participate in the unshard all-gathers but drop each gathered
+    /// unit immediately — for peers of the one rank that materializes
+    /// the full parameters. Traffic accounting is identical to
+    /// [`Self::unshard_flats`]; retained memory is one unit, not the
+    /// whole model.
+    pub fn unshard_discard(&mut self) -> Result<()> {
+        for shard in &self.shards {
+            if self.shard_group.len() > 1 {
+                let _ = self.pg.all_gather(shard, &self.shard_group)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// All-gather every unit and scatter the tensors into `out`.
+    pub fn unshard_into(&mut self, out: &mut ParamStore) -> Result<()> {
+        let flats = self.unshard_flats()?;
+        for (unit, flat) in self.units.iter().zip(&flats) {
+            for (&pid, &off) in unit.param_ids.iter().zip(&unit.offsets) {
+                let n = out.bufs[pid].len();
+                out.bufs[pid].copy_from_slice(&flat[off..off + n]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reduce this rank's raw gradients with its peers (mean), apply
+    /// grad clipping against the *global* norm, and run the sharded
+    /// optimizer update. Returns the global (pre-clip) grad norm.
+    ///
+    /// Collective schedule (identical on every rank): per unit, a
+    /// reduce-scatter over the shard group then an all-reduce over the
+    /// replica group; finally one scalar all-reduce folding the
+    /// per-slot squared-norm partials. Singleton groups are served
+    /// locally without touching the communicator.
+    pub fn apply_grads(
+        &mut self,
+        grads: &[Vec<f32>],
+        lr_scale: f32,
+        max_grad_norm: Option<f32>,
+    ) -> Result<f32> {
+        if grads.len() != self.param_lens.len() {
+            bail!(
+                "rank {}: got {} parameter gradients, model has {}",
+                self.rank(),
+                grads.len(),
+                self.param_lens.len()
+            );
+        }
+        for (pid, g) in grads.iter().enumerate() {
+            if g.len() != self.param_lens[pid] {
+                bail!(
+                    "rank {}: gradient {pid} has {} elements, parameter has {}",
+                    self.rank(),
+                    g.len(),
+                    self.param_lens[pid]
+                );
+            }
+        }
+        let inv_w = 1.0 / self.cfg.world as f32;
+
+        // Per unit: flatten, reduce to this rank's shard, replicate.
+        let mut grad_shards: Vec<Vec<f32>> = Vec::with_capacity(self.units.len());
+        for unit in &self.units {
+            let mut flat = Vec::with_capacity(unit.elems);
+            for &pid in &unit.param_ids {
+                flat.extend_from_slice(&grads[pid]);
+            }
+            if self.cfg.comm_dtype == CommDtype::Bf16 {
+                for v in &mut flat {
+                    *v = bf16_round(*v);
+                }
+            }
+            let mut shard = if self.shard_group.len() > 1 {
+                self.pg.reduce_scatter_sum(&flat, &self.shard_group)?
+            } else {
+                flat
+            };
+            if self.replica_group.len() > 1 {
+                self.pg.all_reduce_sum(&mut shard, &self.replica_group)?;
+            }
+            grad_shards.push(shard);
+        }
+
+        // Mean over ranks + this slot's squared-norm partial.
+        let mut sq = 0f64;
+        for s in &mut grad_shards {
+            for g in s.iter_mut() {
+                *g *= inv_w;
+                sq += (*g as f64) * (*g as f64);
+            }
+        }
+        // Fold the slots' partials once per logical gradient copy: the
+        // shard group covers every slot exactly once, and slot shards
+        // are identical across replica groups post-all-reduce.
+        let global_sq = if self.shard_group.len() > 1 {
+            self.pg.all_reduce_scalar(sq as f32, &self.shard_group)?
+        } else {
+            sq as f32
+        };
+        let grad_norm = (global_sq as f64).sqrt() as f32;
+        let clip_scale = match max_grad_norm {
+            Some(mx) if mx > 0.0 && grad_norm > mx => mx / (grad_norm + 1e-6),
+            _ => 1.0,
+        };
+        if clip_scale != 1.0 {
+            for s in &mut grad_shards {
+                for g in s.iter_mut() {
+                    *g *= clip_scale;
+                }
+            }
+        }
+
+        // Sharded optimizer update over this rank's shards.
+        for (u, g) in grad_shards.iter().enumerate() {
+            self.opts[u].begin_step();
+            let shard = &mut self.shards[u];
+            debug_assert_eq!(shard.len(), g.len());
+            self.opts[u].update(shard, g, 0, lr_scale);
+        }
+        Ok(grad_norm)
+    }
+
+    /// Scalar all-reduce over the full communicator (loss folding).
+    pub fn all_reduce_scalar(&mut self, v: f32) -> Result<f32> {
+        if self.cfg.world == 1 {
+            return Ok(v);
+        }
+        let group: Vec<usize> = (0..self.cfg.world).collect();
+        self.pg.all_reduce_scalar(v, &group)
+    }
+
+    /// Shard views for checkpointing.
+    pub fn shard_views(&self) -> Vec<&[f32]> {
+        self.shards.iter().map(|s| s.as_slice()).collect()
+    }
+
+    /// Optimizer state (m, v, t) per unit for checkpointing.
+    pub fn opt_state(&self) -> Vec<(Vec<f32>, Vec<f32>, u64)> {
+        self.opts
+            .iter()
+            .map(|o| {
+                let (m, v, t) = o.state();
+                (m.to_vec(), v.to_vec(), t)
+            })
+            .collect()
+    }
+
+    /// Restore shards from a checkpoint.
+    pub fn restore_shards(&mut self, shards: Vec<Vec<f32>>) -> Result<()> {
+        if shards.len() != self.units.len() {
+            bail!("restore: {} unit shards, expected {}", shards.len(), self.units.len());
+        }
+        for (u, s) in shards.into_iter().enumerate() {
+            if s.len() != self.shards[u].len() {
+                bail!("restore: unit {u} shard size mismatch");
+            }
+            self.shards[u] = s;
+        }
+        Ok(())
+    }
+
+    /// Restore optimizer state from a checkpoint.
+    pub fn restore_opt_state(&mut self, states: Vec<(Vec<f32>, Vec<f32>, u64)>) -> Result<()> {
+        if states.len() != self.opts.len() {
+            bail!("restore: {} opt states, expected {}", states.len(), self.opts.len());
+        }
+        for (u, (m, v, t)) in states.into_iter().enumerate() {
+            self.opts[u].restore(m, v, t)?;
+        }
+        Ok(())
+    }
+}
+
+// ---- the all-ranks-in-process wrapper ---------------------------------------
+
+/// The sharded engine, compatibility view: owns one [`RankEngine`] per
+/// rank of an in-process communicator and drives them concurrently —
+/// one OS thread per rank per collective phase — so existing callers
+/// (gym, checkpointing, ablation, CLI, benches) keep a single object.
+///
+/// A rank that errors or panics mid-phase aborts its process group, so
+/// peers blocked in a collective fail fast with a clean error instead
+/// of deadlocking; the wrapper then surfaces the root cause. After such
+/// a failure the communicator is permanently dead (errors are fatal at
+/// the step level — resume goes through a checkpoint).
+pub struct FsdpEngine {
+    pub cfg: FsdpConfig,
+    pub units: Vec<FlatUnit>,
+    pub backend: BackendSpec,
+    ranks: Vec<RankEngine>,
+    shard_group_size: usize,
+    /// Per-phase counter seeding the jitter fuzzer's per-rank RNG.
+    jitter_seq: u64,
+}
+
+impl FsdpEngine {
+    /// Shard `params` across the DP group over the default (`lockstep`)
+    /// backend. The param store itself is the rank-0 gold copy; after
+    /// construction every rank holds only its shards.
+    pub fn new(
+        params: &ParamStore,
+        cfg: FsdpConfig,
+        opt_spec: &crate::optim::components::OptimizerSpec,
+    ) -> Result<Self> {
+        Self::with_backend(params, cfg, opt_spec, BackendSpec::lockstep())
+    }
+
+    /// [`Self::new`] with an explicit collective backend.
+    pub fn with_backend(
+        params: &ParamStore,
+        cfg: FsdpConfig,
+        opt_spec: &crate::optim::components::OptimizerSpec,
+        backend: BackendSpec,
+    ) -> Result<Self> {
+        if cfg.world == 0 {
+            bail!("world must be >= 1");
+        }
+        let shard_group_size = cfg.shard_group_size()?;
+        let mut ranks = Vec::with_capacity(cfg.world);
+        for pg in backend.make(cfg.world) {
+            ranks.push(RankEngine::new(params, cfg.clone(), opt_spec, pg)?);
+        }
+        let units = ranks[0].units.clone();
+        Ok(Self { cfg, units, backend, ranks, shard_group_size, jitter_seq: 0x5eed_0000 })
+    }
+
+    /// `"lockstep"` or `"threaded"` — for provenance (checkpoints).
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend.kind {
+            BackendKind::Lockstep => "lockstep",
+            BackendKind::Threaded => "threaded",
+        }
     }
 
     pub fn world(&self) -> usize {
@@ -195,36 +497,117 @@ impl FsdpEngine {
 
     /// Per-rank persistent memory in bytes: param shards + 2× optimizer.
     pub fn per_rank_state_bytes(&self) -> usize {
-        let shard_elems: usize = self.shards.iter().map(|u| u[0].len()).sum();
+        let shard_elems: usize = self.ranks[0].shards.iter().map(|s| s.len()).sum();
         shard_elems * 4 * 3
     }
 
-    /// All-gather every unit into `out` (the unsharded parameters every
-    /// rank sees for fwd/bwd). In lockstep simulation one materialized
-    /// copy is shared; traffic is accounted for the full group.
-    pub fn unshard_into(&mut self, out: &mut ParamStore) -> Result<()> {
-        let n_groups = self.cfg.world / self.shard_group_size;
-        for (unit, unit_shards) in self.units.iter().zip(&self.shards) {
-            // Gather one shard group (all groups hold identical data).
-            let refs: Vec<&[f32]> = (0..self.shard_group_size)
-                .map(|slot| unit_shards[slot].as_slice())
+    /// Communicator-wide telemetry: every rank's [`CommStats`] merged.
+    /// Per-rank tallies sum to exactly the group-level ring formulas
+    /// the α-β model charges.
+    pub fn comm_stats(&self) -> CommStats {
+        let mut all = CommStats::new();
+        for r in &self.ranks {
+            all.merge(r.stats());
+        }
+        all
+    }
+
+    /// One rank's communication telemetry.
+    pub fn rank_comm_stats(&self, rank: usize) -> &CommStats {
+        self.ranks[rank].stats()
+    }
+
+    /// Drive `f(rank, engine)` on one OS thread per rank and collect
+    /// the results in rank order. A rank that errors or panics aborts
+    /// its process group (waking blocked peers) and the root-cause
+    /// error is returned; with `jitter_us > 0` each rank sleeps a
+    /// random few microseconds first (the equivalence suite's schedule
+    /// fuzzer).
+    fn run_ranks<R: Send>(
+        &mut self,
+        f: impl Fn(usize, &mut RankEngine) -> Result<R> + Sync,
+    ) -> Result<Vec<R>> {
+        if self.ranks.len() == 1 {
+            return Ok(vec![f(0, &mut self.ranks[0])?]);
+        }
+        let jitter = self.backend.jitter_us;
+        let seq = self.jitter_seq;
+        self.jitter_seq = self.jitter_seq.wrapping_add(1);
+        let f = &f;
+        let outcomes: Vec<std::thread::Result<Result<R>>> = std::thread::scope(|s| {
+            let joins: Vec<_> = self
+                .ranks
+                .iter_mut()
+                .enumerate()
+                .map(|(r, eng)| {
+                    s.spawn(move || {
+                        if jitter > 0 {
+                            let mut rng = crate::util::prng::Pcg64::new(
+                                seq ^ ((r as u64) << 40) ^ 0x9e37_79b9_7f4a_7c15,
+                            );
+                            let us = rng.next_below(jitter + 1);
+                            std::thread::sleep(std::time::Duration::from_micros(us));
+                        }
+                        let out = catch_unwind(AssertUnwindSafe(|| f(r, &mut *eng)));
+                        if !matches!(out, Ok(Ok(_))) {
+                            // Error or panic: wake peers blocked in a
+                            // collective with this rank.
+                            eng.abort();
+                        }
+                        out
+                    })
+                })
                 .collect();
-            let flat = if self.shard_group_size > 1 {
-                self.comm.all_gather(&refs, self.shard_group_size)
-            } else {
-                refs[0].to_vec()
-            };
-            // In a real deployment every shard group all-gathers; account
-            // the replicas' traffic too (n_groups copies of the op).
-            for _ in 1..n_groups {
-                let refs2: Vec<&[f32]> = (0..self.shard_group_size)
-                    .map(|slot| unit_shards[slot].as_slice())
-                    .collect();
-                if self.shard_group_size > 1 {
-                    let _ = self.comm.all_gather(&refs2, self.shard_group_size);
+            joins
+                .into_iter()
+                .map(|j| j.join().unwrap_or_else(Err))
+                .collect()
+        });
+
+        let mut results = Vec::with_capacity(outcomes.len());
+        let mut errors: Vec<(usize, anyhow::Error)> = Vec::new();
+        for (r, o) in outcomes.into_iter().enumerate() {
+            match o {
+                Ok(Ok(v)) => results.push(v),
+                Ok(Err(e)) => errors.push((r, e)),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "<non-string panic payload>".into());
+                    errors.push((r, anyhow!("rank {r} panicked: {msg}")));
                 }
             }
-            // Scatter the flat unit back into the param store tensors.
+        }
+        if !errors.is_empty() {
+            // Prefer the root cause over the peers' "rank N died"
+            // follow-on failures.
+            let idx = errors
+                .iter()
+                .position(|(_, e)| !format!("{e:#}").contains("died during"))
+                .unwrap_or(0);
+            let (r, e) = errors.swap_remove(idx);
+            return Err(e.context(format!("rank {r} failed (collective backend aborted)")));
+        }
+        Ok(results)
+    }
+
+    /// All-gather every unit into `out` (the unsharded parameters every
+    /// rank sees for fwd/bwd). All ranks gather concurrently — traffic
+    /// is accounted per rank — and rank 0's (identical) copy is
+    /// scattered into `out`; peers drop their gathered units as they
+    /// go, so retained memory stays one full copy, not `world` copies.
+    pub fn unshard_into(&mut self, out: &mut ParamStore) -> Result<()> {
+        let mut flats = self.run_ranks(|r, eng| {
+            if r == 0 {
+                eng.unshard_flats().map(Some)
+            } else {
+                eng.unshard_discard().map(|_| None)
+            }
+        })?;
+        let flats0 = flats.swap_remove(0).expect("rank 0 materializes the gathered units");
+        for (unit, flat) in self.units.iter().zip(&flats0) {
             for (&pid, &off) in unit.param_ids.iter().zip(&unit.offsets) {
                 let n = out.bufs[pid].len();
                 out.bufs[pid].copy_from_slice(&flat[off..off + n]);
@@ -234,8 +617,9 @@ impl FsdpEngine {
     }
 
     /// Reduce per-rank gradients (mean) and apply the sharded optimizer
-    /// update. `grads_per_rank[rank][param_id]` are the raw per-rank
-    /// grads from fwd/bwd. Returns the global (pre-clip) grad norm.
+    /// update on every rank concurrently. `grads_per_rank[rank][param]`
+    /// are the raw per-rank grads from fwd/bwd. Returns the global
+    /// (pre-clip) grad norm.
     pub fn apply_grads(
         &mut self,
         grads_per_rank: &[Vec<Vec<f32>>],
@@ -246,114 +630,27 @@ impl FsdpEngine {
         if grads_per_rank.len() != w {
             bail!("got grads for {} ranks, world is {w}", grads_per_rank.len());
         }
-        let inv_w = 1.0 / w as f32;
-        let n_groups = w / self.shard_group_size;
+        let norms =
+            self.run_ranks(|r, eng| eng.apply_grads(&grads_per_rank[r], lr_scale, max_grad_norm))?;
+        Ok(norms[0])
+    }
 
-        // Per unit: flatten per-rank grads, reduce to shards.
-        let mut grad_shards: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.units.len());
-        for unit in &self.units {
-            // Build each rank's flat grad buffer for this unit.
-            let mut bufs: Vec<Vec<f32>> = (0..w)
-                .map(|r| {
-                    let mut flat = Vec::with_capacity(unit.elems);
-                    for &pid in &unit.param_ids {
-                        flat.extend_from_slice(&grads_per_rank[r][pid]);
-                    }
-                    if self.cfg.comm_dtype == CommDtype::Bf16 {
-                        for v in &mut flat {
-                            *v = bf16_round(*v);
-                        }
-                    }
-                    flat
-                })
-                .collect();
-
-            let shards: Vec<Vec<f32>> = match self.cfg.strategy {
-                ShardStrategy::Ddp => {
-                    // all-reduce; every rank keeps the full grad (slot 0 shard).
-                    let group: Vec<usize> = (0..w).collect();
-                    self.comm.all_reduce_sum(&mut bufs, &group);
-                    vec![bufs.swap_remove(0)]
-                }
-                ShardStrategy::Full => {
-                    let group: Vec<usize> = (0..w).collect();
-                    self.comm.reduce_scatter_sum(&mut bufs, &group)
-                }
-                ShardStrategy::Hybrid { shard_size } => {
-                    let all: Vec<usize> = (0..w).collect();
-                    let h = hsdp_groups(&all, shard_size)?;
-                    // reduce-scatter within each shard group
-                    let mut per_group: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_groups);
-                    for g in &h.shard_groups {
-                        per_group.push(self.comm.reduce_scatter_sum(&mut bufs, g));
-                    }
-                    // all-reduce matching slots across replica groups
-                    let mut result: Vec<Vec<f32>> = vec![Vec::new(); shard_size];
-                    for slot in 0..shard_size {
-                        let mut slot_bufs: Vec<Vec<f32>> =
-                            per_group.iter().map(|g| g[slot].clone()).collect();
-                        let group: Vec<usize> = (0..n_groups).collect();
-                        self.comm.all_reduce_sum(&mut slot_bufs, &group);
-                        result[slot] = slot_bufs.swap_remove(0);
-                    }
-                    result
-                }
-            };
-            grad_shards.push(shards);
+    /// Scalar all-reduce (sum) over the full communicator: rank r
+    /// contributes `vals[r]`. Loss averaging and similar metrics.
+    pub fn all_reduce_scalar(&mut self, vals: &[f32]) -> Result<f32> {
+        if vals.len() != self.cfg.world {
+            bail!("got {} scalar contributions, world is {}", vals.len(), self.cfg.world);
         }
-
-        // Mean over ranks + global grad-norm (computed over one logical
-        // copy of the gradient: each shard slot appears once).
-        let mut sq = 0f64;
-        for unit_shards in &mut grad_shards {
-            for s in unit_shards.iter_mut() {
-                for g in s.iter_mut() {
-                    *g *= inv_w;
-                    sq += (*g as f64) * (*g as f64);
-                }
-            }
-        }
-        let grad_norm = sq.sqrt() as f32;
-        let clip_scale = match max_grad_norm {
-            Some(mx) if mx > 0.0 && grad_norm > mx => mx / (grad_norm + 1e-6),
-            _ => 1.0,
-        };
-        if clip_scale != 1.0 {
-            for unit_shards in &mut grad_shards {
-                for s in unit_shards.iter_mut() {
-                    for g in s.iter_mut() {
-                        *g *= clip_scale;
-                    }
-                }
-            }
-        }
-
-        // Sharded optimizer update — every rank updates its own shard;
-        // in Full/Hybrid strategies shard slots are replicated across
-        // groups so we update each rank's copy from its slot's grads.
-        for (u, unit_shards) in grad_shards.iter().enumerate() {
-            for rank in 0..w {
-                let slot = rank % self.shard_group_size;
-                let g = match self.cfg.strategy {
-                    ShardStrategy::Ddp => &unit_shards[0],
-                    _ => &unit_shards[slot],
-                };
-                let opt = &mut self.opts[u][rank];
-                opt.begin_step();
-                let shard = &mut self.shards[u][rank];
-                debug_assert_eq!(shard.len(), g.len());
-                opt.update(shard, g, 0, lr_scale);
-            }
-        }
-        Ok(grad_norm)
+        let sums = self.run_ranks(|r, eng| eng.all_reduce_scalar(vals[r]))?;
+        Ok(sums[0])
     }
 
     /// Verify all replicated shards agree (SPMD invariant; tests).
     pub fn check_replica_consistency(&self) -> Result<()> {
-        for (u, unit_shards) in self.shards.iter().enumerate() {
-            for rank in self.shard_group_size..self.cfg.world {
-                let slot = rank % self.shard_group_size;
-                if unit_shards[rank] != unit_shards[slot] {
+        for rank in self.shard_group_size..self.cfg.world {
+            let slot = rank % self.shard_group_size;
+            for u in 0..self.units.len() {
+                if self.ranks[rank].shards[u] != self.ranks[slot].shards[u] {
                     bail!("unit {u}: rank {rank} shard diverged from slot {slot}");
                 }
             }
@@ -363,33 +660,18 @@ impl FsdpEngine {
 
     /// Extract rank-local shard views (checkpointing).
     pub fn rank_shards(&self, rank: usize) -> Vec<&[f32]> {
-        self.shards.iter().map(|u| u[rank].as_slice()).collect()
+        self.ranks[rank].shard_views()
     }
 
     /// Restore rank-local shards (checkpoint load).
     pub fn restore_rank_shards(&mut self, rank: usize, shards: Vec<Vec<f32>>) -> Result<()> {
-        if shards.len() != self.units.len() {
-            bail!("restore: {} unit shards, expected {}", shards.len(), self.units.len());
-        }
-        for (u, s) in shards.into_iter().enumerate() {
-            if s.len() != self.shards[u][rank].len() {
-                bail!("restore: unit {u} shard size mismatch");
-            }
-            self.shards[u][rank] = s;
-        }
-        Ok(())
+        self.ranks[rank].restore_shards(shards)
     }
 
     /// Optimizer state access for checkpointing: (m, v, t) per unit for
     /// `rank`.
     pub fn rank_opt_state(&self, rank: usize) -> Vec<(Vec<f32>, Vec<f32>, u64)> {
-        self.opts
-            .iter()
-            .map(|unit_opts| {
-                let (m, v, t) = unit_opts[rank].state();
-                (m.to_vec(), v.to_vec(), t)
-            })
-            .collect()
+        self.ranks[rank].opt_state()
     }
 
     pub fn restore_rank_opt_state(
@@ -397,13 +679,7 @@ impl FsdpEngine {
         rank: usize,
         states: Vec<(Vec<f32>, Vec<f32>, u64)>,
     ) -> Result<()> {
-        if states.len() != self.opts.len() {
-            bail!("restore: {} opt states, expected {}", states.len(), self.opts.len());
-        }
-        for (u, (m, v, t)) in states.into_iter().enumerate() {
-            self.opts[u][rank].restore(m, v, t)?;
-        }
-        Ok(())
+        self.ranks[rank].restore_opt_state(states)
     }
 }
 
@@ -589,7 +865,7 @@ mod tests {
             eng.apply_grads(&per_rank, 1.0, None).unwrap();
             let mut out = params0.clone();
             eng.unshard_into(&mut out).unwrap();
-            let calls = eng.comm.stats.ops["reduce_scatter"].calls;
+            let calls = eng.comm_stats().ops["reduce_scatter"].calls;
             (out.flatten(), calls, eng.max_unit_bytes())
         };
         let (small_p, small_calls, small_mem) = run(256);
@@ -662,5 +938,71 @@ mod tests {
         eng.unshard_into(&mut o1).unwrap();
         eng2.unshard_into(&mut o2).unwrap();
         assert_eq!(o1.flatten(), o2.flatten());
+    }
+
+    /// Quick in-module sanity check that the threaded backend is
+    /// bitwise identical to lockstep (the full grid lives in
+    /// `rust/tests/backend_equivalence.rs`).
+    #[test]
+    fn threaded_backend_matches_lockstep_bitwise() {
+        let a = arts();
+        let params0 = ParamStore::init(&a, InitScheme::ScaledNormal, 4);
+        let run = |backend: BackendSpec| {
+            let mut eng = FsdpEngine::with_backend(
+                &params0,
+                FsdpConfig {
+                    world: 4,
+                    unit_bytes: 512,
+                    strategy: ShardStrategy::Hybrid { shard_size: 2 },
+                    ..Default::default()
+                },
+                &opt_spec(),
+                backend,
+            )
+            .unwrap();
+            let mut norms = Vec::new();
+            for step in 0..3 {
+                let per_rank: Vec<Vec<Vec<f32>>> =
+                    (0..4).map(|r| fake_grads(&params0, step * 7 + r)).collect();
+                norms.push(eng.apply_grads(&per_rank, 1.0, Some(1.0)).unwrap());
+            }
+            let mut out = params0.clone();
+            eng.unshard_into(&mut out).unwrap();
+            (out.flatten(), norms, eng.comm_stats())
+        };
+        let (p_lock, n_lock, s_lock) = run(BackendSpec::lockstep());
+        let (p_thr, n_thr, s_thr) = run(BackendSpec::threaded());
+        assert_eq!(p_lock, p_thr, "params must match bitwise");
+        assert_eq!(n_lock, n_thr, "grad norms must match bitwise");
+        assert_eq!(s_lock, s_thr, "comm accounting must match");
+    }
+
+    /// A rank failing validation mid-phase must surface a clean error
+    /// from the wrapper — peers abort instead of deadlocking.
+    #[test]
+    fn rank_error_propagates_without_deadlock() {
+        let a = arts();
+        let params0 = ParamStore::init(&a, InitScheme::ScaledNormal, 5);
+        for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+            let mut eng = FsdpEngine::with_backend(
+                &params0,
+                FsdpConfig { world: 4, unit_bytes: 512, ..Default::default() },
+                &opt_spec(),
+                backend,
+            )
+            .unwrap();
+            let mut per_rank: Vec<Vec<Vec<f32>>> =
+                (0..4).map(|r| fake_grads(&params0, r as u64)).collect();
+            per_rank[2].pop(); // rank 2 is missing one parameter's grads
+            let t0 = std::time::Instant::now();
+            let e = eng.apply_grads(&per_rank, 1.0, None);
+            assert!(e.is_err());
+            let msg = format!("{:#}", e.unwrap_err());
+            assert!(msg.contains("rank 2"), "{msg}");
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "error must beat the rendezvous timeout"
+            );
+        }
     }
 }

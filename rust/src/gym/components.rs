@@ -34,6 +34,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
                     strategy: crate::fsdp::ShardStrategy::Full,
                     unit_bytes: 4 << 20,
                     comm_dtype: crate::fsdp::CommDtype::F32,
+                    backend: crate::dist::process_group::BackendSpec::lockstep(),
                 }),
             };
         let runtime: Arc<crate::runtime::components::RuntimeSpec> =

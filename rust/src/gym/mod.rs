@@ -15,9 +15,14 @@
 //!     eval / checkpoint hooks
 //! ```
 //!
-//! Rank compute is executed lockstep on one thread (PJRT handles are
-//! not Send; see DESIGN.md §Hardware-Adaptation) — collective semantics
-//! and data placement are identical to a real SPMD deployment.
+//! Rank *compute* (PJRT fwd/bwd) is executed sequentially on the main
+//! thread (PJRT handles are not Send; see DESIGN.md
+//! §Hardware-Adaptation), but the engine phases — unshard, gradient
+//! reduction, sharded optimizer, loss folding — run **one thread per
+//! rank** against per-rank [`crate::dist::process_group::ProcessGroup`]
+//! handles. The `parallel_strategy` config picks the collective
+//! backend: the `lockstep` oracle or the rank-parallel `threaded`
+//! runtime (bitwise identical; see `rust/tests/backend_equivalence.rs`).
 
 pub mod components;
 pub mod subscribers;
@@ -146,7 +151,12 @@ impl Gym {
             log::info!("warm-started from {} (step {})", ws.path.display(), cons.step);
         }
 
-        let mut fsdp = FsdpEngine::new(&params, spec.parallel.fsdp_config(), &spec.optimizer)?;
+        let mut fsdp = FsdpEngine::with_backend(
+            &params,
+            spec.parallel.fsdp_config(),
+            &spec.optimizer,
+            spec.parallel.backend,
+        )?;
 
         // Resume from the latest sharded checkpoint in run_dir.
         let mut start_step = 0u64;
@@ -266,11 +276,11 @@ impl Gym {
             }
             micro_idx += spec.grad_accum as u64;
 
-            let comm_before = fsdp.comm.stats.total_bytes();
+            let comm_before = fsdp.comm_stats().total_bytes();
             let grad_norm = fsdp.apply_grads(&per_rank, lr_scale, spec.max_grad_norm)?;
-            let loss = fsdp.comm.all_reduce_scalar(
+            let loss = fsdp.all_reduce_scalar(
                 &vec![loss_sum / (world * spec.grad_accum) as f32 / world as f32; world],
-            );
+            )?;
             tokens_seen += tokens_per_step;
             final_loss = loss;
             curve.push(CurvePoint { step, loss });
@@ -283,7 +293,7 @@ impl Gym {
                 tokens_seen,
                 tokens_per_s: tokens_seen.saturating_sub(start_step * tokens_per_step) as f64
                     / timer.elapsed_s(),
-                comm_bytes_step: fsdp.comm.stats.total_bytes() - comm_before,
+                comm_bytes_step: fsdp.comm_stats().total_bytes() - comm_before,
             };
             for s in &mut self.subscribers {
                 s.on_step(&rec);
@@ -333,6 +343,7 @@ impl Gym {
         }
 
         let elapsed = timer.elapsed_s();
+        let comm = fsdp.comm_stats();
         let summary = RunSummary {
             final_loss,
             curve,
@@ -341,11 +352,11 @@ impl Gym {
             tokens_seen,
             elapsed_s: elapsed,
             tokens_per_s: tokens_seen.saturating_sub(start_step * tokens_per_step) as f64 / elapsed,
-            comm_bytes: fsdp.comm.stats.total_bytes(),
+            comm_bytes: comm.total_bytes(),
             world,
         };
         for s in &mut self.subscribers {
-            s.on_end(&summary, &fsdp.comm.stats);
+            s.on_end(&summary, &comm);
         }
         Ok(summary)
     }

@@ -1,13 +1,25 @@
 //! Tensor-parallel sharding math (Megatron-style column/row parallel
 //! linear layers).
 //!
-//! The lockstep engine executes whole-model artifacts per rank, so TP
-//! here serves two roles faithful to the paper: (1) the *sharding
+//! TP here serves two roles faithful to the paper: (1) the *sharding
 //! semantics* — verified by unit tests that column/row-parallel
 //! execution reproduces the dense result, including the partial-sum
 //! all-reduce of row-parallel layers; (2) the *communication volumes*
 //! consumed by the perf model's TP term (Fig. 2b composition).
+//!
+//! Two execution forms are provided:
+//!
+//! * **whole-group** ([`column_parallel_forward`] /
+//!   [`row_parallel_forward`]): one call computes every rank's shard —
+//!   the single-threaded reference oracle;
+//! * **per-rank** ([`column_parallel_forward_rank`] /
+//!   [`row_parallel_forward_rank`]): each TP rank computes *only its
+//!   own* shard and the row-parallel partial sum goes through the
+//!   rank's [`ProcessGroup`] handle — the genuinely concurrent path,
+//!   bitwise identical to the oracle on both collective backends (the
+//!   group all-reduce folds partials in the same ascending order).
 
+use crate::dist::process_group::ProcessGroup;
 use crate::util::even_split;
 use anyhow::{bail, Result};
 
@@ -126,6 +138,44 @@ pub fn row_parallel_forward(x_shards: &[Mat], w: &Mat, tp: usize) -> Result<Mat>
     Ok(acc.unwrap())
 }
 
+/// Column-parallel linear, one rank's view: compute only shard `pos`
+/// of the `tp`-way output split. No collective on the forward.
+pub fn column_parallel_forward_rank(x: &Mat, w: &Mat, tp: usize, pos: usize) -> Result<Mat> {
+    if tp == 0 || w.cols < tp {
+        bail!("invalid tp degree {tp} for {} columns", w.cols);
+    }
+    if pos >= tp {
+        bail!("tp position {pos} out of range for degree {tp}");
+    }
+    let (c0, n) = even_split(w.cols, tp, pos);
+    Ok(x.matmul(&w.col_slice(c0, n)))
+}
+
+/// Row-parallel linear, one rank's view: compute this rank's partial
+/// product and fold it with its TP peers through the rank's
+/// [`ProcessGroup`] handle — the all-reduce the perf model charges.
+/// `group` is the TP group (must contain `pg.rank()`); the rank's
+/// position in it selects its row shard of `w`.
+pub fn row_parallel_forward_rank(
+    pg: &mut dyn ProcessGroup,
+    group: &[usize],
+    x_shard: &Mat,
+    w: &Mat,
+) -> Result<Mat> {
+    let tp = group.len();
+    if tp == 0 || w.rows < tp {
+        bail!("invalid tp group {group:?} for {} rows", w.rows);
+    }
+    let pos = group
+        .iter()
+        .position(|&g| g == pg.rank())
+        .ok_or_else(|| anyhow::anyhow!("rank {} is not in TP group {group:?}", pg.rank()))?;
+    let (r0, n) = even_split(w.rows, tp, pos);
+    let mut partial = x_shard.matmul(&w.row_slice(r0, n));
+    pg.all_reduce_sum(&mut partial.data, group)?;
+    Ok(partial)
+}
+
 /// Per-layer TP communication volume in bytes (fwd+bwd): 2 all-reduces
 /// forward (attention out-proj + MLP down-proj) and 2 backward.
 pub fn tp_comm_bytes_per_layer(batch: usize, seq: usize, d_model: usize, bytes_per_elem: usize) -> u64 {
@@ -174,6 +224,50 @@ mod tests {
                 assert!((p - q).abs() < 1e-3, "{p} vs {q}");
             }
         });
+    }
+
+    /// The per-rank TP path over real process groups reproduces the
+    /// whole-group oracle bitwise — on both collective backends, with
+    /// each TP rank running on its own thread.
+    #[test]
+    fn per_rank_tp_matches_oracle_on_both_backends() {
+        use crate::dist::process_group::BackendSpec;
+        let mut rng = crate::util::prng::Pcg64::new(11);
+        let mut rmat = |rows: usize, cols: usize| {
+            Mat::new(rows, cols, (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        };
+        let (m, k, h) = (3usize, 4usize, 8usize);
+        let x = rmat(m, k);
+        let a = rmat(k, h);
+        let b = rmat(h, k);
+        for tp in [1usize, 2, 4] {
+            // Oracle: whole-group column→row MLP.
+            let h_shards = column_parallel_forward(&x, &a, tp).unwrap();
+            let oracle = row_parallel_forward(&h_shards, &b, tp).unwrap();
+            let group: Vec<usize> = (0..tp).collect();
+            for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+                let handles = backend.make(tp);
+                let (x, a, b, group) = (&x, &a, &b, &group);
+                let outs: Vec<Mat> = std::thread::scope(|s| {
+                    handles
+                        .into_iter()
+                        .enumerate()
+                        .map(|(r, mut pg)| {
+                            s.spawn(move || {
+                                let h_r = column_parallel_forward_rank(x, a, tp, r).unwrap();
+                                row_parallel_forward_rank(&mut pg, group, &h_r, b).unwrap()
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|j| j.join().unwrap())
+                        .collect()
+                });
+                for (r, out) in outs.iter().enumerate() {
+                    assert_eq!(out.data, oracle.data, "tp={tp} rank {r} ({backend:?})");
+                }
+            }
+        }
     }
 
     #[test]

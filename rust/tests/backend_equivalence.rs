@@ -1,0 +1,362 @@
+//! Differential equivalence suite: the rank-per-thread `threaded`
+//! collective backend must reproduce the single-reducer `lockstep`
+//! oracle **bitwise** — parameters, optimizer state, loss/grad-norm
+//! curves and per-rank communication accounting — across the
+//! FSDP/HSDP/DDP/TP grid, for every world size, and regardless of
+//! thread scheduling (each threaded run is repeated with randomized
+//! per-rank start jitter).
+//!
+//! Artifact-free by construction: training steps are driven with
+//! seeded synthetic gradients straight into the engine, so the suite
+//! exercises exactly the sharding/collective/optimizer math without
+//! PJRT.
+
+use modalities::dist::collectives::CommStats;
+use modalities::dist::process_group::{
+    rank_phase_bytes, rank_phase_messages, BackendKind, BackendSpec, ProcessGroup,
+};
+use modalities::fsdp::{FsdpConfig, FsdpEngine, ShardStrategy};
+use modalities::model::{InitScheme, ParamStore};
+use modalities::optim::components::OptimizerSpec;
+use modalities::runtime::pjrt::ModelArtifacts;
+use modalities::util::even_split;
+use modalities::util::prng::Pcg64;
+
+fn arts() -> ModelArtifacts {
+    ModelArtifacts {
+        name: "eq".into(),
+        vocab_size: 64,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 16,
+        seq_len: 8,
+        batch_size: 2,
+        num_params: 0,
+        flops_per_token: 0,
+        param_shapes: vec![
+            ("emb".into(), vec![64, 8]),   // 512
+            ("w1".into(), vec![8, 16]),    // 128
+            ("w2".into(), vec![16, 8]),    // 128
+            ("ln".into(), vec![8]),        // 8
+            ("head".into(), vec![8, 64]),  // 512
+        ],
+        files: Default::default(),
+    }
+}
+
+fn opt_spec() -> OptimizerSpec {
+    OptimizerSpec::AdamW { lr: 0.01, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.01 }
+}
+
+fn fake_grads(params: &ParamStore, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::new(seed);
+    params
+        .bufs
+        .iter()
+        .map(|b| (0..b.len()).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+/// Everything a run produces that must be bitwise identical across
+/// backends and schedules.
+#[derive(PartialEq, Debug)]
+struct RunFingerprint {
+    params: Vec<f32>,
+    opt_state: Vec<Vec<(Vec<f32>, Vec<f32>, u64)>>,
+    grad_norms: Vec<f32>,
+    losses: Vec<f32>,
+    per_rank_stats: Vec<CommStats>,
+}
+
+/// Drive `steps` optimizer steps with seeded per-rank gradients and a
+/// per-step scalar loss fold; collect the full state fingerprint.
+fn run_training(
+    world: usize,
+    strategy: ShardStrategy,
+    backend: BackendSpec,
+    steps: u64,
+) -> RunFingerprint {
+    let a = arts();
+    let params0 = ParamStore::init(&a, InitScheme::ScaledNormal, 42);
+    let cfg = FsdpConfig { world, unit_bytes: 640, strategy, ..Default::default() };
+    let mut eng = FsdpEngine::with_backend(&params0, cfg, &opt_spec(), backend).unwrap();
+
+    let mut grad_norms = Vec::new();
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        // Params must be gatherable every step (the gym's unshard).
+        let mut gathered = params0.clone();
+        eng.unshard_into(&mut gathered).unwrap();
+
+        let per_rank: Vec<Vec<Vec<f32>>> = (0..world)
+            .map(|r| fake_grads(&params0, 1000 * step + 17 * r as u64 + 5))
+            .collect();
+        grad_norms.push(eng.apply_grads(&per_rank, 1.0, Some(1.0)).unwrap());
+        // A deterministic per-rank "loss" folded exactly like the gym's.
+        let vals: Vec<f32> =
+            (0..world).map(|r| ((step + 1) as f32 * 0.3 + r as f32 * 0.07).sin()).collect();
+        losses.push(eng.all_reduce_scalar(&vals).unwrap());
+    }
+    eng.check_replica_consistency().unwrap();
+
+    let mut out = params0.clone();
+    eng.unshard_into(&mut out).unwrap();
+    RunFingerprint {
+        params: out.flatten(),
+        opt_state: (0..world).map(|r| eng.rank_opt_state(r)).collect(),
+        grad_norms,
+        losses,
+        per_rank_stats: (0..world).map(|r| eng.rank_comm_stats(r).clone()).collect(),
+    }
+}
+
+/// Strategies that are valid for `world`.
+fn strategies(world: usize) -> Vec<ShardStrategy> {
+    let mut v = vec![ShardStrategy::Full, ShardStrategy::Ddp];
+    for shard in [2usize, 4] {
+        if shard < world && world % shard == 0 {
+            v.push(ShardStrategy::Hybrid { shard_size: shard });
+        }
+    }
+    v
+}
+
+/// The headline grid: {FSDP full, DDP, HSDP shard 2/4} × world {1, 2,
+/// 4, 8} × ≥3 steps. Each threaded run is repeated 3× with randomized
+/// per-rank start jitter to prove schedule-independence.
+#[test]
+fn threaded_reproduces_lockstep_bitwise_across_grid() {
+    for world in [1usize, 2, 4, 8] {
+        for strategy in strategies(world) {
+            let reference = run_training(world, strategy, BackendSpec::lockstep(), 3);
+            for (rep, jitter_us) in [0u64, 200, 600].into_iter().enumerate() {
+                let spec = BackendSpec {
+                    kind: BackendKind::Threaded,
+                    timeout_ms: 20_000,
+                    jitter_us,
+                };
+                let got = run_training(world, strategy, spec, 3);
+                assert_eq!(
+                    reference, got,
+                    "world {world} {strategy:?} rep {rep} (jitter {jitter_us}µs) diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Re-running the *lockstep* oracle must also be deterministic — the
+/// suite's own baseline sanity check.
+#[test]
+fn lockstep_is_self_deterministic() {
+    let a = run_training(4, ShardStrategy::Hybrid { shard_size: 2 }, BackendSpec::lockstep(), 3);
+    let b = run_training(4, ShardStrategy::Hybrid { shard_size: 2 }, BackendSpec::lockstep(), 3);
+    assert_eq!(a, b);
+}
+
+/// Checkpoint/resume equivalence: a threaded run interrupted at step 2
+/// and resumed into a fresh engine matches the uninterrupted threaded
+/// run and the uninterrupted lockstep run.
+#[test]
+fn resume_mid_run_matches_straight_run_across_backends() {
+    let a = arts();
+    let params0 = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+    let cfg = FsdpConfig {
+        world: 4,
+        unit_bytes: 640,
+        strategy: ShardStrategy::Hybrid { shard_size: 2 },
+        ..Default::default()
+    };
+    let grads_at = |step: u64| -> Vec<Vec<Vec<f32>>> {
+        (0..4).map(|r| fake_grads(&params0, 300 * step + r as u64)).collect()
+    };
+
+    // Straight 4-step runs under both backends.
+    let straight = |backend: BackendSpec| {
+        let mut eng = FsdpEngine::with_backend(&params0, cfg.clone(), &opt_spec(), backend).unwrap();
+        for s in 0..4 {
+            eng.apply_grads(&grads_at(s), 1.0, None).unwrap();
+        }
+        let mut out = params0.clone();
+        eng.unshard_into(&mut out).unwrap();
+        out.flatten()
+    };
+    let p_lock = straight(BackendSpec::lockstep());
+    let p_thr = straight(BackendSpec::threaded());
+    assert_eq!(p_lock, p_thr);
+
+    // Interrupted threaded run: 2 steps, state handoff, 2 more.
+    let mut eng1 =
+        FsdpEngine::with_backend(&params0, cfg.clone(), &opt_spec(), BackendSpec::threaded())
+            .unwrap();
+    for s in 0..2 {
+        eng1.apply_grads(&grads_at(s), 1.0, None).unwrap();
+    }
+    let mut eng2 =
+        FsdpEngine::with_backend(&params0, cfg.clone(), &opt_spec(), BackendSpec::threaded())
+            .unwrap();
+    for rank in 0..4 {
+        let shards: Vec<Vec<f32>> = eng1.rank_shards(rank).iter().map(|s| s.to_vec()).collect();
+        eng2.restore_rank_shards(rank, shards).unwrap();
+        eng2.restore_rank_opt_state(rank, eng1.rank_opt_state(rank)).unwrap();
+    }
+    drop(eng1); // the "crashed" incarnation
+    for s in 2..4 {
+        eng2.apply_grads(&grads_at(s), 1.0, None).unwrap();
+    }
+    let mut out = params0.clone();
+    eng2.unshard_into(&mut out).unwrap();
+    assert_eq!(out.flatten(), p_thr, "resumed threaded run must match the straight run");
+}
+
+/// CommStats accounting invariants: per-op bytes/messages must match
+/// the closed-form per-rank ring formulas — `(n-1)·ceil(len/n)·4` per
+/// phase, i.e. the `2(n-1)/n · bytes` all-reduce rule — for every
+/// group size 1–8, identically on both backends.
+#[test]
+fn comm_accounting_matches_closed_form_for_all_group_sizes() {
+    let len = 1000usize;
+    for n in 1..=8usize {
+        let group: Vec<usize> = (0..n).collect();
+        let mut per_backend: Vec<Vec<CommStats>> = Vec::new();
+        for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+            let handles = backend.make(n);
+            let group = &group;
+            let stats: Vec<CommStats> = std::thread::scope(|s| {
+                handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, mut pg)| {
+                        s.spawn(move || {
+                            let mut buf = vec![r as f32 + 0.5; len];
+                            pg.all_reduce_sum(&mut buf, group).unwrap();
+                            let shard = pg.reduce_scatter_sum(&buf, group).unwrap();
+                            let _ = pg.all_gather(&shard, group).unwrap();
+                            let _ = pg.all_reduce_scalar(r as f32, group).unwrap();
+                            pg.barrier(group).unwrap();
+                            pg.stats().clone()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().unwrap())
+                    .collect()
+            });
+            for (r, st) in stats.iter().enumerate() {
+                // all-reduce = reduce-scatter phase + all-gather phase.
+                assert_eq!(st.ops["all_reduce"].bytes, 2 * rank_phase_bytes(len, n), "n={n} r={r}");
+                assert_eq!(st.ops["all_reduce"].messages, 2 * rank_phase_messages(n));
+                assert_eq!(st.ops["reduce_scatter"].bytes, rank_phase_bytes(len, n));
+                assert_eq!(st.ops["reduce_scatter"].messages, rank_phase_messages(n));
+                // The gather reassembles the full `len` elements.
+                assert_eq!(st.ops["all_gather"].bytes, rank_phase_bytes(len, n));
+                assert_eq!(st.ops["all_gather"].messages, rank_phase_messages(n));
+                assert_eq!(st.ops["all_reduce_scalar"].bytes, 2 * rank_phase_bytes(1, n));
+                assert_eq!(st.ops["barrier"].bytes, 0);
+                // Every op ran exactly once.
+                for op in ["all_reduce", "reduce_scatter", "all_gather", "all_reduce_scalar", "barrier"] {
+                    assert_eq!(st.ops[op].calls, 1, "n={n} r={r} op={op}");
+                }
+            }
+            per_backend.push(stats);
+        }
+        assert_eq!(per_backend[0], per_backend[1], "backends must account identically (n={n})");
+    }
+}
+
+/// Summed per-rank accounting equals the historical group-level ring
+/// formula (`n(n-1)·ceil(len/n)` elements per phase) — the α-β model's
+/// contract with `bench_nccl`.
+#[test]
+fn per_rank_accounting_sums_to_group_ring_formula() {
+    let len = 4096usize;
+    for n in [2usize, 4, 8] {
+        for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+            let handles = backend.make(n);
+            let group: Vec<usize> = (0..n).collect();
+            let group = &group;
+            let total: u64 = std::thread::scope(|s| {
+                handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, mut pg)| {
+                        s.spawn(move || {
+                            let mut buf = vec![r as f32; len];
+                            pg.all_reduce_sum(&mut buf, group).unwrap();
+                            pg.stats().total_bytes()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().unwrap())
+                    .sum()
+            });
+            let group_formula = (2 * n * (n - 1) * len.div_ceil(n) * 4) as u64;
+            assert_eq!(total, group_formula, "n={n} {backend:?}");
+        }
+    }
+}
+
+/// TP degrees over both backends: the per-rank Megatron MLP pattern
+/// (column-split, row-split, one all-reduce) matches the whole-group
+/// oracle for tp ∈ {1, 2, 4, 8}.
+#[test]
+fn tp_per_rank_matches_oracle_across_degrees() {
+    use modalities::tp::{
+        column_parallel_forward, column_parallel_forward_rank, row_parallel_forward,
+        row_parallel_forward_rank, Mat,
+    };
+    let mut rng = Pcg64::new(23);
+    let mut rmat = |rows: usize, cols: usize| {
+        Mat::new(rows, cols, (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+    };
+    let (m, k, h) = (2usize, 5usize, 16usize);
+    let x = rmat(m, k);
+    let a = rmat(k, h);
+    let b = rmat(h, k);
+    for tp in [1usize, 2, 4, 8] {
+        let h_shards = column_parallel_forward(&x, &a, tp).unwrap();
+        let oracle = row_parallel_forward(&h_shards, &b, tp).unwrap();
+        let group: Vec<usize> = (0..tp).collect();
+        for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+            let handles = backend.make(tp);
+            let (x, a, b, group) = (&x, &a, &b, &group);
+            let outs: Vec<Mat> = std::thread::scope(|s| {
+                handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, mut pg)| {
+                        s.spawn(move || {
+                            let h_r = column_parallel_forward_rank(x, a, tp, r).unwrap();
+                            row_parallel_forward_rank(&mut pg, group, &h_r, b).unwrap()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().unwrap())
+                    .collect()
+            });
+            for out in &outs {
+                assert_eq!(out.data, oracle.data, "tp={tp} {backend:?}");
+            }
+        }
+    }
+}
+
+/// The shard-length arithmetic both backends rely on: shards cover the
+/// buffer exactly for every (len, n) in the grid's range.
+#[test]
+fn even_split_covers_exactly() {
+    for len in [1usize, 7, 1000, 4096] {
+        for n in 1..=8usize {
+            let mut covered = 0usize;
+            for slot in 0..n {
+                let (start, l) = even_split(len, n, slot);
+                assert_eq!(start, covered);
+                covered += l;
+            }
+            assert_eq!(covered, len, "len={len} n={n}");
+        }
+    }
+}

@@ -148,16 +148,27 @@ components:
       run_dir: RUN_DIR
 ";
 
-fn run_gym(run_dir: &Path, steps: u64, resume: bool) -> modalities::gym::RunSummary {
-    let src = GYM_CFG
-        .replace("RUN_DIR", &run_dir.display().to_string())
-        .replace("steps: 10", &format!("steps: {steps}"))
-        + if resume { "      resume: true\n" } else { "" };
+fn run_gym_with(
+    run_dir: &Path,
+    steps: u64,
+    resume: bool,
+    edit: impl Fn(String) -> String,
+) -> modalities::gym::RunSummary {
+    let src = edit(
+        GYM_CFG
+            .replace("RUN_DIR", &run_dir.display().to_string())
+            .replace("steps: 10", &format!("steps: {steps}"))
+            + if resume { "      resume: true\n" } else { "" },
+    );
     let cfg = Config::from_str_named(&src, "<itest>").unwrap();
     let reg = ComponentRegistry::with_builtins();
     let graph = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
     let mut gym = graph.into_gym().unwrap();
     gym.run().unwrap()
+}
+
+fn run_gym(run_dir: &Path, steps: u64, resume: bool) -> modalities::gym::RunSummary {
+    run_gym_with(run_dir, steps, resume, |s| s)
 }
 
 #[test]
@@ -192,6 +203,50 @@ fn gym_fsdp_training_reduces_loss_and_resumes_exactly() {
         sum_b.curve.last().unwrap().loss,
         "resumed run must be bit-identical to the uninterrupted run"
     );
+}
+
+/// Full-stack backend equivalence: the same config run under the
+/// threaded collective backend must reproduce the lockstep run
+/// bitwise — loss curve, comm volume, and resumability included.
+#[test]
+fn gym_threaded_backend_reproduces_lockstep_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    let base = std::env::temp_dir().join("modalities-itest-backend");
+    let _ = std::fs::remove_dir_all(&base);
+    let to_hsdp = |backend: &'static str| {
+        move |s: String| {
+            s.replace("variant_key: fsdp", "variant_key: hsdp").replace(
+                "config: {dp_degree: 2, unit_size_mb: 0.25}",
+                &format!(
+                    "config: {{dp_degree: 4, shard_group_size: 2, unit_size_mb: 0.25, backend: {backend}}}"
+                ),
+            )
+        }
+    };
+
+    let sum_lock = run_gym_with(&base.join("lockstep"), 6, false, to_hsdp("lockstep"));
+    let sum_thr = run_gym_with(&base.join("threaded"), 6, false, to_hsdp("threaded"));
+    assert_eq!(sum_lock.world, 4);
+    assert_eq!(sum_thr.world, 4);
+    let lock_curve: Vec<f32> = sum_lock.curve.iter().map(|p| p.loss).collect();
+    let thr_curve: Vec<f32> = sum_thr.curve.iter().map(|p| p.loss).collect();
+    assert_eq!(lock_curve, thr_curve, "loss curves must be bitwise identical");
+    assert_eq!(sum_lock.comm_bytes, sum_thr.comm_bytes, "comm accounting must match");
+
+    // The threaded checkpoint resumes a threaded run bit-exactly.
+    let resumed = base.join("resumed");
+    let _ = run_gym_with(&resumed, 3, false, to_hsdp("threaded"));
+    let sum_res = run_gym_with(&resumed, 6, true, to_hsdp("threaded"));
+    assert_eq!(
+        sum_thr.curve.last().unwrap().loss,
+        sum_res.curve.last().unwrap().loss,
+        "resumed threaded run must match the straight threaded run"
+    );
+    let manifest =
+        checkpoint::read_manifest(&checkpoint::latest_checkpoint(&resumed).unwrap()).unwrap();
+    assert_eq!(manifest.backend, "threaded");
 }
 
 #[test]

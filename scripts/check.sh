@@ -17,10 +17,16 @@ echo "==> docs/config_reference.md matches the registry"
 cargo run --release --quiet -- docs
 git diff --exit-code docs/config_reference.md
 
+echo "==> backend equivalence suite (threaded vs lockstep, bitwise, both backends)"
+cargo test --release --quiet --test backend_equivalence
+
 echo "==> sweep orchestrator smoke (skips without artifacts)"
 scripts/sweep_smoke.sh
 
 echo "==> serve subsystem smoke (artifact-free synthetic provider)"
 scripts/serve_smoke.sh
+
+echo "==> dist backend smoke (4-rank threaded HSDP train → ckpt → resume; skips without artifacts)"
+scripts/dist_smoke.sh
 
 echo "OK"
