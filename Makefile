@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -32,3 +32,9 @@ serve-smoke:
 # missing.
 dist-smoke:
 	scripts/dist_smoke.sh
+
+# Machine-readable steady-state train-step bench: scratch-vs-allocating
+# head-to-head + the zero-allocation assertion (counting allocator),
+# written to BENCH_train_step.json. Artifact-free.
+bench-json:
+	cargo bench --bench bench_fsdp_unit -- --alloc-only --json BENCH_train_step.json

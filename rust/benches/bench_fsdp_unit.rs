@@ -1,32 +1,322 @@
 //! E5 — the adaptable-FSDP-unit-size ablation (§2 "Training Pipeline"):
-//! message size vs memory overhead vs step time.
+//! message size vs memory overhead vs step time — plus the
+//! zero-allocation steady-state train-step acceptance bench.
 //!
-//! Two halves:
-//! 1. REAL engine: the actual FsdpEngine over the `tiny` model's
-//!    parameter set — unit size changes collective call counts and the
-//!    unsharded working set, while the training math stays identical
-//!    (asserted).
-//! 2. MODELED at scale: 8B-model step times per unit size across DP
-//!    degrees, reproducing the paper's motivation (0.4 MB messages at
-//!    dp=1024 are latency-bound; bigger units buy bandwidth).
+//! Sections:
+//! 1. REAL engine (needs `make artifacts`, skipped otherwise): the
+//!    actual FsdpEngine over the `tiny` model's parameter set — unit
+//!    size changes collective call counts and the unsharded working
+//!    set, while the training math stays identical (asserted).
+//! 2. Collective backends head-to-head on the real engine.
+//! 3. MODELED at scale: 8B-model step times per unit size across DP
+//!    degrees, reproducing the paper's motivation.
+//! 4. Scratch-vs-allocating head-to-head (artifact-free, synthetic
+//!    params): the native `_into` + pooled-payload path vs a shim that
+//!    forces the allocating trait-default delegation — same math,
+//!    different memory discipline. Timing is **report-only** (both
+//!    loops are rendezvous-dominated; wall-clock sits inside scheduler
+//!    noise on shared hosts).
+//! 5. Steady-state allocation counter (artifact-free) — the hard,
+//!    deterministic gate: a counting global allocator asserts the SPMD
+//!    `unshard_flats` + `unshard_discard` + `apply_grads` loop performs
+//!    **zero** heap allocations after warmup, under both FSDP-full and
+//!    HSDP (replica all-reduce path) sharding.
+//!
+//! Flags: `--alloc-only` runs only sections 4–5 (no artifacts needed —
+//! what `scripts/check.sh` gates on); `--json PATH` writes the
+//! machine-readable results (`make bench-json` →
+//! `BENCH_train_step.json`).
 
+use modalities::dist::collectives::CommStats;
 use modalities::dist::process_group::BackendSpec;
-use modalities::fsdp::{build_units, FsdpConfig, FsdpEngine, ShardStrategy};
+use modalities::dist::process_group::ProcessGroup;
+use modalities::fsdp::{build_units, FsdpConfig, FsdpEngine, RankEngine, ShardStrategy};
 use modalities::model::{InitScheme, ParamStore};
 use modalities::optim::components::OptimizerSpec;
 use modalities::perfmodel::steptime::{per_gpu_memory_bytes, step_time, Plan, Workload};
 use modalities::perfmodel::{GpuModel, InterconnectModel};
-use modalities::runtime::pjrt::Manifest;
+use modalities::runtime::pjrt::{Manifest, ModelArtifacts};
 use modalities::util::human;
+use modalities::util::json::Json;
+use modalities::util::stats::Timer;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-fn main() {
-    println!("=== E5: FSDP unit-size ablation ===\n");
+// ---- counting global allocator ----------------------------------------------
 
-    // ---- real engine over tiny's parameters --------------------------------
-    let manifest = Manifest::load(std::path::Path::new("artifacts")).expect("make artifacts");
+/// Wraps the system allocator and counts every allocation event
+/// (alloc, alloc_zeroed, realloc) process-wide — the instrument behind
+/// the zero-allocation steady-state assertion.
+struct CountingAlloc;
+
+static ALLOCATION_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocation_events() -> u64 {
+    ALLOCATION_EVENTS.load(Ordering::SeqCst)
+}
+
+// ---- synthetic workload (artifact-free sections) ----------------------------
+
+/// ~1M-parameter synthetic model: big enough that step timing is
+/// bandwidth-dominated, no PJRT artifacts required.
+fn synthetic_arts() -> ModelArtifacts {
+    let mut shapes: Vec<(String, Vec<usize>)> = vec![("emb".into(), vec![2048, 128])];
+    for l in 0..4 {
+        shapes.push((format!("w_up_{l}"), vec![128, 512]));
+        shapes.push((format!("w_down_{l}"), vec![512, 128]));
+    }
+    shapes.push(("head".into(), vec![128, 2048]));
+    ModelArtifacts {
+        name: "synthetic-1m".into(),
+        vocab_size: 2048,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        seq_len: 64,
+        batch_size: 4,
+        num_params: 0,
+        flops_per_token: 0,
+        param_shapes: shapes,
+        files: Default::default(),
+    }
+}
+
+fn opt_spec() -> OptimizerSpec {
+    OptimizerSpec::AdamW { lr: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.01 }
+}
+
+fn fake_grads(params: &ParamStore, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = modalities::util::prng::Pcg64::new(seed);
+    params
+        .bufs
+        .iter()
+        .map(|b| (0..b.len()).map(|_| rng.next_f32() - 0.5).collect())
+        .collect()
+}
+
+/// One rank engine per rank over `backend`.
+fn build_rank_engines(
+    params: &ParamStore,
+    world: usize,
+    unit_bytes: usize,
+    strategy: ShardStrategy,
+    backend: BackendSpec,
+    shim_allocating: bool,
+) -> Vec<RankEngine> {
+    let cfg = FsdpConfig { world, unit_bytes, strategy, ..Default::default() };
+    backend
+        .make(world)
+        .into_iter()
+        .map(|pg| {
+            let pg: Box<dyn ProcessGroup> =
+                if shim_allocating { Box::new(AllocatingShim(pg)) } else { pg };
+            RankEngine::new(params, cfg.clone(), &opt_spec(), pg).expect("rank engine")
+        })
+        .collect()
+}
+
+// ---- the allocating shim (section 4's baseline) -----------------------------
+
+/// Forwards the base collectives but *not* the `_into` overrides or the
+/// pool-priming hint, so the trait-default allocating delegation runs.
+/// Note this baseline still rides the pooled rendezvous transport
+/// underneath — it isolates the result-buffer allocations and extra
+/// copies of the `_into`-less surface, and so *understates* the gap to
+/// the true pre-pool implementation (which also allocated every
+/// deposit payload).
+struct AllocatingShim(Box<dyn ProcessGroup>);
+
+impl ProcessGroup for AllocatingShim {
+    fn rank(&self) -> usize {
+        self.0.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.0.world()
+    }
+
+    fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> anyhow::Result<Vec<f32>> {
+        self.0.all_gather(shard, group)
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> anyhow::Result<()> {
+        self.0.all_reduce_sum(buf, group)
+    }
+
+    fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> anyhow::Result<Vec<f32>> {
+        self.0.reduce_scatter_sum(buf, group)
+    }
+
+    fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> anyhow::Result<f32> {
+        self.0.all_reduce_scalar(v, group)
+    }
+
+    fn barrier(&mut self, group: &[usize]) -> anyhow::Result<()> {
+        self.0.barrier(group)
+    }
+
+    fn stats(&self) -> &CommStats {
+        self.0.stats()
+    }
+
+    fn abort(&mut self) {
+        self.0.abort()
+    }
+}
+
+/// Drive `steps` SPMD train steps (unshard + apply_grads per rank, one
+/// OS thread per rank) and return the wall-clock seconds.
+fn time_spmd_steps(engines: &mut [RankEngine], grads: &[Vec<Vec<f32>>], steps: usize) -> f64 {
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for (eng, g) in engines.iter_mut().zip(grads) {
+            s.spawn(move || {
+                for _ in 0..steps {
+                    eng.unshard_flats().unwrap();
+                    eng.apply_grads(g, 1.0, Some(1.0)).unwrap();
+                }
+            });
+        }
+    });
+    t.elapsed_s()
+}
+
+// ---- section 4: scratch vs allocating ---------------------------------------
+
+fn scratch_vs_allocating(params: &ParamStore, world: usize) -> (f64, f64) {
+    println!("\n=== scratch-buffer vs allocating train step (world {world}, threaded) ===\n");
+    let grads: Vec<Vec<Vec<f32>>> =
+        (0..world).map(|r| fake_grads(params, 77 + r as u64)).collect();
+    let unit_bytes = 1 << 20;
+    let iters = 20usize;
+
+    let run = |shim: bool| -> f64 {
+        let mut engines = build_rank_engines(
+            params,
+            world,
+            unit_bytes,
+            ShardStrategy::Full,
+            BackendSpec::threaded(),
+            shim,
+        );
+        let _ = time_spmd_steps(&mut engines, &grads, 3); // warmup
+        time_spmd_steps(&mut engines, &grads, iters) / iters as f64
+    };
+    let t_alloc = run(true);
+    let t_scratch = run(false);
+    println!(
+        "  allocating {:>8.3}ms/step   scratch {:>8.3}ms/step   ({:.2}x)",
+        t_alloc * 1e3,
+        t_scratch * 1e3,
+        t_alloc / t_scratch
+    );
+    // Report-only: both loops are rendezvous-dominated and differ only
+    // in allocator pressure, well inside scheduler noise on loaded CI
+    // hosts. The hard, deterministic acceptance gate for this PR is
+    // the counting-allocator assertion below.
+    (t_scratch, t_alloc)
+}
+
+// ---- section 5: steady-state allocation counter -----------------------------
+
+fn zero_alloc_steady_state(
+    params: &ParamStore,
+    world: usize,
+    strategy: ShardStrategy,
+    label: &str,
+) -> (u64, usize, usize) {
+    println!("\n=== steady-state allocation counter ({label}, world {world}, threaded) ===\n");
+    let warmup = 10usize;
+    let measured = 5usize;
+    let grads: Vec<Vec<Vec<f32>>> =
+        (0..world).map(|r| fake_grads(params, 990 + r as u64)).collect();
+    let mut engines =
+        build_rank_engines(params, world, 1 << 20, strategy, BackendSpec::threaded(), false);
+
+    let snap = AtomicU64::new(0);
+    let delta = AtomicU64::new(u64::MAX);
+    let (snap, delta) = (&snap, &delta);
+    std::thread::scope(|s| {
+        for (rank, (eng, g)) in engines.iter_mut().zip(&grads).enumerate() {
+            s.spawn(move || {
+                // One "step": gather every unit (retaining rank) +
+                // discard-path gathers + gradient reduce/optimize.
+                for _ in 0..warmup {
+                    eng.unshard_flats().unwrap();
+                    eng.unshard_discard().unwrap();
+                    eng.apply_grads(g, 1.0, Some(1.0)).unwrap();
+                }
+                // Sync A: everyone out of warmup.
+                eng.all_reduce_scalar(0.0).unwrap();
+                if rank == 0 {
+                    snap.store(allocation_events(), Ordering::SeqCst);
+                }
+                // Sync B: rank 0 deposits only after the snapshot, so
+                // no rank starts the measured loop before it.
+                eng.all_reduce_scalar(0.0).unwrap();
+                for _ in 0..measured {
+                    eng.unshard_flats().unwrap();
+                    eng.unshard_discard().unwrap();
+                    eng.apply_grads(g, 1.0, Some(1.0)).unwrap();
+                }
+                // Sync C: measured work on every rank is complete.
+                eng.all_reduce_scalar(0.0).unwrap();
+                if rank == 0 {
+                    delta.store(
+                        allocation_events() - snap.load(Ordering::SeqCst),
+                        Ordering::SeqCst,
+                    );
+                }
+            });
+        }
+    });
+    let delta = delta.load(Ordering::SeqCst);
+    println!(
+        "  {measured} steps x {world} ranks after {warmup} warmup steps: {delta} heap allocation(s)"
+    );
+    assert_eq!(
+        delta, 0,
+        "steady-state unshard + apply_grads ({label}) must be allocation-free \
+         ({delta} allocation events across {measured} steps x {world} ranks)"
+    );
+    (delta, warmup, measured)
+}
+
+// ---- sections 1–3: the original artifact-backed ablation --------------------
+
+fn artifact_sections() {
+    let Ok(manifest) = Manifest::load(std::path::Path::new("artifacts")) else {
+        println!("(artifacts/ missing — skipping the real-engine unit-size ablation; `make artifacts`)");
+        return;
+    };
     let arts = manifest.model("tiny").expect("tiny artifacts").clone();
     let params = ParamStore::init(&arts, InitScheme::ScaledNormal, 3);
-    let opt = OptimizerSpec::AdamW { lr: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 };
+    let opt = opt_spec();
     let world = 4;
     let mut rng = modalities::util::prng::Pcg64::new(1);
     let grads: Vec<Vec<Vec<f32>>> = (0..world)
@@ -77,7 +367,7 @@ fn main() {
             ..Default::default()
         };
         let mut eng = FsdpEngine::with_backend(&params, cfg, &opt, spec).unwrap();
-        let timer = modalities::util::stats::Timer::start();
+        let timer = Timer::start();
         let iters = 5usize;
         for _ in 0..iters {
             eng.apply_grads(&grads, 1.0, None).unwrap();
@@ -131,5 +421,57 @@ fn main() {
         100.0 * (t1 - t8) / t1
     );
     assert!(t8 < t1);
-    println!("PASS");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let alloc_only = args.iter().any(|a| a == "--alloc-only");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    println!("=== E5: FSDP unit-size ablation + zero-allocation steady state ===\n");
+    if !alloc_only {
+        artifact_sections();
+    }
+
+    let world = 4usize;
+    let arts = synthetic_arts();
+    let params = ParamStore::init(&arts, InitScheme::ScaledNormal, 7);
+    println!(
+        "\nsynthetic workload: {} params, {} units of ≤1 MiB",
+        human::count(params.num_elems() as u64),
+        build_units(&params.shapes, 1 << 20).len()
+    );
+    let (t_scratch, t_alloc) = scratch_vs_allocating(&params, world);
+    let (allocs_full, warmup, measured) =
+        zero_alloc_steady_state(&params, world, ShardStrategy::Full, "FSDP full");
+    let (allocs_hsdp, _, _) = zero_alloc_steady_state(
+        &params,
+        world,
+        ShardStrategy::Hybrid { shard_size: 2 },
+        "HSDP shard 2",
+    );
+
+    if let Some(path) = json_path {
+        let report = Json::from_pairs(vec![
+            ("bench", "train_step".into()),
+            ("world", world.into()),
+            ("param_elems", params.num_elems().into()),
+            ("unit_bytes", (1usize << 20).into()),
+            ("backend", "threaded".into()),
+            ("scratch_ms_per_step", (t_scratch * 1e3).into()),
+            ("allocating_ms_per_step", (t_alloc * 1e3).into()),
+            ("speedup", (t_alloc / t_scratch).into()),
+            ("warmup_steps", warmup.into()),
+            ("measured_steps", measured.into()),
+            ("steady_state_alloc_events_full", (allocs_full as i64).into()),
+            ("steady_state_alloc_events_hsdp", (allocs_hsdp as i64).into()),
+        ]);
+        std::fs::write(&path, report.dumps_pretty()).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
+    println!("\nPASS: steady-state train step is allocation-free (head-to-head timing report-only)");
 }

@@ -13,11 +13,17 @@
 //!    the equivalence suite pins that bitwise — but the threaded
 //!    runtime folds every member's shard concurrently, so on a
 //!    multi-core host it must not lose to the single-reducer oracle
-//!    at world ≥ 4).
+//!    at world ≥ 4);
+//! 4. scratch-buffer vs allocating collectives: the `_into` variants
+//!    over reserved pool buffers vs the allocating methods on a cold
+//!    pool — same math bitwise, different memory discipline. Timing is
+//!    **report-only** (the deterministic regression gate is the
+//!    counting-allocator assertion in `bench_fsdp_unit --alloc-only`).
 
 use modalities::dist::collectives::Collectives;
 use modalities::dist::process_group::{BackendSpec, ProcessGroup};
 use modalities::perfmodel::InterconnectModel;
+use modalities::util::even_split;
 use modalities::util::human;
 use modalities::util::stats::Timer;
 
@@ -116,7 +122,76 @@ fn main() {
         }
     }
 
+    println!("\n=== scratch-buffer (_into) vs allocating collectives (threaded) ===\n");
+    println!(
+        "{:>6} {:>10} {:>14} {:>14} {:>9}",
+        "ranks", "buf", "allocating", "scratch", "speedup"
+    );
+    for &world in &[2usize, 4, 8] {
+        let iters = 16;
+        let _ = time_rs_ag(world, len, 2, false);
+        let _ = time_rs_ag(world, len, 2, true);
+        let t_alloc = time_rs_ag(world, len, iters, false);
+        let t_scratch = time_rs_ag(world, len, iters, true);
+        println!(
+            "{world:>6} {:>10} {:>13.1}ms {:>13.1}ms {:>8.2}x",
+            human::bytes((len * 4) as u64),
+            t_alloc * 1e3,
+            t_scratch * 1e3,
+            t_alloc / t_scratch
+        );
+        // Report-only: the two loops differ only in allocator pressure,
+        // which sits inside normal scheduler noise on loaded hosts. The
+        // deterministic regression gate is the counting-allocator
+        // assertion in `bench_fsdp_unit --alloc-only`.
+    }
+
     println!("\nPASS: latency/saturation shape + knee shift reproduced; engine traffic == model traffic; threaded backend holds its wall-clock bar");
+}
+
+/// Wall-clock for `iters` reduce-scatter + all-gather rounds of `len`
+/// f32 per rank on the threaded backend — through caller-owned scratch
+/// buffers over a reserved pool (`scratch == true`) or the allocating
+/// methods on a cold pool. One-time setup (pool reservation, scratch
+/// targets) happens before the timer starts so only the steady-state
+/// rounds are charged.
+fn time_rs_ag(world: usize, len: usize, iters: usize, scratch: bool) -> f64 {
+    let mut handles = BackendSpec::threaded().make(world);
+    let group: Vec<usize> = (0..world).collect();
+    let group = &group;
+    let mut scratches: Vec<Option<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(world);
+    for (r, pg) in handles.iter_mut().enumerate() {
+        if scratch {
+            pg.reserve_scratch(len, 3);
+            let (_, slen) = even_split(len, world, r);
+            scratches.push(Some((vec![0f32; slen], vec![0f32; len])));
+        } else {
+            scratches.push(None);
+        }
+    }
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for ((r, pg), sc) in handles.iter_mut().enumerate().zip(scratches) {
+            s.spawn(move || {
+                let buf: Vec<f32> = (0..len).map(|i| ((i + r) % 97) as f32).collect();
+                match sc {
+                    Some((mut shard, mut full)) => {
+                        for _ in 0..iters {
+                            pg.reduce_scatter_sum_into(&buf, group, &mut shard).unwrap();
+                            pg.all_gather_into(&shard, group, &mut full).unwrap();
+                        }
+                    }
+                    None => {
+                        for _ in 0..iters {
+                            let shard = pg.reduce_scatter_sum(&buf, group).unwrap();
+                            let _ = pg.all_gather(&shard, group).unwrap();
+                        }
+                    }
+                }
+            });
+        }
+    });
+    t.elapsed_s()
 }
 
 /// Wall-clock for `iters` full-world all-reduces of `len` f32 per

@@ -95,7 +95,9 @@ pub fn save_sharded(
         w.u32(RANK_MAGIC);
         w.u32(rank as u32);
         let shards = engine.rank_shards(rank);
-        let opt = engine.rank_opt_state(rank);
+        // Borrowed views: serialization reads the moment buffers in
+        // place instead of cloning them per checkpoint.
+        let opt = engine.rank_opt_state_views(rank);
         w.u32(shards.len() as u32);
         for (shard, (m, v, t)) in shards.iter().zip(&opt) {
             w.u64(*t);

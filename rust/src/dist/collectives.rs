@@ -36,10 +36,16 @@ impl CommStats {
     }
 
     pub(crate) fn record(&mut self, op: &str, bytes: u64, messages: u64) {
-        let e = self.ops.entry(op.to_string()).or_default();
-        e.calls += 1;
-        e.bytes += bytes;
-        e.messages += messages;
+        // Steady-state allocation-free: the `String` key is only built
+        // the first time an op name is seen; every later call hits the
+        // borrowed-key lookup.
+        if let Some(e) = self.ops.get_mut(op) {
+            e.calls += 1;
+            e.bytes += bytes;
+            e.messages += messages;
+            return;
+        }
+        self.ops.insert(op.to_string(), OpStats { calls: 1, bytes, messages });
     }
 
     /// Accumulate another stats table into this one (aggregating the

@@ -18,6 +18,32 @@
 //!   rank, rendezvous-based collectives where each member computes its
 //!   *own* output shard in parallel after all deposits arrive.
 //!
+//! ## Scratch-buffer collectives (steady-state zero allocation)
+//!
+//! Results land in **caller-owned buffers**: the `_into` variants
+//! ([`ProcessGroup::all_gather_into`],
+//! [`ProcessGroup::reduce_scatter_sum_into`]) write into an output
+//! slice the caller sizes and keeps across steps, and
+//! [`ProcessGroup::all_reduce_sum`] has always been in-place. On the
+//! transport side, rendezvous payloads are copied into **pooled**
+//! buffers leased from the communicator's free list and recycled when a
+//! collective retires, so the threaded runtime performs *zero heap
+//! allocations per collective* once the pool has warmed up (or
+//! immediately, after [`ProcessGroup::reserve_scratch`]). Groups are
+//! interned to dense ids so not even the rendezvous keys allocate. The
+//! lockstep oracle keeps its internal oracle allocations by design —
+//! it is the reference implementation, not the fast path — but its
+//! deposits ride the same pool and its `_into` variants also write
+//! caller-owned buffers.
+//!
+//! Pool soundness without `unsafe`: a pooled buffer is an
+//! `Arc<Vec<f32>>` handed out by the lease only when the pool holds the
+//! sole reference (`Arc::get_mut` succeeds ⇒ exclusive write access for
+//! the deposit copy). Takers clone the `Arc` under the lock, read
+//! outside it, and drop their clones *before* marking the collective
+//! done, so by the time the last member retires a cell, its deposits
+//! are uniquely owned again and return to the pool.
+//!
 //! ## Determinism
 //!
 //! Both backends reduce with the **same fixed fold order**: element
@@ -40,6 +66,7 @@
 //! wait even when a peer wedges without dying.
 
 use super::collectives::{CommStats, Collectives};
+use crate::kernels::add_slice;
 use crate::util::even_split;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
@@ -124,6 +151,22 @@ pub trait ProcessGroup: Send {
     /// ([`even_split`]).
     fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>>;
 
+    /// [`Self::all_gather`] into a caller-owned buffer: `out.len()`
+    /// must equal the sum of the group's shard lengths. The default
+    /// delegates to the allocating method; the threaded backend
+    /// overrides it with a copy-free native path — the steady-state
+    /// `_into` contract the FSDP scratch buffers rely on — while the
+    /// lockstep oracle keeps the default (it materializes results
+    /// internally either way).
+    fn all_gather_into(&mut self, shard: &[f32], group: &[usize], out: &mut [f32]) -> Result<()> {
+        let full = self.all_gather(shard, group)?;
+        if full.len() != out.len() {
+            bail!("all_gather_into: output has {} elements, gathered {}", out.len(), full.len());
+        }
+        out.copy_from_slice(&full);
+        Ok(())
+    }
+
     /// Element-wise sum across the group, in place on every member.
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()>;
 
@@ -131,11 +174,42 @@ pub trait ProcessGroup: Send {
     /// shard (shard `s` of [`even_split`] for group position `s`).
     fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>>;
 
+    /// [`Self::reduce_scatter_sum`] into a caller-owned buffer:
+    /// `out.len()` must equal this member's [`even_split`] shard
+    /// length. Default delegates to the allocating method; the
+    /// threaded backend overrides it with a native path that folds
+    /// straight into `out`, the lockstep oracle keeps the default.
+    fn reduce_scatter_sum_into(
+        &mut self,
+        buf: &[f32],
+        group: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let shard = self.reduce_scatter_sum(buf, group)?;
+        if shard.len() != out.len() {
+            bail!(
+                "reduce_scatter_sum_into: output has {} elements, shard has {}",
+                out.len(),
+                shard.len()
+            );
+        }
+        out.copy_from_slice(&shard);
+        Ok(())
+    }
+
     /// Scalar sum across the group (loss / grad-norm folding).
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32>;
 
     /// Block until every member arrives.
     fn barrier(&mut self, group: &[usize]) -> Result<()>;
+
+    /// Pre-populate the communicator's payload pool with `count`
+    /// buffers of `elems` capacity, so the first steps rendezvous
+    /// allocation-free instead of warming the pool lazily. A hint —
+    /// the default is a no-op and correctness never depends on it.
+    fn reserve_scratch(&mut self, elems: usize, count: usize) {
+        let _ = (elems, count);
+    }
 
     /// This rank's communication telemetry.
     fn stats(&self) -> &CommStats;
@@ -163,6 +237,10 @@ impl ProcessGroup for Box<dyn ProcessGroup> {
         (**self).all_gather(shard, group)
     }
 
+    fn all_gather_into(&mut self, shard: &[f32], group: &[usize], out: &mut [f32]) -> Result<()> {
+        (**self).all_gather_into(shard, group, out)
+    }
+
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         (**self).all_reduce_sum(buf, group)
     }
@@ -171,12 +249,25 @@ impl ProcessGroup for Box<dyn ProcessGroup> {
         (**self).reduce_scatter_sum(buf, group)
     }
 
+    fn reduce_scatter_sum_into(
+        &mut self,
+        buf: &[f32],
+        group: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
+        (**self).reduce_scatter_sum_into(buf, group, out)
+    }
+
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
         (**self).all_reduce_scalar(v, group)
     }
 
     fn barrier(&mut self, group: &[usize]) -> Result<()> {
         (**self).barrier(group)
+    }
+
+    fn reserve_scratch(&mut self, elems: usize, count: usize) {
+        (**self).reserve_scratch(elems, count)
     }
 
     fn stats(&self) -> &CommStats {
@@ -248,32 +339,61 @@ enum CentralResult {
     PerRank(BTreeMap<usize, Vec<f32>>),
 }
 
-/// One in-flight collective instance for a `(group, seq)` key.
+/// A centrally-computed result as taken by one member.
+enum CentralTaken {
+    Shared(Arc<Vec<f32>>),
+    Own(Vec<f32>),
+}
+
+/// One in-flight collective instance for an interned `(group, seq)`
+/// key. Shells are pooled: the vectors keep their capacity across
+/// reuse, so steady-state cell turnover allocates nothing.
 struct Cell {
     op: &'static str,
-    deposits: BTreeMap<usize, Arc<Vec<f32>>>,
+    /// One slot per group position, filled as members deposit.
+    deposits: Vec<Option<Arc<Vec<f32>>>>,
+    n_deposits: usize,
+    /// Members (by group position) that consumed their result.
+    done: Vec<bool>,
+    n_done: usize,
+    /// The lockstep oracle's output (unused by the threaded backend).
     central: Option<CentralResult>,
-    /// Members that have taken their result (identity, not a count:
-    /// removal must tolerate members that die before taking).
-    takers: BTreeSet<usize>,
 }
 
 impl Cell {
-    fn new(op: &'static str) -> Self {
-        Self { op, deposits: BTreeMap::new(), central: None, takers: BTreeSet::new() }
+    fn reset(&mut self, op: &'static str, n: usize) {
+        self.op = op;
+        self.deposits.clear();
+        self.deposits.resize(n, None);
+        self.n_deposits = 0;
+        self.done.clear();
+        self.done.resize(n, false);
+        self.n_done = 0;
+        self.central = None;
     }
 
-    /// A cell is finished once every member has either taken its
+    /// A cell is finished once every member has either consumed its
     /// result or died — a dead member must not pin the cell (and its
-    /// deposited payloads) for the communicator's lifetime.
+    /// pooled payloads) for the communicator's lifetime.
     fn finished(&self, group: &[usize], dead: &BTreeSet<usize>) -> bool {
-        group.iter().all(|g| self.takers.contains(g) || dead.contains(g))
+        self.n_done == group.len()
+            || group.iter().enumerate().all(|(i, g)| self.done[i] || dead.contains(g))
     }
 }
 
 struct CoreState {
     dead: BTreeSet<usize>,
-    cells: HashMap<(Vec<usize>, u64), Cell>,
+    /// Interned groups: member list → dense id (lookup by slice, so
+    /// steady-state collectives never allocate a key)…
+    group_ids: HashMap<Vec<usize>, u32>,
+    /// …and id → member list (for the dead-cell sweep).
+    groups: Vec<Vec<usize>>,
+    cells: HashMap<(u32, u64), Cell>,
+    /// Recycled payload buffers. Leased best-fit by capacity; an entry
+    /// is only handed out while the pool holds its sole reference.
+    payload_pool: Vec<Arc<Vec<f32>>>,
+    /// Recycled cell shells.
+    cell_pool: Vec<Cell>,
     /// The lockstep oracle engine (unused by the threaded backend).
     oracle: Collectives,
 }
@@ -293,23 +413,102 @@ impl CommCore {
             timeout,
             state: Mutex::new(CoreState {
                 dead: BTreeSet::new(),
+                group_ids: HashMap::new(),
+                groups: Vec::new(),
                 cells: HashMap::new(),
+                payload_pool: Vec::new(),
+                cell_pool: Vec::new(),
                 oracle: Collectives::new(),
             }),
             cv: Condvar::new(),
         })
     }
 
+    /// Dense id for `group`, interning it on first sight.
+    fn intern(&self, group: &[usize]) -> u32 {
+        let mut st = lock_ignore_poison(&self.state);
+        if let Some(&gid) = st.group_ids.get(group) {
+            return gid;
+        }
+        let gid = st.groups.len() as u32;
+        st.groups.push(group.to_vec());
+        st.group_ids.insert(group.to_vec(), gid);
+        gid
+    }
+
+    /// Pre-populate the payload pool (the [`ProcessGroup::reserve_scratch`] hint).
+    fn reserve(&self, elems: usize, count: usize) {
+        let mut st = lock_ignore_poison(&self.state);
+        for _ in 0..count {
+            st.payload_pool.push(Arc::new(Vec::with_capacity(elems)));
+        }
+    }
+
+    /// Lease an empty payload buffer of at least `need` capacity:
+    /// best-fit from the pool (smallest adequate capacity; else the
+    /// largest entry, which grows once), falling back to a fresh
+    /// allocation while the pool is cold. The caller copies its data in
+    /// *outside* the communicator lock — the buffer left the pool, so
+    /// `Arc::get_mut` exclusivity still holds.
+    fn lease_payload(pool: &mut Vec<Arc<Vec<f32>>>, need: usize) -> Arc<Vec<f32>> {
+        let mut best: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, a) in pool.iter().enumerate() {
+            let cap = a.capacity();
+            if cap >= need {
+                let tighter = match best {
+                    None => true,
+                    Some(b) => pool[b].capacity() > cap,
+                };
+                if tighter {
+                    best = Some(i);
+                }
+            } else {
+                let bigger = match largest {
+                    None => true,
+                    Some(l) => pool[l].capacity() < cap,
+                };
+                if bigger {
+                    largest = Some(i);
+                }
+            }
+        }
+        if let Some(i) = best.or(largest) {
+            let mut arc = pool.swap_remove(i);
+            if let Some(buf) = Arc::get_mut(&mut arc) {
+                buf.clear();
+                return arc;
+            }
+            // An outstanding reference means the retire protocol was
+            // bypassed (a taker died mid-read); abandon the buffer.
+        }
+        Arc::new(Vec::with_capacity(need))
+    }
+
+    /// Return a retired cell's resources to the pools.
+    fn recycle(cell_pool: &mut Vec<Cell>, payload_pool: &mut Vec<Arc<Vec<f32>>>, mut cell: Cell) {
+        for d in cell.deposits.drain(..) {
+            if let Some(arc) = d {
+                payload_pool.push(arc);
+            }
+        }
+        cell.central = None;
+        cell_pool.push(cell);
+    }
+
     /// Error if a group member is dead *and* its contribution to this
     /// cell is still missing — a peer that deposited and then exited
     /// must not fail a collective it already served.
-    fn check_dead(st: &CoreState, key: &(Vec<usize>, u64), group: &[usize], op: &str) -> Result<()> {
-        for &g in group {
+    fn check_dead(st: &CoreState, gid: u32, seq: u64, group: &[usize], op: &str) -> Result<()> {
+        if st.dead.is_empty() {
+            return Ok(());
+        }
+        for (i, &g) in group.iter().enumerate() {
             if st.dead.contains(&g) {
                 let deposited = st
                     .cells
-                    .get(key)
-                    .map(|c| c.deposits.contains_key(&g))
+                    .get(&(gid, seq))
+                    .map(|c| c.deposits[i].is_some())
                     .unwrap_or(false);
                 if !deposited {
                     bail!("rank {g} died during {op} over group {group:?}");
@@ -323,40 +522,84 @@ impl CommCore {
         let mut st = lock_ignore_poison(&self.state);
         st.dead.insert(rank);
         // Sweep cells the death just finished (the dead rank was the
-        // only member yet to take) so surviving subgroups don't leak
-        // them.
-        let CoreState { dead, cells, .. } = &mut *st;
-        cells.retain(|(group, _), cell| !cell.finished(group, dead));
+        // only member yet to consume) so surviving subgroups don't leak
+        // them. Failure path — the transient key list may allocate.
+        let CoreState { dead, cells, groups, cell_pool, payload_pool, .. } = &mut *st;
+        let doomed: Vec<(u32, u64)> = cells
+            .iter()
+            .filter(|(k, cell)| cell.finished(&groups[k.0 as usize], dead))
+            .map(|(k, _)| *k)
+            .collect();
+        for k in doomed {
+            let cell = cells.remove(&k).expect("key just listed");
+            Self::recycle(cell_pool, payload_pool, cell);
+        }
         self.cv.notify_all();
     }
 
-    /// Deposit `payload` for `(group, seq)`; `on_complete` runs exactly
-    /// once (inside the lock, on whichever member's deposit completed
-    /// the set).
+    /// Deposit a pooled copy of `data` for `(gid, seq)`; `on_complete`
+    /// runs exactly once (inside the lock, on whichever member's
+    /// deposit completed the set). The payload memcpy itself happens
+    /// *outside* the communicator lock — the buffer is leased under the
+    /// lock (exclusively owned once popped), filled unlocked so ranks'
+    /// copies proceed in parallel, then attached under the lock. The
+    /// cell cannot retire in between: this member has neither deposited
+    /// nor died, so `finished()` stays false.
+    #[allow(clippy::too_many_arguments)]
     fn deposit(
         &self,
         rank: usize,
+        pos: usize,
         group: &[usize],
+        gid: u32,
         seq: u64,
         op: &'static str,
-        payload: Vec<f32>,
+        data: &[f32],
         on_complete: impl FnOnce(&mut CoreState, &[usize]) -> Result<()>,
     ) -> Result<()> {
-        let key = (group.to_vec(), seq);
-        let mut st = lock_ignore_poison(&self.state);
-        Self::check_dead(&st, &key, group, op)?;
-        let complete = {
-            let cell = st.cells.entry(key).or_insert_with(|| Cell::new(op));
+        let key = (gid, seq);
+        // Phase 1 (locked): validate, ensure the cell, lease a buffer.
+        // One map probe — this lock is every rank's serialization
+        // point, so the critical section stays minimal.
+        let mut payload = {
+            let mut st = lock_ignore_poison(&self.state);
+            Self::check_dead(&st, gid, seq, group, op)?;
+            let CoreState { cells, cell_pool, payload_pool, .. } = &mut *st;
+            let cell = cells.entry(key).or_insert_with(|| {
+                let mut cell = cell_pool.pop().unwrap_or_else(|| Cell {
+                    op,
+                    deposits: Vec::new(),
+                    n_deposits: 0,
+                    done: Vec::new(),
+                    n_done: 0,
+                    central: None,
+                });
+                cell.reset(op, group.len());
+                cell
+            });
             if cell.op != op {
                 bail!(
                     "collective mismatch on group {group:?}: rank {rank} called {op} while peers called {}",
                     cell.op
                 );
             }
-            if cell.deposits.insert(rank, Arc::new(payload)).is_some() {
+            if cell.deposits[pos].is_some() {
                 bail!("rank {rank} deposited twice for {op} (seq {seq}) on group {group:?}");
             }
-            cell.deposits.len() == group.len()
+            Self::lease_payload(payload_pool, data.len())
+        };
+        // Phase 2 (unlocked): the memcpy.
+        match Arc::get_mut(&mut payload) {
+            Some(buf) => buf.extend_from_slice(data),
+            None => payload = Arc::new(data.to_vec()),
+        }
+        // Phase 3 (locked): attach, complete if last.
+        let mut st = lock_ignore_poison(&self.state);
+        let complete = {
+            let cell = st.cells.get_mut(&key).expect("cell pinned by our pending deposit");
+            cell.deposits[pos] = Some(payload);
+            cell.n_deposits += 1;
+            cell.n_deposits == group.len()
         };
         if complete {
             on_complete(&mut st, group)?;
@@ -365,42 +608,36 @@ impl CommCore {
         Ok(())
     }
 
-    /// Wait until `done` yields `rank`'s result for the `(group, seq)`
-    /// cell, a group member dies before contributing, or the timeout
-    /// elapses.
-    fn wait_cell<R>(
+    /// Block until every member of `(gid, seq)` has deposited, then
+    /// clone the deposit handles (in group order) into `scratch`. Does
+    /// **not** mark the caller done: read the payloads outside the
+    /// lock, drop the clones (`scratch.clear()`), then call
+    /// [`Self::retire`].
+    #[allow(clippy::too_many_arguments)]
+    fn wait_deposits(
         &self,
-        rank: usize,
-        group: &[usize],
+        gid: u32,
         seq: u64,
+        group: &[usize],
         op: &'static str,
-        mut done: impl FnMut(&mut Cell) -> Option<R>,
-    ) -> Result<R> {
-        let key = (group.to_vec(), seq);
+        scratch: &mut Vec<Arc<Vec<f32>>>,
+    ) -> Result<()> {
+        let key = (gid, seq);
         let deadline = Instant::now() + self.timeout;
         let mut st = lock_ignore_poison(&self.state);
         loop {
-            let mut out: Option<R> = None;
-            let mut remove = false;
-            {
-                let CoreState { dead, cells, .. } = &mut *st;
-                if let Some(cell) = cells.get_mut(&key) {
-                    if let Some(r) = done(cell) {
-                        cell.takers.insert(rank);
-                        remove = cell.finished(group, dead);
-                        out = Some(r);
+            if let Some(cell) = st.cells.get(&key) {
+                if cell.n_deposits == group.len() {
+                    scratch.clear();
+                    for d in &cell.deposits {
+                        scratch.push(d.as_ref().expect("complete cell").clone());
                     }
+                    return Ok(());
                 }
-            }
-            if let Some(r) = out {
-                if remove {
-                    st.cells.remove(&key);
-                }
-                return Ok(r);
             }
             // Completion checked first: a peer that served this cell
             // and then died must not poison it.
-            Self::check_dead(&st, &key, group, op)?;
+            Self::check_dead(&st, gid, seq, group, op)?;
             let now = Instant::now();
             if now >= deadline {
                 bail!(
@@ -415,6 +652,67 @@ impl CommCore {
             st = g;
         }
     }
+
+    /// Block until the lockstep member that completed the deposit set
+    /// has published the central result, then take this member's share.
+    fn wait_central(
+        &self,
+        rank: usize,
+        gid: u32,
+        seq: u64,
+        group: &[usize],
+        op: &'static str,
+    ) -> Result<CentralTaken> {
+        let key = (gid, seq);
+        let deadline = Instant::now() + self.timeout;
+        let mut st = lock_ignore_poison(&self.state);
+        loop {
+            if let Some(cell) = st.cells.get_mut(&key) {
+                match cell.central.as_mut() {
+                    Some(CentralResult::Shared(arc)) => {
+                        return Ok(CentralTaken::Shared(arc.clone()));
+                    }
+                    Some(CentralResult::PerRank(map)) => {
+                        if let Some(v) = map.remove(&rank) {
+                            return Ok(CentralTaken::Own(v));
+                        }
+                    }
+                    None => {}
+                }
+            }
+            Self::check_dead(&st, gid, seq, group, op)?;
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "{op} over group {group:?} timed out after {:?} (peer wedged or missing)",
+                    self.timeout
+                );
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+
+    /// Mark group position `pos` done with `(gid, seq)`. The member
+    /// that completes the set retires the cell: payload buffers and the
+    /// shell return to the pools.
+    fn retire(&self, pos: usize, group: &[usize], gid: u32, seq: u64) {
+        let key = (gid, seq);
+        let mut st = lock_ignore_poison(&self.state);
+        let CoreState { dead, cells, cell_pool, payload_pool, .. } = &mut *st;
+        let Some(cell) = cells.get_mut(&key) else { return };
+        if !cell.done[pos] {
+            cell.done[pos] = true;
+            cell.n_done += 1;
+        }
+        if cell.finished(group, dead) {
+            let cell = cells.remove(&key).expect("cell present above");
+            Self::recycle(cell_pool, payload_pool, cell);
+        }
+    }
 }
 
 // ---- handle plumbing shared by both backends --------------------------------
@@ -423,22 +721,68 @@ struct HandleInner {
     core: Arc<CommCore>,
     rank: usize,
     stats: CommStats,
-    /// Per-group rendezvous sequence numbers. All members of a group
-    /// issue the same ops in the same order, so their counters agree.
-    seqs: HashMap<Vec<usize>, u64>,
+    /// Per-handle cache of the communicator's group interning, so
+    /// steady-state lookups are by-slice and allocation-free.
+    gid_cache: HashMap<Vec<usize>, u32>,
+    /// Per-group rendezvous sequence numbers, indexed by interned id.
+    /// All members of a group issue the same ops in the same order, so
+    /// their counters agree.
+    seqs: Vec<u64>,
+    /// Taker-side scratch: deposit handles for the collective being
+    /// folded (cleared — clones dropped — before the cell retires).
+    taken: Vec<Arc<Vec<f32>>>,
+    /// Fold scratch for the all-reduce reduce-scatter phase.
+    fold: Vec<f32>,
     aborted: bool,
 }
 
 impl HandleInner {
     fn new(core: Arc<CommCore>, rank: usize) -> Self {
-        Self { core, rank, stats: CommStats::new(), seqs: HashMap::new(), aborted: false }
+        Self {
+            core,
+            rank,
+            stats: CommStats::new(),
+            gid_cache: HashMap::new(),
+            seqs: Vec::new(),
+            taken: Vec::new(),
+            fold: Vec::new(),
+            aborted: false,
+        }
     }
 
-    fn next_seq(&mut self, group: &[usize]) -> u64 {
-        let c = self.seqs.entry(group.to_vec()).or_insert(0);
-        let s = *c;
-        *c += 1;
+    fn gid(&mut self, group: &[usize]) -> u32 {
+        if let Some(&gid) = self.gid_cache.get(group) {
+            return gid;
+        }
+        let gid = self.core.intern(group);
+        self.gid_cache.insert(group.to_vec(), gid);
+        gid
+    }
+
+    fn next_seq(&mut self, gid: u32) -> u64 {
+        let i = gid as usize;
+        if self.seqs.len() <= i {
+            self.seqs.resize(i + 1, 0);
+        }
+        let s = self.seqs[i];
+        self.seqs[i] += 1;
         s
+    }
+
+    /// Validate + intern + bump the sequence + deposit: the common
+    /// prologue of every rendezvous round. Returns (pos, gid, seq).
+    fn begin(
+        &mut self,
+        group: &[usize],
+        op: &'static str,
+        data: &[f32],
+    ) -> Result<(usize, u32, u64)> {
+        let pos = group_pos(self.rank, self.core.world, group)?;
+        let gid = self.gid(group);
+        let seq = self.next_seq(gid);
+        let core = self.core.clone();
+        core.deposit(self.rank, pos, group, gid, seq, op, data, |_st, _g| Ok(()))?;
+        Ok((pos, gid, seq))
     }
 
     fn abort(&mut self) {
@@ -484,52 +828,40 @@ impl LockstepComm {
 
 impl LockstepGroup {
     /// Run one centrally-computed collective: deposit, let the last
-    /// arrival compute via the oracle, take this member's share.
+    /// arrival compute via the oracle, take this member's share and
+    /// retire. The returned `Shared` handle stays valid after retire
+    /// (it is the oracle's own allocation, not a pooled deposit).
     fn central(
         &mut self,
         group: &[usize],
         op: &'static str,
-        payload: Vec<f32>,
+        payload: &[f32],
         compute: impl FnOnce(&mut Collectives, Vec<Vec<f32>>) -> CentralResult,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<CentralTaken> {
         let rank = self.inner.rank;
-        group_pos(rank, self.inner.core.world, group)?;
-        let seq = self.inner.next_seq(group);
+        let pos = group_pos(rank, self.inner.core.world, group)?;
+        let gid = self.inner.gid(group);
+        let seq = self.inner.next_seq(gid);
         let core = self.inner.core.clone();
-        let key_group = group.to_vec();
-        core.deposit(rank, group, seq, op, payload, move |st, g| {
+        core.deposit(rank, pos, group, gid, seq, op, payload, move |st, _g| {
             // Assemble the group's buffers in group order — the same
             // `bufs` the historical oracle saw — and run its code.
-            let cell = st
-                .cells
-                .get(&(key_group.clone(), seq))
-                .expect("cell exists: we just deposited");
-            let bufs: Vec<Vec<f32>> =
-                g.iter().map(|r| cell.deposits[r].as_ref().clone()).collect();
+            let cell = st.cells.get(&(gid, seq)).expect("cell exists: we just deposited");
+            let bufs: Vec<Vec<f32>> = cell
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("complete cell").as_ref().clone())
+                .collect();
             let result = compute(&mut st.oracle, bufs);
-            let cell = st
-                .cells
-                .get_mut(&(key_group, seq))
-                .expect("cell exists: we just deposited");
-            cell.central = Some(result);
+            st.cells
+                .get_mut(&(gid, seq))
+                .expect("cell exists: we just deposited")
+                .central = Some(result);
             Ok(())
         })?;
-        // Take a handle (or this member's own shard) under the lock;
-        // materializing the shared buffer happens outside it so the
-        // per-member copy never serializes the communicator.
-        enum Taken {
-            Shared(Arc<Vec<f32>>),
-            Own(Vec<f32>),
-        }
-        let taken = core.wait_cell(rank, group, seq, op, |cell| match cell.central.as_mut() {
-            Some(CentralResult::Shared(arc)) => Some(Taken::Shared(arc.clone())),
-            Some(CentralResult::PerRank(map)) => map.remove(&rank).map(Taken::Own),
-            None => None,
-        })?;
-        Ok(match taken {
-            Taken::Shared(arc) => arc.as_ref().clone(),
-            Taken::Own(v) => v,
-        })
+        let taken = core.wait_central(rank, gid, seq, group, op)?;
+        core.retire(pos, group, gid, seq);
+        Ok(taken)
     }
 }
 
@@ -549,15 +881,24 @@ impl ProcessGroup for LockstepGroup {
             self.inner.stats.record("all_gather", 0, 0);
             return Ok(shard.to_vec());
         }
-        let out = self.central(group, "all_gather", shard.to_vec(), |orc, bufs| {
+        let taken = self.central(group, "all_gather", shard, |orc, bufs| {
             let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
             CentralResult::Shared(Arc::new(orc.all_gather(&refs, refs.len())))
         })?;
+        let out = match taken {
+            CentralTaken::Shared(arc) => arc.as_ref().clone(),
+            CentralTaken::Own(v) => v,
+        };
         self.inner
             .stats
             .record("all_gather", rank_phase_bytes(out.len(), n), rank_phase_messages(n));
         Ok(out)
     }
+
+    // `all_gather_into` deliberately uses the trait default
+    // (all_gather + validated copy): the oracle materializes the shared
+    // result internally either way, so a native override would only
+    // duplicate the central closure it must stay in sync with.
 
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         let n = group.len();
@@ -567,12 +908,15 @@ impl ProcessGroup for LockstepGroup {
             self.inner.stats.record("all_reduce", 0, 0);
             return Ok(());
         }
-        let out = self.central(group, "all_reduce", buf.to_vec(), |orc, mut bufs| {
+        let taken = self.central(group, "all_reduce", buf, |orc, mut bufs| {
             let idx: Vec<usize> = (0..bufs.len()).collect();
             orc.all_reduce_sum(&mut bufs, &idx);
             CentralResult::Shared(Arc::new(bufs.swap_remove(0)))
         })?;
-        buf.copy_from_slice(&out);
+        match taken {
+            CentralTaken::Shared(arc) => buf.copy_from_slice(&arc),
+            CentralTaken::Own(v) => buf.copy_from_slice(&v),
+        }
         self.inner.stats.record(
             "all_reduce",
             2 * rank_phase_bytes(len, n),
@@ -590,16 +934,26 @@ impl ProcessGroup for LockstepGroup {
             return Ok(buf.to_vec());
         }
         let members = group.to_vec();
-        let out = self.central(group, "reduce_scatter", buf.to_vec(), move |orc, mut bufs| {
+        let taken = self.central(group, "reduce_scatter", buf, move |orc, mut bufs| {
             let idx: Vec<usize> = (0..bufs.len()).collect();
             let shards = orc.reduce_scatter_sum(&mut bufs, &idx);
             CentralResult::PerRank(members.into_iter().zip(shards).collect())
         })?;
+        let out = match taken {
+            CentralTaken::Own(v) => v,
+            CentralTaken::Shared(_) => bail!("reduce_scatter published a shared result"),
+        };
         self.inner
             .stats
             .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
         Ok(out)
     }
+
+    // Like `all_gather_into`, `reduce_scatter_sum_into` uses the trait
+    // default (collective first, then validated copy): running the
+    // rendezvous before the output-size check means a caller bug
+    // surfaces as a clean size error on the offending rank instead of
+    // stranding its peers until the rendezvous timeout.
 
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
         let n = group.len();
@@ -608,16 +962,20 @@ impl ProcessGroup for LockstepGroup {
             self.inner.stats.record("all_reduce_scalar", 0, 0);
             return Ok(v);
         }
-        let out = self.central(group, "all_reduce_scalar", vec![v], |orc, bufs| {
+        let taken = self.central(group, "all_reduce_scalar", &[v], |orc, bufs| {
             let vals: Vec<f32> = bufs.iter().map(|b| b[0]).collect();
             CentralResult::Shared(Arc::new(vec![orc.all_reduce_scalar(&vals)]))
         })?;
+        let out = match taken {
+            CentralTaken::Shared(arc) => arc[0],
+            CentralTaken::Own(v) => v[0],
+        };
         self.inner.stats.record(
             "all_reduce_scalar",
             2 * rank_phase_bytes(1, n),
             2 * rank_phase_messages(n),
         );
-        Ok(out[0])
+        Ok(out)
     }
 
     fn barrier(&mut self, group: &[usize]) -> Result<()> {
@@ -627,11 +985,15 @@ impl ProcessGroup for LockstepGroup {
             self.inner.stats.record("barrier", 0, 0);
             return Ok(());
         }
-        let _ = self.central(group, "barrier", Vec::new(), |_orc, _bufs| {
+        let _ = self.central(group, "barrier", &[], |_orc, _bufs| {
             CentralResult::Shared(Arc::new(Vec::new()))
         })?;
         self.inner.stats.record("barrier", 0, rank_phase_messages(n));
         Ok(())
+    }
+
+    fn reserve_scratch(&mut self, elems: usize, count: usize) {
+        self.inner.core.reserve(elems, count);
     }
 
     fn stats(&self) -> &CommStats {
@@ -648,7 +1010,9 @@ impl ProcessGroup for LockstepGroup {
 /// The rank-parallel runtime handle: collectives rendezvous on deposit,
 /// then every member computes its own output shard concurrently,
 /// folding contributions in ascending group order (the lockstep fold
-/// order) so results are bitwise schedule-independent.
+/// order) so results are bitwise schedule-independent. All outputs land
+/// in caller-owned (or handle-scratch) buffers and all payloads ride
+/// the communicator pool: steady-state collectives allocate nothing.
 pub struct ThreadedGroup {
     inner: HandleInner,
 }
@@ -668,40 +1032,11 @@ impl ThreadedComm {
 }
 
 impl ThreadedGroup {
-    /// One rendezvous round: deposit `payload`, wait for the group,
-    /// return every member's contribution in group order.
-    fn round(
-        &mut self,
-        group: &[usize],
-        op: &'static str,
-        payload: Vec<f32>,
-    ) -> Result<Vec<Arc<Vec<f32>>>> {
-        let rank = self.inner.rank;
-        let seq = self.inner.next_seq(group);
-        let core = self.inner.core.clone();
-        core.deposit(rank, group, seq, op, payload, |_st, _g| Ok(()))?;
-        let n = group.len();
-        core.wait_cell(rank, group, seq, op, |cell| {
-            if cell.deposits.len() == n {
-                Some(group.iter().map(|r| cell.deposits[r].clone()).collect::<Vec<_>>())
-            } else {
-                None
-            }
-        })
-    }
-
-    /// Fold this member's `[start, start+len)` shard of the deposits in
-    /// group order — bitwise identical to the oracle's whole-buffer
-    /// fold restricted to that range.
-    fn fold_shard(deposits: &[Arc<Vec<f32>>], start: usize, len: usize) -> Vec<f32> {
-        let mut shard = vec![0f32; len];
-        for d in deposits {
-            let d = &d[start..start + len];
-            for (a, b) in shard.iter_mut().zip(d) {
-                *a += *b;
-            }
-        }
-        shard
+    /// Drop the taker clones and mark this member done (in that order —
+    /// the retire protocol the payload pool relies on).
+    fn finish(&mut self, pos: usize, group: &[usize], gid: u32, seq: u64) {
+        self.inner.taken.clear();
+        self.inner.core.retire(pos, group, gid, seq);
     }
 }
 
@@ -721,16 +1056,54 @@ impl ProcessGroup for ThreadedGroup {
             self.inner.stats.record("all_gather", 0, 0);
             return Ok(shard.to_vec());
         }
-        let deposits = self.round(group, "all_gather", shard.to_vec())?;
-        let total: usize = deposits.iter().map(|d| d.len()).sum();
+        let (pos, gid, seq) = self.inner.begin(group, "all_gather", shard)?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "all_gather", &mut self.inner.taken)?;
+        let total: usize = self.inner.taken.iter().map(|d| d.len()).sum();
         let mut out = Vec::with_capacity(total);
-        for d in &deposits {
+        for d in &self.inner.taken {
             out.extend_from_slice(d);
         }
+        self.finish(pos, group, gid, seq);
         self.inner
             .stats
             .record("all_gather", rank_phase_bytes(total, n), rank_phase_messages(n));
         Ok(out)
+    }
+
+    fn all_gather_into(&mut self, shard: &[f32], group: &[usize], out: &mut [f32]) -> Result<()> {
+        let n = group.len();
+        group_pos(self.inner.rank, self.inner.core.world, group)?;
+        if n == 1 {
+            if out.len() != shard.len() {
+                bail!(
+                    "all_gather_into: output has {} elements, shard has {}",
+                    out.len(),
+                    shard.len()
+                );
+            }
+            out.copy_from_slice(shard);
+            self.inner.stats.record("all_gather", 0, 0);
+            return Ok(());
+        }
+        let (pos, gid, seq) = self.inner.begin(group, "all_gather", shard)?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "all_gather", &mut self.inner.taken)?;
+        let total: usize = self.inner.taken.iter().map(|d| d.len()).sum();
+        if total != out.len() {
+            self.finish(pos, group, gid, seq);
+            bail!("all_gather_into: output has {} elements, gathered {total}", out.len());
+        }
+        let mut off = 0usize;
+        for d in &self.inner.taken {
+            out[off..off + d.len()].copy_from_slice(d);
+            off += d.len();
+        }
+        self.finish(pos, group, gid, seq);
+        self.inner
+            .stats
+            .record("all_gather", rank_phase_bytes(total, n), rank_phase_messages(n));
+        Ok(())
     }
 
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
@@ -742,19 +1115,37 @@ impl ProcessGroup for ThreadedGroup {
             return Ok(());
         }
         // Phase 1 (reduce-scatter): every member folds its own shard in
-        // parallel.
-        let deposits = self.round(group, "all_reduce.rs", buf.to_vec())?;
+        // parallel, into the handle's persistent fold scratch.
         let (start, slen) = even_split(len, n, pos);
-        let shard = Self::fold_shard(&deposits, start, slen);
-        drop(deposits);
+        let (p, gid, seq) = self.inner.begin(group, "all_reduce.rs", buf)?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "all_reduce.rs", &mut self.inner.taken)?;
+        self.inner.fold.clear();
+        self.inner.fold.resize(slen, 0.0);
+        for d in &self.inner.taken {
+            add_slice(&mut self.inner.fold, &d[start..start + slen]);
+        }
+        self.finish(p, group, gid, seq);
         // Phase 2 (all-gather the reduced shards).
-        let shards = self.round(group, "all_reduce.ag", shard)?;
+        let seq2 = self.inner.next_seq(gid);
+        core.deposit(
+            self.inner.rank,
+            p,
+            group,
+            gid,
+            seq2,
+            "all_reduce.ag",
+            &self.inner.fold,
+            |_st, _g| Ok(()),
+        )?;
+        core.wait_deposits(gid, seq2, group, "all_reduce.ag", &mut self.inner.taken)?;
         let mut off = 0usize;
-        for s in &shards {
-            buf[off..off + s.len()].copy_from_slice(s);
-            off += s.len();
+        for d in &self.inner.taken {
+            buf[off..off + d.len()].copy_from_slice(d);
+            off += d.len();
         }
         debug_assert_eq!(off, len);
+        self.finish(p, group, gid, seq2);
         self.inner.stats.record(
             "all_reduce",
             2 * rank_phase_bytes(len, n),
@@ -765,19 +1156,56 @@ impl ProcessGroup for ThreadedGroup {
 
     fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>> {
         let n = group.len();
+        let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
+        let (_, slen) = even_split(buf.len(), n, pos);
+        let mut out = vec![0f32; slen];
+        self.reduce_scatter_sum_into(buf, group, &mut out)?;
+        Ok(out)
+    }
+
+    fn reduce_scatter_sum_into(
+        &mut self,
+        buf: &[f32],
+        group: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = group.len();
         let len = buf.len();
         let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
-        if n == 1 {
-            self.inner.stats.record("reduce_scatter", 0, 0);
-            return Ok(buf.to_vec());
-        }
-        let deposits = self.round(group, "reduce_scatter", buf.to_vec())?;
         let (start, slen) = even_split(len, n, pos);
-        let shard = Self::fold_shard(&deposits, start, slen);
+        if n == 1 {
+            if out.len() != slen {
+                bail!(
+                    "reduce_scatter_sum_into: output has {} elements, shard has {slen}",
+                    out.len()
+                );
+            }
+            out.copy_from_slice(buf);
+            self.inner.stats.record("reduce_scatter", 0, 0);
+            return Ok(());
+        }
+        // Deposit before validating the output size so a mis-sized
+        // caller errors cleanly on its own rank instead of stranding
+        // peers until the rendezvous timeout.
+        let (p, gid, seq) = self.inner.begin(group, "reduce_scatter", buf)?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "reduce_scatter", &mut self.inner.taken)?;
+        if out.len() != slen {
+            self.finish(p, group, gid, seq);
+            bail!(
+                "reduce_scatter_sum_into: output has {} elements, shard has {slen}",
+                out.len()
+            );
+        }
+        out.fill(0.0);
+        for d in &self.inner.taken {
+            add_slice(out, &d[start..start + slen]);
+        }
+        self.finish(p, group, gid, seq);
         self.inner
             .stats
             .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
-        Ok(shard)
+        Ok(())
     }
 
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
@@ -787,11 +1215,14 @@ impl ProcessGroup for ThreadedGroup {
             self.inner.stats.record("all_reduce_scalar", 0, 0);
             return Ok(v);
         }
-        let deposits = self.round(group, "all_reduce_scalar", vec![v])?;
+        let (pos, gid, seq) = self.inner.begin(group, "all_reduce_scalar", &[v])?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "all_reduce_scalar", &mut self.inner.taken)?;
         let mut sum = 0f32;
-        for d in &deposits {
+        for d in &self.inner.taken {
             sum += d[0];
         }
+        self.finish(pos, group, gid, seq);
         self.inner.stats.record(
             "all_reduce_scalar",
             2 * rank_phase_bytes(1, n),
@@ -807,9 +1238,16 @@ impl ProcessGroup for ThreadedGroup {
             self.inner.stats.record("barrier", 0, 0);
             return Ok(());
         }
-        let _ = self.round(group, "barrier", Vec::new())?;
+        let (pos, gid, seq) = self.inner.begin(group, "barrier", &[])?;
+        let core = self.inner.core.clone();
+        core.wait_deposits(gid, seq, group, "barrier", &mut self.inner.taken)?;
+        self.finish(pos, group, gid, seq);
         self.inner.stats.record("barrier", 0, rank_phase_messages(n));
         Ok(())
+    }
+
+    fn reserve_scratch(&mut self, elems: usize, count: usize) {
+        self.inner.core.reserve(elems, count);
     }
 
     fn stats(&self) -> &CommStats {
@@ -895,6 +1333,69 @@ mod tests {
                     assert_eq!(r, expect);
                 }
             }
+        }
+    }
+
+    /// The `_into` variants are bitwise identical to the allocating
+    /// methods on both backends — the scratch-buffer contract — and
+    /// keep working when the caller reuses its buffers across rounds.
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        for world in [1usize, 2, 3, 4] {
+            let group: Vec<usize> = (0..world).collect();
+            for handles in both(world) {
+                let group = group.clone();
+                let res = drive(handles, move |r, pg| {
+                    let len = 13usize;
+                    let buf: Vec<f32> = (0..len).map(|i| (i * (r + 2)) as f32 * 0.21).collect();
+                    let pos = group.iter().position(|&g| g == r).unwrap();
+                    let (_, slen) = even_split(len, group.len(), pos);
+                    let mut shard_scratch = vec![0f32; slen];
+                    let mut full_scratch = vec![0f32; len];
+                    let mut outs = Vec::new();
+                    for _round in 0..3 {
+                        let shard = pg.reduce_scatter_sum(&buf, &group).unwrap();
+                        pg.reduce_scatter_sum_into(&buf, &group, &mut shard_scratch).unwrap();
+                        assert_eq!(shard, shard_scratch);
+                        let full = pg.all_gather(&shard, &group).unwrap();
+                        pg.all_gather_into(&shard_scratch, &group, &mut full_scratch).unwrap();
+                        assert_eq!(full, full_scratch);
+                        outs.push(full);
+                    }
+                    // Reused scratch must not leak state across rounds.
+                    assert_eq!(outs[0], outs[1]);
+                    assert_eq!(outs[0], outs[2]);
+                    outs.swap_remove(0)
+                });
+                for r in &res[1..] {
+                    assert_eq!(*r, res[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_reject_wrong_sizes() {
+        let mut h = ThreadedComm::new(1, T);
+        let pg = &mut h[0];
+        let buf = [1.0f32; 8];
+        let mut small = [0f32; 3];
+        assert!(pg.reduce_scatter_sum_into(&buf, &[0], &mut small).is_err());
+        assert!(pg.all_gather_into(&buf, &[0], &mut small).is_err());
+    }
+
+    /// `reserve_scratch` pre-sizes the pool; collectives after it keep
+    /// producing the same results (pure optimization, no semantics).
+    #[test]
+    fn reserve_scratch_is_semantically_inert() {
+        for handles in both(2) {
+            let res = drive(handles, |r, pg| {
+                pg.reserve_scratch(64, 4);
+                let mut buf = vec![r as f32 + 1.0; 10];
+                pg.all_reduce_sum(&mut buf, &[0, 1]).unwrap();
+                buf[0]
+            });
+            assert_eq!(res, vec![3.0, 3.0]);
         }
     }
 

@@ -36,17 +36,36 @@
 //! single cross-slot f64 accumulator, so clip-active trajectories are
 //! not bit-continuous with metrics produced before this refactor —
 //! only the two current backends are bitwise-equal to *each other*.
+//! Per-slot partials themselves now come from the fixed-lane
+//! [`crate::kernels::scale_and_sqnorm`] reduction (see that module's
+//! determinism notes); again schedule-independent and identical on
+//! both backends, but a different summation order than pre-kernel
+//! metrics.
+//!
+//! ## Memory discipline
+//!
+//! Every buffer the steady-state step needs lives in a per-rank
+//! [`StepScratch`] allocated at construction: flat-gradient staging,
+//! reduced grad shards, and the gathered-unit buffers all persist
+//! across steps, and collectives run through the `_into` /
+//! pooled-payload path — so `apply_grads` + `unshard_flats` perform
+//! **zero heap allocations** after the first step (asserted by the
+//! counting-allocator section of `bench_fsdp_unit`).
 
 pub mod components;
 
 use crate::dist::collectives::CommStats;
 use crate::dist::process_group::{BackendKind, BackendSpec, ProcessGroup};
 use crate::dist::topology::hsdp_groups;
+use crate::kernels;
 use crate::model::ParamStore;
 use crate::optim::AdamW;
 use crate::util::even_split;
 use anyhow::{anyhow, bail, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+pub use crate::kernels::bf16_round;
 
 /// Communication dtype policy (mixed precision): f32, or bf16-rounded
 /// payloads (half traffic volume accounted, quantization applied for
@@ -146,6 +165,25 @@ pub struct FsdpStepStats {
 
 // ---- the per-rank engine ----------------------------------------------------
 
+/// Persistent per-rank scratch: every buffer the steady-state train
+/// step touches, allocated once so `apply_grads` and the unshard
+/// family are allocation-free after the first step. Ownership map:
+///
+/// * `unit_flat[u]` — unit `u`'s flattened raw gradients (staging for
+///   the reduce-scatter deposit), `unit.elems` long;
+/// * `grad_shards[u]` — this rank's reduced gradient shard, the
+///   reduce-scatter `_into` target and the optimizer's input;
+/// * `gathered[u]` — unit `u`'s full flat parameters, the all-gather
+///   `_into` target (lazily sized: discard-only peers never hold the
+///   whole model);
+/// * `discard` — one max-unit gather target for [`RankEngine::unshard_discard`].
+struct StepScratch {
+    unit_flat: Vec<Vec<f32>>,
+    grad_shards: Vec<Vec<f32>>,
+    gathered: Vec<Vec<f32>>,
+    discard: Vec<f32>,
+}
+
 /// One rank's half of the sharded engine: its own unit shards, its own
 /// sharded AdamW state, and a [`ProcessGroup`] handle — the *only*
 /// channel to peer ranks. All ranks of a communicator run the same
@@ -165,6 +203,11 @@ pub struct RankEngine {
     shard_group: Vec<usize>,
     /// This rank's replica group (gradient all-reduce runs here).
     replica_group: Vec<usize>,
+    /// Full-communicator group (loss folding) — cached so the per-step
+    /// scalar all-reduce never rebuilds it.
+    full_group: Vec<usize>,
+    /// Step-persistent buffers (see [`StepScratch`]).
+    scratch: StepScratch,
 }
 
 impl RankEngine {
@@ -194,6 +237,9 @@ impl RankEngine {
         let lr = opt_spec.lr();
         let mut shards = Vec::with_capacity(units.len());
         let mut opts = Vec::with_capacity(units.len());
+        let mut unit_flat = Vec::with_capacity(units.len());
+        let mut grad_shards = Vec::with_capacity(units.len());
+        let mut gathered = Vec::with_capacity(units.len());
         for unit in &units {
             let mut flat = Vec::with_capacity(unit.elems);
             for &pid in &unit.param_ids {
@@ -201,6 +247,9 @@ impl RankEngine {
             }
             let (start, len) = even_split(unit.elems, shard_group_size, slot);
             shards.push(flat[start..start + len].to_vec());
+            unit_flat.push(vec![0f32; unit.elems]);
+            grad_shards.push(vec![0f32; len]);
+            gathered.push(Vec::new()); // lazily sized by unshard_flats
             let opt = match opt_spec {
                 crate::optim::components::OptimizerSpec::AdamW {
                     lr, beta1, beta2, eps, weight_decay,
@@ -214,7 +263,31 @@ impl RankEngine {
             opts.push(opt);
         }
         let param_lens = params.bufs.iter().map(|b| b.len()).collect();
-        Ok(Self { cfg, units, shards, opts, pg, param_lens, shard_group, replica_group })
+        let scratch = StepScratch { unit_flat, grad_shards, gathered, discard: Vec::new() };
+        let full_group = all;
+        let mut eng = Self {
+            cfg,
+            units,
+            shards,
+            opts,
+            pg,
+            param_lens,
+            shard_group,
+            replica_group,
+            full_group,
+            scratch,
+        };
+        // Prime the communicator's payload pool so even the very first
+        // steps rendezvous allocation-free: up to two collective
+        // generations can hold a rank's deposits at once (the cell
+        // being retired and the next one filling), plus slack for the
+        // interleaved replica-group / scalar rounds.
+        if eng.shard_group.len() > 1 || eng.replica_group.len() > 1 {
+            let max_unit = eng.units.iter().map(|u| u.elems).max().unwrap_or(0);
+            eng.pg.reserve_scratch(max_unit, 4);
+            eng.pg.reserve_scratch(1, 2);
+        }
+        Ok(eng)
     }
 
     pub fn rank(&self) -> usize {
@@ -232,38 +305,60 @@ impl RankEngine {
     }
 
     /// All-gather every unit into its full flat buffer (what this rank
-    /// sees for fwd/bwd). Singleton shard groups (DDP) gather locally.
-    pub fn unshard_flats(&mut self) -> Result<Vec<Vec<f32>>> {
-        let mut flats = Vec::with_capacity(self.units.len());
-        for shard in &self.shards {
-            let flat = if self.shard_group.len() > 1 {
-                self.pg.all_gather(shard, &self.shard_group)?
+    /// sees for fwd/bwd), landing in the persistent scratch — no
+    /// allocation after the first call. Singleton shard groups (DDP)
+    /// gather locally.
+    pub fn unshard_flats(&mut self) -> Result<&[Vec<f32>]> {
+        for u in 0..self.units.len() {
+            let elems = self.units[u].elems;
+            if self.scratch.gathered[u].len() != elems {
+                // First call on this rank: size the gather targets.
+                self.scratch.gathered[u].resize(elems, 0.0);
+            }
+            if self.shard_group.len() > 1 {
+                self.pg.all_gather_into(
+                    &self.shards[u],
+                    &self.shard_group,
+                    &mut self.scratch.gathered[u],
+                )?;
             } else {
-                shard.clone()
-            };
-            flats.push(flat);
+                self.scratch.gathered[u].copy_from_slice(&self.shards[u]);
+            }
         }
-        Ok(flats)
+        Ok(&self.scratch.gathered)
     }
 
-    /// Participate in the unshard all-gathers but drop each gathered
-    /// unit immediately — for peers of the one rank that materializes
-    /// the full parameters. Traffic accounting is identical to
-    /// [`Self::unshard_flats`]; retained memory is one unit, not the
-    /// whole model.
+    /// Participate in the unshard all-gathers but keep only a single
+    /// max-unit scratch target — for peers of the one rank that
+    /// materializes the full parameters. Traffic accounting is
+    /// identical to [`Self::unshard_flats`]; retained memory is one
+    /// unit, not the whole model.
     pub fn unshard_discard(&mut self) -> Result<()> {
-        for shard in &self.shards {
-            if self.shard_group.len() > 1 {
-                let _ = self.pg.all_gather(shard, &self.shard_group)?;
-            }
+        if self.shard_group.len() <= 1 {
+            return Ok(());
+        }
+        // Sized once to the largest unit; per-unit gathers land in a
+        // prefix sub-slice, so steady-state calls never resize or
+        // re-zero anything.
+        let max_unit = self.units.iter().map(|u| u.elems).max().unwrap_or(0);
+        if self.scratch.discard.len() < max_unit {
+            self.scratch.discard.resize(max_unit, 0.0);
+        }
+        for u in 0..self.units.len() {
+            let elems = self.units[u].elems;
+            self.pg.all_gather_into(
+                &self.shards[u],
+                &self.shard_group,
+                &mut self.scratch.discard[..elems],
+            )?;
         }
         Ok(())
     }
 
     /// All-gather every unit and scatter the tensors into `out`.
     pub fn unshard_into(&mut self, out: &mut ParamStore) -> Result<()> {
-        let flats = self.unshard_flats()?;
-        for (unit, flat) in self.units.iter().zip(&flats) {
+        self.unshard_flats()?;
+        for (unit, flat) in self.units.iter().zip(&self.scratch.gathered) {
             for (&pid, &off) in unit.param_ids.iter().zip(&unit.offsets) {
                 let n = out.bufs[pid].len();
                 out.bufs[pid].copy_from_slice(&flat[off..off + n]);
@@ -307,36 +402,48 @@ impl RankEngine {
         }
         let inv_w = 1.0 / self.cfg.world as f32;
 
-        // Per unit: flatten, reduce to this rank's shard, replicate.
-        let mut grad_shards: Vec<Vec<f32>> = Vec::with_capacity(self.units.len());
-        for unit in &self.units {
-            let mut flat = Vec::with_capacity(unit.elems);
-            for &pid in &unit.param_ids {
-                flat.extend_from_slice(&grads[pid]);
-            }
-            if self.cfg.comm_dtype == CommDtype::Bf16 {
-                for v in &mut flat {
-                    *v = bf16_round(*v);
+        // Per unit: flatten into the staging scratch, reduce to this
+        // rank's shard scratch, replicate. Everything lands in
+        // step-persistent buffers through the `_into` collectives.
+        for u in 0..self.units.len() {
+            {
+                let unit = &self.units[u];
+                let flat = &mut self.scratch.unit_flat[u];
+                for (&pid, &off) in unit.param_ids.iter().zip(&unit.offsets) {
+                    flat[off..off + grads[pid].len()].copy_from_slice(&grads[pid]);
+                }
+                if self.cfg.comm_dtype == CommDtype::Bf16 {
+                    kernels::bf16_round_slice(flat);
                 }
             }
-            let mut shard = if self.shard_group.len() > 1 {
-                self.pg.reduce_scatter_sum(&flat, &self.shard_group)?
+            if self.shard_group.len() > 1 {
+                self.pg.reduce_scatter_sum_into(
+                    &self.scratch.unit_flat[u],
+                    &self.shard_group,
+                    &mut self.scratch.grad_shards[u],
+                )?;
             } else {
-                flat
-            };
-            if self.replica_group.len() > 1 {
-                self.pg.all_reduce_sum(&mut shard, &self.replica_group)?;
+                // Singleton shard group: the "shard" is the whole flat
+                // buffer — swap the equally-sized scratch vectors.
+                debug_assert_eq!(
+                    self.scratch.unit_flat[u].len(),
+                    self.scratch.grad_shards[u].len()
+                );
+                let flat = std::mem::take(&mut self.scratch.unit_flat[u]);
+                self.scratch.unit_flat[u] =
+                    std::mem::replace(&mut self.scratch.grad_shards[u], flat);
             }
-            grad_shards.push(shard);
+            if self.replica_group.len() > 1 {
+                self.pg
+                    .all_reduce_sum(&mut self.scratch.grad_shards[u], &self.replica_group)?;
+            }
         }
 
-        // Mean over ranks + this slot's squared-norm partial.
+        // Mean over ranks fused with this slot's squared-norm partial
+        // (one vectorized pass per shard; fixed-lane f64 reduction).
         let mut sq = 0f64;
-        for s in &mut grad_shards {
-            for g in s.iter_mut() {
-                *g *= inv_w;
-                sq += (*g as f64) * (*g as f64);
-            }
+        for s in &mut self.scratch.grad_shards {
+            sq += kernels::scale_and_sqnorm(s, inv_w);
         }
         // Fold the slots' partials once per logical gradient copy: the
         // shard group covers every slot exactly once, and slot shards
@@ -352,15 +459,14 @@ impl RankEngine {
             _ => 1.0,
         };
         if clip_scale != 1.0 {
-            for s in &mut grad_shards {
-                for g in s.iter_mut() {
-                    *g *= clip_scale;
-                }
+            for s in &mut self.scratch.grad_shards {
+                kernels::scale_slice(s, clip_scale);
             }
         }
 
-        // Sharded optimizer update over this rank's shards.
-        for (u, g) in grad_shards.iter().enumerate() {
+        // Sharded optimizer update over this rank's shards (fused
+        // AdamW kernel inside `update`).
+        for (u, g) in self.scratch.grad_shards.iter().enumerate() {
             self.opts[u].begin_step();
             let shard = &mut self.shards[u];
             debug_assert_eq!(shard.len(), g.len());
@@ -374,8 +480,7 @@ impl RankEngine {
         if self.cfg.world == 1 {
             return Ok(v);
         }
-        let group: Vec<usize> = (0..self.cfg.world).collect();
-        self.pg.all_reduce_scalar(v, &group)
+        self.pg.all_reduce_scalar(v, &self.full_group)
     }
 
     /// Shard views for checkpointing.
@@ -383,7 +488,15 @@ impl RankEngine {
         self.shards.iter().map(|s| s.as_slice()).collect()
     }
 
-    /// Optimizer state (m, v, t) per unit for checkpointing.
+    /// Borrowed optimizer-state views `(m, v, t)` per unit — the
+    /// checkpoint serializer writes straight from these, so saving
+    /// never clones the moment buffers.
+    pub fn opt_state_views(&self) -> Vec<(&[f32], &[f32], u64)> {
+        self.opts.iter().map(|o| o.state()).collect()
+    }
+
+    /// Owned optimizer state (m, v, t) per unit — for fingerprinting in
+    /// tests; checkpointing goes through [`Self::opt_state_views`].
     pub fn opt_state(&self) -> Vec<(Vec<f32>, Vec<f32>, u64)> {
         self.opts
             .iter()
@@ -595,24 +708,27 @@ impl FsdpEngine {
 
     /// All-gather every unit into `out` (the unsharded parameters every
     /// rank sees for fwd/bwd). All ranks gather concurrently — traffic
-    /// is accounted per rank — and rank 0's (identical) copy is
-    /// scattered into `out`; peers drop their gathered units as they
-    /// go, so retained memory stays one full copy, not `world` copies.
+    /// is accounted per rank — and rank 0 scatters its (identical) copy
+    /// straight from its gather scratch into `out`; peers reuse a
+    /// single-unit discard target, so retained memory stays one full
+    /// copy, not `world` copies, and no rank allocates.
     pub fn unshard_into(&mut self, out: &mut ParamStore) -> Result<()> {
-        let mut flats = self.run_ranks(|r, eng| {
+        // Rank 0's thread takes the output store out of this one-shot
+        // slot (a `Fn` closure shared across rank threads cannot
+        // capture `&mut` directly).
+        let slot = Mutex::new(Some(out));
+        self.run_ranks(|r, eng| {
             if r == 0 {
-                eng.unshard_flats().map(Some)
+                let out = slot
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
+                    .expect("rank 0 takes the output store exactly once");
+                eng.unshard_into(out)
             } else {
-                eng.unshard_discard().map(|_| None)
+                eng.unshard_discard()
             }
         })?;
-        let flats0 = flats.swap_remove(0).expect("rank 0 materializes the gathered units");
-        for (unit, flat) in self.units.iter().zip(&flats0) {
-            for (&pid, &off) in unit.param_ids.iter().zip(&unit.offsets) {
-                let n = out.bufs[pid].len();
-                out.bufs[pid].copy_from_slice(&flat[off..off + n]);
-            }
-        }
         Ok(())
     }
 
@@ -668,8 +784,15 @@ impl FsdpEngine {
         self.ranks[rank].restore_shards(shards)
     }
 
-    /// Optimizer state access for checkpointing: (m, v, t) per unit for
-    /// `rank`.
+    /// Borrowed optimizer-state views for `rank` (copy-free checkpoint
+    /// serialization).
+    pub fn rank_opt_state_views(&self, rank: usize) -> Vec<(&[f32], &[f32], u64)> {
+        self.ranks[rank].opt_state_views()
+    }
+
+    /// Owned optimizer state (m, v, t) per unit for `rank` —
+    /// fingerprinting in tests; checkpointing uses
+    /// [`Self::rank_opt_state_views`].
     pub fn rank_opt_state(&self, rank: usize) -> Vec<(Vec<f32>, Vec<f32>, u64)> {
         self.ranks[rank].opt_state()
     }
@@ -681,14 +804,6 @@ impl FsdpEngine {
     ) -> Result<()> {
         self.ranks[rank].restore_opt_state(states)
     }
-}
-
-/// Round an f32 to bf16 precision (round-to-nearest-even on the top 16
-/// bits) — models bf16 gradient communication.
-pub fn bf16_round(x: f32) -> f32 {
-    let bits = x.to_bits();
-    let rounded = (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1))) & 0xFFFF_0000;
-    f32::from_bits(rounded)
 }
 
 #[cfg(test)]

@@ -218,6 +218,12 @@ impl Gym {
         let mut final_loss = f32::NAN;
         let mut tokens_seen = start_step * tokens_per_step;
         let mut micro_idx = start_step * spec.grad_accum as u64;
+        // One reusable token batch for the whole run — refilled per
+        // micro-batch instead of cloning the token vectors each step.
+        let mut tb = TokenBatch::with_capacity(
+            spec.dataloader.batch_size,
+            spec.dataloader.dataset.seq_len(),
+        );
 
         for step in start_step..spec.steps {
             let lr_scale = spec.scheduler.scale_at(step);
@@ -244,7 +250,7 @@ impl Gym {
                             )
                         })?,
                     };
-                    let tb = TokenBatch::from(&batch);
+                    tb.fill_from(&batch);
                     let out = model
                         .train_step(&engine, &params, &tb)
                         .with_context(|| format!("step {step} rank {rank}"))?;
@@ -256,9 +262,7 @@ impl Gym {
                         None => acc = Some(out.grads),
                         Some(acc) => {
                             for (a, g) in acc.iter_mut().zip(&out.grads) {
-                                for (x, y) in a.iter_mut().zip(g) {
-                                    *x += *y;
-                                }
+                                crate::kernels::add_slice(a, g);
                             }
                         }
                     }
@@ -267,9 +271,7 @@ impl Gym {
                 if spec.grad_accum > 1 {
                     let inv = 1.0 / spec.grad_accum as f32;
                     for g in &mut grads {
-                        for x in g.iter_mut() {
-                            *x *= inv;
-                        }
+                        crate::kernels::scale_slice(g, inv);
                     }
                 }
                 per_rank.push(grads);
@@ -375,9 +377,11 @@ pub fn evaluate(
         bail!("eval dataloader has no batches");
     }
     let mut sum = 0f32;
+    let mut tb = TokenBatch::with_capacity(dl.batch_size, dl.dataset.seq_len());
     for b in 0..n {
         let batch = dl.batch(0, b);
-        sum += model.loss(engine, params, &TokenBatch::from(&batch))?;
+        tb.fill_from(&batch);
+        sum += model.loss(engine, params, &tb)?;
     }
     Ok(sum / n as f32)
 }

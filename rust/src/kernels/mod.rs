@@ -1,0 +1,426 @@
+//! Fused, vectorization-friendly slice kernels for the steady-state
+//! train step.
+//!
+//! Every hot per-element loop in the inner training loop lives here:
+//! the AdamW/SGD updates, gradient mean-scaling fused with the
+//! squared-norm reduction, gradient clipping, bf16 comm rounding, and
+//! the axpy/accumulate primitives the TP matmuls and collective folds
+//! are built from. The call sites (optim, fsdp, tp, dist, gym) pass
+//! caller-owned slices, so the kernels allocate nothing.
+//!
+//! ## Shape discipline
+//!
+//! Kernels run a fixed-width main loop over [`LANES`]-element chunks
+//! (`chunks_exact`, which the compiler unrolls and auto-vectorizes)
+//! followed by a scalar remainder loop. Element-wise kernels
+//! ([`fused_adamw`], [`fused_sgd`], [`axpy`], …) perform *exactly* the
+//! per-element arithmetic of the scalar reference loops they replaced,
+//! in the same element order, so their results are **bitwise
+//! identical** to those references — the unit tests pin this across
+//! sizes that exercise the remainder lanes.
+//!
+//! ## Reduction determinism
+//!
+//! Reductions ([`scale_and_sqnorm`], [`sqnorm`]) accumulate in f64
+//! across [`LANES`] independent lanes (element `i` feeds lane
+//! `i % LANES`) and fold the lanes with a fixed binary tree at the
+//! end. The schedule is a pure function of the slice length — never of
+//! thread timing, call site, or chunk availability — so repeated calls
+//! are bitwise deterministic and both collective backends observe the
+//! same norms (the same discipline the threaded backend's ascending
+//! group-order folds use). Note this *fixed-chunk* sum is a different
+//! (better-conditioned) summation order than the pre-kernel sequential
+//! f64 fold, so grad-norm trajectories are not bit-continuous with
+//! metrics recorded before this layer existed; the two current
+//! backends remain bitwise equal to *each other*.
+
+/// Fixed kernel width: the main loops process this many elements per
+/// iteration and reductions carry this many independent accumulator
+/// lanes.
+pub const LANES: usize = 8;
+
+/// One AdamW step's per-call constants (everything that does not vary
+/// per element): effective lr (base lr × schedule scale), betas, eps,
+/// decoupled weight decay, and the step-`t` bias corrections
+/// `1 - beta^t`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamWStep {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub bias1: f32,
+    pub bias2: f32,
+}
+
+#[inline(always)]
+fn adamw_elem(p: &mut f32, g: f32, m: &mut f32, v: &mut f32, k: &AdamWStep) {
+    *m = k.beta1 * *m + (1.0 - k.beta1) * g;
+    *v = k.beta2 * *v + (1.0 - k.beta2) * g * g;
+    let mhat = *m / k.bias1;
+    let vhat = *v / k.bias2;
+    *p -= k.lr * (mhat / (vhat.sqrt() + k.eps) + k.weight_decay * *p);
+}
+
+/// Fused AdamW: moment update, bias correction and decoupled weight
+/// decay in one pass over the shard. Bitwise identical to the scalar
+/// reference loop (see module docs).
+pub fn fused_adamw(params: &mut [f32], grads: &[f32], m: &mut [f32], v: &mut [f32], k: AdamWStep) {
+    let n = params.len();
+    assert_eq!(grads.len(), n, "fused_adamw: grads length mismatch");
+    assert_eq!(m.len(), n, "fused_adamw: m length mismatch");
+    assert_eq!(v.len(), n, "fused_adamw: v length mismatch");
+    let pc = params.chunks_exact_mut(LANES);
+    let gc = grads.chunks_exact(LANES);
+    let mc = m.chunks_exact_mut(LANES);
+    let vc = v.chunks_exact_mut(LANES);
+    for (((pp, gg), mm), vv) in pc.zip(gc).zip(mc).zip(vc) {
+        for j in 0..LANES {
+            adamw_elem(&mut pp[j], gg[j], &mut mm[j], &mut vv[j], &k);
+        }
+    }
+    for i in (n - n % LANES)..n {
+        adamw_elem(&mut params[i], grads[i], &mut m[i], &mut v[i], &k);
+    }
+}
+
+#[inline(always)]
+fn sgd_elem(p: &mut f32, g: f32, vel: &mut f32, lr: f32, momentum: f32) {
+    *vel = momentum * *vel + g;
+    *p -= lr * *vel;
+}
+
+/// Fused SGD with momentum: velocity update + parameter step in one
+/// pass. `lr` is the effective rate (base lr × schedule scale).
+pub fn fused_sgd(params: &mut [f32], grads: &[f32], vel: &mut [f32], lr: f32, momentum: f32) {
+    let n = params.len();
+    assert_eq!(grads.len(), n, "fused_sgd: grads length mismatch");
+    assert_eq!(vel.len(), n, "fused_sgd: velocity length mismatch");
+    let pc = params.chunks_exact_mut(LANES);
+    let gc = grads.chunks_exact(LANES);
+    let vc = vel.chunks_exact_mut(LANES);
+    for ((pp, gg), vv) in pc.zip(gc).zip(vc) {
+        for j in 0..LANES {
+            sgd_elem(&mut pp[j], gg[j], &mut vv[j], lr, momentum);
+        }
+    }
+    for i in (n - n % LANES)..n {
+        sgd_elem(&mut params[i], grads[i], &mut vel[i], lr, momentum);
+    }
+}
+
+/// Fold the reduction lanes with a fixed binary tree. The fold shape
+/// is written out for exactly 8 lanes — the assertion ties it to
+/// [`LANES`] so widening the kernels cannot silently drop lanes.
+const _: () = assert!(LANES == 8, "lane_tree is written for 8 lanes");
+#[inline(always)]
+fn lane_tree(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// `buf[i] *= scale` fused with the f64 squared-norm reduction over the
+/// *scaled* values — one pass where `apply_grads` used to run a scale
+/// loop and a separate norm loop. Lane-parallel f64 accumulation in the
+/// fixed chunk order (see module docs).
+pub fn scale_and_sqnorm(buf: &mut [f32], scale: f32) -> f64 {
+    let mut acc = [0f64; LANES];
+    for c in buf.chunks_exact_mut(LANES) {
+        for j in 0..LANES {
+            c[j] *= scale;
+            let x = c[j] as f64;
+            acc[j] += x * x;
+        }
+    }
+    let n = buf.len();
+    for (j, i) in ((n - n % LANES)..n).enumerate() {
+        buf[i] *= scale;
+        let x = buf[i] as f64;
+        acc[j] += x * x;
+    }
+    lane_tree(acc)
+}
+
+/// f64 squared norm of a slice, same fixed lane schedule as
+/// [`scale_and_sqnorm`] (so `sqnorm(x)` == `scale_and_sqnorm(x, 1.0)`
+/// up to the exact multiply-by-one).
+pub fn sqnorm(buf: &[f32]) -> f64 {
+    let mut acc = [0f64; LANES];
+    for c in buf.chunks_exact(LANES) {
+        for j in 0..LANES {
+            let x = c[j] as f64;
+            acc[j] += x * x;
+        }
+    }
+    let n = buf.len();
+    for (j, i) in ((n - n % LANES)..n).enumerate() {
+        let x = buf[i] as f64;
+        acc[j] += x * x;
+    }
+    lane_tree(acc)
+}
+
+/// `buf[i] *= scale` (gradient clipping / accumulation averaging).
+pub fn scale_slice(buf: &mut [f32], scale: f32) {
+    for c in buf.chunks_exact_mut(LANES) {
+        for x in c {
+            *x *= scale;
+        }
+    }
+    let n = buf.len();
+    for x in &mut buf[n - n % LANES..] {
+        *x *= scale;
+    }
+}
+
+/// `y[i] += x[i]` — the collective fold / grad-accumulation primitive.
+pub fn add_slice(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "add_slice: length mismatch");
+    let yc = y.chunks_exact_mut(LANES);
+    let xc = x.chunks_exact(LANES);
+    for (yy, xx) in yc.zip(xc) {
+        for j in 0..LANES {
+            yy[j] += xx[j];
+        }
+    }
+    let n = y.len();
+    for i in (n - n % LANES)..n {
+        y[i] += x[i];
+    }
+}
+
+/// `y[i] += a * x[i]` — the TP matmul inner loop.
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    let yc = y.chunks_exact_mut(LANES);
+    let xc = x.chunks_exact(LANES);
+    for (yy, xx) in yc.zip(xc) {
+        for j in 0..LANES {
+            yy[j] += a * xx[j];
+        }
+    }
+    let n = y.len();
+    for i in (n - n % LANES)..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Round an f32 to bf16 precision (round-to-nearest-even on the top 16
+/// bits) — models bf16 gradient communication.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let rounded = (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1))) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// [`bf16_round`] over a whole buffer (the comm-dtype pass of
+/// `apply_grads`, previously a scalar loop over the flat unit).
+pub fn bf16_round_slice(buf: &mut [f32]) {
+    for c in buf.chunks_exact_mut(LANES) {
+        for x in c {
+            *x = bf16_round(*x);
+        }
+    }
+    let n = buf.len();
+    for x in &mut buf[n - n % LANES..] {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    /// Sizes that exercise the empty, sub-lane, exact-lane and
+    /// remainder-lane paths of every kernel.
+    const SIZES: [usize; 8] = [0, 1, 7, 8, 9, 64, 1023, 4096];
+
+    fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect()
+    }
+
+    /// The pre-kernel scalar AdamW loop, verbatim from the old
+    /// `AdamW::update` body — the bitwise reference.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_adamw(
+        params: &mut [f32],
+        grads: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        t: u64,
+    ) {
+        let bc1 = 1.0 - beta1.powi(t as i32);
+        let bc2 = 1.0 - beta2.powi(t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            let mi = &mut m[i];
+            let vi = &mut v[i];
+            *mi = beta1 * *mi + (1.0 - beta1) * g;
+            *vi = beta2 * *vi + (1.0 - beta2) * g * g;
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            params[i] -= lr * (mhat / (vhat.sqrt() + eps) + weight_decay * params[i]);
+        }
+    }
+
+    #[test]
+    fn fused_adamw_bitwise_matches_scalar_reference() {
+        let (lr, b1, b2, eps, wd) = (0.013f32, 0.9, 0.95, 1e-8, 0.1);
+        for &n in &SIZES {
+            let mut p_f = rand_vec(n as u64 + 1, n);
+            let g = rand_vec(n as u64 + 2, n);
+            let mut p_r = p_f.clone();
+            let (mut mf, mut vf) = (vec![0f32; n], vec![0f32; n]);
+            let (mut mr, mut vr) = (vec![0f32; n], vec![0f32; n]);
+            for t in 1..=3u64 {
+                let k = AdamWStep {
+                    lr,
+                    beta1: b1,
+                    beta2: b2,
+                    eps,
+                    weight_decay: wd,
+                    bias1: 1.0 - b1.powi(t as i32),
+                    bias2: 1.0 - b2.powi(t as i32),
+                };
+                fused_adamw(&mut p_f, &g, &mut mf, &mut vf, k);
+                reference_adamw(&mut p_r, &g, &mut mr, &mut vr, lr, b1, b2, eps, wd, t);
+                assert_eq!(p_f, p_r, "params diverged at n={n} t={t}");
+                assert_eq!(mf, mr, "m diverged at n={n} t={t}");
+                assert_eq!(vf, vr, "v diverged at n={n} t={t}");
+            }
+        }
+    }
+
+    /// The pre-kernel scalar SGD-momentum loop (old `Sgd::update`).
+    fn reference_sgd(params: &mut [f32], grads: &[f32], vel: &mut [f32], lr: f32, momentum: f32) {
+        for i in 0..params.len() {
+            let v = &mut vel[i];
+            *v = momentum * *v + grads[i];
+            params[i] -= lr * *v;
+        }
+    }
+
+    #[test]
+    fn fused_sgd_bitwise_matches_scalar_reference() {
+        for &n in &SIZES {
+            let mut p_f = rand_vec(n as u64 + 11, n);
+            let g = rand_vec(n as u64 + 12, n);
+            let mut p_r = p_f.clone();
+            let (mut vf, mut vr) = (vec![0f32; n], vec![0f32; n]);
+            for _ in 0..3 {
+                fused_sgd(&mut p_f, &g, &mut vf, 0.05, 0.9);
+                reference_sgd(&mut p_r, &g, &mut vr, 0.05, 0.9);
+                assert_eq!(p_f, p_r, "n={n}");
+                assert_eq!(vf, vr, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_and_sqnorm_scaling_is_bitwise_and_norm_is_fixed_schedule() {
+        for &n in &SIZES {
+            let orig = rand_vec(n as u64 + 21, n);
+            // Scaled values must be bitwise identical to the scalar
+            // reference loop (`g *= inv_w`).
+            let mut buf = orig.clone();
+            let norm = scale_and_sqnorm(&mut buf, 0.25);
+            let mut reference = orig.clone();
+            let mut seq = 0f64;
+            for g in reference.iter_mut() {
+                *g *= 0.25;
+                seq += (*g as f64) * (*g as f64);
+            }
+            assert_eq!(buf, reference, "scaled buffer diverged at n={n}");
+            // The norm follows the documented fixed lane schedule
+            // (element i feeds lane i % LANES, lanes tree-folded)…
+            let mut lanes = [0f64; LANES];
+            for (i, &x) in buf.iter().enumerate() {
+                let x = x as f64;
+                lanes[i % LANES] += x * x;
+            }
+            let tree = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            assert_eq!(norm.to_bits(), tree.to_bits(), "lane schedule diverged at n={n}");
+            // …and agrees with the sequential f64 fold to f64 rounding
+            // error (they are different summation orders by design).
+            let denom = seq.abs().max(1e-30);
+            assert!(
+                ((norm - seq) / denom).abs() < 1e-11,
+                "norm drifted from sequential fold at n={n}: {norm} vs {seq}"
+            );
+            // sqnorm of the already-scaled buffer is the same reduction.
+            assert_eq!(sqnorm(&buf).to_bits(), norm.to_bits());
+        }
+    }
+
+    #[test]
+    fn reductions_are_deterministic_across_repeated_calls() {
+        for &n in &SIZES {
+            let base = rand_vec(n as u64 + 31, n);
+            let mut first: Option<(u64, Vec<u32>)> = None;
+            for _ in 0..5 {
+                let mut buf = base.clone();
+                let norm = scale_and_sqnorm(&mut buf, 0.5);
+                let bits: Vec<u32> = buf.iter().map(|x| x.to_bits()).collect();
+                match &first {
+                    None => first = Some((norm.to_bits(), bits)),
+                    Some((nb, bb)) => {
+                        assert_eq!(*nb, norm.to_bits(), "norm nondeterministic at n={n}");
+                        assert_eq!(*bb, bits, "buffer nondeterministic at n={n}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_loops_bitwise() {
+        for &n in &SIZES {
+            let x = rand_vec(n as u64 + 41, n);
+            let y0 = rand_vec(n as u64 + 42, n);
+
+            let mut y = y0.clone();
+            add_slice(&mut y, &x);
+            let mut yr = y0.clone();
+            for i in 0..n {
+                yr[i] += x[i];
+            }
+            assert_eq!(y, yr, "add_slice n={n}");
+
+            let mut y = y0.clone();
+            axpy(&mut y, -1.75, &x);
+            let mut yr = y0.clone();
+            for i in 0..n {
+                yr[i] += -1.75 * x[i];
+            }
+            assert_eq!(y, yr, "axpy n={n}");
+
+            let mut y = y0.clone();
+            scale_slice(&mut y, 0.3);
+            let mut yr = y0.clone();
+            for g in yr.iter_mut() {
+                *g *= 0.3;
+            }
+            assert_eq!(y, yr, "scale_slice n={n}");
+
+            let mut y = y0.clone();
+            bf16_round_slice(&mut y);
+            let yr: Vec<f32> = y0.iter().map(|&v| bf16_round(v)).collect();
+            assert_eq!(y, yr, "bf16_round_slice n={n}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounding_scalar() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(1.0 + 1e-4), 1.0); // below bf16 resolution near 1.0
+        assert!((bf16_round(3.14159) - 3.14159).abs() < 0.02);
+    }
+}

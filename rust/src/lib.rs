@@ -44,6 +44,7 @@ pub mod data;
 pub mod dist;
 pub mod fsdp;
 pub mod gym;
+pub mod kernels;
 pub mod model;
 pub mod optim;
 pub mod perfmodel;

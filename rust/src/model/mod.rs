@@ -145,6 +145,34 @@ pub struct TokenBatch {
     pub seq_len: usize,
 }
 
+impl TokenBatch {
+    /// An empty batch with capacity for `batch_size × seq_len` tokens —
+    /// allocate once outside a loop, then [`Self::fill_from`] each
+    /// iteration.
+    pub fn with_capacity(batch_size: usize, seq_len: usize) -> Self {
+        let n = batch_size * seq_len;
+        TokenBatch {
+            tokens: Vec::with_capacity(n),
+            targets: Vec::with_capacity(n),
+            batch_size,
+            seq_len,
+        }
+    }
+
+    /// Refill from a dataset batch, reusing this batch's buffers — the
+    /// gym hot loop's allocation-free replacement for
+    /// `TokenBatch::from(&batch)` (which clones both token vectors on
+    /// every micro-batch).
+    pub fn fill_from(&mut self, b: &crate::data::dataset::Batch) {
+        self.tokens.clear();
+        self.tokens.extend_from_slice(&b.inputs);
+        self.targets.clear();
+        self.targets.extend_from_slice(&b.targets);
+        self.batch_size = b.batch_size;
+        self.seq_len = b.seq_len;
+    }
+}
+
 impl From<&crate::data::dataset::Batch> for TokenBatch {
     fn from(b: &crate::data::dataset::Batch) -> Self {
         TokenBatch {

@@ -47,23 +47,30 @@ impl AdamW {
 
     /// Apply one AdamW update to `params` (a shard whose optimizer state
     /// lives at `offset` in this instance), at lr `lr_scale * self.lr`.
+    /// Runs the fused kernel ([`crate::kernels::fused_adamw`]): moment
+    /// update, bias correction and decoupled decay in one vectorized
+    /// pass, bitwise identical to the scalar loop it replaced.
     pub fn update(&mut self, params: &mut [f32], grads: &[f32], offset: usize, lr_scale: f32) {
         assert_eq!(params.len(), grads.len());
         assert!(offset + params.len() <= self.m.len(), "optimizer state range OOB");
         assert!(self.t > 0, "begin_step() not called");
-        let lr = self.lr * lr_scale;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..params.len() {
-            let g = grads[i];
-            let m = &mut self.m[offset + i];
-            let v = &mut self.v[offset + i];
-            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
-            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
-            let mhat = *m / bc1;
-            let vhat = *v / bc2;
-            params[i] -= lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
-        }
+        let n = params.len();
+        let k = crate::kernels::AdamWStep {
+            lr: self.lr * lr_scale,
+            beta1: self.beta1,
+            beta2: self.beta2,
+            eps: self.eps,
+            weight_decay: self.weight_decay,
+            bias1: 1.0 - self.beta1.powi(self.t as i32),
+            bias2: 1.0 - self.beta2.powi(self.t as i32),
+        };
+        crate::kernels::fused_adamw(
+            params,
+            grads,
+            &mut self.m[offset..offset + n],
+            &mut self.v[offset..offset + n],
+            k,
+        );
     }
 
     /// Serialize state (checkpointing).
@@ -95,13 +102,19 @@ impl Sgd {
         Self { lr, momentum, vel: vec![0.0; num_elems] }
     }
 
+    /// One fused velocity + parameter update pass
+    /// ([`crate::kernels::fused_sgd`]), bitwise identical to the scalar
+    /// loop it replaced.
     pub fn update(&mut self, params: &mut [f32], grads: &[f32], offset: usize, lr_scale: f32) {
         assert_eq!(params.len(), grads.len());
-        for i in 0..params.len() {
-            let v = &mut self.vel[offset + i];
-            *v = self.momentum * *v + grads[i];
-            params[i] -= self.lr * lr_scale * *v;
-        }
+        let n = params.len();
+        crate::kernels::fused_sgd(
+            params,
+            grads,
+            &mut self.vel[offset..offset + n],
+            self.lr * lr_scale,
+            self.momentum,
+        );
     }
 }
 
@@ -156,21 +169,19 @@ fn progress(step: u64, warmup: u64, total: u64) -> f32 {
 }
 
 /// Global-norm gradient clipping over a set of (sharded) buffers.
-/// Returns the pre-clip global norm; scales buffers in place if needed.
+/// Returns the pre-clip global norm; scales buffers in place if
+/// needed. Norm accumulation and scaling run the vectorized kernels
+/// (fixed-lane f64 reduction per shard, folded over shards in order).
 pub fn clip_global_norm(shards: &mut [&mut [f32]], max_norm: f32) -> f32 {
     let mut sq = 0f64;
     for s in shards.iter() {
-        for &g in s.iter() {
-            sq += (g as f64) * (g as f64);
-        }
+        sq += crate::kernels::sqnorm(s);
     }
     let norm = sq.sqrt() as f32;
     if max_norm > 0.0 && norm > max_norm {
         let scale = max_norm / (norm + 1e-6);
         for s in shards.iter_mut() {
-            for g in s.iter_mut() {
-                *g *= scale;
-            }
+            crate::kernels::scale_slice(s, scale);
         }
     }
     norm

@@ -18,8 +18,20 @@
 //!   rank's [`ProcessGroup`] handle — the genuinely concurrent path,
 //!   bitwise identical to the oracle on both collective backends (the
 //!   group all-reduce folds partials in the same ascending order).
+//!
+//! The per-rank forms follow the same scratch-buffer discipline as the
+//! FSDP engine: the `_into` variants
+//! ([`column_parallel_forward_rank_into`] /
+//! [`row_parallel_forward_rank_into`]) write into a caller-owned
+//! [`Mat`] (capacity reused across steps), index the weight window
+//! directly instead of materializing `col_slice`/`row_slice` copies,
+//! and run their inner loop through the vectorized
+//! [`crate::kernels::axpy`] kernel — per-element arithmetic identical
+//! to [`Mat::matmul`], so results stay bitwise equal to the oracle.
+//! The allocating per-rank forms are thin wrappers over `_into`.
 
 use crate::dist::process_group::ProcessGroup;
+use crate::kernels::axpy;
 use crate::util::even_split;
 use anyhow::{bail, Result};
 
@@ -85,6 +97,56 @@ impl Mat {
         }
     }
 
+    /// Reshape this matrix to `rows × cols` zeros, reusing the backing
+    /// allocation — the scratch reset every `_into` form starts with.
+    pub fn reshape_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// `out = self · rhs[r0..r0+k, :]` — matmul against a row window of
+    /// `rhs` without materializing [`Mat::row_slice`]. Inner loop is
+    /// the [`axpy`] kernel; element order matches [`Mat::matmul`]
+    /// (bitwise identical, including the zero-skip).
+    pub fn matmul_row_window_into(&self, rhs: &Mat, r0: usize, out: &mut Mat) {
+        assert!(r0 + self.cols <= rhs.rows, "row window out of range");
+        out.reshape_zeroed(self.rows, rhs.cols);
+        let n = rhs.cols;
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let w_row = &rhs.data[(r0 + k) * n..(r0 + k + 1) * n];
+                axpy(out_row, a, w_row);
+            }
+        }
+    }
+
+    /// `out = self · rhs[:, c0..c0+n]` — matmul against a column window
+    /// of `rhs` without materializing [`Mat::col_slice`]. Same bitwise
+    /// contract as [`Self::matmul_row_window_into`].
+    pub fn matmul_col_window_into(&self, rhs: &Mat, c0: usize, n: usize, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows, "inner dimension mismatch");
+        assert!(c0 + n <= rhs.cols, "column window out of range");
+        out.reshape_zeroed(self.rows, n);
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let w_row = &rhs.data[k * rhs.cols + c0..k * rhs.cols + c0 + n];
+                axpy(out_row, a, w_row);
+            }
+        }
+    }
+
     pub fn hcat(parts: &[Mat]) -> Mat {
         let rows = parts[0].rows;
         let cols: usize = parts.iter().map(|p| p.cols).sum();
@@ -138,9 +200,17 @@ pub fn row_parallel_forward(x_shards: &[Mat], w: &Mat, tp: usize) -> Result<Mat>
     Ok(acc.unwrap())
 }
 
-/// Column-parallel linear, one rank's view: compute only shard `pos`
-/// of the `tp`-way output split. No collective on the forward.
-pub fn column_parallel_forward_rank(x: &Mat, w: &Mat, tp: usize, pos: usize) -> Result<Mat> {
+/// Column-parallel linear, one rank's view, into a caller-owned
+/// output: compute only shard `pos` of the `tp`-way output split,
+/// reusing `out`'s allocation across calls. No collective on the
+/// forward. Bitwise identical to [`column_parallel_forward_rank`].
+pub fn column_parallel_forward_rank_into(
+    x: &Mat,
+    w: &Mat,
+    tp: usize,
+    pos: usize,
+    out: &mut Mat,
+) -> Result<()> {
     if tp == 0 || w.cols < tp {
         bail!("invalid tp degree {tp} for {} columns", w.cols);
     }
@@ -148,20 +218,32 @@ pub fn column_parallel_forward_rank(x: &Mat, w: &Mat, tp: usize, pos: usize) -> 
         bail!("tp position {pos} out of range for degree {tp}");
     }
     let (c0, n) = even_split(w.cols, tp, pos);
-    Ok(x.matmul(&w.col_slice(c0, n)))
+    x.matmul_col_window_into(w, c0, n, out);
+    Ok(())
 }
 
-/// Row-parallel linear, one rank's view: compute this rank's partial
-/// product and fold it with its TP peers through the rank's
-/// [`ProcessGroup`] handle — the all-reduce the perf model charges.
-/// `group` is the TP group (must contain `pg.rank()`); the rank's
-/// position in it selects its row shard of `w`.
-pub fn row_parallel_forward_rank(
+/// Column-parallel linear, one rank's view: compute only shard `pos`
+/// of the `tp`-way output split. No collective on the forward.
+pub fn column_parallel_forward_rank(x: &Mat, w: &Mat, tp: usize, pos: usize) -> Result<Mat> {
+    let mut out = Mat::zeros(0, 0);
+    column_parallel_forward_rank_into(x, w, tp, pos, &mut out)?;
+    Ok(out)
+}
+
+/// Row-parallel linear, one rank's view, into a caller-owned output:
+/// compute this rank's partial product straight into `out` (allocation
+/// reused across steps) and fold it with its TP peers through the
+/// rank's [`ProcessGroup`] handle — the all-reduce the perf model
+/// charges, running in place on `out`. `group` is the TP group (must
+/// contain `pg.rank()`); the rank's position in it selects its row
+/// shard of `w`.
+pub fn row_parallel_forward_rank_into(
     pg: &mut dyn ProcessGroup,
     group: &[usize],
     x_shard: &Mat,
     w: &Mat,
-) -> Result<Mat> {
+    out: &mut Mat,
+) -> Result<()> {
     let tp = group.len();
     if tp == 0 || w.rows < tp {
         bail!("invalid tp group {group:?} for {} rows", w.rows);
@@ -171,9 +253,28 @@ pub fn row_parallel_forward_rank(
         .position(|&g| g == pg.rank())
         .ok_or_else(|| anyhow::anyhow!("rank {} is not in TP group {group:?}", pg.rank()))?;
     let (r0, n) = even_split(w.rows, tp, pos);
-    let mut partial = x_shard.matmul(&w.row_slice(r0, n));
-    pg.all_reduce_sum(&mut partial.data, group)?;
-    Ok(partial)
+    if x_shard.cols != n {
+        bail!(
+            "row-parallel input shard has {} columns, position {pos} of a {tp}-way split needs {n}",
+            x_shard.cols
+        );
+    }
+    x_shard.matmul_row_window_into(w, r0, out);
+    pg.all_reduce_sum(&mut out.data, group)?;
+    Ok(())
+}
+
+/// Row-parallel linear, one rank's view (allocating wrapper over
+/// [`row_parallel_forward_rank_into`]).
+pub fn row_parallel_forward_rank(
+    pg: &mut dyn ProcessGroup,
+    group: &[usize],
+    x_shard: &Mat,
+    w: &Mat,
+) -> Result<Mat> {
+    let mut out = Mat::zeros(0, 0);
+    row_parallel_forward_rank_into(pg, group, x_shard, w, &mut out)?;
+    Ok(out)
 }
 
 /// Per-layer TP communication volume in bytes (fwd+bwd): 2 all-reduces
@@ -254,8 +355,31 @@ mod tests {
                         .enumerate()
                         .map(|(r, mut pg)| {
                             s.spawn(move || {
+                                // Scratch-backed `_into` forms, reused
+                                // across rounds like a train loop would.
+                                let mut h_scratch = Mat::zeros(0, 0);
+                                let mut y_scratch = Mat::zeros(0, 0);
+                                for _round in 0..2 {
+                                    column_parallel_forward_rank_into(
+                                        x, a, tp, r, &mut h_scratch,
+                                    )
+                                    .unwrap();
+                                    row_parallel_forward_rank_into(
+                                        &mut pg,
+                                        group,
+                                        &h_scratch,
+                                        b,
+                                        &mut y_scratch,
+                                    )
+                                    .unwrap();
+                                }
+                                // The allocating wrappers are the same path.
                                 let h_r = column_parallel_forward_rank(x, a, tp, r).unwrap();
-                                row_parallel_forward_rank(&mut pg, group, &h_r, b).unwrap()
+                                assert_eq!(h_r.data, h_scratch.data);
+                                let y = row_parallel_forward_rank(&mut pg, group, &h_r, b)
+                                    .unwrap();
+                                assert_eq!(y.data, y_scratch.data);
+                                y
                             })
                         })
                         .collect::<Vec<_>>()

@@ -20,6 +20,12 @@ git diff --exit-code docs/config_reference.md
 echo "==> backend equivalence suite (threaded vs lockstep, bitwise, both backends)"
 cargo test --release --quiet --test backend_equivalence
 
+echo "==> kernel equivalence suite (fused kernels vs scalar references, bitwise)"
+cargo test --release --quiet --lib kernels
+
+echo "==> zero-allocation steady-state train step (counting allocator + scratch-vs-allocating bar)"
+cargo bench --bench bench_fsdp_unit -- --alloc-only
+
 echo "==> sweep orchestrator smoke (skips without artifacts)"
 scripts/sweep_smoke.sh
 
