@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke bench-json
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -32,6 +32,13 @@ serve-smoke:
 # missing.
 dist-smoke:
 	scripts/dist_smoke.sh
+
+# Elastic recovery smoke: 4-rank threaded HSDP run, rank 1 killed at
+# step 3, supervisor rescales to 3 ranks from the latest checkpoint and
+# finishes; asserts the segment journal + final world-3 shards.
+# Artifact-free (seeded synthetic gradients) — never skips.
+chaos-smoke:
+	scripts/chaos_smoke.sh
 
 # Machine-readable steady-state train-step bench: scratch-vs-allocating
 # head-to-head + the zero-allocation assertion (counting allocator),

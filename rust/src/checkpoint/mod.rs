@@ -111,20 +111,37 @@ pub fn save_sharded(
     Ok(out)
 }
 
-/// Load a sharded checkpoint into an existing engine (topology must
-/// match). Returns the step to resume from.
+/// Load a sharded checkpoint into an existing engine. When the engine's
+/// topology (world size *and* shard-group size) matches the manifest,
+/// rank files stream straight into the rank shards. Otherwise the
+/// checkpoint is re-sharded N→M: per-unit flat param/opt-state views are
+/// reassembled from the first shard group's slot files and cut into the
+/// new topology's shards with the same [`even_split`] rule the engine
+/// itself uses — so a rescaled resume is bitwise-identical to a run that
+/// started at world M. Returns the step to resume from.
+///
+/// [`even_split`]: crate::util::even_split
 pub fn load_sharded(ckpt_dir: &Path, engine: &mut FsdpEngine) -> Result<u64> {
     let manifest = read_manifest(ckpt_dir)?;
-    if manifest.world != engine.cfg.world {
-        bail!(
-            "checkpoint world {} != engine world {} (resharding requires consolidate + warm start)",
-            manifest.world,
-            engine.cfg.world
-        );
-    }
     let engine_units: Vec<usize> = engine.units.iter().map(|u| u.elems).collect();
     if manifest.unit_elems != engine_units {
         bail!("checkpoint unit layout differs (unit_size_mb changed?); consolidate + warm start instead");
+    }
+    if manifest.world != engine.cfg.world
+        || manifest.shard_group_size != engine.cfg.shard_group_size()?
+    {
+        let flat = load_flat_state(ckpt_dir)?;
+        restore_from_flat(&flat, engine)
+            .with_context(|| {
+                format!(
+                    "resharding checkpoint (world {} / group {}) into engine (world {} / group {:?})",
+                    manifest.world,
+                    manifest.shard_group_size,
+                    engine.cfg.world,
+                    engine.cfg.shard_group_size()
+                )
+            })?;
+        return Ok(manifest.step);
     }
     for rank in 0..manifest.world {
         let path = ckpt_dir.join(format!("rank_{rank:05}.bin"));
@@ -155,6 +172,122 @@ pub fn load_sharded(ckpt_dir: &Path, engine: &mut FsdpEngine) -> Result<u64> {
         engine.restore_rank_opt_state(rank, opt_states)?;
     }
     Ok(manifest.step)
+}
+
+/// One FSDP unit's topology-independent state: the full flat parameter
+/// vector plus the flat AdamW moment vectors and shared step count,
+/// reassembled from shard slots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatUnitState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+/// A sharded checkpoint lifted to flat per-unit views — the portable
+/// form the elastic supervisor re-shards when the world rescales N→M.
+/// Unlike [`consolidate`], optimizer moments are kept, so a resume from
+/// this view is bitwise-exact, not just a warm start.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatCkptState {
+    pub manifest: CkptManifest,
+    pub units: Vec<FlatUnitState>,
+}
+
+/// Read a sharded checkpoint into flat per-unit param/opt-state views.
+/// Only the first shard group's slot files (`rank_00000..rank_{g-1}`)
+/// are read: under HSDP every replica group holds an identical copy.
+pub fn load_flat_state(ckpt_dir: &Path) -> Result<FlatCkptState> {
+    let manifest = read_manifest(ckpt_dir)?;
+    let g = manifest.shard_group_size;
+    let n_units = manifest.unit_elems.len();
+    // [slot][unit] -> (shard, m, v, t)
+    let mut slots: Vec<Vec<(Vec<f32>, Vec<f32>, Vec<f32>, u64)>> = Vec::with_capacity(g);
+    for slot in 0..g {
+        let path = ckpt_dir.join(format!("rank_{slot:05}.bin"));
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut r = ByteReader::new(&raw);
+        if r.u32()? != RANK_MAGIC {
+            bail!("{}: bad rank-file magic", path.display());
+        }
+        if r.u32()? as usize != slot {
+            bail!("{}: rank id mismatch", path.display());
+        }
+        if r.u32()? as usize != n_units {
+            bail!("{}: unit count mismatch vs manifest", path.display());
+        }
+        let mut units = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let t = r.u64()?;
+            let len = r.u32()? as usize;
+            let shard = r.f32s(len)?;
+            let m = r.f32s(len)?;
+            let v = r.f32s(len)?;
+            units.push((shard, m, v, t));
+        }
+        slots.push(units);
+    }
+
+    let mut units = Vec::with_capacity(n_units);
+    for u in 0..n_units {
+        let elems = manifest.unit_elems[u];
+        let t = slots[0][u].3;
+        let mut unit = FlatUnitState {
+            params: Vec::with_capacity(elems),
+            m: Vec::with_capacity(elems),
+            v: Vec::with_capacity(elems),
+            t,
+        };
+        for (slot, slot_units) in slots.iter().enumerate() {
+            let (shard, m, v, slot_t) = &slot_units[u];
+            if *slot_t != t {
+                bail!(
+                    "unit {u}: optimizer step count diverges across slots ({t} vs {slot_t} at slot {slot})"
+                );
+            }
+            unit.params.extend_from_slice(shard);
+            unit.m.extend_from_slice(m);
+            unit.v.extend_from_slice(v);
+        }
+        if unit.params.len() != elems {
+            bail!("unit {u}: slots reassemble to {} elements, manifest says {elems}", unit.params.len());
+        }
+        units.push(unit);
+    }
+    Ok(FlatCkptState { manifest, units })
+}
+
+/// Cut flat per-unit state into `engine`'s shards. The slice each rank
+/// receives is `even_split(unit.elems, g, rank % g)` — exactly how the
+/// engine builds its own shards — so restored state is bitwise what a
+/// world-M run would hold natively.
+pub fn restore_from_flat(flat: &FlatCkptState, engine: &mut FsdpEngine) -> Result<()> {
+    let engine_units: Vec<usize> = engine.units.iter().map(|u| u.elems).collect();
+    if flat.manifest.unit_elems != engine_units {
+        bail!("flat checkpoint unit layout differs from engine (unit_size_mb changed?)");
+    }
+    let g = engine.cfg.shard_group_size()?;
+    for rank in 0..engine.cfg.world {
+        let slot = rank % g;
+        let mut shards = Vec::with_capacity(flat.units.len());
+        let mut opt_states = Vec::with_capacity(flat.units.len());
+        for unit in &flat.units {
+            let (start, len) = crate::util::even_split(unit.params.len(), g, slot);
+            shards.push(unit.params[start..start + len].to_vec());
+            opt_states.push((
+                unit.m[start..start + len].to_vec(),
+                unit.v[start..start + len].to_vec(),
+                unit.t,
+            ));
+        }
+        engine
+            .restore_rank_shards(rank, shards)
+            .with_context(|| format!("resharding into rank {rank}"))?;
+        engine.restore_rank_opt_state(rank, opt_states)?;
+    }
+    Ok(())
 }
 
 pub fn read_manifest(ckpt_dir: &Path) -> Result<CkptManifest> {
@@ -474,26 +607,94 @@ mod tests {
         assert_eq!(o1.flatten(), o2.flatten());
     }
 
+    /// Satellite: N→M re-shard round-trips over the full world grid.
+    /// Save at world N, load at world M, re-save, lift both checkpoints
+    /// to flat per-unit views — params, moments, and step counts must be
+    /// bitwise-identical to the N-world originals for every (N, M).
     #[test]
-    fn world_mismatch_rejected() {
+    fn reshard_round_trips_all_worlds() {
+        let a = arts();
+        let worlds = [1usize, 2, 4, 8];
+        for &n in &worlds {
+            let params = ParamStore::init(&a, InitScheme::ScaledNormal, 3);
+            let cfg_n = FsdpConfig { world: n, unit_bytes: 256, ..Default::default() };
+            let mut eng_n = FsdpEngine::new(&params, cfg_n, &opt()).unwrap();
+            let g: Vec<Vec<Vec<f32>>> = (0..n).map(|r| grads(&params, 40 + r as u64)).collect();
+            eng_n.apply_grads(&g, 1.0, None).unwrap();
+            let dir = tmpdir(&format!("reshard-{n}"));
+            let ckpt = save_sharded(&dir, 5, &eng_n, &params, "t", "fp").unwrap();
+            let truth = load_flat_state(&ckpt).unwrap();
+            for &m in &worlds {
+                let cfg_m = FsdpConfig { world: m, unit_bytes: 256, ..Default::default() };
+                let mut eng_m = FsdpEngine::new(&params, cfg_m, &opt()).unwrap();
+                assert_eq!(load_sharded(&ckpt, &mut eng_m).unwrap(), 5, "world {n} -> {m}");
+                let dir_m = tmpdir(&format!("reshard-{n}-to-{m}"));
+                let ckpt_m = save_sharded(&dir_m, 5, &eng_m, &params, "t", "fp").unwrap();
+                let back = load_flat_state(&ckpt_m).unwrap();
+                assert_eq!(back.units, truth.units, "world {n} -> {m}");
+            }
+        }
+    }
+
+    /// An HSDP checkpoint re-shards onto a different strategy at a
+    /// different (non-divisible) world, reconstructs the exact params,
+    /// and keeps training.
+    #[test]
+    fn reshard_across_strategies() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 6);
+        let cfg4 = FsdpConfig {
+            world: 4,
+            unit_bytes: 256,
+            strategy: ShardStrategy::Hybrid { shard_size: 2 },
+            ..Default::default()
+        };
+        let mut eng4 = FsdpEngine::new(&params, cfg4, &opt()).unwrap();
+        let g: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, r as u64)).collect();
+        eng4.apply_grads(&g, 1.0, None).unwrap();
+        let mut truth = params.clone();
+        eng4.unshard_into(&mut truth).unwrap();
+
+        let dir = tmpdir("reshard-hsdp");
+        let ckpt = save_sharded(&dir, 2, &eng4, &params, "t", "fp").unwrap();
+        let mut eng3 = FsdpEngine::new(
+            &params,
+            FsdpConfig { world: 3, unit_bytes: 256, ..Default::default() },
+            &opt(),
+        )
+        .unwrap();
+        assert_eq!(load_sharded(&ckpt, &mut eng3).unwrap(), 2);
+        let mut got = params.clone();
+        eng3.unshard_into(&mut got).unwrap();
+        assert_eq!(got.flatten(), truth.flatten());
+
+        // Training continues at the new world.
+        let g3: Vec<Vec<Vec<f32>>> = (0..3).map(|r| grads(&params, 90 + r as u64)).collect();
+        eng3.apply_grads(&g3, 1.0, None).unwrap();
+    }
+
+    /// Re-sharding requires the same unit layout; a changed unit size
+    /// is still rejected with a pointer at the consolidate path.
+    #[test]
+    fn unit_layout_mismatch_rejected() {
         let a = arts();
         let params = ParamStore::init(&a, InitScheme::ScaledNormal, 2);
-        let eng3 = FsdpEngine::new(
+        let eng = FsdpEngine::new(
             &params,
-            FsdpConfig { world: 3, ..Default::default() },
+            FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() },
             &opt(),
         )
         .unwrap();
-        let dir = tmpdir("mismatch");
-        let ckpt = save_sharded(&dir, 1, &eng3, &params, "t", "fp").unwrap();
-        let mut eng2 = FsdpEngine::new(
+        let dir = tmpdir("layout-mismatch");
+        let ckpt = save_sharded(&dir, 1, &eng, &params, "t", "fp").unwrap();
+        let mut other = FsdpEngine::new(
             &params,
-            FsdpConfig { world: 2, ..Default::default() },
+            FsdpConfig { world: 2, unit_bytes: 1 << 20, ..Default::default() },
             &opt(),
         )
         .unwrap();
-        let e = load_sharded(&ckpt, &mut eng2).err().map(|e| e.to_string()).unwrap();
-        assert!(e.contains("world"), "{e}");
+        let e = load_sharded(&ckpt, &mut other).err().map(|e| e.to_string()).unwrap();
+        assert!(e.contains("unit layout"), "{e}");
     }
 
     #[test]

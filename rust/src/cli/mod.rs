@@ -25,7 +25,7 @@ const VALUE_KEYS: &[&str] = &[
     "config", "out", "from", "to", "corpus", "vocab", "workers", "docs", "model", "steps",
     "world", "prompt", "ckpt", "run-dir", "seq-len", "batch-docs", "merges", "seed",
     "mean-words", "unit-mb", "jobs", "filter", "report", "max-new", "temperature", "top-k",
-    "top-p", "requests", "batches",
+    "top-p", "requests", "batches", "max-restarts",
 ];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -90,6 +90,7 @@ pub fn usage() -> &'static str {
 
 USAGE:
   modalities train      --config <yaml> [--set path=value ...] [--resume]
+                        [--elastic] [--max-restarts <n>]  # rank-loss recovery supervisor
   modalities sweep      --config <yaml> [--filter <substr>]   # plan: list expanded points
   modalities sweep run    --config <yaml> [--jobs <n>] [--filter <substr>] [--set ...]
   modalities sweep resume --config <yaml> [--jobs <n>]  # finish unfinished points only
@@ -188,6 +189,13 @@ mod tests {
         assert!(e.has_flag("synthetic"));
         let v = p(&["eval", "--config", "c.yaml", "--batches", "4"]);
         assert_eq!(v.opt_usize("batches", 8).unwrap(), 4);
+    }
+
+    #[test]
+    fn elastic_train_options_parse() {
+        let a = p(&["train", "--config", "c.yaml", "--elastic", "--max-restarts", "3"]);
+        assert!(a.has_flag("elastic"));
+        assert_eq!(a.opt_usize("max-restarts", 2).unwrap(), 3);
     }
 
     #[test]

@@ -279,6 +279,71 @@ impl ProcessGroup for Box<dyn ProcessGroup> {
     }
 }
 
+/// Structured rank-death signal: the typed root cause behind every
+/// "rank N died during …" collective failure. `CommCore::check_dead`
+/// raises it as the error value itself (its `Display` is exactly the
+/// historical message, so string-matching callers keep working), which
+/// lets supervisors `downcast_ref::<RankLossEvent>()` through an
+/// `anyhow` chain instead of parsing error text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankLossEvent {
+    /// The global rank that died (panicked, aborted, or dropped its
+    /// handle).
+    pub rank: usize,
+    /// The collective the survivors were blocked in ("panic" when the
+    /// event was recovered from a panic message rather than a
+    /// collective failure).
+    pub op: String,
+    /// The group the failed collective ran over (empty when unknown).
+    pub group: Vec<usize>,
+}
+
+impl std::fmt::Display for RankLossEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} died during {} over group {:?}", self.rank, self.op, self.group)
+    }
+}
+
+impl std::error::Error for RankLossEvent {}
+
+impl RankLossEvent {
+    /// Extract the structured event from an error chain: a typed
+    /// downcast when the error originated in `check_dead`, else a
+    /// parse of the canonical death/panic message shapes (the panic
+    /// path crosses a thread join, which erases the error type).
+    pub fn classify(err: &anyhow::Error) -> Option<RankLossEvent> {
+        if let Some(ev) = err.downcast_ref::<RankLossEvent>() {
+            return Some(ev.clone());
+        }
+        Self::parse(&format!("{err:#}"))
+    }
+
+    /// Parse "rank {r} died during {op} …" / "rank {r} panicked …"
+    /// out of a rendered error message.
+    fn parse(msg: &str) -> Option<RankLossEvent> {
+        let mut from = 0usize;
+        while let Some(p) = msg[from..].find("rank ") {
+            let digits_at = from + p + "rank ".len();
+            let rest = &msg[digits_at..];
+            let n_digits = rest.chars().take_while(|c| c.is_ascii_digit()).count();
+            from = digits_at;
+            if n_digits == 0 {
+                continue;
+            }
+            let Ok(rank) = rest[..n_digits].parse::<usize>() else { continue };
+            let tail = &rest[n_digits..];
+            if let Some(t) = tail.strip_prefix(" died during ") {
+                let op = t.split(" over group").next().unwrap_or("").trim().to_string();
+                return Some(RankLossEvent { rank, op, group: Vec::new() });
+            }
+            if tail.starts_with(" panicked") {
+                return Some(RankLossEvent { rank, op: "panic".into(), group: Vec::new() });
+            }
+        }
+        None
+    }
+}
+
 /// Per-member ring traffic for one reduce-scatter *or* all-gather
 /// phase: `(n-1) * ceil(len/n)` elements, 4 bytes each. Summed over the
 /// `n` members this is exactly the group-level
@@ -511,7 +576,11 @@ impl CommCore {
                     .map(|c| c.deposits[i].is_some())
                     .unwrap_or(false);
                 if !deposited {
-                    bail!("rank {g} died during {op} over group {group:?}");
+                    return Err(anyhow::Error::new(RankLossEvent {
+                        rank: g,
+                        op: op.to_string(),
+                        group: group.to_vec(),
+                    }));
                 }
             }
         }
@@ -1479,6 +1548,42 @@ mod tests {
         assert!(pg.barrier(&[1]).is_err()); // not a member
         assert!(pg.barrier(&[0, 5]).is_err()); // out of range
         assert!(pg.all_reduce_scalar(1.0, &[1, 0]).is_err()); // not ascending
+    }
+
+    /// Death errors carry the structured [`RankLossEvent`] as the error
+    /// value: supervisors downcast instead of string-matching, and the
+    /// Display keeps the historical "rank N died during …" shape.
+    #[test]
+    fn dead_peer_error_is_typed() {
+        let mut handles = ThreadedComm::new(2, Duration::from_secs(30));
+        let h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        let j = thread::spawn(move || h0.barrier(&[0, 1]));
+        drop(h1);
+        let err = j.join().unwrap().unwrap_err();
+        let ev = RankLossEvent::classify(&err).expect("typed rank-loss event");
+        assert_eq!(ev.rank, 1);
+        assert_eq!(ev.op, "barrier");
+        assert_eq!(ev.group, vec![0, 1]);
+        assert!(format!("{err:#}").contains("rank 1 died during barrier"));
+        // The event survives anyhow context wrapping (the FsdpEngine
+        // root-cause path adds one).
+        let wrapped = err.context("rank 0 failed (collective backend aborted)");
+        assert_eq!(RankLossEvent::classify(&wrapped).unwrap().rank, 1);
+    }
+
+    /// The string-parse fallback recovers events whose type was erased
+    /// (panic payloads crossing a thread join).
+    #[test]
+    fn rank_loss_parses_message_shapes() {
+        let e = anyhow::anyhow!("rank 3 panicked: boom");
+        let ev = RankLossEvent::classify(&e).unwrap();
+        assert_eq!((ev.rank, ev.op.as_str()), (3, "panic"));
+        let e = anyhow::anyhow!("outer: rank 12 died during all_reduce.rs over group [0, 12]");
+        let ev = RankLossEvent::classify(&e).unwrap();
+        assert_eq!((ev.rank, ev.op.as_str()), (12, "all_reduce.rs"));
+        assert!(RankLossEvent::classify(&anyhow::anyhow!("rank x wedged")).is_none());
+        assert!(RankLossEvent::classify(&anyhow::anyhow!("plain failure")).is_none());
     }
 
     #[test]

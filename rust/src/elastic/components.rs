@@ -1,0 +1,57 @@
+//! Registry factory for the elastic supervisor policy.
+
+use super::ElasticSpec;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("elastic", "supervisor", |ctx, cfg| {
+        let spec = ElasticSpec {
+            max_restarts: ctx.usize_or(cfg, "max_restarts", 2)? as u64,
+            min_world: ctx.usize_or(cfg, "min_world", 1)?.max(1),
+            world_schedule: Vec::new(),
+        };
+        Ok(Component::new("elastic", "supervisor", spec))
+    })?;
+    reg.describe(
+        "elastic",
+        "supervisor",
+        "Rank-loss recovery: on rank death or rendezvous timeout, rescale the \
+         world from the latest checkpoint (N→M re-shard) and resume.",
+        &[
+            ("max_restarts", "int", "2", "restart budget before the failure is surfaced"),
+            ("min_world", "int", "1", "smallest world size a rescale may reach"),
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn supervisor_spec_from_config() {
+        let src = "\
+components:
+  e:
+    component_key: elastic
+    variant_key: supervisor
+    config: {max_restarts: 5, min_world: 2}
+  e_default:
+    component_key: elastic
+    variant_key: supervisor
+    config: {}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let e = g.get::<super::ElasticSpec>("e").unwrap();
+        assert_eq!(e.max_restarts, 5);
+        assert_eq!(e.min_world, 2);
+        let d = g.get::<super::ElasticSpec>("e_default").unwrap();
+        assert_eq!(d.max_restarts, 2);
+        assert_eq!(d.min_world, 1);
+    }
+}

@@ -1,0 +1,580 @@
+//! Elastic rank-loss recovery: the supervisor that turns PR 4's "a
+//! dead rank yields a clean error" into "the job finishes anyway".
+//!
+//! A training run becomes a sequence of **segments**, each executed at
+//! a fixed world size. When a segment dies of a recoverable failure —
+//! a rank death ([`RankLossEvent`]) or a rendezvous timeout — the
+//! supervisor journals the failure, picks a new (never larger) world
+//! size M, adapts the sharding strategy if M no longer divides into
+//! the old shard groups, and re-runs from the latest checkpoint, which
+//! [`crate::checkpoint::load_sharded`] re-shards N→M on load. Because
+//! the re-shard cuts shards with the exact `even_split` rule a native
+//! world-M engine uses, and the collective fold order is fixed, the
+//! rescaled resume is **bitwise identical** to an uninterrupted
+//! world-M run started from the same checkpoint (proven by
+//! `rust/tests/elastic_recovery.rs`).
+//!
+//! Segment boundaries are journaled to `run_dir/elastic/segments.json`
+//! with the same atomic tmp+rename discipline as the ablation store,
+//! so a supervisor that itself crashes leaves an auditable record of
+//! every incarnation.
+
+pub mod components;
+
+use crate::dist::process_group::RankLossEvent;
+use crate::fsdp::ShardStrategy;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Supervisor policy knobs (the `elastic` config component).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ElasticSpec {
+    /// Restart budget: how many rescales may happen before the failure
+    /// is surfaced to the caller.
+    pub max_restarts: u64,
+    /// Smallest world the supervisor may rescale down to.
+    pub min_world: usize,
+    /// Explicit rescale schedule: entry `i` is the world size after the
+    /// `i`-th restart. Empty → shrink by one rank per restart.
+    pub world_schedule: Vec<usize>,
+}
+
+impl Default for ElasticSpec {
+    fn default() -> Self {
+        Self { max_restarts: 2, min_world: 1, world_schedule: Vec::new() }
+    }
+}
+
+/// Why a segment died — drives the restart / surface decision.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A peer died mid-collective (panic, abort, dropped handle).
+    RankLoss(RankLossEvent),
+    /// A collective rendezvous timed out (wedged or missing peer).
+    Timeout,
+    /// Anything else — deterministic errors (bad config, corrupt data)
+    /// would just fail again, so they are not retried.
+    Other,
+}
+
+impl FailureKind {
+    pub fn recoverable(&self) -> bool {
+        !matches!(self, FailureKind::Other)
+    }
+}
+
+/// Classify a segment error: typed [`RankLossEvent`] (directly or
+/// through an anyhow context chain), then the timeout message shape,
+/// else unrecoverable.
+pub fn classify_failure(err: &anyhow::Error) -> FailureKind {
+    if let Some(ev) = RankLossEvent::classify(err) {
+        return FailureKind::RankLoss(ev);
+    }
+    if format!("{err:#}").contains("timed out after") {
+        return FailureKind::Timeout;
+    }
+    FailureKind::Other
+}
+
+/// Keep the strategy where it still fits the new world; an HSDP group
+/// size that no longer divides the world degrades to full sharding
+/// (the only strategy valid at every world size).
+pub fn adapt_strategy(strategy: ShardStrategy, world: usize) -> ShardStrategy {
+    match strategy {
+        ShardStrategy::Hybrid { shard_size } if shard_size == 0 || world % shard_size != 0 => {
+            ShardStrategy::Full
+        }
+        other => other,
+    }
+}
+
+/// Lifecycle state of one segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentStatus {
+    Running,
+    Complete,
+    Failed,
+}
+
+impl SegmentStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SegmentStatus::Running => "running",
+            SegmentStatus::Complete => "complete",
+            SegmentStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SegmentStatus> {
+        Ok(match s {
+            "running" => SegmentStatus::Running,
+            "complete" => SegmentStatus::Complete,
+            "failed" => SegmentStatus::Failed,
+            other => bail!("unknown segment status '{other}' in journal"),
+        })
+    }
+}
+
+/// One journaled segment: a contiguous stretch of steps executed at a
+/// fixed world size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentRecord {
+    pub index: u64,
+    pub world: usize,
+    pub start_step: u64,
+    /// Last step reached (exclusive); `None` while running or if the
+    /// segment died before reporting progress.
+    pub end_step: Option<u64>,
+    pub status: SegmentStatus,
+    /// Failure cause for `failed` segments.
+    pub cause: Option<String>,
+}
+
+impl SegmentRecord {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("index", (self.index as i64).into()),
+            ("world", self.world.into()),
+            ("start_step", (self.start_step as i64).into()),
+            (
+                "end_step",
+                match self.end_step {
+                    Some(s) => (s as i64).into(),
+                    None => Json::Null,
+                },
+            ),
+            ("status", self.status.as_str().into()),
+            (
+                "cause",
+                match &self.cause {
+                    Some(c) => c.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SegmentRecord> {
+        let usize_field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|n| n.as_usize())
+                .with_context(|| format!("segment journal missing field '{k}'"))
+        };
+        Ok(SegmentRecord {
+            index: usize_field("index")? as u64,
+            world: usize_field("world")?,
+            start_step: usize_field("start_step")? as u64,
+            end_step: v.get("end_step").and_then(|n| n.as_i64()).map(|s| s as u64),
+            status: SegmentStatus::parse(
+                v.get("status")
+                    .and_then(|s| s.as_str())
+                    .context("segment journal missing 'status'")?,
+            )?,
+            cause: v.get("cause").and_then(|c| c.as_str()).map(String::from),
+        })
+    }
+}
+
+/// The atomic segment journal at `run_dir/elastic/segments.json`
+/// (tmp-then-rename, like the ablation store: a crash can never leave
+/// a torn journal behind; a leftover tmp is ignored on load).
+pub struct SegmentJournal {
+    dir: PathBuf,
+    records: Vec<SegmentRecord>,
+}
+
+impl SegmentJournal {
+    /// Open (creating if needed) the journal under `run_dir`, loading
+    /// any records a previous supervisor incarnation left behind.
+    pub fn open(run_dir: &Path) -> Result<SegmentJournal> {
+        let dir = run_dir.join("elastic");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating segment journal dir {}", dir.display()))?;
+        let path = dir.join("segments.json");
+        let mut records = Vec::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+            for r in v
+                .get("segments")
+                .and_then(|a| a.as_arr())
+                .context("segment journal missing 'segments' array")?
+            {
+                records.push(SegmentRecord::from_json(r)?);
+            }
+        }
+        Ok(SegmentJournal { dir, records })
+    }
+
+    pub fn path(&self) -> PathBuf {
+        self.dir.join("segments.json")
+    }
+
+    pub fn records(&self) -> &[SegmentRecord] {
+        &self.records
+    }
+
+    /// Journal the start of a new segment; returns its index.
+    pub fn begin(&mut self, world: usize, start_step: u64) -> Result<u64> {
+        let index = self.records.len() as u64;
+        self.records.push(SegmentRecord {
+            index,
+            world,
+            start_step,
+            end_step: None,
+            status: SegmentStatus::Running,
+            cause: None,
+        });
+        self.persist()?;
+        Ok(index)
+    }
+
+    /// Journal successful completion of segment `index`.
+    pub fn complete(&mut self, index: u64, end_step: u64) -> Result<()> {
+        let r = self.record_mut(index)?;
+        r.status = SegmentStatus::Complete;
+        r.end_step = Some(end_step);
+        r.cause = None;
+        self.persist()
+    }
+
+    /// Journal failure of segment `index`.
+    pub fn fail(&mut self, index: u64, cause: &str) -> Result<()> {
+        let r = self.record_mut(index)?;
+        r.status = SegmentStatus::Failed;
+        r.cause = Some(cause.to_string());
+        self.persist()
+    }
+
+    fn record_mut(&mut self, index: u64) -> Result<&mut SegmentRecord> {
+        self.records
+            .get_mut(index as usize)
+            .with_context(|| format!("segment {index} not in journal"))
+    }
+
+    fn persist(&self) -> Result<()> {
+        let body = Json::from_pairs(vec![
+            ("version", 1usize.into()),
+            ("segments", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ]);
+        let tmp = self.dir.join("segments.json.tmp");
+        std::fs::write(&tmp, body.dumps_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path())
+            .with_context(|| format!("committing segment journal in {}", self.dir.display()))?;
+        Ok(())
+    }
+}
+
+/// What the supervisor asks a segment runner to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegmentPlan {
+    pub index: u64,
+    pub world: usize,
+    pub strategy: ShardStrategy,
+    pub start_step: u64,
+}
+
+/// Outcome of a completed elastic run.
+#[derive(Clone, Debug)]
+pub struct ElasticSummary {
+    pub segments: Vec<SegmentRecord>,
+    pub restarts: u64,
+    pub final_world: usize,
+}
+
+/// The kill/rescale/resume driver. Owns only the restart policy and
+/// the journal; actually executing a segment (building engines,
+/// loading checkpoints, training) is the caller's closure, so the
+/// supervisor is reusable across the gym, the chaos tests and the
+/// smoke script.
+pub struct Supervisor {
+    spec: ElasticSpec,
+    journal: SegmentJournal,
+}
+
+impl Supervisor {
+    pub fn new(spec: ElasticSpec, run_dir: &Path) -> Result<Supervisor> {
+        Ok(Supervisor { spec, journal: SegmentJournal::open(run_dir)? })
+    }
+
+    pub fn journal(&self) -> &SegmentJournal {
+        &self.journal
+    }
+
+    /// Run segments until one completes or the failure is not worth
+    /// retrying. `resume_step` reports where the next segment should
+    /// start (the latest checkpoint's step; 0 before any checkpoint);
+    /// `run_segment` executes one segment and returns the step it
+    /// finished at.
+    pub fn run(
+        &mut self,
+        initial_world: usize,
+        initial_strategy: ShardStrategy,
+        mut resume_step: impl FnMut() -> u64,
+        mut run_segment: impl FnMut(&SegmentPlan) -> Result<u64>,
+    ) -> Result<ElasticSummary> {
+        if initial_world == 0 {
+            bail!("elastic run needs world >= 1");
+        }
+        let mut world = initial_world;
+        let mut strategy = adapt_strategy(initial_strategy, world);
+        let mut restarts = 0u64;
+        loop {
+            let start_step = resume_step();
+            let index = self.journal.begin(world, start_step)?;
+            let plan = SegmentPlan { index, world, strategy, start_step };
+            match run_segment(&plan) {
+                Ok(end_step) => {
+                    self.journal.complete(index, end_step)?;
+                    return Ok(ElasticSummary {
+                        segments: self.journal.records().to_vec(),
+                        restarts,
+                        final_world: world,
+                    });
+                }
+                Err(err) => {
+                    let kind = classify_failure(&err);
+                    self.journal.fail(index, &format!("{err:#}"))?;
+                    if !kind.recoverable() {
+                        return Err(err.context(format!(
+                            "segment {index} (world {world}) failed with an unrecoverable error"
+                        )));
+                    }
+                    if restarts >= self.spec.max_restarts {
+                        return Err(err.context(format!(
+                            "segment {index} (world {world}) failed after exhausting {} restarts",
+                            self.spec.max_restarts
+                        )));
+                    }
+                    let next = self.next_world(world, restarts).map_err(|e| {
+                        e.context(format!("segment {index} (world {world}) failed ({kind:?})"))
+                    })?;
+                    log::warn!(
+                        "segment {index} died ({kind:?}); rescaling world {world} -> {next} \
+                         and resuming from the latest checkpoint"
+                    );
+                    restarts += 1;
+                    world = next;
+                    strategy = adapt_strategy(strategy, world);
+                }
+            }
+        }
+    }
+
+    /// World size for the next segment after the `restarts`-th failure:
+    /// the scheduled size if one is configured, else one rank fewer.
+    /// Rescales never grow (dead ranks don't come back) and never go
+    /// below `min_world`.
+    fn next_world(&self, world: usize, restarts: u64) -> Result<usize> {
+        let next = self
+            .spec
+            .world_schedule
+            .get(restarts as usize)
+            .copied()
+            .unwrap_or_else(|| world.saturating_sub(1));
+        if next == 0 || next < self.spec.min_world {
+            bail!(
+                "cannot rescale below min_world {} (next world would be {next})",
+                self.spec.min_world.max(1)
+            );
+        }
+        if next > world {
+            bail!("elastic rescale cannot grow the world ({world} -> {next})");
+        }
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::process_group::RankLossEvent;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modalities-elastic-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rank_loss(rank: usize) -> anyhow::Error {
+        anyhow::Error::new(RankLossEvent {
+            rank,
+            op: "all_gather".into(),
+            group: vec![0, 1, 2, 3],
+        })
+        .context("rank 0 failed (collective backend aborted)")
+    }
+
+    #[test]
+    fn classify_covers_the_failure_taxonomy() {
+        assert!(matches!(classify_failure(&rank_loss(2)), FailureKind::RankLoss(ev) if ev.rank == 2));
+        let timeout = anyhow::anyhow!(
+            "all_gather over group [0, 1] timed out after 30s (peer wedged or missing)"
+        );
+        assert_eq!(classify_failure(&timeout), FailureKind::Timeout);
+        assert!(classify_failure(&timeout).recoverable());
+        let other = anyhow::anyhow!("config: unknown key 'foo'");
+        assert_eq!(classify_failure(&other), FailureKind::Other);
+        assert!(!classify_failure(&other).recoverable());
+    }
+
+    #[test]
+    fn adapt_strategy_degrades_only_when_needed() {
+        use ShardStrategy::*;
+        assert_eq!(adapt_strategy(Full, 3), Full);
+        assert_eq!(adapt_strategy(Ddp, 3), Ddp);
+        assert_eq!(adapt_strategy(Hybrid { shard_size: 2 }, 4), Hybrid { shard_size: 2 });
+        assert_eq!(adapt_strategy(Hybrid { shard_size: 2 }, 3), Full);
+        assert_eq!(adapt_strategy(Hybrid { shard_size: 4 }, 2), Full);
+    }
+
+    #[test]
+    fn journal_roundtrip_and_atomicity() {
+        let d = tmp("journal");
+        let mut j = SegmentJournal::open(&d).unwrap();
+        let i0 = j.begin(4, 0).unwrap();
+        j.fail(i0, "rank 2 died during all_gather").unwrap();
+        let i1 = j.begin(3, 5).unwrap();
+        j.complete(i1, 10).unwrap();
+        assert!(!j.dir.join("segments.json.tmp").exists());
+
+        // Reopen: everything survives.
+        let j2 = SegmentJournal::open(&d).unwrap();
+        let r = j2.records();
+        assert_eq!(r.len(), 2);
+        assert_eq!((r[0].world, r[0].status), (4, SegmentStatus::Failed));
+        assert!(r[0].cause.as_deref().unwrap().contains("died during"));
+        assert_eq!((r[1].world, r[1].start_step, r[1].end_step), (3, 5, Some(10)));
+        assert_eq!(r[1].status, SegmentStatus::Complete);
+
+        // A torn tmp from a crashed writer is ignored.
+        std::fs::write(d.join("elastic").join("segments.json.tmp"), "{garbage").unwrap();
+        assert_eq!(SegmentJournal::open(&d).unwrap().records().len(), 2);
+    }
+
+    #[test]
+    fn supervisor_completes_first_try() {
+        let d = tmp("first-try");
+        let mut sup = Supervisor::new(ElasticSpec::default(), &d).unwrap();
+        let summary = sup
+            .run(4, ShardStrategy::Full, || 0, |plan| {
+                assert_eq!((plan.index, plan.world, plan.start_step), (0, 4, 0));
+                Ok(10)
+            })
+            .unwrap();
+        assert_eq!(summary.restarts, 0);
+        assert_eq!(summary.final_world, 4);
+        assert_eq!(summary.segments.len(), 1);
+        assert_eq!(summary.segments[0].status, SegmentStatus::Complete);
+    }
+
+    #[test]
+    fn supervisor_rescales_on_rank_loss_and_adapts_strategy() {
+        let d = tmp("rescale");
+        let mut sup = Supervisor::new(ElasticSpec::default(), &d).unwrap();
+        let mut seen = Vec::new();
+        let mut ckpt_step = 0u64;
+        let summary = sup
+            .run(
+                4,
+                ShardStrategy::Hybrid { shard_size: 2 },
+                || ckpt_step,
+                |plan| {
+                    seen.push(*plan);
+                    if plan.index == 0 {
+                        ckpt_step = 3; // "checkpoint written before the death"
+                        Err(rank_loss(1))
+                    } else {
+                        Ok(10)
+                    }
+                },
+            )
+            .unwrap();
+        assert_eq!(summary.restarts, 1);
+        assert_eq!(summary.final_world, 3);
+        // Segment 0: world 4 HSDP from step 0. Segment 1: world 3,
+        // HSDP(2) no longer divides → Full, resumed at the checkpoint.
+        assert_eq!(seen[0].strategy, ShardStrategy::Hybrid { shard_size: 2 });
+        assert_eq!((seen[1].world, seen[1].start_step), (3, 3));
+        assert_eq!(seen[1].strategy, ShardStrategy::Full);
+        assert_eq!(summary.segments[0].status, SegmentStatus::Failed);
+        assert_eq!(summary.segments[1].status, SegmentStatus::Complete);
+    }
+
+    #[test]
+    fn supervisor_follows_world_schedule() {
+        let d = tmp("schedule");
+        let spec = ElasticSpec { world_schedule: vec![2], ..Default::default() };
+        let mut sup = Supervisor::new(spec, &d).unwrap();
+        let mut worlds = Vec::new();
+        let summary = sup
+            .run(8, ShardStrategy::Full, || 0, |plan| {
+                worlds.push(plan.world);
+                if plan.index == 0 { Err(rank_loss(7)) } else { Ok(5) }
+            })
+            .unwrap();
+        assert_eq!(worlds, vec![8, 2]);
+        assert_eq!(summary.final_world, 2);
+    }
+
+    #[test]
+    fn unrecoverable_errors_do_not_restart() {
+        let d = tmp("unrecoverable");
+        let mut sup = Supervisor::new(ElasticSpec::default(), &d).unwrap();
+        let mut calls = 0u64;
+        let err = sup
+            .run(4, ShardStrategy::Full, || 0, |_| {
+                calls += 1;
+                Err(anyhow::anyhow!("non-finite loss 3.4 at step 2 rank 0"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 1, "deterministic failures must not be retried");
+        assert!(format!("{err:#}").contains("unrecoverable"));
+        assert_eq!(sup.journal().records()[0].status, SegmentStatus::Failed);
+    }
+
+    #[test]
+    fn restart_budget_and_min_world_are_enforced() {
+        // Budget: 2 restarts allowed → 3 attempts, then surfaced.
+        let d = tmp("budget");
+        let mut sup =
+            Supervisor::new(ElasticSpec { max_restarts: 2, ..Default::default() }, &d).unwrap();
+        let mut calls = 0u64;
+        let err = sup
+            .run(8, ShardStrategy::Full, || 0, |_| {
+                calls += 1;
+                Err(rank_loss(0))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 3);
+        assert!(format!("{err:#}").contains("exhausting 2 restarts"));
+
+        // Floor: world 2 with min_world 2 cannot shrink.
+        let d = tmp("floor");
+        let mut sup = Supervisor::new(
+            ElasticSpec { max_restarts: 5, min_world: 2, ..Default::default() },
+            &d,
+        )
+        .unwrap();
+        let err = sup
+            .run(2, ShardStrategy::Full, || 0, |_| Err(rank_loss(1)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("below min_world"), "{err:#}");
+
+        // Growth is refused even if scheduled.
+        let d = tmp("growth");
+        let mut sup = Supervisor::new(
+            ElasticSpec { world_schedule: vec![9], ..Default::default() },
+            &d,
+        )
+        .unwrap();
+        let err = sup
+            .run(4, ShardStrategy::Full, || 0, |_| Err(rank_loss(1)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cannot grow"), "{err:#}");
+    }
+}

@@ -630,6 +630,16 @@ impl FsdpEngine {
         self.ranks[rank].stats()
     }
 
+    /// Chaos injection: mark `rank` dead on the communicator, exactly as
+    /// if its thread vanished mid-collective. Peers blocked on (or next
+    /// entering) a collective that includes it fail with a
+    /// [`RankLossEvent`](crate::dist::process_group::RankLossEvent);
+    /// the per-step full-group scalar round guarantees every surviving
+    /// rank observes the death within one step.
+    pub fn kill_rank(&mut self, rank: usize) {
+        self.ranks[rank].abort();
+    }
+
     /// Drive `f(rank, engine)` on one OS thread per rank and collect
     /// the results in rank order. A rank that errors or panics aborts
     /// its process group (waking blocked peers) and the root-cause

@@ -328,6 +328,7 @@ impl ObjectGraph {
             config_fingerprint: self.config.fingerprint_hex(),
             config_yaml: self.config.to_yaml(),
             resume: seed.resume,
+            segment_index: None,
         };
         Gym::new(spec).with_standard_subscribers(console)
     }

@@ -67,6 +67,11 @@ pub struct GymSpec {
     pub config_fingerprint: String,
     pub config_yaml: String,
     pub resume: bool,
+    /// Set by the elastic supervisor: this run is segment N of an
+    /// elastic job. The gym emits a segment marker into the metrics
+    /// ledger once the resume step is known, making the world size a
+    /// per-segment property of the run.
+    pub segment_index: Option<u64>,
 }
 
 /// One (step, metric) curve point.
@@ -158,12 +163,23 @@ impl Gym {
             spec.parallel.backend,
         )?;
 
-        // Resume from the latest sharded checkpoint in run_dir.
+        // Resume from the latest sharded checkpoint in run_dir. When
+        // the checkpoint was written at a different world size (an
+        // elastic rescale), load_sharded re-shards it N→M on the fly.
         let mut start_step = 0u64;
         if spec.resume {
             if let Some(ckpt) = checkpoint::latest_checkpoint(&spec.run_dir) {
                 start_step = checkpoint::load_sharded(&ckpt, &mut fsdp)?;
                 log::info!("resumed from {} at step {start_step}", ckpt.display());
+            }
+        }
+
+        // Elastic segment boundary: journal it into the ledger now that
+        // the resume step is known.
+        if let Some(index) = spec.segment_index {
+            let marker = subscribers::SegmentMarker { index, world, start_step };
+            for s in &mut self.subscribers {
+                s.on_segment(&marker);
             }
         }
 

@@ -20,10 +20,21 @@ pub struct StepRecord {
     pub comm_bytes_step: u64,
 }
 
+/// Boundary of one elastic segment: emitted when a supervisor-driven
+/// run (re)starts, so the metrics ledger records the world size as a
+/// per-segment property of the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegmentMarker {
+    pub index: u64,
+    pub world: usize,
+    pub start_step: u64,
+}
+
 /// Metrics sink interface.
 pub trait Subscriber: Send {
     fn on_step(&mut self, rec: &StepRecord);
     fn on_eval(&mut self, _step: u64, _loss: f32) {}
+    fn on_segment(&mut self, _seg: &SegmentMarker) {}
     fn on_end(&mut self, _summary: &super::RunSummary, _comm: &CommStats) {}
 }
 
@@ -58,6 +69,13 @@ impl Subscriber for ConsoleSubscriber {
         // Perplexity = exp(mean loss): same unit `modalities eval`
         // reports, so training-time and standalone eval are comparable.
         println!("step {step:>6}  [eval] loss {loss:.4}  ppl {:.2}", (loss as f64).exp());
+    }
+
+    fn on_segment(&mut self, m: &SegmentMarker) {
+        println!(
+            "segment {:>3}  world {}  starting at step {}",
+            m.index, m.world, m.start_step
+        );
     }
 
     fn on_end(&mut self, s: &super::RunSummary, comm: &CommStats) {
@@ -125,6 +143,19 @@ impl Subscriber for JsonlSubscriber {
         let _ = writeln!(self.out, "{}", rec.dumps());
     }
 
+    fn on_segment(&mut self, m: &SegmentMarker) {
+        let rec = Json::from_pairs(vec![
+            ("kind", "segment".into()),
+            ("segment", (m.index as i64).into()),
+            ("world", m.world.into()),
+            ("start_step", (m.start_step as i64).into()),
+        ]);
+        let _ = writeln!(self.out, "{}", rec.dumps());
+        // Segment markers are the ledger's restart breadcrumbs — flush
+        // eagerly so a segment that later dies still leaves its marker.
+        let _ = self.out.flush();
+    }
+
     fn on_end(&mut self, s: &super::RunSummary, comm: &CommStats) {
         let rec = Json::from_pairs(vec![
             ("kind", "summary".into()),
@@ -147,6 +178,7 @@ impl Subscriber for JsonlSubscriber {
 pub struct CaptureSubscriber {
     pub steps: Vec<StepRecord>,
     pub evals: Vec<(u64, f32)>,
+    pub segments: Vec<SegmentMarker>,
 }
 
 impl Subscriber for CaptureSubscriber {
@@ -157,11 +189,37 @@ impl Subscriber for CaptureSubscriber {
     fn on_eval(&mut self, step: u64, loss: f32) {
         self.evals.push((step, loss));
     }
+
+    fn on_segment(&mut self, seg: &SegmentMarker) {
+        self.segments.push(*seg);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn segment_markers_reach_the_ledger() {
+        let dir = std::env::temp_dir().join("modalities-subscriber-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.jsonl");
+        let mut s = JsonlSubscriber::create(&path).unwrap();
+        s.on_segment(&SegmentMarker { index: 1, world: 3, start_step: 5 });
+        // on_segment flushes eagerly: the marker must be durable even
+        // though the subscriber is still alive (the segment may die).
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().lines().next().unwrap())
+            .unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("segment"));
+        assert_eq!(v.get("segment").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("world").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("start_step").unwrap().as_i64(), Some(5));
+
+        let mut cap = CaptureSubscriber::default();
+        cap.on_segment(&SegmentMarker { index: 0, world: 4, start_step: 0 });
+        assert_eq!(cap.segments.len(), 1);
+        assert_eq!(cap.segments[0].world, 4);
+    }
 
     #[test]
     fn jsonl_records_parse() {

@@ -42,6 +42,7 @@ pub mod cli;
 pub mod config;
 pub mod data;
 pub mod dist;
+pub mod elastic;
 pub mod fsdp;
 pub mod gym;
 pub mod kernels;

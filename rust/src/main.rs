@@ -75,12 +75,125 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.fingerprint_hex(),
         graph.components.len()
     );
+    if args.has_flag("elastic") {
+        return train_elastic(args, &cfg, &graph);
+    }
     let mut gym = graph.into_gym()?;
     let summary = gym.run()?;
     println!(
         "run complete: final loss {:.4} after {} steps",
         summary.final_loss, summary.steps
     );
+    Ok(())
+}
+
+/// `train --elastic`: run the job under the rank-loss recovery
+/// supervisor. Each segment gets its own gym at the supervisor's
+/// planned world size; after a rank death the next segment resumes
+/// from the latest sharded checkpoint, which `load_sharded` re-shards
+/// N→M on load. Segment boundaries land both in the metrics ledger
+/// (appended, not truncated, across segments) and in
+/// `run_dir/elastic/segments.json`.
+fn train_elastic(
+    args: &Args,
+    cfg: &Config,
+    graph: &modalities::registry::ObjectGraph,
+) -> Result<()> {
+    use modalities::elastic::{ElasticSpec, SegmentPlan, Supervisor};
+    use modalities::fsdp::components::ParallelSpec;
+    use modalities::gym::components::GymSpecSeed;
+    use modalities::gym::{Gym, GymSpec, RunSummary};
+
+    // Restart policy: the config's `elastic` component when present,
+    // defaults otherwise; `--max-restarts` overrides either.
+    let mut espec = match graph.of_interface("elastic").as_slice() {
+        [] => ElasticSpec::default(),
+        [(_, one)] => one.downcast::<ElasticSpec>()?.as_ref().clone(),
+        many => bail!(
+            "config defines {} elastic components ({}); exactly one expected",
+            many.len(),
+            many.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    espec.max_restarts = args.opt_usize("max-restarts", espec.max_restarts as usize)? as u64;
+
+    let seed: Arc<GymSpecSeed> = match graph.of_interface("gym").as_slice() {
+        [(name, one)] => one.downcast().with_context(|| format!("gym component '{name}'"))?,
+        [] => bail!("config defines no 'gym' component"),
+        many => bail!("config defines {} gym components; exactly one expected", many.len()),
+    };
+    if seed.checkpoint_policy.is_none() {
+        eprintln!(
+            "warning: no checkpointing component configured — a rescaled segment \
+             will replay from step 0 instead of the last checkpoint"
+        );
+    }
+    let run_dir = seed.run_dir.clone();
+    println!(
+        "elastic: world {} ({:?}), max restarts {}, min world {}, journal {}",
+        seed.parallel.dp,
+        seed.parallel.strategy,
+        espec.max_restarts,
+        espec.min_world,
+        run_dir.join("elastic").join("segments.json").display()
+    );
+
+    let mut sup = Supervisor::new(espec, &run_dir)?;
+    let resume_step = || -> u64 {
+        checkpoint::latest_checkpoint(&run_dir)
+            .and_then(|p| p.file_name()?.to_str()?.strip_prefix("step_")?.parse().ok())
+            .unwrap_or(0)
+    };
+    let fingerprint = cfg.fingerprint_hex();
+    let yaml = cfg.to_yaml();
+    let mut last: Option<RunSummary> = None;
+    let run_segment = |plan: &SegmentPlan| -> Result<u64> {
+        let parallel = Arc::new(ParallelSpec {
+            dp: plan.world,
+            strategy: plan.strategy,
+            ..(*seed.parallel).clone()
+        });
+        let spec = GymSpec {
+            model: seed.model.clone(),
+            dataloader: seed.dataloader.clone(),
+            prefetch: seed.prefetch,
+            eval_dataloader: seed.eval_dataloader.clone(),
+            optimizer: seed.optimizer.clone(),
+            scheduler: seed.scheduler.clone(),
+            parallel,
+            runtime: seed.runtime.clone(),
+            checkpoint_policy: seed.checkpoint_policy.clone(),
+            warm_start: seed.warm_start.clone(),
+            steps: seed.steps,
+            grad_accum: seed.grad_accum,
+            log_every: seed.log_every,
+            eval_every: seed.eval_every,
+            eval_batches: seed.eval_batches,
+            max_grad_norm: seed.max_grad_norm,
+            run_dir: seed.run_dir.clone(),
+            run_name: seed.run_name.clone(),
+            config_fingerprint: fingerprint.clone(),
+            config_yaml: yaml.clone(),
+            // Later segments must resume (and append to the ledger)
+            // even when the original run didn't ask to.
+            resume: seed.resume || plan.index > 0,
+            segment_index: Some(plan.index),
+        };
+        let summary = Gym::new(spec).with_standard_subscribers(true)?.run()?;
+        let steps = summary.steps;
+        last = Some(summary);
+        Ok(steps)
+    };
+    let outcome = sup.run(seed.parallel.dp, seed.parallel.strategy, resume_step, run_segment)?;
+    println!(
+        "elastic run complete: {} segment(s), {} restart(s), final world {}",
+        outcome.segments.len(),
+        outcome.restarts,
+        outcome.final_world
+    );
+    if let Some(s) = last {
+        println!("run complete: final loss {:.4} after {} steps", s.final_loss, s.steps);
+    }
     Ok(())
 }
 

@@ -20,4 +20,5 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::runtime::components::register(reg).expect("runtime builtins");
     crate::ablation::components::register(reg).expect("ablation builtins");
     crate::serve::components::register(reg).expect("serve builtins");
+    crate::elastic::components::register(reg).expect("elastic builtins");
 }

@@ -1,17 +1,18 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares those 32 plus two
+//! 32 pre-defined interfaces". This module declares those 32 plus three
 //! of our own (`ablation`, the sweep orchestrator — the layer the paper
-//! says everyone hand-rolls — and `serve`, the batched inference
-//! engine); the registry refuses registrations against undeclared
+//! says everyone hand-rolls — `serve`, the batched inference engine,
+//! and `elastic`, the rank-loss recovery supervisor); the registry
+//! refuses registrations against undeclared
 //! interfaces, which is what makes config validation *interface-level*:
 //! a reference site knows which interface it expects, and the
 //! object-graph builder can flag a mismatched component before any
 //! training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 34] = [
+pub const INTERFACES: [&str; 35] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -53,6 +54,7 @@ pub const INTERFACES: [&str; 34] = [
     "number_conversion",     // token/step/sample count conversions
     "ablation",              // sweep orchestration (store/scheduler/report)
     "serve",                 // batched inference engine + eval harness
+    "elastic",               // rank-loss recovery supervisor (kill/rescale/resume)
 ];
 
 /// Is `name` a declared interface?
@@ -66,11 +68,12 @@ mod tests {
 
     #[test]
     fn paper_interfaces_plus_ours() {
-        // The paper's 32 interfaces plus our sweep-orchestration and
-        // batched-inference ones.
-        assert_eq!(INTERFACES.len(), 34);
+        // The paper's 32 interfaces plus our sweep-orchestration,
+        // batched-inference and elastic-recovery ones.
+        assert_eq!(INTERFACES.len(), 35);
         assert!(interface_exists("ablation"));
         assert!(interface_exists("serve"));
+        assert!(interface_exists("elastic"));
     }
 
     #[test]

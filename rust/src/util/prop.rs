@@ -108,6 +108,58 @@ impl G {
     }
 }
 
+// ---- chaos harness ----------------------------------------------------------
+
+/// The schedule-fuzzing jitter grid shared by the equivalence, failure
+/// -injection and elastic-recovery suites: each scenario repeats once
+/// per entry with per-rank start jitter of up to this many
+/// microseconds, proving thread-schedule independence.
+pub const JITTER_GRID_US: [u64; 3] = [0, 200, 600];
+
+/// A deterministic chaos scenario derived from one seed: which rank
+/// dies, at which step of a run, under how much scheduling jitter. The
+/// same `(seed, world, steps)` always yields the same plan, so any
+/// chaos failure reproduces from the seed printed by [`forall`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    pub world: usize,
+    pub steps: u64,
+    /// Rank killed (uniform over the world).
+    pub kill_rank: usize,
+    /// Step at which the kill fires (uniform over `0..steps`).
+    pub kill_step: u64,
+    /// Per-rank start jitter, drawn from [`JITTER_GRID_US`].
+    pub jitter_us: u64,
+}
+
+impl ChaosPlan {
+    /// Derive the kill schedule for a `world`-rank run of `steps` steps.
+    pub fn from_seed(seed: u64, world: usize, steps: u64) -> Self {
+        assert!(world > 0, "world must be >= 1");
+        assert!(steps > 0, "steps must be >= 1");
+        let mut rng = Pcg64::new(seed ^ 0xc4a0_5bad_dead_5eed);
+        let kill_rank = rng.next_below(world as u64) as usize;
+        let kill_step = rng.next_below(steps);
+        let jitter_us = JITTER_GRID_US[rng.next_below(JITTER_GRID_US.len() as u64) as usize];
+        Self { seed, world, steps, kill_rank, kill_step, jitter_us }
+    }
+
+    /// True exactly at the step where the kill fires.
+    pub fn should_kill(&self, step: u64) -> bool {
+        step == self.kill_step
+    }
+
+    /// Deterministic per-(step, rank) gradient seed — the shared
+    /// convention for artifact-free runs that drive the FSDP engine
+    /// with seeded synthetic gradients. Depends only on `(step, rank)`,
+    /// not on the world size, so an N-world run and its rescaled
+    /// M-world resume draw identical gradients for the ranks they share.
+    pub fn grad_seed(step: u64, rank: usize) -> u64 {
+        (step.wrapping_mul(0x9e37_79b9_7f4a_7c15)) ^ ((rank as u64) << 17) ^ 0x6772_6164 // "grad"
+    }
+}
+
 /// Run `prop` for `cfg.cases` cases; panics with the failing case's seed
 /// on the first failure (re-run with `MODALITIES_PROP_SEED=<seed>`).
 pub fn forall<F: FnMut(&mut G)>(cfg: Cases, mut prop: F) {
@@ -157,6 +209,51 @@ mod tests {
         let mut second = Vec::new();
         forall(Cases::default().cases(8).seed(99), |g| second.push(g.u64()));
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn chaos_plan_is_deterministic_and_in_range() {
+        forall(Cases::default().cases(64), |g| {
+            let seed = g.u64();
+            let world = g.usize_in(1..9);
+            let steps = g.usize_in(1..12) as u64;
+            let a = ChaosPlan::from_seed(seed, world, steps);
+            let b = ChaosPlan::from_seed(seed, world, steps);
+            assert_eq!(a, b);
+            assert!(a.kill_rank < world);
+            assert!(a.kill_step < steps);
+            assert!(JITTER_GRID_US.contains(&a.jitter_us));
+            assert!(a.should_kill(a.kill_step));
+            assert_eq!(a.should_kill(a.kill_step + 1), false);
+        });
+    }
+
+    #[test]
+    fn chaos_plan_covers_the_space() {
+        // Over many seeds the plan must actually vary rank, step and
+        // jitter (a constant schedule would silently weaken every
+        // chaos suite built on it).
+        let mut ranks = std::collections::BTreeSet::new();
+        let mut steps = std::collections::BTreeSet::new();
+        let mut jitters = std::collections::BTreeSet::new();
+        for seed in 0..64u64 {
+            let p = ChaosPlan::from_seed(seed, 4, 6);
+            ranks.insert(p.kill_rank);
+            steps.insert(p.kill_step);
+            jitters.insert(p.jitter_us);
+        }
+        assert_eq!(ranks.len(), 4);
+        assert_eq!(steps.len(), 6);
+        assert_eq!(jitters.len(), JITTER_GRID_US.len());
+    }
+
+    #[test]
+    fn grad_seed_is_world_independent() {
+        // Same (step, rank) -> same seed regardless of the run's world:
+        // the bitwise elastic-resume proof leans on this.
+        assert_eq!(ChaosPlan::grad_seed(3, 1), ChaosPlan::grad_seed(3, 1));
+        assert_ne!(ChaosPlan::grad_seed(3, 1), ChaosPlan::grad_seed(3, 2));
+        assert_ne!(ChaosPlan::grad_seed(3, 1), ChaosPlan::grad_seed(4, 1));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use modalities::optim::components::OptimizerSpec;
 use modalities::runtime::pjrt::ModelArtifacts;
 use modalities::util::even_split;
 use modalities::util::prng::Pcg64;
+use modalities::util::prop::JITTER_GRID_US;
 
 fn arts() -> ModelArtifacts {
     ModelArtifacts {
@@ -123,14 +124,16 @@ fn strategies(world: usize) -> Vec<ShardStrategy> {
 }
 
 /// The headline grid: {FSDP full, DDP, HSDP shard 2/4} × world {1, 2,
-/// 4, 8} × ≥3 steps. Each threaded run is repeated 3× with randomized
-/// per-rank start jitter to prove schedule-independence.
+/// 4, 8} × ≥3 steps. Each threaded run is repeated once per
+/// [`JITTER_GRID_US`] entry — the chaos harness's shared jitter grid —
+/// with randomized per-rank start jitter to prove
+/// schedule-independence.
 #[test]
 fn threaded_reproduces_lockstep_bitwise_across_grid() {
     for world in [1usize, 2, 4, 8] {
         for strategy in strategies(world) {
             let reference = run_training(world, strategy, BackendSpec::lockstep(), 3);
-            for (rep, jitter_us) in [0u64, 200, 600].into_iter().enumerate() {
+            for (rep, jitter_us) in JITTER_GRID_US.into_iter().enumerate() {
                 let spec = BackendSpec {
                     kind: BackendKind::Threaded,
                     timeout_ms: 20_000,

@@ -1,0 +1,376 @@
+//! Elastic rank-loss recovery: the chaos property suite.
+//!
+//! Headline claim: kill a random rank at a random step of a threaded
+//! HSDP run, let the supervisor rescale the world N→M from the latest
+//! checkpoint, finish the run — and the final parameters, optimizer
+//! state and post-rescale loss curve are **bitwise identical** to an
+//! uninterrupted world-M run started from the same checkpoint (under
+//! the lockstep oracle, which also proves the chaos path backend-
+//! equivalent). The kill schedule is drawn from a seeded
+//! [`ChaosPlan`], so every grid point reproduces from its printed
+//! seed, and each point is repeated with the plan's randomized
+//! per-rank start jitter.
+//!
+//! Artifact-free by construction, like `backend_equivalence.rs`:
+//! segments drive the FSDP engine with seeded synthetic gradients
+//! whose seeds depend only on `(step, rank)` — never on the world —
+//! which is exactly what makes the rescaled resume comparable.
+
+use modalities::checkpoint;
+use modalities::dist::process_group::{BackendKind, BackendSpec, RankLossEvent};
+use modalities::elastic::{
+    adapt_strategy, ElasticSpec, SegmentPlan, SegmentStatus, Supervisor,
+};
+use modalities::fsdp::{FsdpConfig, FsdpEngine, ShardStrategy};
+use modalities::model::{InitScheme, ParamStore};
+use modalities::optim::components::OptimizerSpec;
+use modalities::runtime::pjrt::ModelArtifacts;
+use modalities::util::prng::Pcg64;
+use modalities::util::prop::ChaosPlan;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("modalities-elastic-recovery").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arts() -> ModelArtifacts {
+    ModelArtifacts {
+        name: "chaos".into(),
+        vocab_size: 64,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 16,
+        seq_len: 8,
+        batch_size: 2,
+        num_params: 0,
+        flops_per_token: 0,
+        param_shapes: vec![
+            ("emb".into(), vec![64, 8]),   // 512
+            ("w1".into(), vec![8, 16]),    // 128
+            ("w2".into(), vec![16, 8]),    // 128
+            ("ln".into(), vec![8]),        // 8
+            ("head".into(), vec![8, 64]),  // 512
+        ],
+        files: Default::default(),
+    }
+}
+
+fn opt_spec() -> OptimizerSpec {
+    OptimizerSpec::AdamW { lr: 0.01, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.01 }
+}
+
+fn params0() -> ParamStore {
+    ParamStore::init(&arts(), InitScheme::ScaledNormal, 42)
+}
+
+/// Synthetic per-rank gradients for one step, seeded by `(step, rank)`
+/// only — a world-N run and its rescaled world-M resume draw identical
+/// gradients for the ranks they share.
+fn grads_at(params: &ParamStore, step: u64, world: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|r| {
+            let mut rng = Pcg64::new(ChaosPlan::grad_seed(step, r));
+            params
+                .bufs
+                .iter()
+                .map(|b| (0..b.len()).map(|_| rng.next_f32() - 0.5).collect())
+                .collect()
+        })
+        .collect()
+}
+
+fn engine(world: usize, strategy: ShardStrategy, backend: BackendSpec) -> FsdpEngine {
+    let cfg = FsdpConfig { world, unit_bytes: 640, strategy, ..Default::default() };
+    FsdpEngine::with_backend(&params0(), cfg, &opt_spec(), backend).unwrap()
+}
+
+/// Everything a run must agree on bitwise after the final step.
+#[derive(PartialEq, Debug)]
+struct FinalState {
+    params: Vec<f32>,
+    opt_state: Vec<Vec<(Vec<f32>, Vec<f32>, u64)>>,
+    losses: Vec<f32>,
+}
+
+fn final_state(eng: &mut FsdpEngine, losses: Vec<f32>) -> FinalState {
+    let mut out = params0();
+    eng.unshard_into(&mut out).unwrap();
+    FinalState {
+        params: out.flatten(),
+        opt_state: (0..eng.cfg.world).map(|r| eng.rank_opt_state(r)).collect(),
+        losses,
+    }
+}
+
+/// One training segment: resume from the latest checkpoint in `dir`
+/// (re-sharded to this segment's world if needed), then run steps
+/// `start..steps`, checkpointing after every step. `kill` injects the
+/// chaos plan's rank death right before that step's collectives.
+/// Returns the per-step losses on success.
+fn run_segment(
+    dir: &Path,
+    plan: &SegmentPlan,
+    steps: u64,
+    backend: BackendSpec,
+    kill: Option<&ChaosPlan>,
+) -> anyhow::Result<(u64, Vec<f32>)> {
+    let p0 = params0();
+    let mut eng = engine(plan.world, plan.strategy, backend);
+    let mut start = 0u64;
+    if let Some(ckpt) = checkpoint::latest_checkpoint(dir) {
+        start = checkpoint::load_sharded(&ckpt, &mut eng)?;
+    }
+    assert_eq!(start, plan.start_step, "supervisor and segment disagree on the resume step");
+    let mut losses = Vec::new();
+    for step in start..steps {
+        if let Some(c) = kill {
+            if c.should_kill(step) {
+                eng.kill_rank(c.kill_rank);
+            }
+        }
+        eng.apply_grads(&grads_at(&p0, step, plan.world), 1.0, Some(1.0))?;
+        let vals: Vec<f32> = (0..plan.world)
+            .map(|r| ((step + 1) as f32 * 0.3 + r as f32 * 0.07).sin())
+            .collect();
+        losses.push(eng.all_reduce_scalar(&vals)?);
+        checkpoint::save_sharded(dir, step + 1, &eng, &p0, "chaos", "fp")?;
+    }
+    eng.check_replica_consistency()?;
+    Ok((steps, losses))
+}
+
+/// Uninterrupted world-M reference: a fresh engine loaded from the
+/// same checkpoint the rescaled segment resumed from, driven over the
+/// same remaining steps — under the lockstep oracle.
+fn reference_run(
+    ckpt: Option<&Path>,
+    world: usize,
+    strategy: ShardStrategy,
+    steps: u64,
+) -> FinalState {
+    let p0 = params0();
+    let mut eng = engine(world, strategy, BackendSpec::lockstep());
+    let mut start = 0u64;
+    if let Some(c) = ckpt {
+        start = checkpoint::load_sharded(c, &mut eng).unwrap();
+    }
+    let mut losses = Vec::new();
+    for step in start..steps {
+        eng.apply_grads(&grads_at(&p0, step, world), 1.0, Some(1.0)).unwrap();
+        let vals: Vec<f32> =
+            (0..world).map(|r| ((step + 1) as f32 * 0.3 + r as f32 * 0.07).sin()).collect();
+        losses.push(eng.all_reduce_scalar(&vals).unwrap());
+    }
+    final_state(&mut eng, losses)
+}
+
+/// Drive one full chaos scenario under the supervisor: segment 0 at
+/// world N dies at the plan's (rank, step); segment 1 rescales to the
+/// scheduled world and finishes. Returns the rescaled world, the
+/// checkpoint step it resumed from, and the final state.
+fn chaos_scenario(
+    dir: &Path,
+    plan: &ChaosPlan,
+    strategy: ShardStrategy,
+    schedule: Vec<usize>,
+) -> (usize, u64, FinalState, modalities::elastic::ElasticSummary) {
+    let steps = plan.steps;
+    let backend = BackendSpec {
+        kind: BackendKind::Threaded,
+        timeout_ms: 20_000,
+        jitter_us: plan.jitter_us,
+    };
+    let spec = ElasticSpec { max_restarts: 1, min_world: 1, world_schedule: schedule };
+    let mut sup = Supervisor::new(spec, dir).unwrap();
+    let mut last_losses = Vec::new();
+    let mut final_eng: Option<FsdpEngine> = None;
+    let summary = sup
+        .run(
+            plan.world,
+            strategy,
+            || {
+                checkpoint::latest_checkpoint(dir)
+                    .and_then(|p| {
+                        p.file_name()?.to_str()?.strip_prefix("step_")?.parse().ok()
+                    })
+                    .unwrap_or(0)
+            },
+            |seg| {
+                let kill = if seg.index == 0 { Some(plan) } else { None };
+                let (end, losses) = run_segment(dir, seg, steps, backend, kill)?;
+                last_losses = losses;
+                // Rebuild the final engine state for fingerprinting
+                // (run_segment owns its engine; reload from the final
+                // checkpoint, which is exact-topology at this world).
+                let mut eng = engine(seg.world, seg.strategy, backend);
+                let ckpt = checkpoint::latest_checkpoint(dir).unwrap();
+                checkpoint::load_sharded(&ckpt, &mut eng)?;
+                final_eng = Some(eng);
+                Ok(end)
+            },
+        )
+        .unwrap();
+    assert_eq!(summary.restarts, 1, "exactly one rescale expected");
+    let segs = &summary.segments;
+    assert_eq!(segs.len(), 2);
+    assert_eq!(segs[0].status, SegmentStatus::Failed);
+    assert_eq!(segs[1].status, SegmentStatus::Complete);
+    assert_eq!(segs[0].world, plan.world);
+    let m = segs[1].world;
+    let resumed_at = segs[1].start_step;
+    let state = final_state(final_eng.as_mut().unwrap(), last_losses);
+    (m, resumed_at, state, summary)
+}
+
+/// The headline seeded grid: world {2, 4, 8} × {M = N−1, M < N−1} ×
+/// 3 repetitions, kill rank/step/jitter drawn per-seed from the
+/// ChaosPlan. Every point must finish and bitwise-match the
+/// uninterrupted world-M reference from the same checkpoint.
+#[test]
+fn chaos_kill_rescale_resume_is_bitwise() {
+    const STEPS: u64 = 6;
+    let mut point = 0u64;
+    for world in [2usize, 4, 8] {
+        // HSDP(2) at every N; the supervisor degrades it to Full
+        // whenever the rescaled M stops dividing into groups of 2.
+        let strategy = ShardStrategy::Hybrid { shard_size: 2 };
+        // Default shrink (M = N−1) and a scheduled deeper shrink
+        // (M = max(N/2, 1) < N for every N > 1).
+        for schedule in [Vec::new(), vec![(world / 2).max(1)]] {
+            for rep in 0..3u64 {
+                let seed = 0xe1a5_7100 + point * 1009 + rep;
+                let plan = ChaosPlan::from_seed(seed, world, STEPS);
+                let label = format!(
+                    "seed {seed:#x}: world {world} schedule {schedule:?} rep {rep} \
+                     kill rank {} at step {} (jitter {}µs)",
+                    plan.kill_rank, plan.kill_step, plan.jitter_us
+                );
+                let dir = tmp(&format!("grid-{point}-{rep}"));
+                let (m, resumed_at, got, _) =
+                    chaos_scenario(&dir, &plan, strategy, schedule.clone());
+                let expect_m = schedule.first().copied().unwrap_or(world - 1);
+                assert_eq!(m, expect_m, "{label}");
+                // A kill at step k leaves checkpoints up to step k, so
+                // the rescaled segment resumes exactly there.
+                assert_eq!(resumed_at, plan.kill_step, "{label}");
+                let ckpt = dir.join(format!("step_{:08}", plan.kill_step));
+                let ckpt = if plan.kill_step > 0 { Some(ckpt.as_path()) } else { None };
+                let want = reference_run(ckpt, m, adapt_strategy(strategy, m), STEPS);
+                assert_eq!(got.params, want.params, "params diverged: {label}");
+                assert_eq!(got.opt_state, want.opt_state, "opt state diverged: {label}");
+                // Loss curves compared over the post-rescale segment.
+                let tail = (STEPS - plan.kill_step) as usize;
+                assert_eq!(
+                    got.losses,
+                    want.losses[want.losses.len() - tail..].to_vec(),
+                    "loss curve diverged: {label}"
+                );
+            }
+            point += 1;
+        }
+    }
+}
+
+/// The kill propagates as a *typed* RankLossEvent naming the killed
+/// rank, regardless of which rank/step the plan draws.
+#[test]
+fn kill_produces_classifiable_rank_loss() {
+    for seed in 0..8u64 {
+        let plan = ChaosPlan::from_seed(seed, 4, 4);
+        let mut eng = engine(4, ShardStrategy::Hybrid { shard_size: 2 }, BackendSpec::threaded());
+        let p0 = params0();
+        for step in 0..plan.steps {
+            if plan.should_kill(step) {
+                eng.kill_rank(plan.kill_rank);
+            }
+            let r = eng
+                .apply_grads(&grads_at(&p0, step, 4), 1.0, None)
+                .and_then(|_| {
+                    eng.all_reduce_scalar(&[0.1, 0.2, 0.3, 0.4]).map(|_| ())
+                });
+            if plan.should_kill(step) {
+                let err = r.expect_err("killed step must fail");
+                let ev = RankLossEvent::classify(&err)
+                    .unwrap_or_else(|| panic!("untyped death (seed {seed}): {err:#}"));
+                assert_eq!(ev.rank, plan.kill_rank, "seed {seed}");
+                break;
+            }
+            r.unwrap();
+        }
+    }
+}
+
+/// An unrecoverable mid-segment error (malformed gradients, not a rank
+/// death) must surface through the supervisor without a restart.
+#[test]
+fn deterministic_errors_are_not_retried() {
+    let dir = tmp("no-retry");
+    let mut sup = Supervisor::new(ElasticSpec::default(), &dir).unwrap();
+    let mut attempts = 0u64;
+    let err = sup
+        .run(4, ShardStrategy::Full, || 0, |seg| {
+            attempts += 1;
+            let p0 = params0();
+            let mut eng = engine(seg.world, seg.strategy, BackendSpec::threaded());
+            let mut bad = grads_at(&p0, 0, seg.world);
+            bad[2].pop(); // rank 2 delivers a malformed gradient set
+            eng.apply_grads(&bad, 1.0, None)?;
+            Ok(0)
+        })
+        .unwrap_err();
+    assert_eq!(attempts, 1);
+    assert!(format!("{err:#}").contains("unrecoverable"), "{err:#}");
+}
+
+/// The scripted smoke scenario `make chaos-smoke` runs in CI: 4-rank
+/// threaded HSDP, kill rank 1 at step 3, rescale to 3 ranks, finish
+/// 8 steps. Asserts the durable evidence on disk: the segment journal
+/// records both incarnations and the final checkpoint is sharded at
+/// world 3.
+#[test]
+fn chaos_smoke() {
+    const STEPS: u64 = 8;
+    let dir = tmp("smoke");
+    let plan = ChaosPlan {
+        seed: 0,
+        world: 4,
+        steps: STEPS,
+        kill_rank: 1,
+        kill_step: 3,
+        jitter_us: 200,
+    };
+    let (m, resumed_at, _, summary) = chaos_scenario(
+        &dir,
+        &plan,
+        ShardStrategy::Hybrid { shard_size: 2 },
+        vec![3],
+    );
+    assert_eq!((m, resumed_at), (3, 3));
+
+    // Durable journal: two segments, 4-rank failure then 3-rank finish.
+    let journal = dir.join("elastic").join("segments.json");
+    assert!(journal.exists(), "segment journal must be on disk");
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let v = modalities::util::json::Json::parse(&text).unwrap();
+    let segs = v.get("segments").and_then(|a| a.as_arr()).unwrap();
+    assert_eq!(segs.len(), 2);
+    assert_eq!(segs[0].get("world").unwrap().as_usize(), Some(4));
+    assert_eq!(segs[0].get("status").unwrap().as_str(), Some("failed"));
+    assert!(segs[0].get("cause").unwrap().as_str().unwrap().contains("rank 1"));
+    assert_eq!(segs[1].get("world").unwrap().as_usize(), Some(3));
+    assert_eq!(segs[1].get("status").unwrap().as_str(), Some("complete"));
+    assert_eq!(segs[1].get("start_step").unwrap().as_i64(), Some(3));
+    assert_eq!(summary.final_world, 3);
+
+    // Final shards: the last checkpoint is world-3 topology.
+    let last = checkpoint::latest_checkpoint(&dir).unwrap();
+    let manifest = checkpoint::read_manifest(&last).unwrap();
+    assert_eq!((manifest.step, manifest.world), (STEPS, 3));
+    for rank in 0..3 {
+        assert!(last.join(format!("rank_{rank:05}.bin")).exists());
+    }
+}

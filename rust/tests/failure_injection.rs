@@ -225,52 +225,68 @@ fn consolidated_truncation_rejected() {
 /// A rank that panics mid-collective must propagate a clean error to
 /// every peer within a bounded wait — no deadlock (peers must beat the
 /// 30 s rendezvous timeout by a wide margin) and no poisoned-mutex
-/// abort. Exercised on both backends.
+/// abort. Exercised on both backends, with the dying rank and the
+/// per-rank start jitter drawn per-seed from the shared [`ChaosPlan`]
+/// harness instead of a hardcoded victim.
 #[test]
 fn panicking_rank_unblocks_peers_quickly() {
     use modalities::dist::process_group::{BackendSpec, ProcessGroup};
+    use modalities::util::prng::Pcg64;
+    use modalities::util::prop::ChaosPlan;
     use std::time::{Duration, Instant};
 
-    for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
-        let spec = BackendSpec { timeout_ms: 30_000, ..backend };
-        let handles = spec.make(3);
-        let t0 = Instant::now();
-        let results: Vec<Option<anyhow::Result<()>>> = std::thread::scope(|s| {
-            handles
-                .into_iter()
-                .enumerate()
-                .map(|(r, mut pg)| {
-                    s.spawn(move || {
-                        // One successful round proves the communicator
-                        // works before the crash...
-                        pg.barrier(&[0, 1, 2])?;
-                        if r == 1 {
-                            // ...then rank 1 dies mid-collective. Its
-                            // handle drops during unwind, which marks
-                            // it dead and wakes the peers.
-                            panic!("injected rank failure");
-                        }
-                        pg.all_reduce_scalar(1.0, &[0, 1, 2]).map(|_| ())
+    for seed in 0..4u64 {
+        let plan = ChaosPlan::from_seed(0xfa11_0000 + seed, 3, 1);
+        for backend in [BackendSpec::lockstep(), BackendSpec::threaded()] {
+            let spec = BackendSpec { timeout_ms: 30_000, jitter_us: plan.jitter_us, ..backend };
+            let handles = spec.make(3);
+            let t0 = Instant::now();
+            let results: Vec<Option<anyhow::Result<()>>> = std::thread::scope(|s| {
+                handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, mut pg)| {
+                        s.spawn(move || {
+                            if spec.jitter_us > 0 {
+                                let mut rng = Pcg64::new(plan.seed ^ ((r as u64) << 40));
+                                let us = rng.next_below(spec.jitter_us + 1);
+                                std::thread::sleep(Duration::from_micros(us));
+                            }
+                            // One successful round proves the communicator
+                            // works before the crash...
+                            pg.barrier(&[0, 1, 2])?;
+                            if r == plan.kill_rank {
+                                // ...then the planned victim dies
+                                // mid-collective. Its handle drops during
+                                // unwind, which marks it dead and wakes
+                                // the peers.
+                                panic!("injected rank failure");
+                            }
+                            pg.all_reduce_scalar(1.0, &[0, 1, 2]).map(|_| ())
+                        })
                     })
-                })
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|j| j.join().ok())
-                .collect()
-        });
-        assert!(results[1].is_none(), "rank 1 must have panicked");
-        for r in [0usize, 2] {
-            let e = results[r]
-                .as_ref()
-                .expect("peers must not panic")
-                .as_ref()
-                .expect_err("peers must get an error, not a silent success");
-            assert!(format!("{e:#}").contains("rank 1"), "peer {r}: {e:#}");
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().ok())
+                    .collect()
+            });
+            assert!(results[plan.kill_rank].is_none(), "the planned victim must have panicked");
+            for r in (0..3).filter(|&r| r != plan.kill_rank) {
+                let e = results[r]
+                    .as_ref()
+                    .expect("peers must not panic")
+                    .as_ref()
+                    .expect_err("peers must get an error, not a silent success");
+                assert!(
+                    format!("{e:#}").contains(&format!("rank {}", plan.kill_rank)),
+                    "peer {r}: {e:#}"
+                );
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "peers must fail fast, not ride the rendezvous timeout ({backend:?}, {plan:?})"
+            );
         }
-        assert!(
-            t0.elapsed() < Duration::from_secs(10),
-            "peers must fail fast, not ride the rendezvous timeout ({backend:?})"
-        );
     }
 }
 
@@ -306,10 +322,14 @@ fn checkpoint_before_crash_resumes_exactly() {
         weight_decay: 0.0,
     };
     let cfg = FsdpConfig { world: 4, unit_bytes: 128, ..Default::default() };
-    let grads = |seed: u64| -> Vec<Vec<Vec<f32>>> {
+    // Gradient seeds follow the chaos harness's shared (step, rank)
+    // convention, the same one the elastic-recovery suite leans on.
+    let grads = |step: u64| -> Vec<Vec<Vec<f32>>> {
         (0..4)
             .map(|r| {
-                let mut rng = modalities::util::prng::Pcg64::new(seed * 100 + r);
+                let mut rng = modalities::util::prng::Pcg64::new(
+                    modalities::util::prop::ChaosPlan::grad_seed(step, r),
+                );
                 params
                     .bufs
                     .iter()

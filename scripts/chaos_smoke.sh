@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Elastic recovery smoke test (`make chaos-smoke`): a scripted chaos
+# scenario — 4-rank threaded HSDP run, rank 1 killed at step 3, the
+# supervisor rescales the world to 3 from the latest checkpoint and
+# finishes the remaining steps. Runs the `chaos_smoke` scenario of the
+# elastic-recovery suite into a scratch TMPDIR, then independently
+# re-verifies the durable evidence it leaves behind: the segment
+# journal records both incarnations (world 4 failed at step 3 → world 3
+# complete) and the final checkpoint is sharded at world 3.
+# Artifact-free: the scenario drives the FSDP engine with seeded
+# synthetic gradients, so it never skips.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ROOT="$(mktemp -d)"
+trap 'rm -rf "$ROOT"' EXIT
+
+echo "chaos-smoke: kill rank 1 at step 3 of a 4-rank threaded HSDP run, rescale to 3, finish"
+TMPDIR="$ROOT" cargo test --release --quiet --test elastic_recovery chaos_smoke
+
+RUN="$ROOT/modalities-elastic-recovery/smoke"
+JOURNAL="$RUN/elastic/segments.json"
+if [ ! -f "$JOURNAL" ]; then
+  echo "chaos-smoke: FAIL — segment journal $JOURNAL missing"
+  exit 1
+fi
+
+# Two segments: world 4 failed (rank 1 died), then world 3 complete.
+for needle in '"world": 4' '"status": "failed"' '"world": 3' '"status": "complete"' 'rank 1'; do
+  if ! grep -q "$needle" "$JOURNAL"; then
+    echo "chaos-smoke: FAIL — journal lacks $needle"
+    cat "$JOURNAL"
+    exit 1
+  fi
+done
+
+# The final checkpoint (step 8) must be world-3 topology: manifest says
+# so and exactly ranks 0..2 have shard files.
+FINAL="$RUN/step_00000008"
+grep -q '"world": 3' "$FINAL/manifest.json" || {
+  echo "chaos-smoke: FAIL — final manifest is not world 3"
+  cat "$FINAL/manifest.json"
+  exit 1
+}
+for rank in 00000 00001 00002; do
+  [ -f "$FINAL/rank_$rank.bin" ] || {
+    echo "chaos-smoke: FAIL — missing shard rank_$rank.bin in final checkpoint"
+    exit 1
+  }
+done
+if [ -f "$FINAL/rank_00003.bin" ]; then
+  echo "chaos-smoke: FAIL — final checkpoint still has a 4th shard"
+  exit 1
+fi
+
+echo "chaos-smoke: OK (journal records 4→3 rescale; final shards are world-3)"

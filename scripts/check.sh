@@ -35,4 +35,7 @@ scripts/serve_smoke.sh
 echo "==> dist backend smoke (4-rank threaded HSDP train → ckpt → resume; skips without artifacts)"
 scripts/dist_smoke.sh
 
+echo "==> chaos smoke (kill rank 1 at step 3, rescale 4 → 3, verify journal + final shards)"
+scripts/chaos_smoke.sh
+
 echo "OK"
