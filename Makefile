@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke bench-json
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -40,8 +40,18 @@ dist-smoke:
 chaos-smoke:
 	scripts/chaos_smoke.sh
 
-# Machine-readable steady-state train-step bench: scratch-vs-allocating
-# head-to-head + the zero-allocation assertion (counting allocator),
-# written to BENCH_train_step.json. Artifact-free.
+# 8 requests sharing a system prompt through the paged-KV cached
+# backend on the reference model (small pool → backpressure + prefix
+# reuse): asserts all complete, prefix hits > 0, zero blocks leaked,
+# and incremental eval matches the full-forward scorer. Artifact-free.
+kv-smoke:
+	scripts/kv_smoke.sh
+
+# Machine-readable benches, artifact-free:
+#  * steady-state train step (scratch-vs-allocating + the
+#    zero-allocation counting-allocator assertion) → BENCH_train_step.json
+#  * serve decode (continuous batching + cached-vs-uncached decode cost
+#    at S ∈ {64, 256, 1024}) → BENCH_generate.json
 bench-json:
 	cargo bench --bench bench_fsdp_unit -- --alloc-only --json BENCH_train_step.json
+	cargo bench --bench bench_generate -- --json BENCH_generate.json

@@ -1,28 +1,50 @@
 //! bench_generate — continuous-batched decode vs sequential row-0
-//! generation on aggregate tokens/sec.
+//! generation on aggregate tokens/sec, plus the KV-cache decode-cost
+//! scaling bench.
 //!
-//! Both modes pay the identical per-forward cost (the provider always
-//! materializes the full [B, S, V] logits grid, exactly like the
-//! static-shape `fwd` artifact): the sequential baseline is the old
-//! `greedy_generate` pattern — one request at a time, batch row 0,
-//! the other B-1 rows wasted — while the batched engine keeps all B
-//! slots full and swaps finished requests for queued ones between
-//! steps. With B slots the engine needs ~1/B the forwards, so the
-//! acceptance bar is >= B/2 aggregate speedup at B >= 4. Request
-//! outputs are also asserted identical across the two modes: row
-//! independence + per-request RNG means batching changes throughput,
-//! never results.
+//! Section 1 (synthetic provider): both modes pay the identical
+//! per-forward cost (the provider always materializes the full
+//! [B, S, V] logits grid, exactly like the static-shape `fwd`
+//! artifact): the sequential baseline is the old `greedy_generate`
+//! pattern — one request at a time, batch row 0, the other B-1 rows
+//! wasted — while the batched engine keeps all B slots full and swaps
+//! finished requests for queued ones between steps. With B slots the
+//! engine needs ~1/B the forwards, so the acceptance bar is >= B/2
+//! aggregate speedup at B >= 4. Request outputs are also asserted
+//! identical across the two modes: row independence + per-request RNG
+//! means batching changes throughput, never results.
+//!
+//! Section 2 (reference model): per-token decode cost at context
+//! lengths S ∈ {64, 256, 1024}, cached (paged KV, one position per
+//! token) vs uncached (full re-forward of the growing sequence per
+//! token). The hard assertion is structural, not wall-clock:
+//! [`RefModel::positions_processed`] must be exactly **flat** in S
+//! cached and exactly **linear** in S uncached, and both paths must
+//! decode identical greedy tokens. Wall-clock µs/token is reported
+//! alongside (cached attention still spans the whole context, so its
+//! wall-clock falls far slower than the position count — the columns
+//! make that visible rather than hiding it).
+//!
+//! `--json PATH` writes the machine-readable results in the same
+//! `Json::from_pairs` shape as `bench_fsdp_unit --json`
+//! (`make bench-json` → `BENCH_generate.json`).
 
+use modalities::kvcache::KvCache;
+use modalities::model::refmodel::{RefModel, RefModelSpec};
 use modalities::serve::{
     BatchedEngine, EngineConfig, Request, SamplingParams, SyntheticLogits,
 };
 use modalities::util::human;
+use modalities::util::json::Json;
 use std::time::Instant;
 
 const B: usize = 4;
 const S: usize = 64;
 const V: usize = 512;
 const REQUESTS: usize = 16;
+
+/// Decode budget per context length in section 2.
+const DECODE_TOKENS: usize = 16;
 
 fn workload() -> Vec<Request> {
     (0..REQUESTS)
@@ -40,7 +62,132 @@ fn workload() -> Vec<Request> {
         .collect()
 }
 
+fn argmax(row: &[f32]) -> u32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u32
+}
+
+/// One row of the section-2 table.
+struct DecodeCost {
+    s: usize,
+    prompt_len: usize,
+    cached_pos_per_tok: f64,
+    uncached_pos_per_tok: f64,
+    cached_us_per_tok: f64,
+    uncached_us_per_tok: f64,
+}
+
+/// Decode `DECODE_TOKENS` greedy tokens after a prompt filling the
+/// context to `s`, once through the paged KV cache and once by
+/// re-forwarding the growing sequence, asserting position-count
+/// exactness and token equality.
+fn decode_cost_at(s: usize) -> DecodeCost {
+    let n = DECODE_TOKENS;
+    let prompt_len = s - n;
+    let spec = RefModelSpec { seed: 5, ..RefModelSpec::nano(64, s, 1) };
+    let prompt: Vec<u32> = (0..prompt_len).map(|i| ((i * 7 + 3) % spec.vocab) as u32).collect();
+
+    // Cached: prefill once through the paged store, then one
+    // model position per decoded token.
+    let mut m = RefModel::new(spec).unwrap();
+    let mut cache = KvCache::new(m.layout(), 16, s.div_ceil(16), false).unwrap();
+    let (id, reused) = cache.alloc_seq(&prompt, s).unwrap();
+    assert_eq!(reused, 0);
+    let mut logits = Vec::new();
+    for &t in &prompt {
+        let mut store = cache.store(id);
+        logits = m.step(&mut store, t);
+    }
+    let before = m.positions_processed;
+    let t0 = Instant::now();
+    let mut cached_tokens = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tok = argmax(&logits);
+        cached_tokens.push(tok);
+        let mut store = cache.store(id);
+        logits = m.step(&mut store, tok);
+    }
+    let cached_s = t0.elapsed().as_secs_f64();
+    let cached_pos = m.positions_processed - before;
+    assert_eq!(cached_pos as usize, n, "cached decode must touch one position per token");
+    cache.free_seq(id);
+    assert_eq!(cache.blocks_in_use(), 0, "decode bench leaked blocks");
+
+    // Uncached: every token re-runs the whole growing sequence.
+    let mut m2 = RefModel::new(spec).unwrap();
+    let mut seq = prompt;
+    let before = m2.positions_processed;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let logits = m2.forward_row(&seq);
+        seq.push(argmax(&logits[(seq.len() - 1) * spec.vocab..]));
+    }
+    let uncached_s = t0.elapsed().as_secs_f64();
+    let uncached_pos = m2.positions_processed - before;
+    let expected = n * prompt_len + n * (n - 1) / 2;
+    assert_eq!(uncached_pos as usize, expected, "uncached decode must re-touch the context");
+    assert_eq!(&seq[prompt_len..], &cached_tokens[..], "paths decoded different tokens at S={s}");
+
+    DecodeCost {
+        s,
+        prompt_len,
+        cached_pos_per_tok: cached_pos as f64 / n as f64,
+        uncached_pos_per_tok: uncached_pos as f64 / n as f64,
+        cached_us_per_tok: cached_s * 1e6 / n as f64,
+        uncached_us_per_tok: uncached_s * 1e6 / n as f64,
+    }
+}
+
+fn decode_cost_section() -> Vec<DecodeCost> {
+    println!(
+        "\n=== cached vs uncached decode cost (reference model, {DECODE_TOKENS} decode tokens) ===\n"
+    );
+    println!(
+        "{:>8} {:>8} {:>14} {:>16} {:>13} {:>15} {:>9}",
+        "context", "prompt", "cached pos/tok", "uncached pos/tok", "cached us/tok", "uncached us/tok", "speedup"
+    );
+    let rows: Vec<DecodeCost> = [64usize, 256, 1024].iter().map(|&s| decode_cost_at(s)).collect();
+    for r in &rows {
+        println!(
+            "{:>8} {:>8} {:>14.1} {:>16.1} {:>13.1} {:>15.1} {:>8.1}x",
+            r.s,
+            r.prompt_len,
+            r.cached_pos_per_tok,
+            r.uncached_pos_per_tok,
+            r.cached_us_per_tok,
+            r.uncached_us_per_tok,
+            r.uncached_us_per_tok / r.cached_us_per_tok
+        );
+    }
+
+    // Flat vs linear, exactly: cached cost is the same single position
+    // at every context length; uncached cost tracks the context.
+    for w in rows.windows(2) {
+        assert_eq!(
+            w[0].cached_pos_per_tok, w[1].cached_pos_per_tok,
+            "cached decode cost must be independent of context length"
+        );
+        let grew = w[1].uncached_pos_per_tok / w[0].uncached_pos_per_tok;
+        let ctx = w[1].s as f64 / w[0].s as f64;
+        assert!(
+            (grew / ctx - 1.0).abs() < 0.15,
+            "uncached decode cost must scale ~linearly with context ({grew:.2}x over {ctx:.0}x)"
+        );
+    }
+    println!(
+        "\nPASS: cached decode touches {} position/token at every S; uncached grows with S",
+        rows[0].cached_pos_per_tok
+    );
+    rows
+}
+
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1)).cloned();
+
     let reqs = workload();
     let total_budget: usize = reqs.iter().map(|r| r.max_new).sum();
     println!(
@@ -124,5 +271,28 @@ fn main() -> anyhow::Result<()> {
         B / 2
     );
     println!("PASS: continuous batching >= {}x sequential tokens/s at B={B}", B / 2);
+
+    let rows = decode_cost_section();
+
+    if let Some(path) = json_path {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("bench".into(), "generate".into()),
+            ("batch".into(), B.into()),
+            ("requests".into(), REQUESTS.into()),
+            ("sequential_tokens_per_s".into(), seq_tps.into()),
+            ("batched_tokens_per_s".into(), batched_tps.into()),
+            ("batched_speedup".into(), speedup.into()),
+            ("decode_tokens".into(), DECODE_TOKENS.into()),
+        ];
+        for r in &rows {
+            pairs.push((format!("s{}_cached_positions_per_token", r.s), r.cached_pos_per_tok.into()));
+            pairs.push((format!("s{}_uncached_positions_per_token", r.s), r.uncached_pos_per_tok.into()));
+            pairs.push((format!("s{}_cached_us_per_token", r.s), r.cached_us_per_tok.into()));
+            pairs.push((format!("s{}_uncached_us_per_token", r.s), r.uncached_us_per_tok.into()));
+        }
+        let report = Json::from_pairs(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+        std::fs::write(&path, report.dumps_pretty()).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,471 @@
+//! The paged KV cache: per-sequence block tables over the shared pool,
+//! worst-case capacity reservation, and the [`KvStore`] view the model
+//! writes through.
+//!
+//! **Reservation discipline.** [`KvCache::alloc_seq`] leases *all*
+//! blocks a sequence can ever need (up to its token budget) at
+//! admission. The typed [`OutOfBlocks`] error therefore only ever
+//! surfaces at admission — a running decode can never fail on
+//! capacity, so the engine backpressures instead of cancelling
+//! mid-flight work.
+//!
+//! **Block layout.** A block holds `block_size` tokens; per token, the
+//! per-layer K then V vectors (`layer-major`, K before V). Position
+//! `p` lives in table entry `p / block_size` at offset `p % block_size`.
+//!
+//! **Prefix reuse.** At admission the prompt is matched against the
+//! [`super::prefix::PrefixIndex`]; matched full blocks are *referenced*
+//! (refcount), capped at `prompt_len - 1` tokens so the final prompt
+//! position is always recomputed (its logits seed sampling). When the
+//! cap lands mid-block, the covered tokens are copied out of the
+//! shared block into the sequence's first owned block
+//! (**copy-on-extend** — the shared block itself is never written,
+//! which [`super::pool::BlockPool::block_mut`] asserts).
+
+use super::pool::BlockPool;
+use super::prefix::PrefixIndex;
+use super::{KvLayout, KvStats, KvStore, OutOfBlocks};
+use anyhow::{bail, Result};
+
+/// Handle to a live sequence in the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqId(usize);
+
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    /// Block table: entry `i` covers positions `[i*bs, (i+1)*bs)`.
+    blocks: Vec<u32>,
+    /// Committed tokens (positions with KV present).
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    /// Reserved capacity in tokens (`blocks.len() * block_size`).
+    capacity_tokens: usize,
+    /// Leading blocks referenced from the prefix index (immutable).
+    shared_blocks: usize,
+    published: bool,
+}
+
+/// The paged KV cache. One per cached engine; geometry fixed at
+/// construction.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    layout: KvLayout,
+    block_size: usize,
+    pool: BlockPool,
+    seqs: Vec<Option<SeqEntry>>,
+    free_ids: Vec<usize>,
+    prefix: PrefixIndex,
+    prefix_reuse: bool,
+    counters: KvStats,
+}
+
+impl KvCache {
+    pub fn new(
+        layout: KvLayout,
+        block_size: usize,
+        pool_blocks: usize,
+        prefix_reuse: bool,
+    ) -> Result<KvCache> {
+        if layout.layers == 0 || layout.dim == 0 {
+            bail!("KV layout must have layers > 0 and dim > 0");
+        }
+        if block_size == 0 || pool_blocks == 0 {
+            bail!("kv block_size and pool capacity must be > 0");
+        }
+        Ok(KvCache {
+            layout,
+            block_size,
+            pool: BlockPool::new(pool_blocks, block_size * layout.elems_per_token()),
+            seqs: Vec::new(),
+            free_ids: Vec::new(),
+            prefix: PrefixIndex::new(),
+            prefix_reuse,
+            counters: KvStats::default(),
+        })
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Blocks currently held by sequences or the prefix index.
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Counter snapshot (pool lease/release totals folded in).
+    pub fn stats(&self) -> KvStats {
+        let mut s = self.counters;
+        s.blocks_leased = self.pool.leases;
+        s.blocks_released = self.pool.releases;
+        s
+    }
+
+    /// Admit a sequence: reserve blocks for up to `max_total_tokens`
+    /// (prompt + decode budget), reusing published prefix blocks where
+    /// possible. Returns the handle and how many leading prompt tokens
+    /// were satisfied from the cache (the caller feeds
+    /// `prompt[reused..]` through the model).
+    pub fn alloc_seq(
+        &mut self,
+        prompt: &[u32],
+        max_total_tokens: usize,
+    ) -> std::result::Result<(SeqId, usize), OutOfBlocks> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_total_tokens >= prompt.len(), "budget below prompt length");
+        let bs = self.block_size;
+
+        let chain = if self.prefix_reuse {
+            self.counters.lookups += 1;
+            let chain = self.prefix.lookup(prompt, bs);
+            if chain.is_empty() {
+                self.counters.misses += 1;
+            }
+            chain
+        } else {
+            Vec::new()
+        };
+        // Cap reuse below the full prompt: the last prompt position must
+        // run through the model to produce the logits sampling starts from.
+        let reused = (chain.len() * bs).min(prompt.len() - 1);
+        let kept = reused / bs;
+        let rem = reused % bs;
+
+        let total_blocks = max_total_tokens.div_ceil(bs);
+        let owned_needed = total_blocks - kept;
+
+        // Guard every block we are about to read or keep with a
+        // reference *before* evicting, so eviction cannot free them.
+        let guarded = if rem > 0 { kept + 1 } else { kept };
+        for &b in &chain[..guarded] {
+            self.pool.retain(b);
+        }
+        while self.pool.free_blocks() < owned_needed {
+            if !self.prefix.evict_lru(&mut self.pool) {
+                for &b in &chain[..guarded] {
+                    self.pool.release(b);
+                }
+                return Err(OutOfBlocks {
+                    requested: owned_needed,
+                    free: self.pool.free_blocks(),
+                    capacity: self.pool.capacity(),
+                });
+            }
+            self.counters.evictions += 1;
+        }
+
+        let mut blocks: Vec<u32> = chain[..kept].to_vec();
+        for _ in 0..owned_needed {
+            blocks.push(self.pool.lease().expect("free blocks ensured above"));
+        }
+        if rem > 0 {
+            // Copy-on-extend: the reuse cap landed inside chain[kept] —
+            // copy the covered tokens into our first owned block, then
+            // drop the read guard on the shared source.
+            let src = chain[kept];
+            let dst = blocks[kept];
+            self.pool.copy_prefix(src, dst, rem * self.layout.elems_per_token());
+            self.pool.release(src);
+            self.counters.copied_tokens += rem as u64;
+        }
+        self.counters.hit_blocks += kept as u64;
+        self.counters.hit_tokens += reused as u64;
+
+        let entry = SeqEntry {
+            blocks,
+            tokens: prompt[..reused].to_vec(),
+            prompt_len: prompt.len(),
+            capacity_tokens: total_blocks * bs,
+            shared_blocks: kept,
+            published: false,
+        };
+        let id = match self.free_ids.pop() {
+            Some(i) => {
+                self.seqs[i] = Some(entry);
+                i
+            }
+            None => {
+                self.seqs.push(Some(entry));
+                self.seqs.len() - 1
+            }
+        };
+        Ok((SeqId(id), reused))
+    }
+
+    fn entry(&self, id: SeqId) -> &SeqEntry {
+        self.seqs[id.0].as_ref().expect("stale SeqId")
+    }
+
+    /// Positions with KV committed.
+    pub fn committed(&self, id: SeqId) -> usize {
+        self.entry(id).tokens.len()
+    }
+
+    /// Reserved capacity in tokens.
+    pub fn capacity_tokens(&self, id: SeqId) -> usize {
+        self.entry(id).capacity_tokens
+    }
+
+    /// The [`KvStore`] view the model decodes through.
+    pub fn store(&mut self, id: SeqId) -> PagedKv<'_> {
+        let _ = self.entry(id);
+        PagedKv { cache: self, id }
+    }
+
+    /// Publish the sequence's full prompt blocks into the prefix index
+    /// (idempotent; no-op with reuse disabled). Call once prefill has
+    /// committed the whole prompt.
+    pub fn publish_prefix(&mut self, id: SeqId) {
+        if !self.prefix_reuse {
+            return;
+        }
+        let Self { seqs, prefix, pool, counters, block_size, .. } = self;
+        let e = seqs[id.0].as_mut().expect("stale SeqId");
+        if e.published {
+            return;
+        }
+        let full = e.prompt_len / *block_size;
+        assert!(
+            e.tokens.len() >= full * *block_size,
+            "publish before prefill committed the prompt"
+        );
+        e.published = true;
+        for i in e.shared_blocks..full {
+            if prefix.publish(&e.tokens[..(i + 1) * *block_size], e.blocks[i], pool) {
+                counters.publishes += 1;
+            }
+        }
+    }
+
+    /// Release the sequence's block references (slot swap). Blocks the
+    /// prefix index also holds stay resident for future reuse.
+    pub fn free_seq(&mut self, id: SeqId) {
+        let e = self.seqs[id.0].take().expect("stale SeqId");
+        for &b in &e.blocks {
+            self.pool.release(b);
+        }
+        self.free_ids.push(id.0);
+    }
+
+    /// Drop every prefix-index reference (shutdown). After all
+    /// sequences are freed and the index drained, a leak-free engine
+    /// leaves [`Self::blocks_in_use`] at zero.
+    pub fn drain_prefix(&mut self) {
+        self.prefix.drain(&mut self.pool);
+    }
+
+    fn locate(&self, id: SeqId, pos: usize) -> (u32, usize) {
+        let e = self.entry(id);
+        debug_assert!(pos < e.capacity_tokens, "position {pos} beyond reservation");
+        let (bi, off) = (pos / self.block_size, pos % self.block_size);
+        (e.blocks[bi], off * self.layout.elems_per_token())
+    }
+}
+
+/// Mutable [`KvStore`] view of one sequence (see [`KvCache::store`]).
+pub struct PagedKv<'a> {
+    cache: &'a mut KvCache,
+    id: SeqId,
+}
+
+impl KvStore for PagedKv<'_> {
+    fn len(&self) -> usize {
+        self.cache.committed(self.id)
+    }
+
+    fn write(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let dim = self.cache.layout.dim;
+        assert_eq!(k.len(), dim, "K width");
+        assert_eq!(v.len(), dim, "V width");
+        let pos = self.cache.committed(self.id);
+        assert!(
+            pos < self.cache.entry(self.id).capacity_tokens,
+            "KV write beyond the admission-time reservation"
+        );
+        let (block, base) = self.cache.locate(self.id, pos);
+        let at = base + layer * 2 * dim;
+        let blk = self.cache.pool.block_mut(block);
+        blk[at..at + dim].copy_from_slice(k);
+        blk[at + dim..at + 2 * dim].copy_from_slice(v);
+    }
+
+    fn advance(&mut self, tok: u32) {
+        let e = self.cache.seqs[self.id.0].as_mut().expect("stale SeqId");
+        assert!(e.tokens.len() < e.capacity_tokens, "advance beyond reservation");
+        e.tokens.push(tok);
+    }
+
+    fn k(&self, layer: usize, pos: usize) -> &[f32] {
+        let dim = self.cache.layout.dim;
+        let (block, base) = self.cache.locate(self.id, pos);
+        let at = base + layer * 2 * dim;
+        &self.cache.pool.block(block)[at..at + dim]
+    }
+
+    fn v(&self, layer: usize, pos: usize) -> &[f32] {
+        let dim = self.cache.layout.dim;
+        let (block, base) = self.cache.locate(self.id, pos);
+        let at = base + layer * 2 * dim + dim;
+        &self.cache.pool.block(block)[at..at + dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LAYOUT: KvLayout = KvLayout { layers: 2, dim: 2 };
+
+    /// Drive the store like the model does: per committed token, one
+    /// K/V write per layer with position-dependent values.
+    fn feed(cache: &mut KvCache, id: SeqId, tokens: &[u32]) {
+        for &t in tokens {
+            let mut s = cache.store(id);
+            let p = s.len() as f32;
+            for l in 0..LAYOUT.layers {
+                let lf = l as f32;
+                s.write(l, &[p, lf], &[p + 0.5, lf + 0.5]);
+            }
+            s.advance(t);
+        }
+    }
+
+    #[test]
+    fn alloc_feed_read_free_roundtrip() {
+        let mut c = KvCache::new(LAYOUT, 2, 8, false).unwrap();
+        let (id, reused) = c.alloc_seq(&[5, 6, 7], 6).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(c.blocks_in_use(), 3, "ceil(6/2) blocks reserved upfront");
+        feed(&mut c, id, &[5, 6, 7, 11, 12]);
+        assert_eq!(c.committed(id), 5);
+        let s = c.store(id);
+        assert_eq!(s.k(0, 3), &[3.0, 0.0]);
+        assert_eq!(s.v(1, 4), &[4.5, 1.5]);
+        c.free_seq(id);
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.live_seqs(), 0);
+    }
+
+    #[test]
+    fn admission_reservation_is_worst_case() {
+        let mut c = KvCache::new(LAYOUT, 2, 4, false).unwrap();
+        // budget 8 tokens = 4 blocks: fits exactly
+        let (a, _) = c.alloc_seq(&[1, 2], 8).unwrap();
+        assert_eq!(c.free_blocks(), 0);
+        // any further admission backpressures with the typed error
+        let e = c.alloc_seq(&[3], 2).unwrap_err();
+        assert_eq!(e, OutOfBlocks { requested: 1, free: 0, capacity: 4 });
+        c.free_seq(a);
+        assert!(c.alloc_seq(&[3], 2).is_ok());
+    }
+
+    #[test]
+    fn prefix_reuse_references_and_copies() {
+        let mut c = KvCache::new(LAYOUT, 2, 16, true).unwrap();
+        // seq A: 6-token prompt over block_size 2 → three full prompt blocks
+        let prompt = [10, 11, 12, 13, 14, 15];
+        let (a, reused) = c.alloc_seq(&prompt, 8).unwrap();
+        assert_eq!(reused, 0, "cold index");
+        feed(&mut c, a, &prompt);
+        c.publish_prefix(a);
+        assert_eq!(c.prefix_entries(), 3, "three full prompt blocks published");
+        let snap_a: Vec<f32> = {
+            let s = c.store(a);
+            (0..6).flat_map(|p| s.k(0, p).to_vec()).collect()
+        };
+
+        // seq B shares the whole prompt: reuse capped at prompt_len-1=5
+        // → 2 full blocks referenced + 1 token copied (copy-on-extend).
+        let (b, reused_b) = c.alloc_seq(&prompt, 8).unwrap();
+        assert_eq!(reused_b, 5);
+        let st = c.stats();
+        assert_eq!(st.hit_blocks, 2);
+        assert_eq!(st.hit_tokens, 5);
+        assert_eq!(st.copied_tokens, 1);
+        // the copied position reads back the donor's values
+        {
+            let s = c.store(b);
+            assert_eq!(s.k(0, 4), &[4.0, 0.0]);
+            assert_eq!(s.v(1, 3), &[3.5, 1.5]);
+        }
+        // B recomputes position 5 then decodes; A's blocks stay bitwise intact
+        feed(&mut c, b, &[15, 42]);
+        let snap_a2: Vec<f32> = {
+            let s = c.store(a);
+            (0..6).flat_map(|p| s.k(0, p).to_vec()).collect()
+        };
+        assert_eq!(snap_a, snap_a2, "copy-on-extend never mutates shared blocks");
+
+        // seq C with a diverging second block reuses only block 0
+        let (_cseq, reused_c) = c.alloc_seq(&[10, 11, 99, 99], 6).unwrap();
+        assert_eq!(reused_c, 2);
+
+        c.free_seq(a);
+        c.free_seq(b);
+        assert!(c.blocks_in_use() > 0, "published blocks stay resident");
+        c.drain_prefix();
+        c.free_seq(_cseq);
+        assert_eq!(c.blocks_in_use(), 0, "leak-free shutdown");
+        let st = c.stats();
+        assert_eq!(st.blocks_leased, st.blocks_released);
+    }
+
+    #[test]
+    fn eviction_reclaims_unreferenced_prefix_blocks() {
+        let mut c = KvCache::new(LAYOUT, 1, 4, true).unwrap();
+        // fill the pool with a published 2-token prompt, then free it:
+        // 2 blocks stay resident via the index only
+        let (a, _) = c.alloc_seq(&[1, 2], 3).unwrap();
+        feed(&mut c, a, &[1, 2]);
+        c.publish_prefix(a);
+        c.free_seq(a);
+        assert_eq!(c.blocks_in_use(), 2);
+        // a 3-block allocation forces eviction of one index entry
+        let (b, _) = c.alloc_seq(&[7, 8], 3).unwrap();
+        assert!(c.stats().evictions >= 1);
+        c.free_seq(b);
+        c.drain_prefix();
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn reuse_disabled_never_indexes() {
+        let mut c = KvCache::new(LAYOUT, 2, 8, false).unwrap();
+        let (a, _) = c.alloc_seq(&[1, 2, 3, 4], 4).unwrap();
+        feed(&mut c, a, &[1, 2, 3, 4]);
+        c.publish_prefix(a);
+        assert_eq!(c.prefix_entries(), 0);
+        let (_b, reused) = c.alloc_seq(&[1, 2, 3, 4], 4).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(c.stats().lookups, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the admission-time reservation")]
+    fn overrunning_the_reservation_panics() {
+        let mut c = KvCache::new(LAYOUT, 2, 8, false).unwrap();
+        let (id, _) = c.alloc_seq(&[1, 2], 2).unwrap();
+        feed(&mut c, id, &[1, 2]);
+        feed(&mut c, id, &[3]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Registry wiring for the KV-cache subsystem.
+//!
+//! [`KvCacheSpec`] is pure data (the live [`super::KvCache`] is built
+//! on the execution thread by the serving engine). Two config paths,
+//! mirroring the serve subsystem:
+//!
+//! * `kv_*` keys on the top-level `serve:` section (the normal path —
+//!   `serve::ServeSpec::from_config` embeds a spec);
+//! * a `kvcache/paged` component definition for configs that resolve
+//!   everything through the object graph.
+
+use crate::config::Config;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+/// Paged-cache configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvCacheSpec {
+    /// Serve through the incremental (cached) path when the provider
+    /// supports it.
+    pub enabled: bool,
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Shared pool capacity in blocks.
+    pub pool_blocks: usize,
+    /// Prompt tokens fed per engine step during chunked prefill.
+    pub prefill_chunk: usize,
+    /// Publish/reuse shared prompt prefixes.
+    pub prefix_reuse: bool,
+}
+
+impl Default for KvCacheSpec {
+    fn default() -> Self {
+        KvCacheSpec {
+            enabled: true,
+            block_size: 16,
+            pool_blocks: 512,
+            prefill_chunk: 8,
+            prefix_reuse: true,
+        }
+    }
+}
+
+impl KvCacheSpec {
+    /// Read the `serve.kv_*` keys (all optional).
+    pub fn from_config(cfg: &Config) -> Result<KvCacheSpec> {
+        let d = KvCacheSpec::default();
+        Ok(KvCacheSpec {
+            enabled: cfg.bool_or("serve.kv_cache", d.enabled)?,
+            block_size: cfg.usize_or("serve.kv_block_size", d.block_size)?.max(1),
+            pool_blocks: cfg.usize_or("serve.kv_pool_blocks", d.pool_blocks)?.max(1),
+            prefill_chunk: cfg.usize_or("serve.kv_prefill_chunk", d.prefill_chunk)?.max(1),
+            prefix_reuse: cfg.bool_or("serve.kv_prefix_reuse", d.prefix_reuse)?,
+        })
+    }
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("kvcache", "paged", |ctx, cfg| {
+        let d = KvCacheSpec::default();
+        Ok(Component::new(
+            "kvcache",
+            "paged",
+            KvCacheSpec {
+                enabled: ctx.bool_or(cfg, "enabled", d.enabled)?,
+                block_size: ctx.usize_or(cfg, "block_size", d.block_size)?.max(1),
+                pool_blocks: ctx.usize_or(cfg, "pool_blocks", d.pool_blocks)?.max(1),
+                prefill_chunk: ctx.usize_or(cfg, "prefill_chunk", d.prefill_chunk)?.max(1),
+                prefix_reuse: ctx.bool_or(cfg, "prefix_reuse", d.prefix_reuse)?,
+            },
+        ))
+    })?;
+    reg.describe(
+        "kvcache",
+        "paged",
+        "Block-based paged KV cache for the serving engine: fixed-size token blocks leased from a shared free-list pool, per-sequence block tables, chunked prefill, and token-hash prefix reuse with copy-on-extend. Also configurable via `serve.kv_*` keys.",
+        &[
+            ("enabled", "bool", "true", "serve through the incremental (cached) decode path"),
+            ("block_size", "int", "16", "tokens per KV block"),
+            ("pool_blocks", "int", "512", "shared pool capacity in blocks"),
+            ("prefill_chunk", "int", "8", "prompt tokens fed per engine step during prefill"),
+            ("prefix_reuse", "bool", "true", "share published prompt-prefix blocks across sequences"),
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn from_config_defaults_and_overrides() {
+        let cfg = Config::from_str_named("a: 1\n", "<t>").unwrap();
+        assert_eq!(KvCacheSpec::from_config(&cfg).unwrap(), KvCacheSpec::default());
+
+        let cfg = Config::from_str_named(
+            "serve:\n  kv_cache: false\n  kv_block_size: 4\n  kv_pool_blocks: 32\n  \
+             kv_prefill_chunk: 2\n  kv_prefix_reuse: false\n",
+            "<t>",
+        )
+        .unwrap();
+        let s = KvCacheSpec::from_config(&cfg).unwrap();
+        assert!(!s.enabled);
+        assert_eq!(s.block_size, 4);
+        assert_eq!(s.pool_blocks, 32);
+        assert_eq!(s.prefill_chunk, 2);
+        assert!(!s.prefix_reuse);
+    }
+
+    #[test]
+    fn mistyped_key_is_an_error() {
+        let cfg = Config::from_str_named("serve:\n  kv_block_size: big\n", "<t>").unwrap();
+        assert!(KvCacheSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn spec_resolves_through_the_object_graph() {
+        let src = "\
+components:
+  kv:
+    component_key: kvcache
+    variant_key: paged
+    config: {block_size: 8, pool_blocks: 64, prefix_reuse: false}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let spec = g.get::<KvCacheSpec>("kv").unwrap();
+        assert_eq!(spec.block_size, 8);
+        assert_eq!(spec.pool_blocks, 64);
+        assert!(!spec.prefix_reuse);
+        assert!(spec.enabled);
+        assert_eq!(spec.prefill_chunk, 8);
+    }
+}

@@ -1,0 +1,240 @@
+//! Paged KV-cache subsystem: the serving engine's incremental-decode
+//! memory.
+//!
+//! The continuous-batching engine (PR 3) re-ran a full `[B, S]` forward
+//! for every decoded token — O(S) redundant compute per token. This
+//! subsystem stores each sequence's per-layer attention keys/values
+//! once and lets the model attend over them incrementally, so a decode
+//! step touches only the new token. Three layers:
+//!
+//! * [`pool`] — a **block pool** ([`pool::BlockPool`]): one f32 slab
+//!   carved into fixed-size token blocks, leased from a free list with
+//!   per-block reference counts (the scratch-buffer discipline of the
+//!   zero-allocation train step applied to serving: steady-state decode
+//!   allocates nothing). Exhaustion is a *typed* [`OutOfBlocks`] error,
+//!   so admission can backpressure instead of OOM-ing.
+//! * [`cache`] — the **paged cache** ([`cache::KvCache`]): per-sequence
+//!   block tables mapping token position → (block, offset), worst-case
+//!   capacity reservation at admission (decode can never run out
+//!   mid-flight), and a [`KvStore`] view ([`cache::PagedKv`]) the model
+//!   writes through.
+//! * [`prefix`] — the **prefix index** ([`prefix::PrefixIndex`]):
+//!   full prompt blocks are published under a token-chain hash, so
+//!   sequences sharing a system prompt reference the same immutable
+//!   blocks (copy-on-extend for the partial tail; shared blocks are
+//!   never written — [`pool::BlockPool::block_mut`] asserts it). LRU
+//!   eviction reclaims unreferenced entries under pressure; hit/miss/
+//!   eviction counters surface in [`KvStats`] via the engine stats.
+//!
+//! The model side is the [`KvStore`] trait: one per-position step
+//! function (see `model::refmodel`) runs against either [`FlatKv`]
+//! (plain vectors — the full `[B, S]` forward) or the paged view, which
+//! is what makes cached and uncached decode **bitwise identical** (the
+//! `kvcache_equivalence` suite pins it, same standard as
+//! `backend_equivalence.rs`). Configure via `serve.kv_*` keys or the
+//! `kvcache/paged` component ([`components::KvCacheSpec`]).
+
+pub mod cache;
+pub mod components;
+pub mod pool;
+pub mod prefix;
+
+pub use cache::{KvCache, PagedKv, SeqId};
+pub use components::KvCacheSpec;
+pub use pool::BlockPool;
+pub use prefix::PrefixIndex;
+
+/// Per-token KV geometry: `layers` layers, each storing one K and one V
+/// vector of `dim` f32 per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub layers: usize,
+    pub dim: usize,
+}
+
+impl KvLayout {
+    /// f32 elements stored per token across all layers (K and V).
+    pub fn elems_per_token(&self) -> usize {
+        self.layers * 2 * self.dim
+    }
+}
+
+/// Typed capacity error: the pool cannot lease `requested` more blocks.
+///
+/// Admission matches on this (via `anyhow::Error::downcast_ref`) to
+/// leave the request queued — backpressure, not failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutOfBlocks {
+    /// Blocks the failed operation needed.
+    pub requested: usize,
+    /// Blocks free at the time (after eviction attempts).
+    pub free: usize,
+    /// Total pool capacity in blocks.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for OutOfBlocks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "out of KV blocks: {} requested, {} free of {} total",
+            self.requested, self.free, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OutOfBlocks {}
+
+/// Cache-level counters, surfaced through `EngineStats::kv`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Prefix-index lookups (one per admission with reuse enabled).
+    pub lookups: u64,
+    /// Lookups that matched no published block.
+    pub misses: u64,
+    /// Full blocks referenced instead of recomputed.
+    pub hit_blocks: u64,
+    /// Prompt tokens whose KV was reused (referenced or copied).
+    pub hit_tokens: u64,
+    /// Tokens copied out of a shared block (copy-on-extend).
+    pub copied_tokens: u64,
+    /// Full prompt blocks published into the prefix index.
+    pub publishes: u64,
+    /// Index entries evicted to satisfy an allocation.
+    pub evictions: u64,
+    /// Blocks leased from / released to the pool (lifetime counters;
+    /// equal after a leak-free shutdown).
+    pub blocks_leased: u64,
+    pub blocks_released: u64,
+}
+
+/// Storage a transformer's attention reads cached K/V from and writes
+/// new K/V into — the seam that makes the full and incremental forward
+/// paths the *same code*.
+///
+/// Protocol per token: the model reads `len()` as the token's position,
+/// calls [`KvStore::write`] once per layer, attends (reads up to and
+/// including the in-flight position), then commits with
+/// [`KvStore::advance`].
+pub trait KvStore {
+    /// Tokens committed so far (== the position of the in-flight token).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Append K/V for `layer` at position `len()`.
+    fn write(&mut self, layer: usize, k: &[f32], v: &[f32]);
+    /// Commit the in-flight token (recording its id for prefix reuse).
+    fn advance(&mut self, tok: u32);
+    /// K vector of `layer` at `pos` (`pos == len()` reads the in-flight
+    /// token's freshly written K).
+    fn k(&self, layer: usize, pos: usize) -> &[f32];
+    /// V vector of `layer` at `pos`.
+    fn v(&self, layer: usize, pos: usize) -> &[f32];
+}
+
+/// Contiguous (unpaged) [`KvStore`]: per-layer growable vectors. The
+/// full `[B, S]` forward uses one per batch row; it is also the
+/// reference the paged view is tested against.
+#[derive(Clone, Debug)]
+pub struct FlatKv {
+    layout: KvLayout,
+    len: usize,
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+}
+
+impl FlatKv {
+    pub fn new(layout: KvLayout) -> FlatKv {
+        FlatKv {
+            layout,
+            len: 0,
+            ks: vec![Vec::new(); layout.layers],
+            vs: vec![Vec::new(); layout.layers],
+        }
+    }
+
+    /// Reset for the next batch row, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        for b in self.ks.iter_mut().chain(self.vs.iter_mut()) {
+            b.clear();
+        }
+    }
+}
+
+impl KvStore for FlatKv {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn write(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let d = self.layout.dim;
+        assert_eq!(k.len(), d, "K width");
+        assert_eq!(v.len(), d, "V width");
+        assert_eq!(self.ks[layer].len(), self.len * d, "layer {layer} written twice");
+        self.ks[layer].extend_from_slice(k);
+        self.vs[layer].extend_from_slice(v);
+    }
+
+    fn advance(&mut self, _tok: u32) {
+        self.len += 1;
+    }
+
+    fn k(&self, layer: usize, pos: usize) -> &[f32] {
+        let d = self.layout.dim;
+        &self.ks[layer][pos * d..(pos + 1) * d]
+    }
+
+    fn v(&self, layer: usize, pos: usize) -> &[f32] {
+        let d = self.layout.dim;
+        &self.vs[layer][pos * d..(pos + 1) * d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_arithmetic() {
+        let l = KvLayout { layers: 2, dim: 8 };
+        assert_eq!(l.elems_per_token(), 32);
+    }
+
+    #[test]
+    fn out_of_blocks_is_typed_and_downcastable() {
+        let e = OutOfBlocks { requested: 3, free: 1, capacity: 4 };
+        let any: anyhow::Error = e.into();
+        let back = any.downcast_ref::<OutOfBlocks>().expect("typed error survives anyhow");
+        assert_eq!(back.requested, 3);
+        assert!(any.to_string().contains("out of KV blocks"));
+    }
+
+    #[test]
+    fn flat_store_roundtrip() {
+        let mut kv = FlatKv::new(KvLayout { layers: 2, dim: 2 });
+        assert!(kv.is_empty());
+        kv.write(0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.write(1, &[5.0, 6.0], &[7.0, 8.0]);
+        // in-flight position readable before commit
+        assert_eq!(kv.k(0, 0), &[1.0, 2.0]);
+        kv.advance(9);
+        assert_eq!(kv.len(), 1);
+        kv.write(0, &[9.0, 9.5], &[0.0, 0.5]);
+        kv.write(1, &[1.5, 2.5], &[3.5, 4.5]);
+        kv.advance(10);
+        assert_eq!(kv.k(0, 1), &[9.0, 9.5]);
+        assert_eq!(kv.v(1, 0), &[7.0, 8.0]);
+        kv.clear();
+        assert_eq!(kv.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "written twice")]
+    fn double_write_per_layer_panics() {
+        let mut kv = FlatKv::new(KvLayout { layers: 1, dim: 1 });
+        kv.write(0, &[1.0], &[2.0]);
+        kv.write(0, &[1.0], &[2.0]);
+    }
+}

@@ -1,0 +1,214 @@
+//! The shared block pool: one f32 slab, a free list, and per-block
+//! reference counts.
+//!
+//! All KV storage for every sequence lives in a single slab allocated
+//! once at engine construction (`capacity_blocks × block_elems` f32).
+//! Sequences *lease* blocks and *release* them back; the prefix index
+//! *retains* published blocks so multiple sequences (and the index
+//! itself) can hold the same immutable block. Steady-state decode
+//! therefore allocates nothing — the same discipline as the train
+//! step's scratch buffers.
+//!
+//! Capacity exhaustion is the typed [`OutOfBlocks`] error, never a
+//! panic or an unbounded allocation: admission backpressures on it.
+//! Mutation safety is enforced at the seam: [`BlockPool::block_mut`]
+//! asserts the block is exclusively held (refcount 1), so shared
+//! prefix blocks are immutable by construction.
+
+use super::OutOfBlocks;
+
+/// Fixed-capacity pool of equally-sized f32 blocks.
+#[derive(Clone, Debug)]
+pub struct BlockPool {
+    block_elems: usize,
+    slab: Vec<f32>,
+    refcounts: Vec<u32>,
+    /// Free block ids, popped LIFO (cache-friendly reuse).
+    free: Vec<u32>,
+    /// Lifetime counters (leak accounting).
+    pub leases: u64,
+    pub releases: u64,
+}
+
+impl BlockPool {
+    pub fn new(capacity_blocks: usize, block_elems: usize) -> BlockPool {
+        assert!(capacity_blocks > 0, "pool needs at least one block");
+        assert!(block_elems > 0, "blocks must hold data");
+        BlockPool {
+            block_elems,
+            slab: vec![0f32; capacity_blocks * block_elems],
+            refcounts: vec![0; capacity_blocks],
+            // LIFO pop order: lease order is 0, 1, 2, ... from a fresh pool.
+            free: (0..capacity_blocks as u32).rev().collect(),
+            leases: 0,
+            releases: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently held by at least one owner.
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcounts[block as usize]
+    }
+
+    /// Lease a zeroed block (refcount 1).
+    pub fn lease(&mut self) -> Result<u32, OutOfBlocks> {
+        let Some(b) = self.free.pop() else {
+            return Err(OutOfBlocks { requested: 1, free: 0, capacity: self.capacity() });
+        };
+        debug_assert_eq!(self.refcounts[b as usize], 0);
+        self.refcounts[b as usize] = 1;
+        self.block_mut(b).fill(0.0);
+        self.leases += 1;
+        Ok(b)
+    }
+
+    /// Add a reference to an already-leased block (prefix sharing).
+    pub fn retain(&mut self, block: u32) {
+        assert!(self.refcounts[block as usize] > 0, "retain of a free block {block}");
+        self.refcounts[block as usize] += 1;
+    }
+
+    /// Drop one reference; the last release returns the block to the
+    /// free list.
+    pub fn release(&mut self, block: u32) {
+        let rc = &mut self.refcounts[block as usize];
+        assert!(*rc > 0, "release of a free block {block}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(block);
+            self.releases += 1;
+        }
+    }
+
+    /// Read-only view of a block's data.
+    pub fn block(&self, block: u32) -> &[f32] {
+        let b = block as usize;
+        &self.slab[b * self.block_elems..(b + 1) * self.block_elems]
+    }
+
+    /// Mutable view — only for *exclusively held* blocks. The assert is
+    /// the copy-on-extend invariant: a block visible to the prefix
+    /// index or another sequence (refcount > 1) can never be written.
+    pub fn block_mut(&mut self, block: u32) -> &mut [f32] {
+        assert_eq!(
+            self.refcounts[block as usize],
+            1,
+            "write to shared block {block} (copy-on-extend violated)"
+        );
+        let b = block as usize;
+        &mut self.slab[b * self.block_elems..(b + 1) * self.block_elems]
+    }
+
+    /// Copy the first `elems` f32 of `src` into `dst` (copy-on-extend
+    /// of a partially-reused shared block into an owned one).
+    pub fn copy_prefix(&mut self, src: u32, dst: u32, elems: usize) {
+        assert_ne!(src, dst, "copy within one block");
+        assert!(elems <= self.block_elems);
+        assert_eq!(self.refcounts[dst as usize], 1, "copy into shared block {dst}");
+        let (s, d) = (src as usize * self.block_elems, dst as usize * self.block_elems);
+        // Split the slab so src stays readable while dst is written.
+        if s < d {
+            let (a, b) = self.slab.split_at_mut(d);
+            b[..elems].copy_from_slice(&a[s..s + elems]);
+        } else {
+            let (a, b) = self.slab.split_at_mut(s);
+            a[d..d + elems].copy_from_slice(&b[..elems]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_free_roundtrip() {
+        let mut p = BlockPool::new(3, 4);
+        assert_eq!((p.capacity(), p.free_blocks(), p.in_use()), (3, 3, 0));
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.in_use(), 2);
+        p.block_mut(a).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.block(a), &[1.0, 2.0, 3.0, 4.0]);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 2);
+        // a fresh lease of the same block comes back zeroed
+        let c = p.lease().unwrap();
+        assert_eq!(c, a, "LIFO reuse");
+        assert_eq!(p.block(c), &[0.0; 4]);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.leases, 3);
+        assert_eq!(p.releases, 3);
+    }
+
+    #[test]
+    fn exhaustion_is_typed() {
+        let mut p = BlockPool::new(2, 1);
+        p.lease().unwrap();
+        p.lease().unwrap();
+        let e = p.lease().unwrap_err();
+        assert_eq!(e, OutOfBlocks { requested: 1, free: 0, capacity: 2 });
+    }
+
+    #[test]
+    fn refcounts_gate_reclamation() {
+        let mut p = BlockPool::new(2, 1);
+        let a = p.lease().unwrap();
+        p.retain(a);
+        assert_eq!(p.refcount(a), 2);
+        p.release(a);
+        assert_eq!(p.in_use(), 1, "still held by one owner");
+        p.release(a);
+        assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-extend violated")]
+    fn shared_blocks_are_immutable() {
+        let mut p = BlockPool::new(2, 1);
+        let a = p.lease().unwrap();
+        p.retain(a);
+        let _ = p.block_mut(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of a free block")]
+    fn double_release_panics() {
+        let mut p = BlockPool::new(1, 1);
+        let a = p.lease().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn copy_prefix_both_directions() {
+        let mut p = BlockPool::new(2, 4);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        p.block_mut(a).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.copy_prefix(a, b, 2);
+        assert_eq!(p.block(b), &[1.0, 2.0, 0.0, 0.0]);
+        p.block_mut(b).copy_from_slice(&[9.0, 8.0, 7.0, 6.0]);
+        p.copy_prefix(b, a, 3);
+        assert_eq!(p.block(a), &[9.0, 8.0, 7.0, 4.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Token-hash-keyed prefix index: shared immutable prompt blocks.
+//!
+//! When a sequence finishes prefilling, each *full* block of its prompt
+//! is published here under a **chain key** — a hash of every token from
+//! position 0 through the end of that block (not just the block's own
+//! tokens, so `[sys, a]` and `[other, a]` never alias). A later
+//! admission walks its prompt block-by-block: as long as the chain
+//! keys match (and the stored tokens verify exactly — hash collisions
+//! degrade to misses, never to wrong KV), the sequence *references* the
+//! published blocks instead of recomputing them.
+//!
+//! Entries hold one pool reference per block. Under pressure the cache
+//! evicts least-recently-used entries whose block nobody else holds
+//! (refcount 1); evicting a chain's parent merely makes its children
+//! unreachable until they age out the same way.
+
+use super::pool::BlockPool;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+struct Entry {
+    /// The full token chain `prompt[..k*block_size]` this block ends.
+    tokens: Vec<u32>,
+    block: u32,
+    last_used: u64,
+}
+
+/// The prefix-reuse index. All clocks are logical (lookup/publish
+/// order), so behaviour is deterministic and reproducible.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixIndex {
+    map: HashMap<u64, Entry>,
+    clock: u64,
+}
+
+/// FNV-1a over the token prefix (chain key).
+fn chain_key(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Longest published block chain matching `prompt`, earliest block
+    /// first. Matched entries are touched (LRU refresh).
+    pub fn lookup(&mut self, prompt: &[u32], block_size: usize) -> Vec<u32> {
+        self.clock += 1;
+        let mut chain = Vec::new();
+        let mut end = block_size;
+        while end <= prompt.len() {
+            let key = chain_key(&prompt[..end]);
+            match self.map.get_mut(&key) {
+                Some(e) if e.tokens == prompt[..end] => {
+                    e.last_used = self.clock;
+                    chain.push(e.block);
+                }
+                _ => break,
+            }
+            end += block_size;
+        }
+        chain
+    }
+
+    /// Publish `block` as the KV of the full token chain `tokens`
+    /// (length a multiple of the block size). Takes one pool reference
+    /// on success; a pre-existing entry (same chain already published,
+    /// or a colliding key) leaves the index unchanged.
+    pub fn publish(&mut self, tokens: &[u32], block: u32, pool: &mut BlockPool) -> bool {
+        let key = chain_key(tokens);
+        if self.map.contains_key(&key) {
+            return false;
+        }
+        self.clock += 1;
+        pool.retain(block);
+        self.map.insert(key, Entry { tokens: tokens.to_vec(), block, last_used: self.clock });
+        true
+    }
+
+    /// Evict the least-recently-used entry whose block only the index
+    /// holds (refcount 1). Ties break on the chain key, so eviction
+    /// order never depends on hash-map iteration order.
+    pub fn evict_lru(&mut self, pool: &mut BlockPool) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(_, e)| pool.refcount(e.block) == 1)
+            .map(|(&k, e)| (e.last_used, k))
+            .min();
+        match victim {
+            Some((_, key)) => {
+                let e = self.map.remove(&key).unwrap();
+                pool.release(e.block);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release every held block and clear the index (engine shutdown /
+    /// leak accounting).
+    pub fn drain(&mut self, pool: &mut BlockPool) {
+        for (_, e) in self.map.drain() {
+            pool.release(e.block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_lookup_matches_longest_prefix() {
+        let mut pool = BlockPool::new(4, 1);
+        let mut ix = PrefixIndex::new();
+        let b0 = pool.lease().unwrap();
+        let b1 = pool.lease().unwrap();
+        assert!(ix.publish(&[1, 2], b0, &mut pool));
+        assert!(ix.publish(&[1, 2, 3, 4], b1, &mut pool));
+        assert_eq!(ix.len(), 2);
+
+        assert_eq!(ix.lookup(&[1, 2, 3, 4, 5], 2), vec![b0, b1]);
+        assert_eq!(ix.lookup(&[1, 2, 9, 9], 2), vec![b0], "chain breaks at block 2");
+        assert!(ix.lookup(&[7, 2, 3, 4], 2).is_empty(), "different first block");
+        assert!(ix.lookup(&[1], 2).is_empty(), "shorter than one block");
+    }
+
+    #[test]
+    fn double_publish_is_a_noop() {
+        let mut pool = BlockPool::new(2, 1);
+        let mut ix = PrefixIndex::new();
+        let b0 = pool.lease().unwrap();
+        assert!(ix.publish(&[5, 6], b0, &mut pool));
+        assert_eq!(pool.refcount(b0), 2);
+        assert!(!ix.publish(&[5, 6], b0, &mut pool));
+        assert_eq!(pool.refcount(b0), 2, "no extra reference taken");
+    }
+
+    #[test]
+    fn eviction_is_lru_and_respects_refcounts() {
+        let mut pool = BlockPool::new(3, 1);
+        let mut ix = PrefixIndex::new();
+        let (a, b, c) = (pool.lease().unwrap(), pool.lease().unwrap(), pool.lease().unwrap());
+        ix.publish(&[1, 1], a, &mut pool);
+        ix.publish(&[2, 2], b, &mut pool);
+        ix.publish(&[3, 3], c, &mut pool);
+        // the publisher sequences release their own references
+        pool.release(a);
+        pool.release(b);
+        pool.release(c);
+        // touch [1,1] so [2,2] becomes the LRU candidate
+        assert_eq!(ix.lookup(&[1, 1], 2), vec![a]);
+        assert!(ix.evict_lru(&mut pool));
+        assert_eq!(ix.len(), 2);
+        assert!(ix.lookup(&[2, 2], 2).is_empty(), "LRU entry evicted");
+        assert_eq!(ix.lookup(&[1, 1], 2), vec![a], "recently-used entry survives");
+
+        // a sequence still referencing a block protects it from eviction
+        pool.retain(a);
+        // evict_lru removes [3,3] (refcount 1), then nothing is evictable
+        assert!(ix.evict_lru(&mut pool));
+        assert!(!ix.evict_lru(&mut pool), "only a referenced entry remains");
+        assert_eq!(ix.len(), 1);
+        pool.release(a);
+        ix.drain(&mut pool);
+        assert_eq!(pool.in_use(), 0, "drain releases everything");
+    }
+}

@@ -46,6 +46,7 @@ pub mod elastic;
 pub mod fsdp;
 pub mod gym;
 pub mod kernels;
+pub mod kvcache;
 pub mod model;
 pub mod optim;
 pub mod perfmodel;

@@ -514,91 +514,147 @@ fn serve_prompts(args: &Args, cfg: &Config) -> Result<Vec<Vec<u32>>> {
     Ok(prompts)
 }
 
+/// Drive a pre-built engine over the request list and print the
+/// standard serve summary; the cached backend additionally reports KV
+/// prefix hit/miss/eviction counters and the block-leak check.
+fn drive_serve(
+    mut engine: modalities::serve::BatchedEngine<'_>,
+    prompts: &[Vec<u32>],
+    spec: &modalities::serve::ServeSpec,
+    geom: (usize, usize, usize),
+    label: &str,
+) -> Result<()> {
+    use modalities::serve::Request;
+    println!(
+        "serve: {} requests through a B={} continuous-batching engine \
+         (S={}, V={}, queue={}, {label})",
+        prompts.len(),
+        geom.0,
+        geom.1,
+        geom.2,
+        spec.queue_capacity,
+    );
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            prompt: p.clone(),
+            max_new: spec.max_new_tokens,
+            sampling: spec.sampling_for(i as u64),
+            deadline_steps: spec.deadline_steps,
+        })
+        .collect();
+    let timer = modalities::util::stats::Timer::start();
+    let mut next = 0usize;
+    while next < reqs.len() || !engine.is_idle() {
+        while next < reqs.len() {
+            match engine.try_submit(reqs[next].clone())? {
+                Some(_) => next += 1,
+                None => break, // bounded queue full: decode a step first
+            }
+        }
+        engine.step()?;
+    }
+    let done = engine.run_until_idle()?;
+    let elapsed = timer.elapsed_s();
+    for c in &done {
+        let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
+        println!(
+            "[req {}] finish={} prompt {} + {} tokens: {}",
+            c.id,
+            c.finish,
+            c.prompt_len,
+            c.generated().len(),
+            toks.join(",")
+        );
+    }
+    let s = engine.stats;
+    println!(
+        "serve done: {}/{} complete, {} forwards, {} tokens generated, \
+         mean occupancy {:.2}, peak {}, {}",
+        s.completed,
+        reqs.len(),
+        s.forwards,
+        s.tokens_generated,
+        s.mean_occupancy(),
+        s.peak_active,
+        human::rate(s.tokens_generated as f64 / elapsed.max(1e-9), "tok"),
+    );
+    if engine.is_cached() {
+        let kv = engine.kv_stats().unwrap_or_default();
+        println!(
+            "kv cache: block_size={} pool={} blocks, prefix hits={} misses={}, \
+             hit tokens={} copied tokens={}, publishes={} evictions={}, \
+             leases={} releases={}",
+            spec.kv.block_size,
+            spec.kv.pool_blocks,
+            kv.lookups - kv.misses,
+            kv.misses,
+            kv.hit_tokens,
+            kv.copied_tokens,
+            kv.publishes,
+            kv.evictions,
+            kv.blocks_leased,
+            kv.blocks_released,
+        );
+        let leaked = engine.kv_shutdown().unwrap_or(0);
+        println!("kv blocks leaked: {leaked}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use modalities::runtime::pjrt::PjrtEngine;
-    use modalities::serve::{
-        BatchedEngine, LogitsProvider, ModelLogitsProvider, Request, ServeSpec,
-    };
+    use modalities::serve::{BatchedEngine, LogitsProvider, ModelLogitsProvider, ServeSpec};
     let cfg = load_config(args)?;
     let spec = ServeSpec::from_config(&cfg)?;
     let prompts = serve_prompts(args, &cfg)?;
 
-    let drive = |provider: &mut dyn LogitsProvider, label: &str| -> Result<()> {
-        println!(
-            "serve: {} requests through a B={} continuous-batching engine \
-             (S={}, V={}, queue={}, {label})",
-            prompts.len(),
-            provider.batch_size(),
-            provider.seq_len(),
-            provider.vocab_size(),
-            spec.queue_capacity,
-        );
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .enumerate()
-            .map(|(i, p)| Request {
-                prompt: p.clone(),
-                max_new: spec.max_new_tokens,
-                sampling: spec.sampling_for(i as u64),
-                deadline_steps: spec.deadline_steps,
-            })
-            .collect();
-        let mut engine = BatchedEngine::new(provider, spec.engine_config())?;
-        let timer = modalities::util::stats::Timer::start();
-        let mut next = 0usize;
-        while next < reqs.len() || !engine.is_idle() {
-            while next < reqs.len() {
-                match engine.try_submit(reqs[next].clone())? {
-                    Some(_) => next += 1,
-                    None => break, // bounded queue full: decode a step first
-                }
-            }
-            engine.step()?;
-        }
-        let done = engine.run_until_idle()?;
-        let elapsed = timer.elapsed_s();
-        for c in &done {
-            let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
-            println!(
-                "[req {}] finish={} prompt {} + {} tokens: {}",
-                c.id,
-                c.finish,
-                c.prompt_len,
-                c.generated().len(),
-                toks.join(",")
-            );
-        }
-        let s = engine.stats;
-        println!(
-            "serve done: {}/{} complete, {} forwards, {} tokens generated, \
-             mean occupancy {:.2}, peak {}, {}",
-            s.completed,
-            reqs.len(),
-            s.forwards,
-            s.tokens_generated,
-            s.mean_occupancy(),
-            s.peak_active,
-            human::rate(s.tokens_generated as f64 / elapsed.max(1e-9), "tok"),
-        );
-        Ok(())
-    };
-
     if args.has_flag("synthetic") {
-        let mut provider = spec.synthetic_provider(None);
-        drive(&mut provider, "synthetic provider")
+        if spec.provider == "reference" {
+            let mut p = spec.reference_provider(None)?;
+            let geom = (p.batch_size(), p.seq_len(), p.vocab_size());
+            if spec.kv.enabled {
+                let e = BatchedEngine::new_cached(&mut p, spec.engine_config(), &spec.kv)?;
+                drive_serve(e, &prompts, &spec, geom, "reference model, paged KV cache")
+            } else {
+                let e = BatchedEngine::new(&mut p, spec.engine_config())?;
+                drive_serve(e, &prompts, &spec, geom, "reference model, full forward")
+            }
+        } else {
+            let mut p = spec.synthetic_provider(None);
+            let geom = (p.batch_size(), p.seq_len(), p.vocab_size());
+            if spec.kv.enabled {
+                let e = BatchedEngine::new_cached(&mut p, spec.engine_config(), &spec.kv)?;
+                drive_serve(e, &prompts, &spec, geom, "synthetic provider, paged KV cache")
+            } else {
+                let e = BatchedEngine::new(&mut p, spec.engine_config())?;
+                drive_serve(e, &prompts, &spec, geom, "synthetic provider")
+            }
+        }
     } else {
         let engine = PjrtEngine::cpu()?;
         let (model, params) = materialize_for_inference(args, &cfg, &engine)?;
+        if spec.kv.enabled {
+            log::info!(
+                "serve.kv_cache is on, but the static fwd artifact re-runs the full \
+                 sequence per step; decoding through the full-forward backend"
+            );
+        }
         let mut provider =
             ModelLogitsProvider { engine: &engine, model: &model, params: &params };
-        drive(&mut provider, "fwd artifact")
+        let geom = (provider.batch_size(), provider.seq_len(), provider.vocab_size());
+        let e = BatchedEngine::new(&mut provider, spec.engine_config())?;
+        drive_serve(e, &prompts, &spec, geom, "fwd artifact")
     }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     use modalities::data::components::DataLoaderComponent;
     use modalities::runtime::pjrt::PjrtEngine;
-    use modalities::serve::{evaluate_loader, ModelLogitsProvider, ServeSpec};
+    use modalities::serve::{
+        evaluate_loader, evaluate_loader_incremental, ModelLogitsProvider, ServeSpec,
+    };
     let cfg = load_config(args)?;
     let spec = ServeSpec::from_config(&cfg)?;
     let reg = ComponentRegistry::with_builtins();
@@ -620,8 +676,24 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     let batches = args.opt_usize("batches", spec.eval_batches)?;
     let report = if args.has_flag("synthetic") {
-        let mut provider = spec.synthetic_provider(Some(loader.dataset.seq_len()));
-        evaluate_loader(&mut provider, &loader, batches)?
+        // The incremental path scores identically (bitwise) to the
+        // full grid — only the `forwards` accounting differs.
+        let seq = Some(loader.dataset.seq_len());
+        if spec.provider == "reference" {
+            let mut provider = spec.reference_provider(seq)?;
+            if spec.kv.enabled {
+                evaluate_loader_incremental(&mut provider, &loader, batches, &spec.kv)?
+            } else {
+                evaluate_loader(&mut provider, &loader, batches)?
+            }
+        } else {
+            let mut provider = spec.synthetic_provider(seq);
+            if spec.kv.enabled {
+                evaluate_loader_incremental(&mut provider, &loader, batches, &spec.kv)?
+            } else {
+                evaluate_loader(&mut provider, &loader, batches)?
+            }
+        }
     } else {
         let engine = PjrtEngine::cpu()?;
         let (model, params) = materialize_for_inference(args, &cfg, &engine)?;

@@ -15,10 +15,12 @@
 //!   is the hot path: literals in → (loss, grads) out.
 
 pub mod components;
+pub mod refmodel;
 
 use crate::runtime::pjrt::{
     literal_f32, to_f32_scalar, to_f32_vec, tokens_literal, Manifest, ModelArtifacts, PjrtEngine,
 };
+use crate::runtime::xla_shim as xla;
 use crate::util::prng::Pcg64;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;

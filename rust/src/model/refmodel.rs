@@ -1,0 +1,389 @@
+//! The pure-Rust reference transformer: one per-position step function
+//! behind both the full `[B, S]` forward and the KV-cached incremental
+//! forward.
+//!
+//! The PJRT artifact path cannot decode incrementally (its HLO is a
+//! static full-sequence graph), so this model is the crate's *real*
+//! attention stack for the serving engine: RMSNorm → RoPE causal
+//! multi-head attention → SiLU MLP decoder blocks with tied embedding
+//! logits, seeded from the in-repo PRNG (no artifacts, no Python).
+//!
+//! **The equivalence trick is structural.** [`RefModel::step`]
+//! processes exactly one position and touches K/V only through the
+//! [`KvStore`] trait. The full forward runs it over a [`FlatKv`]; the
+//! incremental forward runs *the same function* over a paged
+//! [`crate::kvcache::KvCache`] view. Every float op therefore executes
+//! in the same order with the same inputs in both modes — cached and
+//! uncached logits are **bitwise identical**, which the
+//! `kvcache_equivalence` suite pins at the `backend_equivalence.rs`
+//! standard. The only cost difference is positions processed:
+//! O(context) per decoded token uncached vs O(1) cached
+//! ([`RefModel::positions_processed`] makes `bench_generate`'s scaling
+//! assertion exact, not a wall-clock heuristic).
+
+use crate::kvcache::{FlatKv, KvLayout, KvStore};
+use crate::util::prng::Pcg64;
+use anyhow::{bail, Result};
+
+/// Geometry + seed of a reference model (pure data, registry-friendly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RefModelSpec {
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Batch rows exposed to the engine (`LogitsProvider::batch_size`).
+    pub batch: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seed: u64,
+}
+
+impl RefModelSpec {
+    /// The nano geometry used by smokes and benches.
+    pub fn nano(vocab: usize, seq_len: usize, batch: usize) -> RefModelSpec {
+        RefModelSpec { vocab, seq_len, batch, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, seed: 0 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab < 2 || self.seq_len < 2 || self.batch == 0 {
+            bail!("reference model needs vocab >= 2, seq_len >= 2, batch >= 1");
+        }
+        if self.d_model == 0 || self.n_layers == 0 || self.d_ff == 0 {
+            bail!("reference model dims must be > 0");
+        }
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            bail!("d_model {} must divide into n_heads {}", self.d_model, self.n_heads);
+        }
+        if (self.d_model / self.n_heads) % 2 != 0 {
+            bail!("head dim must be even for RoPE");
+        }
+        Ok(())
+    }
+}
+
+struct RefLayer {
+    attn_norm: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    w_up: Vec<f32>,
+    w_down: Vec<f32>,
+}
+
+/// The instantiated reference model (owns its f32 parameters).
+pub struct RefModel {
+    spec: RefModelSpec,
+    /// `[vocab, d_model]`, tied with the output head.
+    tok_emb: Vec<f32>,
+    layers: Vec<RefLayer>,
+    final_norm: Vec<f32>,
+    /// Positions run through [`Self::step`] since construction — the
+    /// exact cost counter `bench_generate` asserts on.
+    pub positions_processed: u64,
+}
+
+const NORM_EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 10_000.0;
+
+fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let mut ms = 0f32;
+    for &v in x {
+        ms += v * v;
+    }
+    let scale = 1.0 / (ms / x.len() as f32 + NORM_EPS).sqrt();
+    x.iter().zip(w).map(|(&v, &g)| v * scale * g).collect()
+}
+
+/// `y = W x` with `W` row-major `[rows, cols]`.
+fn matvec(w: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    let mut y = vec![0f32; rows];
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut acc = 0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        *yr = acc;
+    }
+    y
+}
+
+/// Rotate each head's `(i, i + hd/2)` pairs by the position angle.
+fn rope(x: &mut [f32], pos: usize, head_dim: usize) {
+    let half = head_dim / 2;
+    for head in x.chunks_mut(head_dim) {
+        for i in 0..half {
+            let freq = ROPE_THETA.powf(-(2.0 * i as f32) / head_dim as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (head[i], head[i + half]);
+            head[i] = a * cos - b * sin;
+            head[i + half] = a * sin + b * cos;
+        }
+    }
+}
+
+impl RefModel {
+    /// Seeded scaled-normal init (std 0.02, residual projections scaled
+    /// by 1/√(2L), norm weights 1 — the `ParamStore` scheme).
+    pub fn new(spec: RefModelSpec) -> Result<RefModel> {
+        spec.validate()?;
+        let mut rng = Pcg64::new(spec.seed ^ 0x7265_666d); // "refm"
+        let resid = 1.0 / (2.0 * spec.n_layers as f32).sqrt();
+        let mut normal = |n: usize, std: f32| {
+            let mut buf = vec![0f32; n];
+            rng.fill_normal_f32(&mut buf, std);
+            buf
+        };
+        let (d, f) = (spec.d_model, spec.d_ff);
+        let tok_emb = normal(spec.vocab * d, 0.02);
+        let layers = (0..spec.n_layers)
+            .map(|_| RefLayer {
+                attn_norm: vec![1.0; d],
+                wq: normal(d * d, 0.02),
+                wk: normal(d * d, 0.02),
+                wv: normal(d * d, 0.02),
+                wo: normal(d * d, 0.02 * resid),
+                mlp_norm: vec![1.0; d],
+                w_up: normal(f * d, 0.02),
+                w_down: normal(d * f, 0.02 * resid),
+            })
+            .collect();
+        Ok(RefModel {
+            spec,
+            tok_emb,
+            layers,
+            final_norm: vec![1.0; spec.d_model],
+            positions_processed: 0,
+        })
+    }
+
+    pub fn spec(&self) -> RefModelSpec {
+        self.spec
+    }
+
+    /// The cache geometry this model writes (full `d_model` K and V per
+    /// layer; heads are packed inside the vector).
+    pub fn layout(&self) -> KvLayout {
+        KvLayout { layers: self.spec.n_layers, dim: self.spec.d_model }
+    }
+
+    /// Process one token at position `kv.len()`: append its K/V, attend
+    /// over the cache (causal), and return the `[vocab]` logits.
+    ///
+    /// This function is the *entire* model — both forward paths are
+    /// loops around it, which is what makes them bitwise identical.
+    pub fn step(&mut self, kv: &mut dyn KvStore, tok: u32) -> Vec<f32> {
+        let s = self.spec;
+        let (d, nh) = (s.d_model, s.n_heads);
+        let hd = d / nh;
+        assert!((tok as usize) < s.vocab, "token {tok} out of vocabulary");
+        let pos = kv.len();
+        self.positions_processed += 1;
+
+        let mut h = self.tok_emb[tok as usize * d..(tok as usize + 1) * d].to_vec();
+        for (l, layer) in self.layers.iter().enumerate() {
+            // attention block
+            let xn = rmsnorm(&h, &layer.attn_norm);
+            let mut q = matvec(&layer.wq, d, d, &xn);
+            let mut k = matvec(&layer.wk, d, d, &xn);
+            let v = matvec(&layer.wv, d, d, &xn);
+            rope(&mut q, pos, hd);
+            rope(&mut k, pos, hd);
+            kv.write(l, &k, &v);
+            let mut ctx = vec![0f32; d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0f32; pos + 1];
+            for head in 0..nh {
+                let o = head * hd;
+                let mut maxs = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let kj = kv.k(l, j);
+                    let mut dot = 0f32;
+                    for t in 0..hd {
+                        dot += q[o + t] * kj[o + t];
+                    }
+                    *sc = dot * scale;
+                    maxs = maxs.max(*sc);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom;
+                for (j, &sc) in scores.iter().enumerate() {
+                    let w = sc * inv;
+                    let vj = kv.v(l, j);
+                    for t in 0..hd {
+                        ctx[o + t] += w * vj[o + t];
+                    }
+                }
+            }
+            let o = matvec(&layer.wo, d, d, &ctx);
+            for (hi, oi) in h.iter_mut().zip(&o) {
+                *hi += oi;
+            }
+            // MLP block (SiLU)
+            let xn = rmsnorm(&h, &layer.mlp_norm);
+            let mut up = matvec(&layer.w_up, s.d_ff, d, &xn);
+            for u in up.iter_mut() {
+                *u /= 1.0 + (-*u).exp();
+                // NaN-free for all finite inputs; u * sigmoid(u)
+            }
+            let down = matvec(&layer.w_down, d, s.d_ff, &up);
+            for (hi, di) in h.iter_mut().zip(&down) {
+                *hi += di;
+            }
+        }
+        kv.advance(tok);
+
+        // tied-embedding logits
+        let hn = rmsnorm(&h, &self.final_norm);
+        let mut logits = vec![0f32; s.vocab];
+        for (vt, lv) in logits.iter_mut().enumerate() {
+            let row = &self.tok_emb[vt * d..(vt + 1) * d];
+            let mut dot = 0f32;
+            for (a, b) in hn.iter().zip(row) {
+                dot += a * b;
+            }
+            *lv = dot;
+        }
+        logits
+    }
+
+    /// Full-sequence logits for one row (positions `0..tokens.len()`),
+    /// flattened `[len, vocab]` — the reference the paged path must
+    /// reproduce bit-for-bit.
+    pub fn forward_row(&mut self, tokens: &[u32]) -> Vec<f32> {
+        let mut kv = FlatKv::new(self.layout());
+        let mut out = Vec::with_capacity(tokens.len() * self.spec.vocab);
+        for &t in tokens {
+            out.extend_from_slice(&self.step(&mut kv, t));
+        }
+        out
+    }
+}
+
+impl crate::serve::LogitsProvider for RefModel {
+    fn batch_size(&self) -> usize {
+        self.spec.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.spec.seq_len
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.spec.vocab
+    }
+
+    /// Honest static-grid semantics: every row recomputes all `S`
+    /// positions from scratch (fresh [`FlatKv`] per row), exactly like
+    /// the compiled artifact. Padding rows/positions are computed and
+    /// ignored by the engine.
+    fn forward(&mut self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
+        let s = self.spec;
+        if tokens.len() != s.batch * s.seq_len {
+            bail!("reference forward: {} tokens, expected {}", tokens.len(), s.batch * s.seq_len);
+        }
+        let mut out = Vec::with_capacity(tokens.len() * s.vocab);
+        for row in tokens.chunks(s.seq_len) {
+            out.extend_from_slice(&self.forward_row(row));
+        }
+        Ok(out)
+    }
+}
+
+impl crate::serve::IncrementalLogitsProvider for RefModel {
+    fn kv_layout(&self) -> KvLayout {
+        self.layout()
+    }
+
+    fn forward_incremental(
+        &mut self,
+        store: &mut dyn KvStore,
+        tokens: &[u32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(tokens.len() * self.spec.vocab);
+        for &t in tokens {
+            out.extend_from_slice(&self.step(store, t));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvCache;
+
+    fn model() -> RefModel {
+        RefModel::new(RefModelSpec { seed: 7, ..RefModelSpec::nano(32, 16, 2) }).unwrap()
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(RefModelSpec::nano(32, 16, 2).validate().is_ok());
+        assert!(RefModelSpec { n_heads: 3, ..RefModelSpec::nano(32, 16, 2) }.validate().is_err());
+        assert!(RefModelSpec { vocab: 1, ..RefModelSpec::nano(32, 16, 2) }.validate().is_err());
+        assert!(RefModelSpec { n_layers: 0, ..RefModelSpec::nano(32, 16, 2) }.validate().is_err());
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let (mut a, mut b) = (model(), model());
+        let toks = [3u32, 1, 4, 1, 5];
+        assert_eq!(a.forward_row(&toks), b.forward_row(&toks));
+        let mut c =
+            RefModel::new(RefModelSpec { seed: 8, ..RefModelSpec::nano(32, 16, 2) }).unwrap();
+        assert_ne!(a.forward_row(&toks), c.forward_row(&toks));
+    }
+
+    #[test]
+    fn logits_depend_on_history_and_position() {
+        let mut m = model();
+        // same token, different history → different logits (attention works)
+        let a = m.forward_row(&[1, 2, 5]);
+        let b = m.forward_row(&[3, 4, 5]);
+        let v = m.spec.vocab;
+        assert_ne!(a[2 * v..], b[2 * v..]);
+        // same token at different positions → different logits (RoPE works)
+        let c = m.forward_row(&[5, 5]);
+        assert_ne!(c[..v], c[v..]);
+    }
+
+    #[test]
+    fn paged_store_reproduces_flat_store_bitwise() {
+        let mut m = model();
+        let toks = [9u32, 2, 7, 7, 0, 31, 4];
+        let flat = m.forward_row(&toks);
+
+        let mut cache = KvCache::new(m.layout(), 2, 16, false).unwrap();
+        let (id, reused) = cache.alloc_seq(&toks, toks.len()).unwrap();
+        assert_eq!(reused, 0);
+        let mut paged = Vec::new();
+        for &t in &toks {
+            let mut store = cache.store(id);
+            paged.extend_from_slice(&m.step(&mut store, t));
+        }
+        assert_eq!(flat, paged, "paged KV must be bit-identical to flat KV");
+        cache.free_seq(id);
+        assert_eq!(cache.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn position_counter_is_exact() {
+        let mut m = model();
+        assert_eq!(m.positions_processed, 0);
+        m.forward_row(&[1, 2, 3]);
+        assert_eq!(m.positions_processed, 3);
+        m.forward_row(&[1]);
+        assert_eq!(m.positions_processed, 4);
+    }
+}

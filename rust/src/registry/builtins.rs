@@ -21,4 +21,5 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::ablation::components::register(reg).expect("ablation builtins");
     crate::serve::components::register(reg).expect("serve builtins");
     crate::elastic::components::register(reg).expect("elastic builtins");
+    crate::kvcache::components::register(reg).expect("kvcache builtins");
 }

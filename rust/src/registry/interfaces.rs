@@ -1,10 +1,11 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares those 32 plus three
+//! 32 pre-defined interfaces". This module declares those 32 plus four
 //! of our own (`ablation`, the sweep orchestrator — the layer the paper
 //! says everyone hand-rolls — `serve`, the batched inference engine,
-//! and `elastic`, the rank-loss recovery supervisor); the registry
+//! `elastic`, the rank-loss recovery supervisor, and `kvcache`, the
+//! paged KV cache behind incremental decode); the registry
 //! refuses registrations against undeclared
 //! interfaces, which is what makes config validation *interface-level*:
 //! a reference site knows which interface it expects, and the
@@ -12,7 +13,7 @@
 //! training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 35] = [
+pub const INTERFACES: [&str; 36] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -55,6 +56,7 @@ pub const INTERFACES: [&str; 35] = [
     "ablation",              // sweep orchestration (store/scheduler/report)
     "serve",                 // batched inference engine + eval harness
     "elastic",               // rank-loss recovery supervisor (kill/rescale/resume)
+    "kvcache",               // paged KV cache for incremental decode
 ];
 
 /// Is `name` a declared interface?
@@ -69,11 +71,12 @@ mod tests {
     #[test]
     fn paper_interfaces_plus_ours() {
         // The paper's 32 interfaces plus our sweep-orchestration,
-        // batched-inference and elastic-recovery ones.
-        assert_eq!(INTERFACES.len(), 35);
+        // batched-inference, elastic-recovery and KV-cache ones.
+        assert_eq!(INTERFACES.len(), 36);
         assert!(interface_exists("ablation"));
         assert!(interface_exists("serve"));
         assert!(interface_exists("elastic"));
+        assert!(interface_exists("kvcache"));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! from the rust training loop. Python never runs at train time.
 
 pub mod pjrt;
+pub mod xla_shim;
 
 pub mod components {
     //! Registry factory for runtime backends. The component is a pure

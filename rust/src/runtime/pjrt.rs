@@ -14,6 +14,9 @@
 //!   through one thread (1-core testbed; see DESIGN.md).
 
 use crate::util::json::Json;
+// Offline testbed: the real `xla` crate cannot resolve here, so the
+// call sites bind to the type-faithful shim instead (see xla_shim.rs).
+use super::xla_shim as xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -16,6 +16,8 @@
 use super::engine::{EngineConfig, SyntheticLogits};
 use super::sampling::SamplingParams;
 use crate::config::Config;
+use crate::kvcache::KvCacheSpec;
+use crate::model::refmodel::{RefModel, RefModelSpec};
 use crate::registry::{Component, ComponentRegistry};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -49,6 +51,17 @@ pub struct ServeSpec {
     pub synthetic_batch: usize,
     pub synthetic_seq_len: usize,
     pub synthetic_vocab: usize,
+    /// Artifact-free provider kind: `synthetic` (hash logits) or
+    /// `reference` (the pure-Rust transformer, KV-cache capable).
+    pub provider: String,
+    /// Reference-model dims (`provider: reference`), sharing the
+    /// synthetic geometry for vocab/seq/batch and `seed` for init.
+    pub ref_d_model: usize,
+    pub ref_n_layers: usize,
+    pub ref_n_heads: usize,
+    pub ref_d_ff: usize,
+    /// Paged KV-cache settings (`serve.kv_*` keys).
+    pub kv: KvCacheSpec,
 }
 
 impl Default for ServeSpec {
@@ -68,6 +81,12 @@ impl Default for ServeSpec {
             synthetic_batch: 4,
             synthetic_seq_len: 32,
             synthetic_vocab: 64,
+            provider: "synthetic".to_string(),
+            ref_d_model: 32,
+            ref_n_layers: 2,
+            ref_n_heads: 2,
+            ref_d_ff: 64,
+            kv: KvCacheSpec::default(),
         }
     }
 }
@@ -119,6 +138,21 @@ impl ServeSpec {
                 .usize_or("serve.synthetic_seq_len", d.synthetic_seq_len)?
                 .max(2),
             synthetic_vocab: cfg.usize_or("serve.synthetic_vocab", d.synthetic_vocab)?.max(2),
+            provider: {
+                let p = cfg.str_or("serve.provider", &d.provider);
+                if p != "synthetic" && p != "reference" {
+                    bail!(
+                        "{}: 'serve.provider' must be 'synthetic' or 'reference', got '{p}'",
+                        cfg.source
+                    );
+                }
+                p
+            },
+            ref_d_model: cfg.usize_or("serve.ref_d_model", d.ref_d_model)?.max(1),
+            ref_n_layers: cfg.usize_or("serve.ref_n_layers", d.ref_n_layers)?.max(1),
+            ref_n_heads: cfg.usize_or("serve.ref_n_heads", d.ref_n_heads)?.max(1),
+            ref_d_ff: cfg.usize_or("serve.ref_d_ff", d.ref_d_ff)?.max(1),
+            kv: KvCacheSpec::from_config(cfg)?,
         })
     }
 
@@ -145,6 +179,23 @@ impl ServeSpec {
             seq: seq_len.unwrap_or(self.synthetic_seq_len),
             vocab: self.synthetic_vocab,
         }
+    }
+
+    /// The pure-Rust reference transformer (`serve.provider:
+    /// reference`): shares the synthetic geometry for vocab/seq/batch,
+    /// takes dims from the `serve.ref_*` keys and its init seed from
+    /// `serve.seed`.
+    pub fn reference_provider(&self, seq_len: Option<usize>) -> Result<RefModel> {
+        RefModel::new(RefModelSpec {
+            vocab: self.synthetic_vocab,
+            seq_len: seq_len.unwrap_or(self.synthetic_seq_len),
+            batch: self.synthetic_batch,
+            d_model: self.ref_d_model,
+            n_layers: self.ref_n_layers,
+            n_heads: self.ref_n_heads,
+            d_ff: self.ref_d_ff,
+            seed: self.seed,
+        })
     }
 }
 
@@ -185,6 +236,26 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
                     .usize_or(cfg, "synthetic_seq_len", d.synthetic_seq_len)?
                     .max(2),
                 synthetic_vocab: ctx.usize_or(cfg, "synthetic_vocab", d.synthetic_vocab)?.max(2),
+                provider: {
+                    let p = ctx.str_or(cfg, "provider", &d.provider);
+                    if p != "synthetic" && p != "reference" {
+                        bail!("'provider' must be 'synthetic' or 'reference', got '{p}'");
+                    }
+                    p
+                },
+                ref_d_model: ctx.usize_or(cfg, "ref_d_model", d.ref_d_model)?.max(1),
+                ref_n_layers: ctx.usize_or(cfg, "ref_n_layers", d.ref_n_layers)?.max(1),
+                ref_n_heads: ctx.usize_or(cfg, "ref_n_heads", d.ref_n_heads)?.max(1),
+                ref_d_ff: ctx.usize_or(cfg, "ref_d_ff", d.ref_d_ff)?.max(1),
+                kv: KvCacheSpec {
+                    enabled: ctx.bool_or(cfg, "kv_cache", d.kv.enabled)?,
+                    block_size: ctx.usize_or(cfg, "kv_block_size", d.kv.block_size)?.max(1),
+                    pool_blocks: ctx.usize_or(cfg, "kv_pool_blocks", d.kv.pool_blocks)?.max(1),
+                    prefill_chunk: ctx
+                        .usize_or(cfg, "kv_prefill_chunk", d.kv.prefill_chunk)?
+                        .max(1),
+                    prefix_reuse: ctx.bool_or(cfg, "kv_prefix_reuse", d.kv.prefix_reuse)?,
+                },
             },
         ))
     })?;
@@ -207,6 +278,16 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("synthetic_batch", "int", "4", "artifact-free provider slots (`--synthetic`)"),
             ("synthetic_seq_len", "int", "32", "artifact-free provider grid length"),
             ("synthetic_vocab", "int", "64", "artifact-free provider vocabulary"),
+            ("provider", "string", "synthetic", "artifact-free provider: `synthetic` or `reference`"),
+            ("ref_d_model", "int", "32", "reference-model embedding width"),
+            ("ref_n_layers", "int", "2", "reference-model decoder blocks"),
+            ("ref_n_heads", "int", "2", "reference-model attention heads"),
+            ("ref_d_ff", "int", "64", "reference-model MLP width"),
+            ("kv_cache", "bool", "true", "decode through the paged KV cache when supported"),
+            ("kv_block_size", "int", "16", "tokens per KV block"),
+            ("kv_pool_blocks", "int", "512", "shared KV pool capacity in blocks"),
+            ("kv_prefill_chunk", "int", "8", "prompt tokens fed per step during prefill"),
+            ("kv_prefix_reuse", "bool", "true", "share published prompt-prefix blocks"),
         ],
     );
     Ok(())
@@ -243,6 +324,32 @@ mod tests {
         assert_eq!(s.eval_loader.as_deref(), Some("eval_loader"));
         assert_eq!(s.report_dir, PathBuf::from("/tmp/sv"));
         assert_eq!(s.synthetic_vocab, 128);
+        assert_eq!(s.provider, "synthetic");
+        assert_eq!(s.kv, KvCacheSpec::default());
+    }
+
+    #[test]
+    fn provider_and_kv_keys() {
+        let cfg = Config::from_str_named(
+            "serve:\n  provider: reference\n  ref_d_model: 16\n  ref_n_heads: 1\n  \
+             kv_block_size: 4\n  kv_prefix_reuse: false\n",
+            "<t>",
+        )
+        .unwrap();
+        let s = ServeSpec::from_config(&cfg).unwrap();
+        assert_eq!(s.provider, "reference");
+        assert_eq!(s.ref_d_model, 16);
+        assert_eq!(s.ref_n_heads, 1);
+        assert_eq!(s.kv.block_size, 4);
+        assert!(!s.kv.prefix_reuse);
+        assert!(s.kv.enabled);
+        let m = s.reference_provider(Some(8)).unwrap();
+        use super::super::engine::LogitsProvider;
+        assert_eq!(m.seq_len(), 8);
+        assert_eq!(m.vocab_size(), s.synthetic_vocab);
+
+        let cfg = Config::from_str_named("serve:\n  provider: gpu\n", "<t>").unwrap();
+        assert!(ServeSpec::from_config(&cfg).is_err(), "unknown provider kind");
     }
 
     #[test]

@@ -10,6 +10,28 @@
 //! ones hostage and aggregate throughput approaches `B×` the
 //! sequential row-0 path (`cargo bench --bench bench_generate`).
 //!
+//! ## Two execution backends
+//!
+//! * **Full** ([`BatchedEngine::new`]) — every step re-runs the whole
+//!   `[B, S]` grid through [`LogitsProvider::forward`]. This is the
+//!   only mode the static PJRT artifact supports, and the reference
+//!   semantics for everything below.
+//! * **Cached** ([`BatchedEngine::new_cached`]) — steps run against an
+//!   [`IncrementalLogitsProvider`] over a paged
+//!   [`KvCache`](crate::kvcache::KvCache): admission leases worst-case
+//!   block reservations (a typed [`OutOfBlocks`](crate::kvcache::OutOfBlocks)
+//!   re-queues the request — running decodes are never stalled or
+//!   evicted), prompts prefill in `kv_prefill_chunk`-token slices so
+//!   long prompts cannot monopolize a step, decode feeds **only the
+//!   newly sampled token**, and finished slots free their blocks before
+//!   the lane is handed to the next request. Completed prompt prefixes
+//!   are published to the cache's prefix index so later requests with a
+//!   shared prefix skip recomputation (copy-on-extend keeps shared
+//!   blocks immutable). Cached and full backends produce **bitwise
+//!   identical tokens and logprobs** for deterministic providers — the
+//!   `kvcache_equivalence` suite pins this at the
+//!   `backend_equivalence.rs` standard.
+//!
 //! Testability mirrors the ablation scheduler's injected-runner trick:
 //! the engine decodes against a [`LogitsProvider`], so scheduler and
 //! sampling logic are unit-tested against [`SyntheticLogits`] with no
@@ -17,6 +39,7 @@
 //! [`ModelLogitsProvider`].
 
 use super::sampling::{self, SamplingParams};
+use crate::kvcache::{KvCache, KvCacheSpec, KvLayout, KvStats, KvStore, SeqId};
 use crate::util::prng::Pcg64;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
@@ -37,9 +60,37 @@ pub trait LogitsProvider {
     fn forward(&mut self, tokens: &[u32]) -> Result<Vec<f32>>;
 }
 
+/// A provider that can additionally extend one sequence's KV state a
+/// few tokens at a time — the contract of the cached backend.
+///
+/// The incremental path must be **bitwise identical** to
+/// [`LogitsProvider::forward`]: feeding a sequence token-by-token (or
+/// chunk-by-chunk) through `forward_incremental` yields, position for
+/// position, the exact f32 logits the full grid forward produces. The
+/// reference model achieves this structurally — one per-position step
+/// function runs against either KV store — and the synthetic provider
+/// trivially (its logits depend only on the current token).
+pub trait IncrementalLogitsProvider: LogitsProvider {
+    /// Shape of the K/V vectors this provider writes per position.
+    fn kv_layout(&self) -> KvLayout;
+    /// Feed `tokens` at positions `store.len()..` and return their
+    /// logits rows, flattened `[tokens.len(), V]`. Must `write` +
+    /// `advance` the store once per token.
+    fn forward_incremental(
+        &mut self,
+        store: &mut dyn KvStore,
+        tokens: &[u32],
+    ) -> Result<Vec<f32>>;
+}
+
 /// [`LogitsProvider`] backed by the compiled `fwd` artifact. Borrows
 /// the PJRT engine/model/params because PJRT handles are not `Send`
 /// and live only on the execution thread.
+///
+/// The static HLO graph re-runs the full `[B, S]` sequence every call,
+/// so this provider is full-forward only; the pure-Rust
+/// [`RefModel`](crate::model::refmodel::RefModel) is the incremental
+/// (`IncrementalLogitsProvider`) stack.
 pub struct ModelLogitsProvider<'a> {
     pub engine: &'a crate::runtime::pjrt::PjrtEngine,
     pub model: &'a crate::model::LmModel,
@@ -118,6 +169,32 @@ impl LogitsProvider for SyntheticLogits {
     }
 }
 
+impl IncrementalLogitsProvider for SyntheticLogits {
+    fn kv_layout(&self) -> KvLayout {
+        // One layer, one dim: the "K" is the token id itself, which is
+        // all `logit(t, v)` depends on — incremental is trivially
+        // bitwise-identical to the full grid, while still exercising
+        // the paged store's write/advance plumbing for real.
+        KvLayout { layers: 1, dim: 1 }
+    }
+
+    fn forward_incremental(
+        &mut self,
+        store: &mut dyn KvStore,
+        tokens: &[u32],
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(tokens.len() * self.vocab);
+        for &t in tokens {
+            store.write(0, &[t as f32], &[0.0]);
+            store.advance(t);
+            for v in 0..self.vocab {
+                out.push(self.logit(t, v));
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -126,8 +203,9 @@ pub struct Request {
     /// Decode-token budget (must be > 0).
     pub max_new: usize,
     pub sampling: SamplingParams,
-    /// Decode-step deadline counted from admission; a slot that has
-    /// consumed this many steps without finishing is cancelled.
+    /// Engine-step deadline counted from admission; a slot that has
+    /// consumed this many steps without finishing is cancelled. On the
+    /// cached backend chunked-prefill steps count against it too.
     /// `None` = no deadline.
     pub deadline_steps: Option<u64>,
 }
@@ -205,7 +283,9 @@ impl Default for EngineConfig {
 /// Aggregate engine counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
-    /// Shared forwards executed (== decode steps with ≥ 1 active slot).
+    /// Engine steps with ≥ 1 active slot. On the full backend each is
+    /// one shared `[B, S]` forward; on the cached backend each is one
+    /// incremental provider call per active slot.
     pub forwards: u64,
     /// Tokens emitted across all requests.
     pub tokens_generated: u64,
@@ -216,6 +296,8 @@ pub struct EngineStats {
     pub peak_active: usize,
     /// Requests finished.
     pub completed: u64,
+    /// KV-cache counters (zero on the full backend).
+    pub kv: KvStats,
 }
 
 impl EngineStats {
@@ -242,6 +324,71 @@ struct Slot {
     admitted_step: u64,
     /// Remaining decode steps before cancellation.
     deadline: Option<u64>,
+    /// Cached backend: the leased KV sequence.
+    seq: Option<SeqId>,
+    /// Cached backend: prompt tokens already fed to the cache (starts
+    /// at the prefix-reuse hit length, advances by `kv_prefill_chunk`
+    /// per step until it reaches `prompt_len`).
+    prefilled: usize,
+}
+
+impl Slot {
+    fn new(id: u64, req: Request, admitted_step: u64, seq: Option<SeqId>, prefilled: usize) -> Slot {
+        Slot {
+            id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            max_new: req.max_new,
+            sampling: req.sampling,
+            rng: Pcg64::new(req.sampling.seed),
+            logprobs: Vec::new(),
+            admitted_step,
+            deadline: req.deadline_steps,
+            seq,
+            prefilled,
+        }
+    }
+}
+
+/// The execution backend behind the slot scheduler.
+enum Backend<'p> {
+    Full {
+        provider: &'p mut dyn LogitsProvider,
+        /// Scratch `[B, S]` token grid reused across steps.
+        grid: Vec<u32>,
+    },
+    Cached {
+        provider: &'p mut dyn IncrementalLogitsProvider,
+        cache: KvCache,
+        prefill_chunk: usize,
+    },
+}
+
+/// Post-sample finish determination, shared by both backends. `sampled`
+/// is the token pushed this step, if any (cached prefill steps that do
+/// not complete the prompt push none — only the deadline can fire).
+fn finish_reason(
+    sampled: Option<u32>,
+    slot: &Slot,
+    seq_len: usize,
+    eos: Option<u32>,
+) -> Option<FinishReason> {
+    if let Some(tok) = sampled {
+        let generated = slot.tokens.len() - slot.prompt_len;
+        if Some(tok) == eos {
+            return Some(FinishReason::Eos);
+        }
+        if generated >= slot.max_new {
+            return Some(FinishReason::MaxNewTokens);
+        }
+        if slot.tokens.len() >= seq_len {
+            return Some(FinishReason::SeqLenExhausted);
+        }
+    }
+    if slot.deadline == Some(0) {
+        return Some(FinishReason::DeadlineExpired);
+    }
+    None
 }
 
 /// The continuous-batching generation engine. See the module docs for
@@ -249,45 +396,122 @@ struct Slot {
 /// [`Self::try_submit`] + [`Self::step`], or [`Self::run_until_idle`]
 /// for batch workloads.
 pub struct BatchedEngine<'p> {
-    provider: &'p mut dyn LogitsProvider,
+    backend: Backend<'p>,
     cfg: EngineConfig,
     queue: VecDeque<(u64, Request)>,
     slots: Vec<Option<Slot>>,
-    /// Scratch `[B, S]` token grid reused across steps.
-    grid: Vec<u32>,
     next_id: u64,
     step_count: u64,
     completions: Vec<Completion>,
     pub stats: EngineStats,
 }
 
+fn check_geometry(b: usize, s: usize, v: usize, cfg: &EngineConfig) -> Result<()> {
+    if b == 0 || s < 2 || v == 0 {
+        bail!("provider geometry B={b} S={s} V={v} cannot decode");
+    }
+    if cfg.queue_capacity == 0 {
+        bail!("queue_capacity must be > 0");
+    }
+    Ok(())
+}
+
 impl<'p> BatchedEngine<'p> {
+    /// Full-forward engine (the only mode static PJRT artifacts
+    /// support).
     pub fn new(provider: &'p mut dyn LogitsProvider, cfg: EngineConfig) -> Result<Self> {
         let (b, s, v) = (provider.batch_size(), provider.seq_len(), provider.vocab_size());
-        if b == 0 || s < 2 || v == 0 {
-            bail!("provider geometry B={b} S={s} V={v} cannot decode");
-        }
-        if cfg.queue_capacity == 0 {
-            bail!("queue_capacity must be > 0");
-        }
+        check_geometry(b, s, v, &cfg)?;
         Ok(Self {
             cfg,
             queue: VecDeque::new(),
             slots: (0..b).map(|_| None).collect(),
-            grid: vec![0u32; b * s],
             next_id: 0,
             step_count: 0,
             completions: Vec::new(),
             stats: EngineStats::default(),
-            provider,
+            backend: Backend::Full { provider, grid: vec![0u32; b * s] },
         })
+    }
+
+    /// KV-cached engine: incremental decode over a paged cache sized by
+    /// `kv` ([`KvCacheSpec`]). Admission reserves worst-case blocks up
+    /// front, so a running decode can never hit
+    /// [`OutOfBlocks`](crate::kvcache::OutOfBlocks) — exhaustion
+    /// surfaces only at admission, where the request is simply
+    /// re-queued until a finishing sequence frees blocks.
+    pub fn new_cached(
+        provider: &'p mut dyn IncrementalLogitsProvider,
+        cfg: EngineConfig,
+        kv: &KvCacheSpec,
+    ) -> Result<Self> {
+        let (b, s, v) = (provider.batch_size(), provider.seq_len(), provider.vocab_size());
+        check_geometry(b, s, v, &cfg)?;
+        let cache = KvCache::new(provider.kv_layout(), kv.block_size, kv.pool_blocks, kv.prefix_reuse)?;
+        Ok(Self {
+            cfg,
+            queue: VecDeque::new(),
+            slots: (0..b).map(|_| None).collect(),
+            next_id: 0,
+            step_count: 0,
+            completions: Vec::new(),
+            stats: EngineStats::default(),
+            backend: Backend::Cached { provider, cache, prefill_chunk: kv.prefill_chunk.max(1) },
+        })
+    }
+
+    fn geom(&self) -> (usize, usize, usize) {
+        match &self.backend {
+            Backend::Full { provider, .. } => {
+                (provider.batch_size(), provider.seq_len(), provider.vocab_size())
+            }
+            Backend::Cached { provider, .. } => {
+                (provider.batch_size(), provider.seq_len(), provider.vocab_size())
+            }
+        }
+    }
+
+    /// Is this engine decoding through the paged KV cache?
+    pub fn is_cached(&self) -> bool {
+        matches!(self.backend, Backend::Cached { .. })
+    }
+
+    /// KV counters (`None` on the full backend). Live snapshot — also
+    /// folded into [`Self::stats`] after every cached step.
+    pub fn kv_stats(&self) -> Option<KvStats> {
+        match &self.backend {
+            Backend::Cached { cache, .. } => Some(cache.stats()),
+            Backend::Full { .. } => None,
+        }
+    }
+
+    /// Blocks currently leased from the pool (`None` on the full
+    /// backend). Includes blocks pinned by the prefix index.
+    pub fn kv_blocks_in_use(&self) -> Option<usize> {
+        match &self.backend {
+            Backend::Cached { cache, .. } => Some(cache.blocks_in_use()),
+            Backend::Full { .. } => None,
+        }
+    }
+
+    /// Release prefix-index pins and report how many blocks are still
+    /// leased — the leak count, which must be 0 once every sequence has
+    /// finished (`None` on the full backend).
+    pub fn kv_shutdown(&mut self) -> Option<usize> {
+        match &mut self.backend {
+            Backend::Cached { cache, .. } => {
+                cache.drain_prefix();
+                Some(cache.blocks_in_use())
+            }
+            Backend::Full { .. } => None,
+        }
     }
 
     /// Admission-side validation of a request against the engine's
     /// geometry (everything [`Self::submit`] checks except queue room).
     pub fn validate(&self, req: &Request) -> Result<()> {
         req.sampling.validate()?;
-        let (s, v) = (self.provider.seq_len(), self.provider.vocab_size());
+        let (_, s, v) = self.geom();
         if req.prompt.is_empty() || req.prompt.len() >= s {
             bail!("prompt length must be in [1, {s})");
         }
@@ -325,24 +549,45 @@ impl<'p> BatchedEngine<'p> {
         }
     }
 
-    /// Move queued requests into free slots (continuous refill).
+    /// Move queued requests into free slots (continuous refill). On the
+    /// cached backend this is where block reservations happen: a
+    /// request whose worst-case footprint does not fit goes back to the
+    /// queue *front* (FIFO preserved, no starvation) and admission
+    /// stops until finishing sequences free blocks.
     fn admit(&mut self) {
-        for slot in self.slots.iter_mut() {
-            if slot.is_some() {
-                continue;
+        let Self { backend, queue, slots, step_count, .. } = self;
+        match backend {
+            Backend::Full { .. } => {
+                for slot in slots.iter_mut() {
+                    if slot.is_some() {
+                        continue;
+                    }
+                    let Some((id, req)) = queue.pop_front() else { break };
+                    let prefilled = req.prompt.len();
+                    *slot = Some(Slot::new(id, req, *step_count, None, prefilled));
+                }
             }
-            let Some((id, req)) = self.queue.pop_front() else { break };
-            *slot = Some(Slot {
-                id,
-                prompt_len: req.prompt.len(),
-                tokens: req.prompt,
-                max_new: req.max_new,
-                sampling: req.sampling,
-                rng: Pcg64::new(req.sampling.seed),
-                logprobs: Vec::new(),
-                admitted_step: self.step_count,
-                deadline: req.deadline_steps,
-            });
+            Backend::Cached { provider, cache, .. } => {
+                let s = provider.seq_len();
+                for slot in slots.iter_mut() {
+                    if slot.is_some() {
+                        continue;
+                    }
+                    let Some((id, req)) = queue.pop_front() else { break };
+                    // Worst-case token footprint, reserved up front so
+                    // decode can never run out of blocks mid-flight.
+                    let max_total = (req.prompt.len() + req.max_new).min(s);
+                    match cache.alloc_seq(&req.prompt, max_total) {
+                        Ok((sid, reused)) => {
+                            *slot = Some(Slot::new(id, req, *step_count, Some(sid), reused));
+                        }
+                        Err(_out_of_blocks) => {
+                            queue.push_front((id, req));
+                            break;
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -364,74 +609,131 @@ impl<'p> BatchedEngine<'p> {
         &self.completions
     }
 
-    /// One decode step: admit queued requests into free slots, run one
-    /// shared forward over the `[B, S]` grid, extend every active
-    /// sequence by one sampled token, and swap finished sequences out.
-    /// Returns how many requests finished this step (0 with an empty
-    /// engine — check [`Self::is_idle`] to distinguish "no work").
+    /// One engine step: admit queued requests into free slots, advance
+    /// every active sequence (full: one shared forward + one sampled
+    /// token each; cached: one prefill chunk *or* one decoded token
+    /// each), and swap finished sequences out. Returns how many
+    /// requests finished this step (0 with an empty engine — check
+    /// [`Self::is_idle`] to distinguish "no work").
     pub fn step(&mut self) -> Result<usize> {
         self.admit();
-        let (b, s, v) = (self.provider.batch_size(), self.provider.seq_len(), self.provider.vocab_size());
-        let active_rows: Vec<usize> =
-            (0..b).filter(|&r| self.slots[r].is_some()).collect();
+        let (b, s, v) = self.geom();
+        let active_rows: Vec<usize> = (0..b).filter(|&r| self.slots[r].is_some()).collect();
         if active_rows.is_empty() {
             return Ok(0);
         }
         self.stats.forwards += 1;
         self.stats.occupancy_sum += active_rows.len() as u64;
         self.stats.peak_active = self.stats.peak_active.max(active_rows.len());
-        self.grid.fill(0);
-        for &r in &active_rows {
-            let slot = self.slots[r].as_ref().unwrap();
-            self.grid[r * s..r * s + slot.tokens.len()].copy_from_slice(&slot.tokens);
-        }
-        let logits = self.provider.forward(&self.grid)?;
-        if logits.len() != b * s * v {
-            bail!("provider returned {} logits, expected {}", logits.len(), b * s * v);
-        }
         self.step_count += 1;
-        let mut finished = 0;
-        for &r in &active_rows {
-            let finish = {
-                let slot = self.slots[r].as_mut().unwrap();
-                let pos = slot.tokens.len() - 1;
-                let row = &logits[(r * s + pos) * v..(r * s + pos + 1) * v];
-                let (tok, lp) = sampling::sample(row, &slot.sampling, &mut slot.rng);
-                slot.tokens.push(tok);
-                slot.logprobs.push(lp);
-                if let Some(d) = slot.deadline.as_mut() {
-                    *d -= 1;
+        let eos = self.cfg.eos_token;
+        let mut sampled_count = 0u64;
+        // (row, finish) pairs resolved this step.
+        let mut done_rows: Vec<(usize, FinishReason)> = Vec::new();
+        match &mut self.backend {
+            Backend::Full { provider, grid } => {
+                grid.fill(0);
+                for &r in &active_rows {
+                    let slot = self.slots[r].as_ref().unwrap();
+                    grid[r * s..r * s + slot.tokens.len()].copy_from_slice(&slot.tokens);
                 }
-                let generated = slot.tokens.len() - slot.prompt_len;
-                if Some(tok) == self.cfg.eos_token {
-                    Some(FinishReason::Eos)
-                } else if generated >= slot.max_new {
-                    Some(FinishReason::MaxNewTokens)
-                } else if slot.tokens.len() >= s {
-                    Some(FinishReason::SeqLenExhausted)
-                } else if slot.deadline == Some(0) {
-                    Some(FinishReason::DeadlineExpired)
-                } else {
-                    None
+                let logits = provider.forward(grid)?;
+                if logits.len() != b * s * v {
+                    bail!("provider returned {} logits, expected {}", logits.len(), b * s * v);
                 }
-            };
-            if let Some(finish) = finish {
-                let slot = self.slots[r].take().unwrap();
-                self.completions.push(Completion {
-                    id: slot.id,
-                    prompt_len: slot.prompt_len,
-                    tokens: slot.tokens,
-                    finish,
-                    logprobs: slot.logprobs,
-                    admitted_step: slot.admitted_step,
-                    finished_step: self.step_count,
-                });
-                finished += 1;
+                for &r in &active_rows {
+                    let slot = self.slots[r].as_mut().unwrap();
+                    let pos = slot.tokens.len() - 1;
+                    let row = &logits[(r * s + pos) * v..(r * s + pos + 1) * v];
+                    let (tok, lp) = sampling::sample(row, &slot.sampling, &mut slot.rng);
+                    slot.tokens.push(tok);
+                    slot.logprobs.push(lp);
+                    sampled_count += 1;
+                    if let Some(d) = slot.deadline.as_mut() {
+                        *d -= 1;
+                    }
+                    if let Some(f) = finish_reason(Some(tok), slot, s, eos) {
+                        done_rows.push((r, f));
+                    }
+                }
+            }
+            Backend::Cached { provider, cache, prefill_chunk } => {
+                for &r in &active_rows {
+                    let slot = self.slots[r].as_mut().unwrap();
+                    let sid = slot.seq.expect("cached slot always holds a sequence");
+                    let sampled = if slot.prefilled < slot.prompt_len {
+                        // Chunked prefill: feed the next prompt slice;
+                        // sample only once the prompt is complete.
+                        let end = (slot.prefilled + *prefill_chunk).min(slot.prompt_len);
+                        let chunk_len = end - slot.prefilled;
+                        let logits = {
+                            let chunk = &slot.tokens[slot.prefilled..end];
+                            let mut store = cache.store(sid);
+                            provider.forward_incremental(&mut store, chunk)?
+                        };
+                        if logits.len() != chunk_len * v {
+                            bail!(
+                                "incremental provider returned {} logits, expected {}",
+                                logits.len(),
+                                chunk_len * v
+                            );
+                        }
+                        slot.prefilled = end;
+                        if end == slot.prompt_len {
+                            cache.publish_prefix(sid);
+                            let row = &logits[(chunk_len - 1) * v..];
+                            Some(sampling::sample(row, &slot.sampling, &mut slot.rng))
+                        } else {
+                            None
+                        }
+                    } else {
+                        // Decode: only the newly generated token enters
+                        // the model — the O(1)-per-token payoff.
+                        let last = *slot.tokens.last().unwrap();
+                        let logits = {
+                            let mut store = cache.store(sid);
+                            provider.forward_incremental(&mut store, &[last])?
+                        };
+                        if logits.len() != v {
+                            bail!(
+                                "incremental provider returned {} logits, expected {v}",
+                                logits.len()
+                            );
+                        }
+                        Some(sampling::sample(&logits, &slot.sampling, &mut slot.rng))
+                    };
+                    let tok = sampled.map(|(tok, lp)| {
+                        slot.tokens.push(tok);
+                        slot.logprobs.push(lp);
+                        sampled_count += 1;
+                        tok
+                    });
+                    if let Some(d) = slot.deadline.as_mut() {
+                        *d -= 1;
+                    }
+                    if let Some(f) = finish_reason(tok, slot, s, eos) {
+                        cache.free_seq(sid);
+                        done_rows.push((r, f));
+                    }
+                }
+                self.stats.kv = cache.stats();
             }
         }
-        self.stats.tokens_generated += active_rows.len() as u64;
-        self.stats.completed += finished as u64;
-        Ok(finished)
+        for &(r, finish) in &done_rows {
+            let slot = self.slots[r].take().unwrap();
+            self.completions.push(Completion {
+                id: slot.id,
+                prompt_len: slot.prompt_len,
+                tokens: slot.tokens,
+                finish,
+                logprobs: slot.logprobs,
+                admitted_step: slot.admitted_step,
+                finished_step: self.step_count,
+            });
+        }
+        self.stats.tokens_generated += sampled_count;
+        self.stats.completed += done_rows.len() as u64;
+        Ok(done_rows.len())
     }
 
     /// Drive the engine until queue and slots are empty; returns every
@@ -495,6 +797,10 @@ mod tests {
             sampling: SamplingParams::greedy(),
             deadline_steps: None,
         }
+    }
+
+    fn kv(block_size: usize, pool_blocks: usize, prefill_chunk: usize) -> KvCacheSpec {
+        KvCacheSpec { enabled: true, block_size, pool_blocks, prefill_chunk, prefix_reuse: true }
     }
 
     #[test]
@@ -676,5 +982,169 @@ mod tests {
         let mut p = provider(1);
         let cfg = EngineConfig { eos_token: None, queue_capacity: 0 };
         assert!(BatchedEngine::new(&mut p, cfg).is_err());
+        let mut p = provider(1);
+        let bad = KvCacheSpec { pool_blocks: 0, ..KvCacheSpec::default() };
+        assert!(BatchedEngine::new_cached(&mut p, EngineConfig::default(), &bad).is_err());
+    }
+
+    // ---- cached backend ------------------------------------------------
+
+    #[test]
+    fn cached_matches_full_token_for_token() {
+        // Same requests through both backends must agree bitwise on
+        // tokens and logprobs, across chunk and block sizes.
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                prompt: (0..(1 + i % 5)).map(|t| (t as u32 * 3 + i as u32) % 8).collect(),
+                max_new: 2 + (i % 4),
+                sampling: if i % 2 == 0 {
+                    SamplingParams::greedy()
+                } else {
+                    SamplingParams { temperature: 0.8, top_k: 4, top_p: 0.9, seed: i as u64 }
+                },
+                deadline_steps: None,
+            })
+            .collect();
+
+        let mut full = provider(2);
+        let mut e = BatchedEngine::new(&mut full, EngineConfig::default()).unwrap();
+        for r in &reqs {
+            e.submit(r.clone()).unwrap();
+        }
+        let want = e.run_until_idle().unwrap();
+
+        for (bs, chunk) in [(1, 1), (2, 2), (4, 3), (16, 8)] {
+            let mut inc = provider(2);
+            let mut e =
+                BatchedEngine::new_cached(&mut inc, EngineConfig::default(), &kv(bs, 64, chunk))
+                    .unwrap();
+            for r in &reqs {
+                e.submit(r.clone()).unwrap();
+            }
+            let got = e.run_until_idle().unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.tokens, w.tokens, "bs={bs} chunk={chunk}");
+                assert_eq!(g.logprobs, w.logprobs, "bs={bs} chunk={chunk}");
+                assert_eq!(g.finish, w.finish);
+            }
+            assert_eq!(e.kv_shutdown(), Some(0), "blocks leaked (bs={bs} chunk={chunk})");
+        }
+    }
+
+    #[test]
+    fn cached_decode_feeds_one_token_per_step() {
+        // After prefill, each step must touch exactly one new position
+        // per slot: committed cache length grows by 1 per decode step.
+        let mut p = provider(1);
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(4, 16, 8)).unwrap();
+        e.submit(greedy_req(&[1, 2, 3], 4)).unwrap();
+        e.step().unwrap(); // prefill completes (chunk 8 ≥ 3) + first sample
+        let after_prefill = e.kv_stats().unwrap().blocks_leased;
+        e.step().unwrap(); // decode: one token
+        e.step().unwrap();
+        let s = e.kv_stats().unwrap();
+        // 3 prompt + 2 decode feeds = 5 tokens ≤ 2 blocks of 4 — no new
+        // lease after the up-front reservation.
+        assert_eq!(s.blocks_leased, after_prefill);
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done[0].tokens, vec![1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(e.kv_shutdown(), Some(0));
+    }
+
+    #[test]
+    fn chunked_prefill_never_stalls_running_decodes() {
+        // Slot 0 decodes while slot 1 prefills a long prompt in chunks:
+        // slot 0 must emit a token every step regardless.
+        let mut p = provider(2);
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(2, 64, 2)).unwrap();
+        e.submit(greedy_req(&[1], 8)).unwrap();
+        e.step().unwrap(); // slot 0 prefills+samples
+        e.submit(greedy_req(&[0, 1, 2, 3, 4, 5, 6, 7], 2)).unwrap(); // 4 prefill steps
+        for step in 0..4 {
+            let before = e.completions().len();
+            e.step().unwrap();
+            // slot 0 still decoding (8 tokens budget), never finished
+            // early and never skipped: one token per step.
+            assert_eq!(e.completions().len(), before, "step {step}");
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done[0].generated(), &[2, 3, 4, 5, 6, 7, 0, 1]);
+        assert_eq!(done[1].generated().len(), 2);
+        assert_eq!(e.kv_shutdown(), Some(0));
+    }
+
+    #[test]
+    fn out_of_blocks_requeues_without_dropping() {
+        // Pool fits one worst-case request at a time; all three must
+        // still complete, FIFO, with no error surfaced.
+        let mut p = provider(2);
+        // prompt 1 + max_new 6 → 7 tokens → 4 blocks of 2; pool of 5
+        // can hold one request but not two.
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(2, 5, 8)).unwrap();
+        for t in 0..3u32 {
+            e.submit(greedy_req(&[t], 6)).unwrap();
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(e.stats.peak_active, 1, "pool admits one sequence at a time");
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i as u64, "FIFO order preserved under backpressure");
+            assert_eq!(c.generated().len(), 6);
+        }
+        assert_eq!(e.kv_shutdown(), Some(0));
+    }
+
+    #[test]
+    fn shared_prefixes_are_reused_across_requests() {
+        let system = [7u32, 3, 5, 1, 0, 2, 6, 4];
+        let mut p = provider(1);
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(2, 64, 16)).unwrap();
+        for t in 0..4u32 {
+            let mut prompt = system.to_vec();
+            prompt.push(t);
+            e.submit(greedy_req(&prompt, 2)).unwrap();
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 4);
+        let s = e.kv_stats().unwrap();
+        // Requests 2..4 each reuse the 4 published system-prompt blocks.
+        assert_eq!(s.hit_blocks, 12, "3 followers × 4 shared blocks");
+        assert_eq!(s.hit_tokens, 24);
+        assert!(s.misses >= 1, "first request misses");
+        // Reuse must not change outputs: same divergent-token request
+        // without any cache warm-up decodes identically.
+        let mut cold = provider(1);
+        let mut e2 =
+            BatchedEngine::new_cached(&mut cold, EngineConfig::default(), &kv(2, 64, 16)).unwrap();
+        let mut prompt = system.to_vec();
+        prompt.push(3);
+        e2.submit(greedy_req(&prompt, 2)).unwrap();
+        let solo = e2.run_until_idle().unwrap();
+        assert_eq!(done[3].tokens, solo[0].tokens);
+        assert_eq!(done[3].logprobs, solo[0].logprobs);
+        assert_eq!(e.kv_shutdown(), Some(0), "prefix pins released, no leaks");
+    }
+
+    #[test]
+    fn deadline_counts_prefill_steps_on_the_cached_backend() {
+        // chunk 1 → an 8-token prompt needs 8 prefill steps; a 3-step
+        // deadline expires before any token is generated.
+        let mut p = provider(1);
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(2, 64, 1)).unwrap();
+        e.submit(Request {
+            deadline_steps: Some(3),
+            ..greedy_req(&[0, 1, 2, 3, 4, 5, 6, 7], 4)
+        })
+        .unwrap();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done[0].finish, FinishReason::DeadlineExpired);
+        assert!(done[0].generated().is_empty());
+        assert_eq!(e.kv_shutdown(), Some(0), "mid-prefill cancellation frees blocks");
     }
 }

@@ -12,9 +12,10 @@
 //! float formats, no timestamps or rates — re-rendering the same
 //! provider + loader is byte-identical (`make serve-smoke` asserts it).
 
-use super::engine::LogitsProvider;
+use super::engine::{IncrementalLogitsProvider, LogitsProvider};
 use super::sampling;
 use crate::data::dataset::DataLoader;
+use crate::kvcache::{KvCache, KvCacheSpec};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -110,6 +111,96 @@ pub fn evaluate_loader(
             mean_nll: batch_nll / batch_tokens.max(1) as f64,
         });
     }
+    let mean_nll = total_nll / tokens.max(1) as f64;
+    Ok(EvalReport { rows, tokens, mean_nll, perplexity: mean_nll.exp(), forwards, per_batch })
+}
+
+/// [`evaluate_loader`] through the incremental KV-cached path: each
+/// row streams through the provider in `kv.prefill_chunk`-token slices
+/// against a paged cache instead of one static-grid forward.
+///
+/// NLL accumulation visits the identical f64 values in the identical
+/// order (batch → row → position), so `mean_nll`/`perplexity` are
+/// **bitwise equal** to the full path for any provider whose
+/// incremental forward honours its bitwise contract. Only `forwards`
+/// differs: here it counts incremental provider calls (chunks), not
+/// shared grid forwards.
+///
+/// Prefix reuse is deliberately forced off — a reused position's
+/// logits are never recomputed, which would leave targets unscored.
+pub fn evaluate_loader_incremental(
+    provider: &mut dyn IncrementalLogitsProvider,
+    dl: &DataLoader,
+    max_batches: usize,
+    kv: &KvCacheSpec,
+) -> Result<EvalReport> {
+    let (s, v) = (provider.seq_len(), provider.vocab_size());
+    if dl.dataset.seq_len() != s {
+        bail!(
+            "eval dataset seq_len {} does not match the provider's static seq_len {s}",
+            dl.dataset.seq_len()
+        );
+    }
+    let n = dl.batches_per_epoch(0).min(max_batches.max(1));
+    if n == 0 {
+        bail!("eval dataloader has no batches");
+    }
+    let chunk = kv.prefill_chunk.max(1);
+    // One row is resident at a time, so the pool only needs one row's
+    // worst-case footprint.
+    let mut cache =
+        KvCache::new(provider.kv_layout(), kv.block_size, s.div_ceil(kv.block_size), false)?;
+    let mut total_nll = 0f64;
+    let (mut rows, mut tokens, mut forwards) = (0u64, 0u64, 0u64);
+    let mut per_batch = Vec::with_capacity(n);
+    for bi in 0..n {
+        let batch = dl.batch(0, bi);
+        let mut batch_nll = 0f64;
+        let mut batch_tokens = 0u64;
+        for j in 0..batch.batch_size {
+            let row = &batch.inputs[j * s..(j + 1) * s];
+            let (sid, reused) = cache
+                .alloc_seq(row, s)
+                .map_err(|e| anyhow::anyhow!("eval cache sized too small: {e}"))?;
+            debug_assert_eq!(reused, 0, "prefix reuse is disabled for eval");
+            let mut fed = 0usize;
+            while fed < s {
+                let end = (fed + chunk).min(s);
+                let logits = {
+                    let mut store = cache.store(sid);
+                    provider.forward_incremental(&mut store, &row[fed..end])?
+                };
+                if logits.len() != (end - fed) * v {
+                    bail!(
+                        "incremental provider returned {} logits, expected {}",
+                        logits.len(),
+                        (end - fed) * v
+                    );
+                }
+                forwards += 1;
+                for p in fed..end {
+                    let tgt = batch.targets[j * s + p] as usize;
+                    if tgt >= v {
+                        bail!("target token {tgt} out of vocabulary ({v})");
+                    }
+                    let lrow = &logits[(p - fed) * v..(p - fed + 1) * v];
+                    batch_nll -= sampling::log_prob(lrow, tgt) as f64;
+                }
+                fed = end;
+            }
+            cache.free_seq(sid);
+            rows += 1;
+            batch_tokens += s as u64;
+        }
+        total_nll += batch_nll;
+        tokens += batch_tokens;
+        per_batch.push(BatchEval {
+            index: bi,
+            tokens: batch_tokens,
+            mean_nll: batch_nll / batch_tokens.max(1) as f64,
+        });
+    }
+    debug_assert_eq!(cache.blocks_in_use(), 0, "eval leaked KV blocks");
     let mean_nll = total_nll / tokens.max(1) as f64;
     Ok(EvalReport { rows, tokens, mean_nll, perplexity: mean_nll.exp(), forwards, per_batch })
 }
@@ -276,6 +367,51 @@ mod tests {
         let (md2, js2) = b.write(&dir).unwrap();
         assert_eq!(first_md, std::fs::read(&md2).unwrap());
         assert_eq!(first_js, std::fs::read(&js2).unwrap());
+    }
+
+    #[test]
+    fn incremental_path_is_bitwise_equal_on_the_reference_model() {
+        use crate::model::refmodel::{RefModel, RefModelSpec};
+        let dl = loader(16, 4, 6, 3);
+        let spec = RefModelSpec { seed: 11, ..RefModelSpec::nano(16, 4, 2) };
+        let mut full = RefModel::new(spec).unwrap();
+        let want = evaluate_loader(&mut full, &dl, 2).unwrap();
+
+        for (block_size, chunk) in [(1, 1), (2, 3), (16, 4)] {
+            let kv = KvCacheSpec {
+                block_size,
+                prefill_chunk: chunk,
+                ..KvCacheSpec::default()
+            };
+            let mut inc = RefModel::new(spec).unwrap();
+            let got = evaluate_loader_incremental(&mut inc, &dl, 2, &kv).unwrap();
+            assert_eq!(got.rows, want.rows);
+            assert_eq!(got.tokens, want.tokens);
+            assert_eq!(
+                got.mean_nll.to_bits(),
+                want.mean_nll.to_bits(),
+                "bs={block_size} chunk={chunk}: {} vs {}",
+                got.mean_nll,
+                want.mean_nll
+            );
+            assert_eq!(got.perplexity.to_bits(), want.perplexity.to_bits());
+            for (g, w) in got.per_batch.iter().zip(&want.per_batch) {
+                assert_eq!(g.mean_nll.to_bits(), w.mean_nll.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_path_matches_on_the_synthetic_provider() {
+        use super::super::engine::SyntheticLogits;
+        let dl = loader(16, 4, 8, 2);
+        let mut full = SyntheticLogits { batch: 2, seq: 4, vocab: 16 };
+        let want = evaluate_loader(&mut full, &dl, 3).unwrap();
+        let mut inc = SyntheticLogits { batch: 2, seq: 4, vocab: 16 };
+        let got =
+            evaluate_loader_incremental(&mut inc, &dl, 3, &KvCacheSpec::default()).unwrap();
+        assert_eq!(got.mean_nll.to_bits(), want.mean_nll.to_bits());
+        assert_eq!(got.rows, want.rows);
     }
 
     #[test]

@@ -21,10 +21,20 @@
 //! trick the ablation scheduler uses for its runner): production wraps
 //! the compiled artifact in [`ModelLogitsProvider`]; tests, benches and
 //! the artifact-free `--synthetic` CLI mode use [`SyntheticLogits`].
+//!
+//! Providers that additionally implement [`IncrementalLogitsProvider`]
+//! (the pure-Rust [`crate::model::refmodel::RefModel`], and
+//! [`SyntheticLogits`] trivially) unlock the **KV-cached backend**
+//! ([`BatchedEngine::new_cached`]): paged-block attention state in a
+//! [`crate::kvcache`] pool, chunked prefill, O(1)-per-token decode, and
+//! cross-request prompt-prefix reuse — bitwise identical outputs to the
+//! full backend, configured through the `serve.kv_*` keys
+//! ([`crate::kvcache::KvCacheSpec`]).
+//!
 //! Entry points: `modalities serve` / `modalities eval`, the
 //! `serve/batched_engine` component + top-level `serve:` config section
-//! ([`components::ServeSpec`]), `examples/serve_batch.rs`, and
-//! `cargo bench --bench bench_generate`.
+//! ([`components::ServeSpec`]), `examples/serve_batch.rs`, `make
+//! kv-smoke`, and `cargo bench --bench bench_generate`.
 
 pub mod components;
 pub mod engine;
@@ -34,7 +44,7 @@ pub mod sampling;
 pub use components::ServeSpec;
 pub use engine::{
     generate_one, BatchedEngine, Completion, EngineConfig, EngineStats, FinishReason,
-    LogitsProvider, ModelLogitsProvider, Request, SyntheticLogits,
+    IncrementalLogitsProvider, LogitsProvider, ModelLogitsProvider, Request, SyntheticLogits,
 };
-pub use eval::{evaluate_loader, BatchEval, EvalReport};
+pub use eval::{evaluate_loader, evaluate_loader_incremental, BatchEval, EvalReport};
 pub use sampling::SamplingParams;

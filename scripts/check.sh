@@ -20,6 +20,9 @@ git diff --exit-code docs/config_reference.md
 echo "==> backend equivalence suite (threaded vs lockstep, bitwise, both backends)"
 cargo test --release --quiet --test backend_equivalence
 
+echo "==> kv-cache equivalence suite (cached vs full decode, bitwise, + pool properties)"
+cargo test --release --quiet --test kvcache_equivalence
+
 echo "==> kernel equivalence suite (fused kernels vs scalar references, bitwise)"
 cargo test --release --quiet --lib kernels
 
@@ -31,6 +34,9 @@ scripts/sweep_smoke.sh
 
 echo "==> serve subsystem smoke (artifact-free synthetic provider)"
 scripts/serve_smoke.sh
+
+echo "==> kv-cache smoke (shared-prefix requests, paged cache, leak check)"
+scripts/kv_smoke.sh
 
 echo "==> dist backend smoke (4-rank threaded HSDP train → ckpt → resume; skips without artifacts)"
 scripts/dist_smoke.sh

@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# KV-cache smoke test (`make kv-smoke`): pushes 8 requests sharing an
+# 8-token system prompt through the paged-KV cached serving backend on
+# the pure-Rust reference model, with a deliberately small block pool
+# so admission backpressure (out-of-blocks → requeue) is exercised
+# alongside prefix reuse. Asserts: every request completes, the shared
+# system prompt produces prefix-index hits, and engine shutdown leaks
+# zero blocks. Then cross-checks the eval path: the incremental
+# (cached) scorer must report the same mean NLL and perplexity strings
+# as the full-forward scorer — the bitwise contract, end to end through
+# the CLI. Artifact-free; never skips.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ROOT="$(mktemp -d)"
+trap 'rm -rf "$ROOT"' EXIT
+CFG="$ROOT/kv-smoke.yaml"
+cat > "$CFG" <<EOF
+settings:
+  seed: 17
+  run_name: kv-smoke
+serve:
+  provider: reference
+  queue_capacity: 4
+  max_new_tokens: 6
+  seed: 17
+  eval_batches: 4
+  eval_loader: eval_loader
+  report_dir: $ROOT/serve
+  synthetic_batch: 4
+  synthetic_seq_len: 32
+  synthetic_vocab: 64
+  kv_cache: true
+  kv_block_size: 2
+  kv_pool_blocks: 24
+  kv_prefill_chunk: 3
+  kv_prefix_reuse: true
+  requests:
+    - "5,6,7,8,9,10,11,12,1"
+    - "5,6,7,8,9,10,11,12,2"
+    - "5,6,7,8,9,10,11,12,3"
+    - "5,6,7,8,9,10,11,12,20"
+    - "5,6,7,8,9,10,11,12,21"
+    - "5,6,7,8,9,10,11,12,40"
+    - "5,6,7,8,9,10,11,12,41"
+    - "5,6,7,8,9,10,11,12,63"
+components:
+  eval_ds:
+    component_key: dataset
+    variant_key: synthetic_lm
+    config: {vocab_size: 64, seq_len: 32, num_samples: 64, noise: 0.02}
+  eval_sampler:
+    component_key: sampler
+    variant_key: sequential
+    config: {dataset: {instance_key: eval_ds}}
+  eval_loader:
+    component_key: dataloader
+    variant_key: default
+    config:
+      dataset: {instance_key: eval_ds}
+      sampler: {instance_key: eval_sampler}
+      batch_size: 4
+EOF
+
+run() { cargo run --release --quiet -- "$@"; }
+
+echo "==> serve: 8 shared-prefix requests through the paged-KV cached backend (pool 24 blocks)"
+run serve --config "$CFG" --synthetic | tee "$ROOT/serve.out"
+grep 'serve done: 8/8 complete' "$ROOT/serve.out" > /dev/null || {
+  echo "kv-smoke: not all requests completed" >&2
+  exit 1
+}
+
+HITS="$(sed -n 's/.*prefix hits=\([0-9]*\).*/\1/p' "$ROOT/serve.out")"
+[ -n "$HITS" ] || { echo "kv-smoke: no kv cache stats line in serve output" >&2; exit 1; }
+[ "$HITS" -gt 0 ] || {
+  echo "kv-smoke: shared system prompt produced zero prefix hits" >&2
+  exit 1
+}
+
+grep 'kv blocks leaked: 0' "$ROOT/serve.out" > /dev/null || {
+  echo "kv-smoke: engine shutdown leaked KV blocks" >&2
+  exit 1
+}
+
+echo "==> eval: incremental (cached) scorer matches the full-forward scorer"
+run eval --config "$CFG" --synthetic > /dev/null
+CACHED_NLL="$(grep -o '"mean_nll": [^,]*' "$ROOT/serve/eval_report.json")"
+CACHED_PPL="$(grep -o '"perplexity": [^,]*' "$ROOT/serve/eval_report.json")"
+run eval --config "$CFG" --synthetic --set serve.kv_cache=false > /dev/null
+FULL_NLL="$(grep -o '"mean_nll": [^,]*' "$ROOT/serve/eval_report.json")"
+FULL_PPL="$(grep -o '"perplexity": [^,]*' "$ROOT/serve/eval_report.json")"
+[ "$CACHED_NLL" = "$FULL_NLL" ] && [ "$CACHED_PPL" = "$FULL_PPL" ] || {
+  echo "kv-smoke: incremental eval diverged from full forward" >&2
+  echo "  cached: $CACHED_NLL $CACHED_PPL" >&2
+  echo "  full:   $FULL_NLL $FULL_PPL" >&2
+  exit 1
+}
+
+echo "kv-smoke: OK (8/8 complete, prefix hits=$HITS, zero blocks leaked, eval bitwise-stable)"
