@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke bench-json
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke trace-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -46,6 +46,14 @@ chaos-smoke:
 # and incremental eval matches the full-forward scorer. Artifact-free.
 kv-smoke:
 	scripts/kv_smoke.sh
+
+# Telemetry trace smoke: 4-rank threaded profiled run — every rank's
+# ring carries all five step phases, collective-lane span bytes equal
+# CommStats exactly, the Chrome trace parses, and the normalized trace
+# is byte-stable across identical seeded runs. Artifact-free — never
+# skips.
+trace-smoke:
+	scripts/trace_smoke.sh
 
 # Machine-readable benches, artifact-free:
 #  * steady-state train step (scratch-vs-allocating + the

@@ -20,7 +20,9 @@
 //!    deterministic gate: a counting global allocator asserts the SPMD
 //!    `unshard_flats` + `unshard_discard` + `apply_grads` loop performs
 //!    **zero** heap allocations after warmup, under both FSDP-full and
-//!    HSDP (replica all-reduce path) sharding.
+//!    HSDP (replica all-reduce path) sharding — with telemetry span
+//!    collection enabled, so the instrumentation layer is held to the
+//!    same standard.
 //!
 //! Flags: `--alloc-only` runs only sections 4–5 (no artifacts needed —
 //! what `scripts/check.sh` gates on); `--json PATH` writes the
@@ -257,6 +259,16 @@ fn zero_alloc_steady_state(
         (0..world).map(|r| fake_grads(params, 990 + r as u64)).collect();
     let mut engines =
         build_rank_engines(params, world, 1 << 20, strategy, BackendSpec::threaded(), false);
+    // Telemetry stays ON through the measured loop: the span layer must
+    // hold the zero-allocation invariant too. Rings are pre-allocated
+    // here (before warmup); every hot-path record is a Copy-slot write.
+    let tel = modalities::telemetry::Telemetry::new(
+        modalities::telemetry::TelemetrySpec::default(),
+        world,
+    );
+    for (rank, eng) in engines.iter_mut().enumerate() {
+        eng.set_telemetry(tel.handle(rank));
+    }
 
     let snap = AtomicU64::new(0);
     let delta = AtomicU64::new(u64::MAX);

@@ -89,7 +89,7 @@ pub fn usage() -> &'static str {
     "modalities — PyTorch-native-style LLM training framework (rust + JAX + Pallas reproduction)
 
 USAGE:
-  modalities train      --config <yaml> [--set path=value ...] [--resume]
+  modalities train      --config <yaml> [--set path=value ...] [--resume] [--profile]
                         [--elastic] [--max-restarts <n>]  # rank-loss recovery supervisor
   modalities sweep      --config <yaml> [--filter <substr>]   # plan: list expanded points
   modalities sweep run    --config <yaml> [--jobs <n>] [--filter <substr>] [--set ...]
@@ -105,12 +105,14 @@ USAGE:
   modalities generate   --config <yaml> --prompt <ids> [--ckpt <mckpt>] [--max-new <n>]
                         [--temperature <t>] [--top-k <k>] [--top-p <p>] [--seed <n>]
   modalities serve      --config <yaml> [--requests <file>] [--prompt <ids>] [--synthetic]
+                        [--profile]                       # prefill/decode span trace
   modalities eval       --config <yaml> [--batches <n>] [--report <md>] [--synthetic]
   modalities components                     # list registered components
   modalities docs       [--out <md>]        # generate docs/config_reference.md
   modalities config resolve --config <yaml> # print interpolated config
   modalities tune       --world <n> [--model <name>]
   modalities trace pp   [--set stages=4] [--set micros=16]
+  modalities trace <run_dir>                # summarize a --profile Chrome trace
   modalities version
 "
 }
@@ -189,6 +191,16 @@ mod tests {
         assert!(e.has_flag("synthetic"));
         let v = p(&["eval", "--config", "c.yaml", "--batches", "4"]);
         assert_eq!(v.opt_usize("batches", 8).unwrap(), 4);
+    }
+
+    #[test]
+    fn profile_flag_and_trace_run_dir_parse() {
+        let a = p(&["train", "--config", "c.yaml", "--profile"]);
+        assert!(a.has_flag("profile"));
+        let s = p(&["serve", "--config", "c.yaml", "--synthetic", "--profile"]);
+        assert!(s.has_flag("profile"));
+        let t = p(&["trace", "runs/run"]);
+        assert_eq!(t.positional, vec!["trace", "runs/run"]);
     }
 
     #[test]

@@ -211,6 +211,15 @@ pub trait ProcessGroup: Send {
         let _ = (elems, count);
     }
 
+    /// Attach a span writer: every subsequent collective is recorded as
+    /// an op-tagged `collective` span (bytes/seq matching the
+    /// `CommStats` accounting exactly — same call sites, same values).
+    /// The default is a no-op so shims and test doubles compile
+    /// unchanged; both real backends store the handle.
+    fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        let _ = tel;
+    }
+
     /// This rank's communication telemetry.
     fn stats(&self) -> &CommStats;
 
@@ -268,6 +277,10 @@ impl ProcessGroup for Box<dyn ProcessGroup> {
 
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
         (**self).reserve_scratch(elems, count)
+    }
+
+    fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        (**self).set_telemetry(tel)
     }
 
     fn stats(&self) -> &CommStats {
@@ -802,6 +815,9 @@ struct HandleInner {
     taken: Vec<Arc<Vec<f32>>>,
     /// Fold scratch for the all-reduce reduce-scatter phase.
     fold: Vec<f32>,
+    /// Optional span writer: when attached, every collective records an
+    /// op-tagged span alongside its `CommStats` entry.
+    tel: Option<crate::telemetry::RankTelemetry>,
     aborted: bool,
 }
 
@@ -815,7 +831,32 @@ impl HandleInner {
             seqs: Vec::new(),
             taken: Vec::new(),
             fold: Vec::new(),
+            tel: None,
             aborted: false,
+        }
+    }
+
+    /// Timestamp the start of a collective iff telemetry is attached —
+    /// the disabled path stays a single `Option` check.
+    fn tel_start(&self) -> Option<Instant> {
+        self.tel.as_ref().map(|_| Instant::now())
+    }
+
+    /// The single exit point for collective accounting: record into
+    /// `CommStats` and, when telemetry is attached, emit a span with
+    /// the *same* op/bytes values — which is what makes per-op span
+    /// byte totals match `CommStats` exactly, by construction.
+    fn finish_op(
+        &mut self,
+        op: &'static str,
+        bytes: u64,
+        messages: u64,
+        seq: u64,
+        t0: Option<Instant>,
+    ) {
+        self.stats.record(op, bytes, messages);
+        if let (Some(tel), Some(t0)) = (self.tel.as_ref(), t0) {
+            tel.record(crate::telemetry::SpanKind::Collective, op, bytes, seq, t0);
         }
     }
 
@@ -906,7 +947,7 @@ impl LockstepGroup {
         op: &'static str,
         payload: &[f32],
         compute: impl FnOnce(&mut Collectives, Vec<Vec<f32>>) -> CentralResult,
-    ) -> Result<CentralTaken> {
+    ) -> Result<(CentralTaken, u64)> {
         let rank = self.inner.rank;
         let pos = group_pos(rank, self.inner.core.world, group)?;
         let gid = self.inner.gid(group);
@@ -930,7 +971,7 @@ impl LockstepGroup {
         })?;
         let taken = core.wait_central(rank, gid, seq, group, op)?;
         core.retire(pos, group, gid, seq);
-        Ok(taken)
+        Ok((taken, seq))
     }
 }
 
@@ -945,12 +986,13 @@ impl ProcessGroup for LockstepGroup {
 
     fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         if n == 1 {
             group_pos(self.inner.rank, self.inner.core.world, group)?;
-            self.inner.stats.record("all_gather", 0, 0);
+            self.inner.finish_op("all_gather", 0, 0, 0, t0);
             return Ok(shard.to_vec());
         }
-        let taken = self.central(group, "all_gather", shard, |orc, bufs| {
+        let (taken, seq) = self.central(group, "all_gather", shard, |orc, bufs| {
             let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
             CentralResult::Shared(Arc::new(orc.all_gather(&refs, refs.len())))
         })?;
@@ -958,9 +1000,13 @@ impl ProcessGroup for LockstepGroup {
             CentralTaken::Shared(arc) => arc.as_ref().clone(),
             CentralTaken::Own(v) => v,
         };
-        self.inner
-            .stats
-            .record("all_gather", rank_phase_bytes(out.len(), n), rank_phase_messages(n));
+        self.inner.finish_op(
+            "all_gather",
+            rank_phase_bytes(out.len(), n),
+            rank_phase_messages(n),
+            seq,
+            t0,
+        );
         Ok(out)
     }
 
@@ -972,12 +1018,13 @@ impl ProcessGroup for LockstepGroup {
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         let n = group.len();
         let len = buf.len();
+        let t0 = self.inner.tel_start();
         if n == 1 {
             group_pos(self.inner.rank, self.inner.core.world, group)?;
-            self.inner.stats.record("all_reduce", 0, 0);
+            self.inner.finish_op("all_reduce", 0, 0, 0, t0);
             return Ok(());
         }
-        let taken = self.central(group, "all_reduce", buf, |orc, mut bufs| {
+        let (taken, seq) = self.central(group, "all_reduce", buf, |orc, mut bufs| {
             let idx: Vec<usize> = (0..bufs.len()).collect();
             orc.all_reduce_sum(&mut bufs, &idx);
             CentralResult::Shared(Arc::new(bufs.swap_remove(0)))
@@ -986,10 +1033,12 @@ impl ProcessGroup for LockstepGroup {
             CentralTaken::Shared(arc) => buf.copy_from_slice(&arc),
             CentralTaken::Own(v) => buf.copy_from_slice(&v),
         }
-        self.inner.stats.record(
+        self.inner.finish_op(
             "all_reduce",
             2 * rank_phase_bytes(len, n),
             2 * rank_phase_messages(n),
+            seq,
+            t0,
         );
         Ok(())
     }
@@ -997,13 +1046,14 @@ impl ProcessGroup for LockstepGroup {
     fn reduce_scatter_sum(&mut self, buf: &[f32], group: &[usize]) -> Result<Vec<f32>> {
         let n = group.len();
         let len = buf.len();
+        let t0 = self.inner.tel_start();
         group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
-            self.inner.stats.record("reduce_scatter", 0, 0);
+            self.inner.finish_op("reduce_scatter", 0, 0, 0, t0);
             return Ok(buf.to_vec());
         }
         let members = group.to_vec();
-        let taken = self.central(group, "reduce_scatter", buf, move |orc, mut bufs| {
+        let (taken, seq) = self.central(group, "reduce_scatter", buf, move |orc, mut bufs| {
             let idx: Vec<usize> = (0..bufs.len()).collect();
             let shards = orc.reduce_scatter_sum(&mut bufs, &idx);
             CentralResult::PerRank(members.into_iter().zip(shards).collect())
@@ -1012,9 +1062,13 @@ impl ProcessGroup for LockstepGroup {
             CentralTaken::Own(v) => v,
             CentralTaken::Shared(_) => bail!("reduce_scatter published a shared result"),
         };
-        self.inner
-            .stats
-            .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
+        self.inner.finish_op(
+            "reduce_scatter",
+            rank_phase_bytes(len, n),
+            rank_phase_messages(n),
+            seq,
+            t0,
+        );
         Ok(out)
     }
 
@@ -1026,12 +1080,13 @@ impl ProcessGroup for LockstepGroup {
 
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         if n == 1 {
             group_pos(self.inner.rank, self.inner.core.world, group)?;
-            self.inner.stats.record("all_reduce_scalar", 0, 0);
+            self.inner.finish_op("all_reduce_scalar", 0, 0, 0, t0);
             return Ok(v);
         }
-        let taken = self.central(group, "all_reduce_scalar", &[v], |orc, bufs| {
+        let (taken, seq) = self.central(group, "all_reduce_scalar", &[v], |orc, bufs| {
             let vals: Vec<f32> = bufs.iter().map(|b| b[0]).collect();
             CentralResult::Shared(Arc::new(vec![orc.all_reduce_scalar(&vals)]))
         })?;
@@ -1039,30 +1094,37 @@ impl ProcessGroup for LockstepGroup {
             CentralTaken::Shared(arc) => arc[0],
             CentralTaken::Own(v) => v[0],
         };
-        self.inner.stats.record(
+        self.inner.finish_op(
             "all_reduce_scalar",
             2 * rank_phase_bytes(1, n),
             2 * rank_phase_messages(n),
+            seq,
+            t0,
         );
         Ok(out)
     }
 
     fn barrier(&mut self, group: &[usize]) -> Result<()> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         if n == 1 {
             group_pos(self.inner.rank, self.inner.core.world, group)?;
-            self.inner.stats.record("barrier", 0, 0);
+            self.inner.finish_op("barrier", 0, 0, 0, t0);
             return Ok(());
         }
-        let _ = self.central(group, "barrier", &[], |_orc, _bufs| {
+        let (_, seq) = self.central(group, "barrier", &[], |_orc, _bufs| {
             CentralResult::Shared(Arc::new(Vec::new()))
         })?;
-        self.inner.stats.record("barrier", 0, rank_phase_messages(n));
+        self.inner.finish_op("barrier", 0, rank_phase_messages(n), seq, t0);
         Ok(())
     }
 
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
         self.inner.core.reserve(elems, count);
+    }
+
+    fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        self.inner.tel = Some(tel);
     }
 
     fn stats(&self) -> &CommStats {
@@ -1120,9 +1182,10 @@ impl ProcessGroup for ThreadedGroup {
 
     fn all_gather(&mut self, shard: &[f32], group: &[usize]) -> Result<Vec<f32>> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
-            self.inner.stats.record("all_gather", 0, 0);
+            self.inner.finish_op("all_gather", 0, 0, 0, t0);
             return Ok(shard.to_vec());
         }
         let (pos, gid, seq) = self.inner.begin(group, "all_gather", shard)?;
@@ -1134,14 +1197,19 @@ impl ProcessGroup for ThreadedGroup {
             out.extend_from_slice(d);
         }
         self.finish(pos, group, gid, seq);
-        self.inner
-            .stats
-            .record("all_gather", rank_phase_bytes(total, n), rank_phase_messages(n));
+        self.inner.finish_op(
+            "all_gather",
+            rank_phase_bytes(total, n),
+            rank_phase_messages(n),
+            seq,
+            t0,
+        );
         Ok(out)
     }
 
     fn all_gather_into(&mut self, shard: &[f32], group: &[usize], out: &mut [f32]) -> Result<()> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
             if out.len() != shard.len() {
@@ -1152,7 +1220,7 @@ impl ProcessGroup for ThreadedGroup {
                 );
             }
             out.copy_from_slice(shard);
-            self.inner.stats.record("all_gather", 0, 0);
+            self.inner.finish_op("all_gather", 0, 0, 0, t0);
             return Ok(());
         }
         let (pos, gid, seq) = self.inner.begin(group, "all_gather", shard)?;
@@ -1169,18 +1237,23 @@ impl ProcessGroup for ThreadedGroup {
             off += d.len();
         }
         self.finish(pos, group, gid, seq);
-        self.inner
-            .stats
-            .record("all_gather", rank_phase_bytes(total, n), rank_phase_messages(n));
+        self.inner.finish_op(
+            "all_gather",
+            rank_phase_bytes(total, n),
+            rank_phase_messages(n),
+            seq,
+            t0,
+        );
         Ok(())
     }
 
     fn all_reduce_sum(&mut self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         let n = group.len();
         let len = buf.len();
+        let t0 = self.inner.tel_start();
         let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
-            self.inner.stats.record("all_reduce", 0, 0);
+            self.inner.finish_op("all_reduce", 0, 0, 0, t0);
             return Ok(());
         }
         // Phase 1 (reduce-scatter): every member folds its own shard in
@@ -1215,10 +1288,14 @@ impl ProcessGroup for ThreadedGroup {
         }
         debug_assert_eq!(off, len);
         self.finish(p, group, gid, seq2);
-        self.inner.stats.record(
+        // One record for both rendezvous phases; the span carries the
+        // phase-1 sequence number.
+        self.inner.finish_op(
             "all_reduce",
             2 * rank_phase_bytes(len, n),
             2 * rank_phase_messages(n),
+            seq,
+            t0,
         );
         Ok(())
     }
@@ -1240,6 +1317,7 @@ impl ProcessGroup for ThreadedGroup {
     ) -> Result<()> {
         let n = group.len();
         let len = buf.len();
+        let t0 = self.inner.tel_start();
         let pos = group_pos(self.inner.rank, self.inner.core.world, group)?;
         let (start, slen) = even_split(len, n, pos);
         if n == 1 {
@@ -1250,7 +1328,7 @@ impl ProcessGroup for ThreadedGroup {
                 );
             }
             out.copy_from_slice(buf);
-            self.inner.stats.record("reduce_scatter", 0, 0);
+            self.inner.finish_op("reduce_scatter", 0, 0, 0, t0);
             return Ok(());
         }
         // Deposit before validating the output size so a mis-sized
@@ -1271,17 +1349,22 @@ impl ProcessGroup for ThreadedGroup {
             add_slice(out, &d[start..start + slen]);
         }
         self.finish(p, group, gid, seq);
-        self.inner
-            .stats
-            .record("reduce_scatter", rank_phase_bytes(len, n), rank_phase_messages(n));
+        self.inner.finish_op(
+            "reduce_scatter",
+            rank_phase_bytes(len, n),
+            rank_phase_messages(n),
+            seq,
+            t0,
+        );
         Ok(())
     }
 
     fn all_reduce_scalar(&mut self, v: f32, group: &[usize]) -> Result<f32> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
-            self.inner.stats.record("all_reduce_scalar", 0, 0);
+            self.inner.finish_op("all_reduce_scalar", 0, 0, 0, t0);
             return Ok(v);
         }
         let (pos, gid, seq) = self.inner.begin(group, "all_reduce_scalar", &[v])?;
@@ -1292,31 +1375,38 @@ impl ProcessGroup for ThreadedGroup {
             sum += d[0];
         }
         self.finish(pos, group, gid, seq);
-        self.inner.stats.record(
+        self.inner.finish_op(
             "all_reduce_scalar",
             2 * rank_phase_bytes(1, n),
             2 * rank_phase_messages(n),
+            seq,
+            t0,
         );
         Ok(sum)
     }
 
     fn barrier(&mut self, group: &[usize]) -> Result<()> {
         let n = group.len();
+        let t0 = self.inner.tel_start();
         group_pos(self.inner.rank, self.inner.core.world, group)?;
         if n == 1 {
-            self.inner.stats.record("barrier", 0, 0);
+            self.inner.finish_op("barrier", 0, 0, 0, t0);
             return Ok(());
         }
         let (pos, gid, seq) = self.inner.begin(group, "barrier", &[])?;
         let core = self.inner.core.clone();
         core.wait_deposits(gid, seq, group, "barrier", &mut self.inner.taken)?;
         self.finish(pos, group, gid, seq);
-        self.inner.stats.record("barrier", 0, rank_phase_messages(n));
+        self.inner.finish_op("barrier", 0, rank_phase_messages(n), seq, t0);
         Ok(())
     }
 
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
         self.inner.core.reserve(elems, count);
+    }
+
+    fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        self.inner.tel = Some(tel);
     }
 
     fn stats(&self) -> &CommStats {

@@ -208,6 +208,10 @@ pub struct RankEngine {
     full_group: Vec<usize>,
     /// Step-persistent buffers (see [`StepScratch`]).
     scratch: StepScratch,
+    /// Optional span writer: when attached, `apply_grads` emits
+    /// `collective` / `optimizer` phase spans (and the process group
+    /// emits per-op collective spans).
+    tel: Option<crate::telemetry::RankTelemetry>,
 }
 
 impl RankEngine {
@@ -276,6 +280,7 @@ impl RankEngine {
             replica_group,
             full_group,
             scratch,
+            tel: None,
         };
         // Prime the communicator's payload pool so even the very first
         // steps rendezvous allocation-free: up to two collective
@@ -297,6 +302,14 @@ impl RankEngine {
     /// This rank's communication telemetry.
     pub fn stats(&self) -> &CommStats {
         self.pg.stats()
+    }
+
+    /// Attach a span writer: the engine emits `collective`/`optimizer`
+    /// phase spans from `apply_grads` and forwards the handle to its
+    /// process group for per-op collective spans.
+    pub fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        self.pg.set_telemetry(tel.clone());
+        self.tel = Some(tel);
     }
 
     /// Mark this rank dead on its communicator, waking blocked peers.
@@ -402,6 +415,13 @@ impl RankEngine {
         }
         let inv_w = 1.0 / self.cfg.world as f32;
 
+        // Telemetry phase timing is post-hoc (`Option<Instant>` +
+        // record-after), not guard-based: a live guard would hold a
+        // borrow of `self.tel` across the `&mut self` collective calls.
+        let bytes_before =
+            if self.tel.is_some() { self.pg.stats().total_bytes() } else { 0 };
+        let t_coll = self.tel.as_ref().map(|_| std::time::Instant::now());
+
         // Per unit: flatten into the staging scratch, reduce to this
         // rank's shard scratch, replicate. Everything lands in
         // step-persistent buffers through the `_into` collectives.
@@ -438,6 +458,13 @@ impl RankEngine {
                     .all_reduce_sum(&mut self.scratch.grad_shards[u], &self.replica_group)?;
             }
         }
+        if let Some(t0) = t_coll {
+            let bytes = self.pg.stats().total_bytes() - bytes_before;
+            if let Some(tel) = self.tel.as_ref() {
+                tel.record(crate::telemetry::SpanKind::Phase, "collective", bytes, 0, t0);
+            }
+        }
+        let t_opt = self.tel.as_ref().map(|_| std::time::Instant::now());
 
         // Mean over ranks fused with this slot's squared-norm partial
         // (one vectorized pass per shard; fixed-lane f64 reduction).
@@ -471,6 +498,12 @@ impl RankEngine {
             let shard = &mut self.shards[u];
             debug_assert_eq!(shard.len(), g.len());
             self.opts[u].update(shard, g, 0, lr_scale);
+        }
+        if let (Some(tel), Some(t0)) = (self.tel.as_ref(), t_opt) {
+            // The "optimizer" phase covers norm folding, clipping and
+            // the sharded update (the scalar all-reduce inside it also
+            // emits its own per-op collective span).
+            tel.record(crate::telemetry::SpanKind::Phase, "optimizer", 0, 0, t0);
         }
         Ok(grad_norm)
     }
@@ -612,6 +645,16 @@ impl FsdpEngine {
     pub fn per_rank_state_bytes(&self) -> usize {
         let shard_elems: usize = self.ranks[0].shards.iter().map(|s| s.len()).sum();
         shard_elems * 4 * 3
+    }
+
+    /// Attach a span collector: each rank gets the handle for its own
+    /// ring, so `apply_grads` phase spans and per-op collective spans
+    /// land per-rank (one Chrome-trace pid each).
+    pub fn attach_telemetry(&mut self, tel: &std::sync::Arc<crate::telemetry::Telemetry>) {
+        for eng in self.ranks.iter_mut() {
+            let rank = eng.rank();
+            eng.set_telemetry(tel.handle(rank));
+        }
     }
 
     /// Communicator-wide telemetry: every rank's [`CommStats`] merged.

@@ -55,6 +55,10 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             Some(c) => Some(c.downcast::<crate::optim::components::ClipSpec>()?.max_norm),
             None => None,
         };
+        let telemetry = match ctx.component_field_opt(cfg, "telemetry", "telemetry")? {
+            Some(c) => Some(c.downcast::<crate::telemetry::TelemetrySpec>()?),
+            None => None,
+        };
 
         let steps = ctx.usize(cfg, "steps")? as u64;
         let grad_accum = ctx.usize_or(cfg, "grad_accum", 1)?.max(1);
@@ -94,6 +98,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
                 run_dir,
                 run_name,
                 resume,
+                telemetry,
             },
         ))
     })?;
@@ -119,6 +124,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("eval_batches", "int", "8", "batches per eval pass"),
             ("run_dir", "string", "runs/<run_name>", "output/checkpoint directory"),
             ("resume", "bool", "false", "resume from latest sharded checkpoint"),
+            ("telemetry", "component", "none", "span/trace telemetry collection for the run"),
         ],
     );
 
@@ -277,6 +283,7 @@ pub struct GymSpecSeed {
     pub run_dir: PathBuf,
     pub run_name: String,
     pub resume: bool,
+    pub telemetry: Option<Arc<crate::telemetry::TelemetrySpec>>,
 }
 
 impl ObjectGraph {
@@ -329,6 +336,7 @@ impl ObjectGraph {
             config_yaml: self.config.to_yaml(),
             resume: seed.resume,
             segment_index: None,
+            telemetry: seed.telemetry.clone(),
         };
         Gym::new(spec).with_standard_subscribers(console)
     }
@@ -389,6 +397,22 @@ components:
         assert_eq!(gym.spec.run_name, "unit-test");
         assert!(gym.spec.prefetch.is_none(), "default loader is synchronous");
         assert!(!gym.spec.config_fingerprint.is_empty());
+    }
+
+    #[test]
+    fn gym_spec_carries_telemetry_reference() {
+        let src = SRC.replace(
+            "      run_dir: /tmp/modalities-gym-spec-test\n",
+            "      run_dir: /tmp/modalities-gym-spec-test\n      telemetry: {instance_key: tel}\n  tel:\n    component_key: telemetry\n    variant_key: rings\n    config: {ring_capacity: 128, normalize: true}\n",
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let gym = g.into_gym().unwrap();
+        let ts = gym.spec.telemetry.as_ref().expect("telemetry spec must reach the gym");
+        assert!(ts.enabled);
+        assert_eq!(ts.ring_capacity, 128);
+        assert!(ts.normalize);
     }
 
     #[test]

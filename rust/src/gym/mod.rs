@@ -72,6 +72,11 @@ pub struct GymSpec {
     /// ledger once the resume step is known, making the world size a
     /// per-segment property of the run.
     pub segment_index: Option<u64>,
+    /// Telemetry spec (the `telemetry:` config section or the
+    /// `--profile` flag). When present and enabled, the gym records
+    /// per-rank phase/collective spans and exports
+    /// `<run_dir>/telemetry/{trace,breakdown,metrics}.json`.
+    pub telemetry: Option<Arc<crate::telemetry::TelemetrySpec>>,
 }
 
 /// One (step, metric) curve point.
@@ -163,6 +168,18 @@ impl Gym {
             spec.parallel.backend,
         )?;
 
+        // Span collector: one pre-allocated ring per rank, handles
+        // threaded through the engine to every process group.
+        let tel: Option<Arc<crate::telemetry::Telemetry>> = match &spec.telemetry {
+            Some(ts) if ts.enabled => {
+                Some(crate::telemetry::Telemetry::new((**ts).clone(), world))
+            }
+            _ => None,
+        };
+        if let Some(t) = &tel {
+            fsdp.attach_telemetry(t);
+        }
+
         // Resume from the latest sharded checkpoint in run_dir. When
         // the checkpoint was written at a different world size (an
         // elastic rescale), load_sharded re-shards it N→M on the fly.
@@ -175,11 +192,22 @@ impl Gym {
         }
 
         // Elastic segment boundary: journal it into the ledger now that
-        // the resume step is known.
+        // the resume step is known, and drop an instant event onto
+        // every rank's segment lane.
         if let Some(index) = spec.segment_index {
             let marker = subscribers::SegmentMarker { index, world, start_step };
             for s in &mut self.subscribers {
                 s.on_segment(&marker);
+            }
+            if let Some(t) = &tel {
+                t.set_step(start_step);
+                for rank in 0..world {
+                    t.handle(rank).instant(
+                        crate::telemetry::SpanKind::Segment,
+                        "segment",
+                        index,
+                    );
+                }
             }
         }
 
@@ -242,49 +270,77 @@ impl Gym {
         );
 
         for step in start_step..spec.steps {
+            let step_t0 = std::time::Instant::now();
+            if let Some(t) = &tel {
+                t.set_step(step);
+            }
             let lr_scale = spec.scheduler.scale_at(step);
             // Gather full params once per step (grads don't change them
             // mid-accumulation).
             fsdp.unshard_into(&mut params)?;
 
-            // Accumulate per-rank grads over microbatches.
+            // Accumulate per-rank grads over microbatches. Rank compute
+            // runs on the main thread, so the per-rank phase spans
+            // (`data`/`forward`/`backward`) are emitted from here
+            // through each rank's own handle; `train_step` is one fused
+            // XLA call, so `forward` covers fwd+bwd on-device and
+            // `backward` is the host-side gradient accumulate/scale.
             let mut per_rank: Vec<Vec<Vec<f32>>> = Vec::with_capacity(world);
             let mut loss_sum = 0f32;
             for rank in 0..world {
+                let rtel = tel.as_ref().map(|t| t.handle(rank));
                 let mut acc: Option<Vec<Vec<f32>>> = None;
                 for a in 0..spec.grad_accum {
                     let global_micro = micro_idx + a as u64;
-                    let batch: Batch = match &mut feeds[rank] {
-                        Feed::Sync(l) => {
-                            let epoch = global_micro / batches_per_epoch as u64;
-                            let b = (global_micro % batches_per_epoch as u64) as usize;
-                            l.batch(epoch, b)
-                        }
-                        Feed::Prefetch(h) => h.next_batch().ok_or_else(|| {
-                            anyhow::anyhow!(
-                                "prefetcher for rank {rank} ended early at micro {global_micro}"
-                            )
-                        })?,
+                    {
+                        let _g = rtel
+                            .as_ref()
+                            .map(|rt| rt.span(crate::telemetry::SpanKind::Phase, "data"));
+                        let batch: Batch = match &mut feeds[rank] {
+                            Feed::Sync(l) => {
+                                let epoch = global_micro / batches_per_epoch as u64;
+                                let b = (global_micro % batches_per_epoch as u64) as usize;
+                                l.batch(epoch, b)
+                            }
+                            Feed::Prefetch(h) => h.next_batch().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "prefetcher for rank {rank} ended early at micro {global_micro}"
+                                )
+                            })?,
+                        };
+                        tb.fill_from(&batch);
+                    }
+                    let out = {
+                        let _g = rtel
+                            .as_ref()
+                            .map(|rt| rt.span(crate::telemetry::SpanKind::Phase, "forward"));
+                        model
+                            .train_step(&engine, &params, &tb)
+                            .with_context(|| format!("step {step} rank {rank}"))?
                     };
-                    tb.fill_from(&batch);
-                    let out = model
-                        .train_step(&engine, &params, &tb)
-                        .with_context(|| format!("step {step} rank {rank}"))?;
                     if !out.loss.is_finite() {
                         bail!("non-finite loss {} at step {step} rank {rank}", out.loss);
                     }
                     loss_sum += out.loss;
-                    match &mut acc {
-                        None => acc = Some(out.grads),
-                        Some(acc) => {
-                            for (a, g) in acc.iter_mut().zip(&out.grads) {
-                                crate::kernels::add_slice(a, g);
+                    {
+                        let _g = rtel
+                            .as_ref()
+                            .map(|rt| rt.span(crate::telemetry::SpanKind::Phase, "backward"));
+                        match &mut acc {
+                            None => acc = Some(out.grads),
+                            Some(acc) => {
+                                for (a, g) in acc.iter_mut().zip(&out.grads) {
+                                    crate::kernels::add_slice(a, g);
+                                }
                             }
                         }
                     }
                 }
                 let mut grads = acc.unwrap();
                 if spec.grad_accum > 1 {
+                    let _g = rtel
+                        .as_ref()
+                        .map(|rt| rt.span(crate::telemetry::SpanKind::Phase, "backward"));
                     let inv = 1.0 / spec.grad_accum as f32;
                     for g in &mut grads {
                         crate::kernels::scale_slice(g, inv);
@@ -312,6 +368,7 @@ impl Gym {
                 tokens_per_s: tokens_seen.saturating_sub(start_step * tokens_per_step) as f64
                     / timer.elapsed_s(),
                 comm_bytes_step: fsdp.comm_stats().total_bytes() - comm_before,
+                step_ms: step_t0.elapsed().as_secs_f64() * 1e3,
             };
             for s in &mut self.subscribers {
                 s.on_step(&rec);
@@ -358,6 +415,30 @@ impl Gym {
                 &spec.model.model_name,
                 &spec.config_fingerprint,
             )?;
+        }
+
+        // Telemetry export: Chrome trace (Perfetto-loadable), per-step
+        // phase breakdown (perfmodel calibration feed), and the unified
+        // metrics snapshot with the comm stats re-homed into it.
+        if let Some(t) = &tel {
+            let snaps = t.snapshot();
+            let tel_dir = spec.run_dir.join("telemetry");
+            std::fs::create_dir_all(&tel_dir)?;
+            let trace = crate::telemetry::trace::chrome_trace(&snaps, t.spec().normalize);
+            let trace_path = match &t.spec().trace_path {
+                Some(p) => PathBuf::from(p),
+                None => tel_dir.join("trace.json"),
+            };
+            std::fs::write(&trace_path, trace.dumps())?;
+            std::fs::write(
+                tel_dir.join("breakdown.json"),
+                crate::telemetry::trace::step_breakdown(&snaps).dumps(),
+            )?;
+            let mut metrics = crate::telemetry::metrics::MetricsRegistry::new();
+            metrics.ingest_comm("comm", &fsdp.comm_stats());
+            metrics.ingest_spans(&snaps);
+            std::fs::write(tel_dir.join("metrics.json"), metrics.to_json().dumps())?;
+            log::info!("telemetry trace written to {}", trace_path.display());
         }
 
         let elapsed = timer.elapsed_s();

@@ -18,6 +18,11 @@ pub struct StepRecord {
     pub tokens_seen: u64,
     pub tokens_per_s: f64,
     pub comm_bytes_step: u64,
+    /// Wall-clock duration of the whole optimizer step in milliseconds,
+    /// measured by the gym around the full data→forward→backward→
+    /// optimizer sequence (telemetry-backed; present even when the
+    /// telemetry ring buffers are disabled).
+    pub step_ms: f64,
 }
 
 /// Boundary of one elastic segment: emitted when a supervisor-driven
@@ -118,6 +123,16 @@ impl JsonlSubscriber {
     }
 }
 
+impl Drop for JsonlSubscriber {
+    fn drop(&mut self) {
+        // `BufWriter`'s own drop only flushes as a best-effort side
+        // effect of its destructor; make the contract explicit so a run
+        // that ends without `on_end` (early error, elastic kill between
+        // steps) still leaves every buffered record on disk.
+        let _ = self.out.flush();
+    }
+}
+
 impl Subscriber for JsonlSubscriber {
     fn on_step(&mut self, r: &StepRecord) {
         let rec = Json::from_pairs(vec![
@@ -129,6 +144,7 @@ impl Subscriber for JsonlSubscriber {
             ("tokens_seen", (r.tokens_seen as i64).into()),
             ("tokens_per_s", r.tokens_per_s.into()),
             ("comm_bytes_step", (r.comm_bytes_step as i64).into()),
+            ("step_ms", r.step_ms.into()),
         ]);
         let _ = writeln!(self.out, "{}", rec.dumps());
     }
@@ -236,6 +252,7 @@ mod tests {
                 tokens_seen: 1024,
                 tokens_per_s: 100.0,
                 comm_bytes_step: 4096,
+                step_ms: 12.5,
             });
             s.on_eval(1, 2.4);
             drop(s);
@@ -246,10 +263,37 @@ mod tests {
         let v = Json::parse(lines[0]).unwrap();
         assert_eq!(v.get("kind").unwrap().as_str(), Some("step"));
         assert_eq!(v.get("loss").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("step_ms").unwrap().as_f64(), Some(12.5));
         let e = Json::parse(lines[1]).unwrap();
         assert_eq!(e.get("kind").unwrap().as_str(), Some("eval"));
         // Eval records carry perplexity = exp(loss) alongside raw loss.
         let ppl = e.get("ppl").unwrap().as_f64().unwrap();
         assert!((ppl - (2.4f32 as f64).exp()).abs() < 1e-9, "ppl={ppl}");
+    }
+
+    #[test]
+    fn jsonl_flushes_buffered_records_on_drop() {
+        let dir = std::env::temp_dir().join("modalities-subscriber-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dropflush.jsonl");
+        {
+            let mut s = JsonlSubscriber::create(&path).unwrap();
+            // A single step record is far below BufWriter's default
+            // buffer size, so nothing reaches disk until a flush — the
+            // Drop impl is what makes it durable.
+            s.on_step(&StepRecord {
+                step: 7,
+                loss: 1.0,
+                lr: 1e-4,
+                grad_norm: 0.1,
+                tokens_seen: 64,
+                tokens_per_s: 10.0,
+                comm_bytes_step: 128,
+                step_ms: 3.0,
+            });
+        } // <- dropped here without on_end
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("step").unwrap().as_i64(), Some(7));
     }
 }

@@ -54,6 +54,7 @@ pub mod pipeline;
 pub mod registry;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tp;
 pub mod util;
 pub mod yaml;

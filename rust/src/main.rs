@@ -79,6 +79,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         return train_elastic(args, &cfg, &graph);
     }
     let mut gym = graph.into_gym()?;
+    if args.has_flag("profile") && gym.spec.telemetry.is_none() {
+        // `--profile` turns telemetry on with defaults when the config
+        // doesn't define its own `telemetry` component.
+        gym.spec.telemetry =
+            Some(Arc::new(modalities::telemetry::TelemetrySpec::default()));
+    }
     let summary = gym.run()?;
     println!(
         "run complete: final loss {:.4} after {} steps",
@@ -146,6 +152,10 @@ fn train_elastic(
     };
     let fingerprint = cfg.fingerprint_hex();
     let yaml = cfg.to_yaml();
+    let telemetry = seed.telemetry.clone().or_else(|| {
+        args.has_flag("profile")
+            .then(|| Arc::new(modalities::telemetry::TelemetrySpec::default()))
+    });
     let mut last: Option<RunSummary> = None;
     let run_segment = |plan: &SegmentPlan| -> Result<u64> {
         let parallel = Arc::new(ParallelSpec {
@@ -178,6 +188,7 @@ fn train_elastic(
             // even when the original run didn't ask to.
             resume: seed.resume || plan.index > 0,
             segment_index: Some(plan.index),
+            telemetry: telemetry.clone(),
         };
         let summary = Gym::new(spec).with_standard_subscribers(true)?.run()?;
         let steps = summary.steps;
@@ -523,8 +534,13 @@ fn drive_serve(
     spec: &modalities::serve::ServeSpec,
     geom: (usize, usize, usize),
     label: &str,
+    tel: Option<Arc<modalities::telemetry::Telemetry>>,
 ) -> Result<()> {
     use modalities::serve::Request;
+    if let Some(t) = &tel {
+        // Single-process serving: the engine is rank 0.
+        engine.set_telemetry(t.handle(0));
+    }
     println!(
         "serve: {} requests through a B={} continuous-batching engine \
          (S={}, V={}, queue={}, {label})",
@@ -600,6 +616,17 @@ fn drive_serve(
         let leaked = engine.kv_shutdown().unwrap_or(0);
         println!("kv blocks leaked: {leaked}");
     }
+    if let Some(t) = &tel {
+        let snaps = t.snapshot();
+        let dir = spec.report_dir.join("telemetry");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let trace = modalities::telemetry::trace::chrome_trace(&snaps, t.spec().normalize);
+        let path = dir.join("trace.json");
+        std::fs::write(&path, trace.dumps())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("profile: wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -609,6 +636,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let spec = ServeSpec::from_config(&cfg)?;
     let prompts = serve_prompts(args, &cfg)?;
+    // `--profile`: collect prefill/decode spans (world 1) and export a
+    // Chrome trace under `<report_dir>/telemetry/`.
+    let tel = if args.has_flag("profile") {
+        Some(modalities::telemetry::Telemetry::new(
+            modalities::telemetry::TelemetrySpec::default(),
+            1,
+        ))
+    } else {
+        None
+    };
 
     if args.has_flag("synthetic") {
         if spec.provider == "reference" {
@@ -616,20 +653,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let geom = (p.batch_size(), p.seq_len(), p.vocab_size());
             if spec.kv.enabled {
                 let e = BatchedEngine::new_cached(&mut p, spec.engine_config(), &spec.kv)?;
-                drive_serve(e, &prompts, &spec, geom, "reference model, paged KV cache")
+                drive_serve(e, &prompts, &spec, geom, "reference model, paged KV cache", tel)
             } else {
                 let e = BatchedEngine::new(&mut p, spec.engine_config())?;
-                drive_serve(e, &prompts, &spec, geom, "reference model, full forward")
+                drive_serve(e, &prompts, &spec, geom, "reference model, full forward", tel)
             }
         } else {
             let mut p = spec.synthetic_provider(None);
             let geom = (p.batch_size(), p.seq_len(), p.vocab_size());
             if spec.kv.enabled {
                 let e = BatchedEngine::new_cached(&mut p, spec.engine_config(), &spec.kv)?;
-                drive_serve(e, &prompts, &spec, geom, "synthetic provider, paged KV cache")
+                drive_serve(e, &prompts, &spec, geom, "synthetic provider, paged KV cache", tel)
             } else {
                 let e = BatchedEngine::new(&mut p, spec.engine_config())?;
-                drive_serve(e, &prompts, &spec, geom, "synthetic provider")
+                drive_serve(e, &prompts, &spec, geom, "synthetic provider", tel)
             }
         }
     } else {
@@ -645,7 +682,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ModelLogitsProvider { engine: &engine, model: &model, params: &params };
         let geom = (provider.batch_size(), provider.seq_len(), provider.vocab_size());
         let e = BatchedEngine::new(&mut provider, spec.engine_config())?;
-        drive_serve(e, &prompts, &spec, geom, "fwd artifact")
+        drive_serve(e, &prompts, &spec, geom, "fwd artifact", tel)
     }
 }
 
@@ -807,6 +844,25 @@ fn cmd_trace(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        _ => bail!("usage: modalities trace pp [--set stages=4] [--set micros=16]"),
+        Some(target) => {
+            // `modalities trace <run_dir>`: summarize a Chrome trace
+            // exported by a `--profile` run (or point at the JSON file
+            // itself).
+            let p = Path::new(target);
+            let path = if p.extension().is_some_and(|e| e == "json") {
+                p.to_path_buf()
+            } else {
+                p.join("telemetry").join("trace.json")
+            };
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {} (run with --profile first?)", path.display()))?;
+            let trace = modalities::util::json::Json::parse(&text)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            print!("{}", modalities::telemetry::trace::summarize_trace(&trace)?);
+            Ok(())
+        }
+        None => bail!(
+            "usage: modalities trace pp [--set stages=4] [--set micros=16]\n       modalities trace <run_dir>"
+        ),
     }
 }

@@ -86,6 +86,26 @@ pub struct StepTime {
     pub total_s: f64,
 }
 
+impl StepTime {
+    /// Build a breakdown from *measured* phase times (telemetry trace
+    /// calibration) rather than the analytic model. Measured spans do
+    /// not separate TP traffic or PP bubbles, so those buckets stay
+    /// zero and the observed collective time is booked as fully exposed
+    /// DP communication; `other_s` (data fetch, host-side optimizer)
+    /// contributes to the total only. The result is comparable with the
+    /// analytic `step_time` output for `perfmodel` calibration.
+    pub fn from_measured(compute_s: f64, dp_comm_s: f64, other_s: f64) -> Self {
+        Self {
+            compute_s,
+            dp_comm_s,
+            tp_comm_s: 0.0,
+            pp_bubble_s: 0.0,
+            exposed_comm_s: dp_comm_s,
+            total_s: compute_s + dp_comm_s + other_s,
+        }
+    }
+}
+
 /// Per-GPU training throughput in tokens/s for a plan.
 pub fn tokens_per_gpu_per_s(w: &Workload, plan: &Plan, net: &InterconnectModel, gpu: &GpuModel) -> f64 {
     let st = step_time(w, plan, net, gpu);

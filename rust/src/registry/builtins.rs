@@ -22,4 +22,5 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::serve::components::register(reg).expect("serve builtins");
     crate::elastic::components::register(reg).expect("elastic builtins");
     crate::kvcache::components::register(reg).expect("kvcache builtins");
+    crate::telemetry::components::register(reg).expect("telemetry builtins");
 }

@@ -1,11 +1,12 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares those 32 plus four
+//! 32 pre-defined interfaces". This module declares those 32 plus five
 //! of our own (`ablation`, the sweep orchestrator — the layer the paper
 //! says everyone hand-rolls — `serve`, the batched inference engine,
-//! `elastic`, the rank-loss recovery supervisor, and `kvcache`, the
-//! paged KV cache behind incremental decode); the registry
+//! `elastic`, the rank-loss recovery supervisor, `kvcache`, the
+//! paged KV cache behind incremental decode, and `telemetry`, the
+//! unified span/metrics/trace layer); the registry
 //! refuses registrations against undeclared
 //! interfaces, which is what makes config validation *interface-level*:
 //! a reference site knows which interface it expects, and the
@@ -13,7 +14,7 @@
 //! training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 36] = [
+pub const INTERFACES: [&str; 37] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -49,6 +50,7 @@ pub const INTERFACES: [&str; 36] = [
     "progress",              // progress estimation
     "tracer",                // kernel/NCCL tracing hooks
     "profiler",              // step-time breakdown collection
+    "telemetry",             // unified spans/metrics/Chrome-trace export
     // integration / misc
     "runtime",               // PJRT execution backends
     "generation",            // greedy/sampling text generation
@@ -71,12 +73,14 @@ mod tests {
     #[test]
     fn paper_interfaces_plus_ours() {
         // The paper's 32 interfaces plus our sweep-orchestration,
-        // batched-inference, elastic-recovery and KV-cache ones.
-        assert_eq!(INTERFACES.len(), 36);
+        // batched-inference, elastic-recovery, KV-cache and telemetry
+        // ones.
+        assert_eq!(INTERFACES.len(), 37);
         assert!(interface_exists("ablation"));
         assert!(interface_exists("serve"));
         assert!(interface_exists("elastic"));
         assert!(interface_exists("kvcache"));
+        assert!(interface_exists("telemetry"));
     }
 
     #[test]

@@ -404,6 +404,10 @@ pub struct BatchedEngine<'p> {
     step_count: u64,
     completions: Vec<Completion>,
     pub stats: EngineStats,
+    /// Optional telemetry handle: provider calls are recorded as
+    /// `serve`-lane spans (full backend: one "decode" per shared
+    /// forward; cached backend: one "prefill"/"decode" per slot call).
+    tel: Option<crate::telemetry::RankTelemetry>,
 }
 
 fn check_geometry(b: usize, s: usize, v: usize, cfg: &EngineConfig) -> Result<()> {
@@ -430,6 +434,7 @@ impl<'p> BatchedEngine<'p> {
             step_count: 0,
             completions: Vec::new(),
             stats: EngineStats::default(),
+            tel: None,
             backend: Backend::Full { provider, grid: vec![0u32; b * s] },
         })
     }
@@ -456,8 +461,16 @@ impl<'p> BatchedEngine<'p> {
             step_count: 0,
             completions: Vec::new(),
             stats: EngineStats::default(),
+            tel: None,
             backend: Backend::Cached { provider, cache, prefill_chunk: kv.prefill_chunk.max(1) },
         })
+    }
+
+    /// Attach a telemetry handle; decode/prefill provider calls are
+    /// recorded from now on, tagged with the engine step (the span
+    /// `seq` carries the request id on the cached backend).
+    pub fn set_telemetry(&mut self, tel: crate::telemetry::RankTelemetry) {
+        self.tel = Some(tel);
     }
 
     fn geom(&self) -> (usize, usize, usize) {
@@ -626,6 +639,9 @@ impl<'p> BatchedEngine<'p> {
         self.stats.occupancy_sum += active_rows.len() as u64;
         self.stats.peak_active = self.stats.peak_active.max(active_rows.len());
         self.step_count += 1;
+        if let Some(t) = &self.tel {
+            t.collector().set_step(self.step_count);
+        }
         let eos = self.cfg.eos_token;
         let mut sampled_count = 0u64;
         // (row, finish) pairs resolved this step.
@@ -637,7 +653,18 @@ impl<'p> BatchedEngine<'p> {
                     let slot = self.slots[r].as_ref().unwrap();
                     grid[r * s..r * s + slot.tokens.len()].copy_from_slice(&slot.tokens);
                 }
-                let logits = provider.forward(grid)?;
+                let logits = {
+                    // One shared forward per step: one "decode" span
+                    // covering the whole grid.
+                    let mut g = self
+                        .tel
+                        .as_ref()
+                        .map(|t| t.span(crate::telemetry::SpanKind::Serve, "decode"));
+                    if let Some(g) = g.as_mut() {
+                        g.set_bytes((b * s * 4) as u64);
+                    }
+                    provider.forward(grid)?
+                };
                 if logits.len() != b * s * v {
                     bail!("provider returned {} logits, expected {}", logits.len(), b * s * v);
                 }
@@ -667,6 +694,14 @@ impl<'p> BatchedEngine<'p> {
                         let end = (slot.prefilled + *prefill_chunk).min(slot.prompt_len);
                         let chunk_len = end - slot.prefilled;
                         let logits = {
+                            let mut g = self
+                                .tel
+                                .as_ref()
+                                .map(|t| t.span(crate::telemetry::SpanKind::Serve, "prefill"));
+                            if let Some(g) = g.as_mut() {
+                                g.set_bytes(chunk_len as u64 * 4);
+                                g.set_seq(slot.id);
+                            }
                             let chunk = &slot.tokens[slot.prefilled..end];
                             let mut store = cache.store(sid);
                             provider.forward_incremental(&mut store, chunk)?
@@ -691,6 +726,14 @@ impl<'p> BatchedEngine<'p> {
                         // the model — the O(1)-per-token payoff.
                         let last = *slot.tokens.last().unwrap();
                         let logits = {
+                            let mut g = self
+                                .tel
+                                .as_ref()
+                                .map(|t| t.span(crate::telemetry::SpanKind::Serve, "decode"));
+                            if let Some(g) = g.as_mut() {
+                                g.set_bytes(4);
+                                g.set_seq(slot.id);
+                            }
                             let mut store = cache.store(sid);
                             provider.forward_incremental(&mut store, &[last])?
                         };
@@ -1128,6 +1171,49 @@ mod tests {
         assert_eq!(done[3].tokens, solo[0].tokens);
         assert_eq!(done[3].logprobs, solo[0].logprobs);
         assert_eq!(e.kv_shutdown(), Some(0), "prefix pins released, no leaks");
+    }
+
+    #[test]
+    fn telemetry_records_prefill_and_decode_spans() {
+        use crate::telemetry::{SpanKind, Telemetry, TelemetrySpec};
+        // Cached backend: chunk 2 over a 5-token prompt → prefill spans
+        // on early steps, decode spans after.
+        let tel = Telemetry::new(TelemetrySpec::default(), 1);
+        let mut p = provider(1);
+        let mut e =
+            BatchedEngine::new_cached(&mut p, EngineConfig::default(), &kv(2, 64, 2)).unwrap();
+        e.set_telemetry(tel.handle(0));
+        e.submit(greedy_req(&[0, 1, 2, 3, 4], 3)).unwrap();
+        e.run_until_idle().unwrap();
+        let snaps = tel.snapshot();
+        let names: Vec<&str> = snaps[0]
+            .entries
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::Serve))
+            .map(|s| s.name)
+            .collect();
+        assert!(names.contains(&"prefill"), "{names:?}");
+        assert!(names.contains(&"decode"), "{names:?}");
+        // Prefill spans carry the fed-token byte count.
+        let prefill_bytes: u64 = snaps[0]
+            .entries
+            .iter()
+            .filter(|s| s.name == "prefill")
+            .map(|s| s.bytes)
+            .sum();
+        assert_eq!(prefill_bytes, 5 * 4, "5 prompt tokens × 4 bytes");
+
+        // Full backend: one shared-forward "decode" span per step.
+        let tel = Telemetry::new(TelemetrySpec::default(), 1);
+        let mut p = provider(1);
+        let mut e = BatchedEngine::new(&mut p, EngineConfig::default()).unwrap();
+        e.set_telemetry(tel.handle(0));
+        e.submit(greedy_req(&[1], 2)).unwrap();
+        e.run_until_idle().unwrap();
+        let snaps = tel.snapshot();
+        let decodes =
+            snaps[0].entries.iter().filter(|s| s.name == "decode").count() as u64;
+        assert_eq!(decodes, e.stats.forwards);
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! Registry factory for the telemetry collector spec.
+
+use super::TelemetrySpec;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    reg.register("telemetry", "rings", |ctx, cfg| {
+        let trace_path = ctx.str_or(cfg, "trace_path", "");
+        let spec = TelemetrySpec {
+            enabled: ctx.bool_or(cfg, "enabled", true)?,
+            ring_capacity: ctx.usize_or(cfg, "ring_capacity", 4096)?,
+            trace_path: if trace_path.is_empty() { None } else { Some(trace_path) },
+            sample_every: ctx.usize_or(cfg, "sample_every", 1)?.max(1) as u64,
+            normalize: ctx.bool_or(cfg, "normalize", false)?,
+        };
+        Ok(Component::new("telemetry", "rings", spec))
+    })?;
+    reg.describe(
+        "telemetry",
+        "rings",
+        "Unified telemetry: per-rank pre-allocated span rings (zero hot-path \
+         allocation), metrics registry export, Chrome-trace writer.",
+        &[
+            ("enabled", "bool", "true", "master switch for span recording + export"),
+            ("ring_capacity", "int", "4096", "span entries per per-rank ring (overflow overwrites oldest + counts)"),
+            ("trace_path", "str", "\"\"", "trace output override; empty → <run_dir>/telemetry/trace.json"),
+            ("sample_every", "int", "1", "record spans only on steps divisible by this stride"),
+            ("normalize", "bool", "false", "export ordinal ticks instead of wall timestamps (byte-stable traces)"),
+        ],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+    use crate::telemetry::TelemetrySpec;
+
+    #[test]
+    fn telemetry_spec_from_config() {
+        let src = "\
+components:
+  t:
+    component_key: telemetry
+    variant_key: rings
+    config: {ring_capacity: 128, sample_every: 4, normalize: true, trace_path: /tmp/t.json}
+  t_default:
+    component_key: telemetry
+    variant_key: rings
+    config: {}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let graph = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+
+        let spec = graph.get::<TelemetrySpec>("t").unwrap();
+        assert!(spec.enabled);
+        assert_eq!(spec.ring_capacity, 128);
+        assert_eq!(spec.sample_every, 4);
+        assert!(spec.normalize);
+        assert_eq!(spec.trace_path.as_deref(), Some("/tmp/t.json"));
+
+        let d = graph.get::<TelemetrySpec>("t_default").unwrap();
+        assert!(d.enabled);
+        assert_eq!(d.ring_capacity, 4096);
+        assert_eq!(d.sample_every, 1);
+        assert!(!d.normalize);
+        assert!(d.trace_path.is_none());
+    }
+}

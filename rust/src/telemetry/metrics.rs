@@ -1,0 +1,258 @@
+//! Unified metrics registry: counters, gauges, and histograms under
+//! one deterministic namespace.
+//!
+//! The concrete stat structs (`CommStats`, `KvStats`, serve
+//! `EngineStats`) keep their storage and read APIs — this registry is
+//! the *export seam* they are re-homed into: `ingest_*` copies their
+//! counters under stable dotted names, and [`MetricsRegistry::to_json`]
+//! snapshots the whole namespace as byte-stable JSON (`BTreeMap` key
+//! order, integer-exact counter formatting).
+
+use std::collections::BTreeMap;
+
+use crate::dist::collectives::CommStats;
+use crate::kvcache::KvStats;
+use crate::serve::engine::EngineStats;
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+use super::RingSnapshot;
+
+/// One registered metric.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    /// Monotonic event count.
+    Counter(u64),
+    /// Last-written value.
+    Gauge(f64),
+    /// Online distribution (count/mean/std/min/max via `Welford`).
+    Histogram(Welford),
+}
+
+/// Dotted-name metric namespace with a deterministic snapshot.
+#[derive(Default, Debug)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Add to (or create) a counter.
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += delta,
+            _ => {
+                self.metrics.insert(name.to_string(), Metric::Counter(delta));
+            }
+        }
+    }
+
+    /// Set (or create) a gauge.
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), Metric::Gauge(value));
+    }
+
+    /// Push one observation into a histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Histogram(w)) => w.push(value),
+            _ => {
+                let mut w = Welford::new();
+                w.push(value);
+                self.metrics.insert(name.to_string(), Metric::Histogram(w));
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.get(name)
+    }
+
+    /// Counter value, 0 when absent or not a counter.
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.metrics.get(name) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Re-home per-op collective accounting: `<prefix>.<op>.{calls,bytes,messages}`
+    /// counters plus `<prefix>.total_bytes` / `<prefix>.total_messages`.
+    pub fn ingest_comm(&mut self, prefix: &str, stats: &CommStats) {
+        for (op, s) in &stats.ops {
+            self.counter_add(&format!("{prefix}.{op}.calls"), s.calls);
+            self.counter_add(&format!("{prefix}.{op}.bytes"), s.bytes);
+            self.counter_add(&format!("{prefix}.{op}.messages"), s.messages);
+        }
+        self.counter_add(&format!("{prefix}.total_bytes"), stats.total_bytes());
+        self.counter_add(&format!("{prefix}.total_messages"), stats.total_messages());
+    }
+
+    /// Re-home the paged KV-cache counters.
+    pub fn ingest_kv(&mut self, prefix: &str, kv: &KvStats) {
+        self.counter_add(&format!("{prefix}.lookups"), kv.lookups);
+        self.counter_add(&format!("{prefix}.misses"), kv.misses);
+        self.counter_add(&format!("{prefix}.hit_blocks"), kv.hit_blocks);
+        self.counter_add(&format!("{prefix}.hit_tokens"), kv.hit_tokens);
+        self.counter_add(&format!("{prefix}.copied_tokens"), kv.copied_tokens);
+        self.counter_add(&format!("{prefix}.publishes"), kv.publishes);
+        self.counter_add(&format!("{prefix}.evictions"), kv.evictions);
+        self.counter_add(&format!("{prefix}.blocks_leased"), kv.blocks_leased);
+        self.counter_add(&format!("{prefix}.blocks_released"), kv.blocks_released);
+    }
+
+    /// Re-home the serve engine counters (includes its KV block).
+    pub fn ingest_engine(&mut self, prefix: &str, stats: &EngineStats) {
+        self.counter_add(&format!("{prefix}.forwards"), stats.forwards);
+        self.counter_add(&format!("{prefix}.tokens_generated"), stats.tokens_generated);
+        self.counter_add(&format!("{prefix}.occupancy_sum"), stats.occupancy_sum);
+        self.counter_add(&format!("{prefix}.completed"), stats.completed);
+        self.gauge_set(&format!("{prefix}.peak_active"), stats.peak_active as f64);
+        self.gauge_set(&format!("{prefix}.mean_occupancy"), stats.mean_occupancy());
+        self.ingest_kv(&format!("{prefix}.kv"), &stats.kv);
+    }
+
+    /// Fold span durations into per-kind/name histograms
+    /// (`spans.<kind>.<name>.dur_us`) plus per-rank overflow counters.
+    pub fn ingest_spans(&mut self, snapshots: &[RingSnapshot]) {
+        for snap in snapshots {
+            self.counter_add(&format!("spans.rank{}.dropped", snap.rank), snap.dropped);
+            for e in &snap.entries {
+                self.observe(
+                    &format!("spans.{}.{}.dur_us", e.kind.as_str(), e.name),
+                    e.dur_us as f64,
+                );
+                if e.bytes > 0 {
+                    self.counter_add(
+                        &format!("spans.{}.{}.bytes", e.kind.as_str(), e.name),
+                        e.bytes,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Byte-stable snapshot: counters as `{"type":"counter","value":n}`,
+    /// gauges as `{"type":"gauge","value":x}`, histograms with their
+    /// summary stats. Key order is the `BTreeMap` order, so two
+    /// registries with identical contents dump identical bytes.
+    pub fn to_json(&self) -> Json {
+        let mut out = BTreeMap::new();
+        for (name, m) in &self.metrics {
+            let v = match m {
+                Metric::Counter(c) => Json::from_pairs(vec![
+                    ("type", Json::Str("counter".into())),
+                    ("value", Json::Num(*c as f64)),
+                ]),
+                Metric::Gauge(g) => Json::from_pairs(vec![
+                    ("type", Json::Str("gauge".into())),
+                    ("value", Json::Num(*g)),
+                ]),
+                Metric::Histogram(w) => {
+                    let empty = w.count() == 0;
+                    Json::from_pairs(vec![
+                        ("type", Json::Str("histogram".into())),
+                        ("count", Json::Num(w.count() as f64)),
+                        ("mean", Json::Num(if empty { 0.0 } else { w.mean() })),
+                        ("std", Json::Num(if empty { 0.0 } else { w.std() })),
+                        ("min", Json::Num(if empty { 0.0 } else { w.min() })),
+                        ("max", Json::Num(if empty { 0.0 } else { w.max() })),
+                    ])
+                }
+            };
+            out.insert(name.clone(), v);
+        }
+        Json::Obj(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{SpanEntry, SpanKind};
+
+    #[test]
+    fn counters_accumulate_and_snapshot_is_stable() {
+        let mut a = MetricsRegistry::new();
+        a.counter_add("comm.all_reduce.bytes", 10);
+        a.counter_add("comm.all_reduce.bytes", 5);
+        a.gauge_set("engine.mean_occupancy", 3.5);
+        a.observe("spans.phase.forward.dur_us", 100.0);
+        a.observe("spans.phase.forward.dur_us", 200.0);
+        assert_eq!(a.counter("comm.all_reduce.bytes"), 15);
+
+        let mut b = MetricsRegistry::new();
+        // Insertion order differs; snapshot bytes must not.
+        b.observe("spans.phase.forward.dur_us", 100.0);
+        b.observe("spans.phase.forward.dur_us", 200.0);
+        b.gauge_set("engine.mean_occupancy", 3.5);
+        b.counter_add("comm.all_reduce.bytes", 15);
+        assert_eq!(a.to_json().dumps(), b.to_json().dumps());
+        assert!(a.to_json().dumps().contains("\"count\":2"));
+    }
+
+    #[test]
+    fn comm_stats_rehome_matches_totals() {
+        let mut cs = CommStats::new();
+        cs.record("all_gather", 1024, 3);
+        cs.record("all_reduce", 2048, 6);
+        cs.record("all_gather", 1024, 3);
+        let mut reg = MetricsRegistry::new();
+        reg.ingest_comm("comm", &cs);
+        assert_eq!(reg.counter("comm.all_gather.calls"), 2);
+        assert_eq!(reg.counter("comm.all_gather.bytes"), 2048);
+        assert_eq!(reg.counter("comm.all_reduce.messages"), 6);
+        assert_eq!(reg.counter("comm.total_bytes"), cs.total_bytes());
+        assert_eq!(reg.counter("comm.total_messages"), cs.total_messages());
+    }
+
+    #[test]
+    fn span_ingest_builds_histograms_and_overflow_counters() {
+        let snap = RingSnapshot {
+            rank: 1,
+            dropped: 4,
+            entries: vec![
+                SpanEntry {
+                    kind: SpanKind::Collective,
+                    name: "all_gather",
+                    step: 0,
+                    start_us: 0,
+                    dur_us: 10,
+                    bytes: 256,
+                    seq: 1,
+                },
+                SpanEntry {
+                    kind: SpanKind::Collective,
+                    name: "all_gather",
+                    step: 1,
+                    start_us: 20,
+                    dur_us: 30,
+                    bytes: 256,
+                    seq: 2,
+                },
+            ],
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.ingest_spans(&[snap]);
+        assert_eq!(reg.counter("spans.rank1.dropped"), 4);
+        assert_eq!(reg.counter("spans.collective.all_gather.bytes"), 512);
+        match reg.get("spans.collective.all_gather.dur_us") {
+            Some(Metric::Histogram(w)) => {
+                assert_eq!(w.count(), 2);
+                assert!((w.mean() - 20.0).abs() < 1e-9);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,464 @@
+//! Unified telemetry layer: structured spans, a metrics registry, and
+//! Chrome-trace export across the gym, dist, serve, and elastic
+//! subsystems.
+//!
+//! Three pieces (paper §"observability", MoFa-style breakdowns):
+//!
+//! * **Span layer** (this module) — [`Telemetry`] owns one
+//!   pre-allocated fixed-capacity [`SpanRing`] per rank; a cheap
+//!   [`RankTelemetry`] handle writes `Copy` [`SpanEntry`] records into
+//!   its rank's ring. The hot path is `Instant::now()` + one `Mutex`
+//!   lock + a slot overwrite + one atomic load — **no heap allocation**,
+//!   preserving the PR 5 zero-alloc steady-state invariant (asserted by
+//!   the counting-allocator section of `bench_fsdp_unit`, which runs
+//!   with telemetry attached). When a ring is full the oldest entry is
+//!   overwritten and a `dropped` counter bumps, so overflow is visible
+//!   rather than silent.
+//! * **Metrics registry** ([`metrics`]) — counters/gauges/histograms
+//!   (on [`crate::util::stats::Welford`]) into which `CommStats`,
+//!   `KvStats`, and serve `EngineStats` are re-homed for export; the
+//!   concrete structs keep their storage and read APIs, the registry is
+//!   the one snapshot/export seam. Snapshots are byte-stable JSON
+//!   (`BTreeMap`-ordered keys).
+//! * **Exporters** ([`trace`]) — Chrome `trace_event` JSON (one pid per
+//!   rank, loadable in `chrome://tracing` / Perfetto) and a per-step
+//!   phase breakdown table feeding `perfmodel` calibration.
+//!
+//! Span taxonomy (the five gym step phases plus infrastructure lanes):
+//!
+//! | kind         | names                                            |
+//! |--------------|--------------------------------------------------|
+//! | `phase`      | `data`, `forward`, `backward`, `collective`, `optimizer` |
+//! | `collective` | `all_gather`, `all_reduce`, `reduce_scatter`, `all_reduce_scalar`, `barrier` (op-tagged, bytes/seq from the same call sites as `CommStats`) |
+//! | `serve`      | `prefill`, `decode`                              |
+//! | `segment`    | `segment` (elastic segment boundary, instant)    |
+//!
+//! `train_step` is one fused XLA call (forward+backward are not
+//! separable on-device); the gym maps `forward` to that call and
+//! `backward` to the host-side gradient accumulate/scale that follows —
+//! documented, honest lane semantics rather than fabricated splits.
+
+pub mod components;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Config for the telemetry layer (`telemetry:` section /
+/// `telemetry/rings` component).
+#[derive(Clone, Debug)]
+pub struct TelemetrySpec {
+    /// Master switch; when false no `Telemetry` is constructed and all
+    /// instrumentation sites stay on their `None` fast path.
+    pub enabled: bool,
+    /// Entries per per-rank ring. Overflow overwrites the oldest entry
+    /// and bumps the ring's `dropped` counter.
+    pub ring_capacity: usize,
+    /// Trace output path override; `None` → `<run_dir>/telemetry/trace.json`.
+    pub trace_path: Option<String>,
+    /// Record spans only on steps where `step % sample_every == 0`.
+    pub sample_every: u64,
+    /// Export traces with step-relative ordinal ticks instead of wall
+    /// timestamps — byte-stable across identical seeded runs.
+    pub normalize: bool,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ring_capacity: 4096,
+            trace_path: None,
+            sample_every: 1,
+            normalize: false,
+        }
+    }
+}
+
+/// Which lane a span belongs to (Chrome-trace `cat`, and `tid` within
+/// the rank's pid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Gym step phase: data/forward/backward/collective/optimizer.
+    Phase,
+    /// One `ProcessGroup` collective, tagged op/bytes/seq.
+    Collective,
+    /// Serve engine prefill/decode.
+    Serve,
+    /// Elastic segment boundary (instant event; `seq` = segment index).
+    Segment,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Phase => "phase",
+            SpanKind::Collective => "collective",
+            SpanKind::Serve => "serve",
+            SpanKind::Segment => "segment",
+        }
+    }
+
+    /// Stable per-rank thread lane in the Chrome trace.
+    pub fn lane(self) -> u64 {
+        match self {
+            SpanKind::Phase => 0,
+            SpanKind::Collective => 1,
+            SpanKind::Serve => 2,
+            SpanKind::Segment => 3,
+        }
+    }
+}
+
+/// One recorded span. `Copy` + `&'static str` name so writing an entry
+/// never touches the heap.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEntry {
+    pub kind: SpanKind,
+    pub name: &'static str,
+    /// Step the span was recorded under (from [`Telemetry::set_step`]).
+    pub step: u64,
+    /// Microseconds since the collector's epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Payload bytes (collective wire bytes, serve token counts).
+    pub bytes: u64,
+    /// Collective sequence number / segment index; 0 when unused.
+    pub seq: u64,
+}
+
+impl SpanEntry {
+    fn zero() -> Self {
+        Self {
+            kind: SpanKind::Phase,
+            name: "",
+            step: 0,
+            start_us: 0,
+            dur_us: 0,
+            bytes: 0,
+            seq: 0,
+        }
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring. All storage is allocated at
+/// construction; `push` is a slot overwrite.
+#[derive(Debug)]
+pub struct SpanRing {
+    entries: Vec<SpanEntry>,
+    /// Next write position.
+    head: usize,
+    /// Live entries (≤ capacity).
+    len: usize,
+    /// Entries overwritten after the ring filled.
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self { entries: vec![SpanEntry::zero(); capacity], head: 0, len: 0, dropped: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Hot path: overwrite the head slot. No allocation ever.
+    pub fn push(&mut self, e: SpanEntry) {
+        let cap = self.entries.len();
+        self.entries[self.head] = e;
+        self.head = (self.head + 1) % cap;
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Entries in chronological (record) order. Export path — allocates.
+    pub fn drain_ordered(&self) -> Vec<SpanEntry> {
+        let cap = self.entries.len();
+        if self.len < cap {
+            self.entries[..self.len].to_vec()
+        } else {
+            let mut out = Vec::with_capacity(cap);
+            out.extend_from_slice(&self.entries[self.head..]);
+            out.extend_from_slice(&self.entries[..self.head]);
+            out
+        }
+    }
+}
+
+/// Read-only copy of one rank's ring, taken at export time.
+#[derive(Clone, Debug)]
+pub struct RingSnapshot {
+    pub rank: usize,
+    pub entries: Vec<SpanEntry>,
+    pub dropped: u64,
+}
+
+/// The per-run span collector: one pre-allocated ring per rank, a
+/// shared epoch, and the current step tag. Constructed once per run
+/// (when telemetry is enabled) and shared via `Arc`; per-rank writers
+/// go through [`RankTelemetry`] handles from [`Telemetry::handle`].
+pub struct Telemetry {
+    spec: TelemetrySpec,
+    epoch: Instant,
+    rings: Vec<Mutex<SpanRing>>,
+    current_step: AtomicU64,
+}
+
+impl Telemetry {
+    pub fn new(spec: TelemetrySpec, world: usize) -> Arc<Self> {
+        let world = world.max(1);
+        let rings = (0..world).map(|_| Mutex::new(SpanRing::new(spec.ring_capacity))).collect();
+        Arc::new(Self { spec, epoch: Instant::now(), rings, current_step: AtomicU64::new(0) })
+    }
+
+    pub fn spec(&self) -> &TelemetrySpec {
+        &self.spec
+    }
+
+    pub fn world(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Tag subsequent spans (all ranks) with `step`. Called once per
+    /// gym/serve step from the driver thread.
+    pub fn set_step(&self, step: u64) {
+        self.current_step.store(step, Ordering::Relaxed);
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.current_step.load(Ordering::Relaxed)
+    }
+
+    /// Writer handle for `rank`. Cheap to clone (one `Arc` bump).
+    pub fn handle(self: &Arc<Self>, rank: usize) -> RankTelemetry {
+        assert!(rank < self.rings.len(), "telemetry rank {} >= world {}", rank, self.rings.len());
+        RankTelemetry { tel: Arc::clone(self), rank }
+    }
+
+    /// Copy out every ring in rank order. Export path — allocates.
+    pub fn snapshot(&self) -> Vec<RingSnapshot> {
+        self.rings
+            .iter()
+            .enumerate()
+            .map(|(rank, ring)| {
+                let r = ring.lock().unwrap_or_else(|p| p.into_inner());
+                RingSnapshot { rank, entries: r.drain_ordered(), dropped: r.dropped() }
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("world", &self.rings.len())
+            .field("spec", &self.spec)
+            .finish()
+    }
+}
+
+/// Per-rank writer handle. Everything here is hot-path safe: no method
+/// allocates (the `Arc` clone in [`Clone`] only bumps a refcount).
+#[derive(Clone)]
+pub struct RankTelemetry {
+    tel: Arc<Telemetry>,
+    rank: usize,
+}
+
+impl RankTelemetry {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Current step tag (sampling decisions happen once, here).
+    fn sampled_step(&self) -> Option<u64> {
+        let step = self.tel.current_step.load(Ordering::Relaxed);
+        let every = self.tel.spec.sample_every.max(1);
+        if step % every == 0 {
+            Some(step)
+        } else {
+            None
+        }
+    }
+
+    /// Record a closed span that started at `t0`.
+    pub fn record(&self, kind: SpanKind, name: &'static str, bytes: u64, seq: u64, t0: Instant) {
+        let Some(step) = self.sampled_step() else { return };
+        let start_us = t0.saturating_duration_since(self.tel.epoch).as_micros() as u64;
+        let dur_us = t0.elapsed().as_micros() as u64;
+        let e = SpanEntry { kind, name, step, start_us, dur_us, bytes, seq };
+        self.tel.rings[self.rank].lock().unwrap_or_else(|p| p.into_inner()).push(e);
+    }
+
+    /// Record an instant event (duration 0).
+    pub fn instant(&self, kind: SpanKind, name: &'static str, seq: u64) {
+        let Some(step) = self.sampled_step() else { return };
+        let start_us =
+            Instant::now().saturating_duration_since(self.tel.epoch).as_micros() as u64;
+        let e = SpanEntry { kind, name, step, start_us, dur_us: 0, bytes: 0, seq };
+        self.tel.rings[self.rank].lock().unwrap_or_else(|p| p.into_inner()).push(e);
+    }
+
+    /// RAII span: records on drop.
+    pub fn span(&self, kind: SpanKind, name: &'static str) -> SpanGuard<'_> {
+        SpanGuard { tel: self, kind, name, bytes: 0, seq: 0, t0: Instant::now() }
+    }
+
+    /// The collector this handle writes into (export path).
+    pub fn collector(&self) -> &Arc<Telemetry> {
+        &self.tel
+    }
+}
+
+impl std::fmt::Debug for RankTelemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RankTelemetry").field("rank", &self.rank).finish()
+    }
+}
+
+/// RAII phase timer: created by [`RankTelemetry::span`], records one
+/// [`SpanEntry`] when dropped. `set_bytes`/`set_seq` tag the entry
+/// before closing.
+pub struct SpanGuard<'a> {
+    tel: &'a RankTelemetry,
+    kind: SpanKind,
+    name: &'static str,
+    bytes: u64,
+    seq: u64,
+    t0: Instant,
+}
+
+impl SpanGuard<'_> {
+    pub fn set_bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+
+    pub fn set_seq(&mut self, seq: u64) {
+        self.seq = seq;
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.tel.record(self.kind, self.name, self.bytes, self.seq, self.t0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &'static str, seq: u64) -> SpanEntry {
+        SpanEntry {
+            kind: SpanKind::Phase,
+            name,
+            step: 0,
+            start_us: seq,
+            dur_us: 1,
+            bytes: 0,
+            seq,
+        }
+    }
+
+    #[test]
+    fn ring_fills_then_wraps_and_counts_overflow() {
+        let mut r = SpanRing::new(4);
+        assert!(r.is_empty());
+        for i in 0..3 {
+            r.push(entry("a", i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        let seqs: Vec<u64> = r.drain_ordered().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+
+        // Fill to capacity: still nothing dropped.
+        r.push(entry("a", 3));
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 0);
+
+        // Two more: the two oldest are overwritten, counter shows it,
+        // and drain order stays chronological across the wrap point.
+        r.push(entry("a", 4));
+        r.push(entry("a", 5));
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let seqs: Vec<u64> = r.drain_ordered().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn ring_capacity_floor_is_one() {
+        let mut r = SpanRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(entry("a", 1));
+        r.push(entry("a", 2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.drain_ordered()[0].seq, 2);
+    }
+
+    #[test]
+    fn handles_write_into_their_rank_ring() {
+        let tel = Telemetry::new(TelemetrySpec::default(), 2);
+        tel.set_step(7);
+        let h0 = tel.handle(0);
+        let h1 = tel.handle(1);
+        {
+            let mut g = h0.span(SpanKind::Phase, "forward");
+            g.set_bytes(128);
+        }
+        h1.instant(SpanKind::Segment, "segment", 3);
+        let snap = tel.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].entries.len(), 1);
+        assert_eq!(snap[0].entries[0].name, "forward");
+        assert_eq!(snap[0].entries[0].step, 7);
+        assert_eq!(snap[0].entries[0].bytes, 128);
+        assert_eq!(snap[1].entries.len(), 1);
+        assert_eq!(snap[1].entries[0].kind, SpanKind::Segment);
+        assert_eq!(snap[1].entries[0].seq, 3);
+        assert_eq!(snap[1].entries[0].dur_us, 0);
+    }
+
+    #[test]
+    fn sampling_drops_off_stride_steps() {
+        let spec = TelemetrySpec { sample_every: 2, ..TelemetrySpec::default() };
+        let tel = Telemetry::new(spec, 1);
+        let h = tel.handle(0);
+        for step in 0..6u64 {
+            tel.set_step(step);
+            h.instant(SpanKind::Phase, "data", 0);
+        }
+        let snap = tel.snapshot();
+        let steps: Vec<u64> = snap[0].entries.iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![0, 2, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "telemetry rank")]
+    fn out_of_range_handle_panics() {
+        let tel = Telemetry::new(TelemetrySpec::default(), 2);
+        let _ = tel.handle(2);
+    }
+}

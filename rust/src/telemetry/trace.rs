@@ -1,0 +1,317 @@
+//! Exporters: Chrome `trace_event` JSON (one pid per rank, loadable in
+//! `chrome://tracing` / Perfetto), a per-step phase breakdown table,
+//! and the measured-step-time calibration feed for [`crate::perfmodel`].
+//!
+//! Two timestamp modes:
+//!
+//! * **wall** (default) — `ts`/`dur` are microseconds since the
+//!   collector's epoch; what you load into Perfetto to see real timing.
+//! * **normalized** (`TelemetrySpec.normalize`) — wall fields are
+//!   replaced by per-rank ordinal ticks (`ts` = record index, `dur` =
+//!   1) so two identical seeded runs dump byte-identical traces; the
+//!   determinism tests and the smoke scripts diff this mode.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+use crate::perfmodel::steptime::StepTime;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::{RingSnapshot, SpanKind};
+
+const LANE_NAMES: [&str; 4] = ["phase", "collective", "serve", "segment"];
+
+fn event(e: &super::SpanEntry, rank: usize, ordinal: u64, normalize: bool) -> Json {
+    let args = Json::from_pairs(vec![
+        ("bytes", Json::Num(e.bytes as f64)),
+        ("seq", Json::Num(e.seq as f64)),
+        ("step", Json::Num(e.step as f64)),
+    ]);
+    let instant = e.dur_us == 0 && e.kind == SpanKind::Segment;
+    let ts = if normalize { ordinal } else { e.start_us };
+    let mut pairs = vec![
+        ("args", args),
+        ("cat", Json::Str(e.kind.as_str().to_string())),
+        ("name", Json::Str(e.name.to_string())),
+        ("pid", Json::Num(rank as f64)),
+        ("tid", Json::Num(e.kind.lane() as f64)),
+        ("ts", Json::Num(ts as f64)),
+    ];
+    if instant {
+        pairs.push(("ph", Json::Str("i".to_string())));
+        pairs.push(("s", Json::Str("p".to_string())));
+    } else {
+        pairs.push(("ph", Json::Str("X".to_string())));
+        let dur = if normalize { 1 } else { e.dur_us.max(1) };
+        pairs.push(("dur", Json::Num(dur as f64)));
+    }
+    Json::from_pairs(pairs)
+}
+
+fn metadata(name: &str, pid: usize, tid: Option<u64>, label: &str) -> Json {
+    let mut pairs = vec![
+        ("args", Json::from_pairs(vec![("name", Json::Str(label.to_string()))])),
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", Json::Num(t as f64)));
+    }
+    Json::from_pairs(pairs)
+}
+
+/// Render ring snapshots as a Chrome `trace_event` document.
+///
+/// One pid per rank (`rank<N>` process names), one tid per span kind
+/// (`phase`/`collective`/`serve`/`segment` thread names). Extra
+/// top-level `otherData` records the world size and per-rank ring
+/// overflow counts. Output key order is `BTreeMap`-deterministic.
+pub fn chrome_trace(snapshots: &[RingSnapshot], normalize: bool) -> Json {
+    let mut events = Vec::new();
+    let mut dropped = BTreeMap::new();
+    for snap in snapshots {
+        events.push(metadata("process_name", snap.rank, None, &format!("rank{}", snap.rank)));
+        let mut lanes_seen = [false; 4];
+        for e in &snap.entries {
+            lanes_seen[e.kind.lane() as usize] = true;
+        }
+        for (lane, seen) in lanes_seen.iter().enumerate() {
+            if *seen {
+                events.push(metadata(
+                    "thread_name",
+                    snap.rank,
+                    Some(lane as u64),
+                    LANE_NAMES[lane],
+                ));
+            }
+        }
+        for (i, e) in snap.entries.iter().enumerate() {
+            events.push(event(e, snap.rank, i as u64, normalize));
+        }
+        dropped.insert(format!("rank{}", snap.rank), Json::Num(snap.dropped as f64));
+    }
+    Json::from_pairs(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::from_pairs(vec![
+                ("dropped", Json::Obj(dropped)),
+                ("normalized", Json::Bool(normalize)),
+                ("world", Json::Num(snapshots.len() as f64)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Per-step breakdown: for every `(step, kind, name)` cell, the span
+/// count, total duration (µs, summed over ranks), and total bytes.
+/// This is the MoFa-style table `perfmodel` calibrates against.
+pub fn step_breakdown(snapshots: &[RingSnapshot]) -> Json {
+    // step -> "kind.name" -> (count, dur_us, bytes)
+    let mut table: BTreeMap<u64, BTreeMap<String, (u64, u64, u64)>> = BTreeMap::new();
+    for snap in snapshots {
+        for e in &snap.entries {
+            let cell = table
+                .entry(e.step)
+                .or_default()
+                .entry(format!("{}.{}", e.kind.as_str(), e.name))
+                .or_insert((0, 0, 0));
+            cell.0 += 1;
+            cell.1 += e.dur_us;
+            cell.2 += e.bytes;
+        }
+    }
+    let steps: Vec<Json> = table
+        .into_iter()
+        .map(|(step, cells)| {
+            let mut obj = BTreeMap::new();
+            for (key, (count, dur_us, bytes)) in cells {
+                obj.insert(
+                    key,
+                    Json::from_pairs(vec![
+                        ("bytes", Json::Num(bytes as f64)),
+                        ("count", Json::Num(count as f64)),
+                        ("dur_us", Json::Num(dur_us as f64)),
+                    ]),
+                );
+            }
+            Json::from_pairs(vec![
+                ("phases", Json::Obj(obj)),
+                ("step", Json::Num(step as f64)),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![("steps", Json::Arr(steps))])
+}
+
+/// Measured per-step phase means (seconds, averaged over ranks and
+/// steps) folded into a [`StepTime`] — the calibration input the
+/// perfmodel's analytic breakdown is checked against.
+pub fn calibrated_step_time(snapshots: &[RingSnapshot]) -> StepTime {
+    let world = snapshots.len().max(1) as f64;
+    let mut steps = std::collections::BTreeSet::new();
+    let mut phase_us: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for snap in snapshots {
+        for e in &snap.entries {
+            if e.kind == SpanKind::Phase {
+                steps.insert(e.step);
+                *phase_us.entry(e.name).or_insert(0) += e.dur_us;
+            }
+        }
+    }
+    let n_steps = steps.len().max(1) as f64;
+    let mean_s = |name: &str| -> f64 {
+        phase_us.get(name).copied().unwrap_or(0) as f64 / (world * n_steps) / 1e6
+    };
+    let compute_s = mean_s("forward") + mean_s("backward");
+    let dp_comm_s = mean_s("collective");
+    let other_s = mean_s("data") + mean_s("optimizer");
+    StepTime::from_measured(compute_s, dp_comm_s, other_s)
+}
+
+/// Parse + validate a Chrome-trace document and render a per-lane
+/// aggregate table (the `modalities trace <run_dir>` output).
+pub fn summarize_trace(doc: &Json) -> Result<String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("trace document has no traceEvents array")?;
+    let mut ranks = std::collections::BTreeSet::new();
+    // "cat.name" -> (count, dur_us, bytes)
+    let mut agg: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let pid = ev.get("pid").and_then(|p| p.as_usize()).context("event missing pid")?;
+        if ph == "M" {
+            continue;
+        }
+        if ph != "X" && ph != "i" {
+            bail!("unexpected trace event phase {ph:?}");
+        }
+        ranks.insert(pid);
+        let cat = ev.get("cat").and_then(|c| c.as_str()).context("event missing cat")?;
+        let name = ev.get("name").and_then(|n| n.as_str()).context("event missing name")?;
+        let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0) as u64;
+        let bytes = ev
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(|b| b.as_f64())
+            .unwrap_or(0.0) as u64;
+        let cell = agg.entry(format!("{cat}.{name}")).or_insert((0, 0, 0));
+        cell.0 += 1;
+        cell.1 += dur;
+        cell.2 += bytes;
+    }
+    let mut out = String::new();
+    out.push_str(&format!("ranks: {}   span kinds: {}\n", ranks.len(), agg.len()));
+    out.push_str(&format!(
+        "{:<32} {:>8} {:>14} {:>14} {:>14}\n",
+        "span", "count", "total ms", "mean us", "bytes"
+    ));
+    for (key, (count, dur_us, bytes)) in &agg {
+        out.push_str(&format!(
+            "{:<32} {:>8} {:>14.3} {:>14.1} {:>14}\n",
+            key,
+            count,
+            *dur_us as f64 / 1e3,
+            *dur_us as f64 / (*count).max(1) as f64,
+            bytes
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{SpanEntry, Telemetry, TelemetrySpec};
+
+    fn spans(tel: &std::sync::Arc<Telemetry>) {
+        let h0 = tel.handle(0);
+        let h1 = tel.handle(1);
+        tel.set_step(0);
+        h0.record(SpanKind::Phase, "forward", 0, 0, std::time::Instant::now());
+        h0.record(SpanKind::Collective, "all_gather", 4096, 1, std::time::Instant::now());
+        h1.record(SpanKind::Collective, "all_gather", 4096, 1, std::time::Instant::now());
+        tel.set_step(1);
+        h0.instant(SpanKind::Segment, "segment", 2);
+    }
+
+    #[test]
+    fn normalized_trace_is_byte_stable_across_runs() {
+        let run = || {
+            let tel = Telemetry::new(TelemetrySpec::default(), 2);
+            spans(&tel);
+            chrome_trace(&tel.snapshot(), true).dumps()
+        };
+        let a = run();
+        // Wall clocks differ between the two runs; normalized dumps must not.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = run();
+        assert_eq!(a, b);
+        // And the document round-trips through the parser.
+        let doc = Json::parse(&a).expect("normalized trace parses");
+        assert!(doc.get("traceEvents").is_some());
+    }
+
+    #[test]
+    fn wall_trace_parses_and_summarizes() {
+        let tel = Telemetry::new(TelemetrySpec::default(), 2);
+        spans(&tel);
+        let doc = chrome_trace(&tel.snapshot(), false);
+        let parsed = Json::parse(&doc.dumps()).expect("wall trace parses");
+        let summary = summarize_trace(&parsed).expect("summarize");
+        assert!(summary.starts_with("ranks: 2"));
+        assert!(summary.contains("collective.all_gather"));
+        assert!(summary.contains("segment.segment"));
+    }
+
+    #[test]
+    fn breakdown_groups_by_step_and_phase() {
+        let tel = Telemetry::new(TelemetrySpec::default(), 2);
+        spans(&tel);
+        let bd = step_breakdown(&tel.snapshot());
+        let steps = bd.get("steps").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(steps.len(), 2);
+        let step0 = steps[0].get("phases").unwrap();
+        let ag = step0.get("collective.all_gather").unwrap();
+        assert_eq!(ag.get("count").and_then(|c| c.as_usize()), Some(2));
+        assert_eq!(ag.get("bytes").and_then(|b| b.as_usize()), Some(8192));
+    }
+
+    #[test]
+    fn calibration_folds_phase_means() {
+        let snap = RingSnapshot {
+            rank: 0,
+            dropped: 0,
+            entries: vec![
+                SpanEntry {
+                    kind: SpanKind::Phase,
+                    name: "forward",
+                    step: 0,
+                    start_us: 0,
+                    dur_us: 2_000_000,
+                    bytes: 0,
+                    seq: 0,
+                },
+                SpanEntry {
+                    kind: SpanKind::Phase,
+                    name: "collective",
+                    step: 0,
+                    start_us: 0,
+                    dur_us: 1_000_000,
+                    bytes: 0,
+                    seq: 0,
+                },
+            ],
+        };
+        let st = calibrated_step_time(&[snap]);
+        assert!((st.compute_s - 2.0).abs() < 1e-9);
+        assert!((st.dp_comm_s - 1.0).abs() < 1e-9);
+        assert!((st.total_s - 3.0).abs() < 1e-9);
+    }
+}

@@ -44,4 +44,7 @@ scripts/dist_smoke.sh
 echo "==> chaos smoke (kill rank 1 at step 3, rescale 4 → 3, verify journal + final shards)"
 scripts/chaos_smoke.sh
 
+echo "==> telemetry trace smoke (4-rank profiled run → Chrome trace; collective bytes == CommStats)"
+scripts/trace_smoke.sh
+
 echo "OK"

@@ -31,11 +31,14 @@ $BIN train --config "$CFG" \
   --resume
 
 # The post-resume metrics tail (steps 4..7) must be byte-identical to
-# the straight run's, once the wall-clock-dependent throughput field is
-# stripped (loss, lr, grad_norm, tokens_seen, comm_bytes_step are all
-# deterministic).
+# the straight run's, once the wall-clock-dependent fields are stripped
+# (loss, lr, grad_norm, tokens_seen, comm_bytes_step are all
+# deterministic; tokens_per_s and step_ms are wall-clock).
 strip_clock() {
-  grep '"kind":"step"' "$1" | sed 's/"tokens_per_s":[^,}]*,\{0,1\}//' | tail -n 4
+  grep '"kind":"step"' "$1" \
+    | sed 's/"tokens_per_s":[^,}]*,\{0,1\}//' \
+    | sed 's/"step_ms":[^,}]*,\{0,1\}//' \
+    | tail -n 4
 }
 strip_clock "$ROOT/straight/metrics.jsonl" > "$ROOT/tail_straight"
 strip_clock "$ROOT/resumed/metrics.jsonl"  > "$ROOT/tail_resumed"
