@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke trace-smoke bench-json
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke trace-smoke pp-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -54,6 +54,13 @@ kv-smoke:
 # skips.
 trace-smoke:
 	scripts/trace_smoke.sh
+
+# Pipeline-parallel smoke: 2-stage × 4-microbatch threaded run (GPipe
+# and 1F1B) must print a per-step loss tail bitwise-identical to the
+# single-stage run, with p2p bytes matching the closed-form boundary
+# accounting. Artifact-free — never skips.
+pp-smoke:
+	scripts/pp_smoke.sh
 
 # Machine-readable benches, artifact-free:
 #  * steady-state train step (scratch-vs-allocating + the

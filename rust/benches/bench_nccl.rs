@@ -23,6 +23,8 @@
 use modalities::dist::collectives::Collectives;
 use modalities::dist::process_group::{BackendSpec, ProcessGroup};
 use modalities::perfmodel::InterconnectModel;
+use modalities::pipeline::engine::{PipelineConfig, PipelineEngine};
+use modalities::pipeline::{gpipe_bubble_closed_form, Schedule};
 use modalities::util::even_split;
 use modalities::util::human;
 use modalities::util::stats::Timer;
@@ -146,7 +148,47 @@ fn main() {
         // assertion in `bench_fsdp_unit --alloc-only`.
     }
 
-    println!("\nPASS: latency/saturation shape + knee shift reproduced; engine traffic == model traffic; threaded backend holds its wall-clock bar");
+    println!("\n=== pipeline bubble fraction: measured vs analytic (threaded p2p) ===\n");
+    // GPipe closed form: bubble = (p−1)/(m+p−1). A spin floor per slot
+    // makes compute dominate rendezvous overhead so the measured idle
+    // fraction approaches the analytic one; the hard assertion is the
+    // shape (monotone decrease in m), the values are report-only.
+    let stages = 4usize;
+    println!(
+        "{:>7} {:>7} {:>10} {:>10} {:>7}",
+        "stages", "micros", "analytic", "measured", "|err|"
+    );
+    let mut measured_series = Vec::new();
+    for &micros in &[2usize, 8, 24] {
+        let cfg = PipelineConfig {
+            stages,
+            micros,
+            schedule: Schedule::GPipe,
+            backend: BackendSpec::threaded(),
+            layers: 4,
+            width: 8,
+            batch: 4,
+            steps: 3,
+            min_slot_us: 200,
+            ..PipelineConfig::default()
+        };
+        let analytic = gpipe_bubble_closed_form(stages, micros);
+        let out = PipelineEngine::new(cfg).unwrap().run().unwrap();
+        let measured = out.measured_bubble();
+        println!(
+            "{stages:>7} {micros:>7} {analytic:>10.3} {measured:>10.3} {:>7.3}",
+            (measured - analytic).abs()
+        );
+        measured_series.push(measured);
+    }
+    for w in measured_series.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "measured bubble must shrink as microbatches grow: {measured_series:?}"
+        );
+    }
+
+    println!("\nPASS: latency/saturation shape + knee shift reproduced; engine traffic == model traffic; threaded backend holds its wall-clock bar; pipeline bubble shrinks with microbatch count");
 }
 
 /// Wall-clock for `iters` reduce-scatter + all-gather rounds of `len`

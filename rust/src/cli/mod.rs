@@ -25,7 +25,8 @@ const VALUE_KEYS: &[&str] = &[
     "config", "out", "from", "to", "corpus", "vocab", "workers", "docs", "model", "steps",
     "world", "prompt", "ckpt", "run-dir", "seq-len", "batch-docs", "merges", "seed",
     "mean-words", "unit-mb", "jobs", "filter", "report", "max-new", "temperature", "top-k",
-    "top-p", "requests", "batches", "max-restarts",
+    "top-p", "requests", "batches", "max-restarts", "stages", "micros", "schedule", "dp",
+    "layers", "width", "batch",
 ];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -113,6 +114,9 @@ USAGE:
   modalities tune       --world <n> [--model <name>]
   modalities trace pp   [--set stages=4] [--set micros=16]
   modalities trace <run_dir>                # summarize a --profile Chrome trace
+  modalities pp         [--stages <n>] [--micros <n>] [--schedule <gpipe|1f1b>] [--dp <n>]
+                        [--layers <n>] [--width <n>] [--batch <n>] [--steps <n>] [--seed <n>]
+                        # threaded pipeline run; prints per-step loss bit patterns
   modalities version
 "
 }
@@ -201,6 +205,19 @@ mod tests {
         assert!(s.has_flag("profile"));
         let t = p(&["trace", "runs/run"]);
         assert_eq!(t.positional, vec!["trace", "runs/run"]);
+    }
+
+    #[test]
+    fn pp_options_parse() {
+        let a = p(&[
+            "pp", "--stages", "2", "--micros", "4", "--schedule", "1f1b", "--dp", "1",
+            "--layers", "4", "--width", "8", "--batch", "4",
+        ]);
+        assert_eq!(a.subcommand(), Some("pp"));
+        assert_eq!(a.opt_usize("stages", 1).unwrap(), 2);
+        assert_eq!(a.opt_usize("micros", 1).unwrap(), 4);
+        assert_eq!(a.opt("schedule"), Some("1f1b"));
+        assert_eq!(a.opt_usize("layers", 0).unwrap(), 4);
     }
 
     #[test]

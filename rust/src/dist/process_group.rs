@@ -203,6 +203,37 @@ pub trait ProcessGroup: Send {
     /// Block until every member arrives.
     fn barrier(&mut self, group: &[usize]) -> Result<()>;
 
+    /// Point-to-point send: publish `buf` for `peer` under `tag`.
+    /// Non-blocking — the sender deposits and returns; delivery
+    /// completes when the peer's matching [`Self::recv`] consumes the
+    /// payload. `tag` disambiguates in-flight messages between the same
+    /// pair (pipeline schedules interleave sends and receives in
+    /// different orders on the two sides, so a per-pair sequence
+    /// counter cannot match them up — the caller names the message
+    /// instead, MPI-style). A `(pair, tag)` may be reused once the
+    /// previous transfer under it has fully completed. Pair rendezvous
+    /// shares the collective cell space: do not mix collectives and p2p
+    /// over the same two-rank group. Accounted as op `p2p_send`
+    /// (bytes = 4·len, one message) at the same `finish_op` exit point
+    /// as the collectives, so `CommStats` and telemetry spans agree by
+    /// construction. The default errors so test doubles that never
+    /// exercise p2p compile unchanged; both real backends override.
+    fn send(&mut self, buf: &[f32], peer: usize, tag: u64) -> Result<()> {
+        let _ = (buf, peer, tag);
+        bail!("p2p send is not supported by this backend");
+    }
+
+    /// Point-to-point receive: block (bounded by the rendezvous
+    /// timeout) until `peer`'s matching [`Self::send`] under `tag`
+    /// arrives, then copy the payload into `out` (cleared and resized
+    /// to the sender's length). A peer that dies mid-transfer surfaces
+    /// as a typed [`RankLossEvent`] error instead of a deadlock.
+    /// Accounted as op `p2p_recv` (bytes = 4·len, one message).
+    fn recv(&mut self, peer: usize, tag: u64, out: &mut Vec<f32>) -> Result<()> {
+        let _ = (peer, tag, out);
+        bail!("p2p recv is not supported by this backend");
+    }
+
     /// Pre-populate the communicator's payload pool with `count`
     /// buffers of `elems` capacity, so the first steps rendezvous
     /// allocation-free instead of warming the pool lazily. A hint —
@@ -273,6 +304,14 @@ impl ProcessGroup for Box<dyn ProcessGroup> {
 
     fn barrier(&mut self, group: &[usize]) -> Result<()> {
         (**self).barrier(group)
+    }
+
+    fn send(&mut self, buf: &[f32], peer: usize, tag: u64) -> Result<()> {
+        (**self).send(buf, peer, tag)
+    }
+
+    fn recv(&mut self, peer: usize, tag: u64, out: &mut Vec<f32>) -> Result<()> {
+        (**self).recv(peer, tag, out)
     }
 
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
@@ -901,6 +940,61 @@ impl HandleInner {
             self.core.abort(self.rank);
         }
     }
+
+    // ---- point-to-point ----------------------------------------------------
+    //
+    // P2p is pure rendezvous transport: a two-rank cell keyed by the
+    // caller-supplied tag instead of the per-group sequence counter
+    // (the two sides of a pipeline schedule order their sends and
+    // receives differently, so implicit sequencing cannot pair them).
+    // Both members deposit — the sender its payload, the receiver an
+    // empty marker — which is what gives the receiver the dead-peer
+    // detection and bounded wait of `wait_deposits` for free. There is
+    // no reduction and no central compute, so the lockstep oracle and
+    // the threaded runtime share this code verbatim: p2p is bitwise
+    // backend-independent by construction.
+
+    /// The interned rendezvous group for a transfer with `peer`:
+    /// the strictly-ascending pair, rejecting self-transfers.
+    fn p2p_pair(&self, peer: usize) -> Result<[usize; 2]> {
+        if peer == self.rank {
+            bail!("rank {} attempted a p2p transfer with itself", self.rank);
+        }
+        Ok(if peer < self.rank { [peer, self.rank] } else { [self.rank, peer] })
+    }
+
+    /// Sender half: deposit and return. The cell persists until the
+    /// receiver consumes it, so completing here never races the read.
+    fn p2p_send(&mut self, buf: &[f32], peer: usize, tag: u64) -> Result<()> {
+        let t0 = self.tel_start();
+        let pair = self.p2p_pair(peer)?;
+        let pos = group_pos(self.rank, self.core.world, &pair)?;
+        let gid = self.gid(&pair);
+        let core = self.core.clone();
+        core.deposit(self.rank, pos, &pair, gid, tag, "p2p", buf, |_st, _g| Ok(()))?;
+        core.retire(pos, &pair, gid, tag);
+        self.finish_op("p2p_send", 4 * buf.len() as u64, 1, tag, t0);
+        Ok(())
+    }
+
+    /// Receiver half: deposit the empty marker, wait (bounded, dead-
+    /// peer-aware) for the sender's payload, copy it out, retire.
+    fn p2p_recv(&mut self, peer: usize, tag: u64, out: &mut Vec<f32>) -> Result<()> {
+        let t0 = self.tel_start();
+        let pair = self.p2p_pair(peer)?;
+        let pos = group_pos(self.rank, self.core.world, &pair)?;
+        let gid = self.gid(&pair);
+        let core = self.core.clone();
+        core.deposit(self.rank, pos, &pair, gid, tag, "p2p", &[], |_st, _g| Ok(()))?;
+        core.wait_deposits(gid, tag, &pair, "p2p", &mut self.taken)?;
+        let sender_pos = 1 - pos;
+        out.clear();
+        out.extend_from_slice(&self.taken[sender_pos]);
+        self.taken.clear();
+        core.retire(pos, &pair, gid, tag);
+        self.finish_op("p2p_recv", 4 * out.len() as u64, 1, tag, t0);
+        Ok(())
+    }
 }
 
 impl Drop for HandleInner {
@@ -1117,6 +1211,14 @@ impl ProcessGroup for LockstepGroup {
         })?;
         self.inner.finish_op("barrier", 0, rank_phase_messages(n), seq, t0);
         Ok(())
+    }
+
+    fn send(&mut self, buf: &[f32], peer: usize, tag: u64) -> Result<()> {
+        self.inner.p2p_send(buf, peer, tag)
+    }
+
+    fn recv(&mut self, peer: usize, tag: u64, out: &mut Vec<f32>) -> Result<()> {
+        self.inner.p2p_recv(peer, tag, out)
     }
 
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
@@ -1401,6 +1503,14 @@ impl ProcessGroup for ThreadedGroup {
         Ok(())
     }
 
+    fn send(&mut self, buf: &[f32], peer: usize, tag: u64) -> Result<()> {
+        self.inner.p2p_send(buf, peer, tag)
+    }
+
+    fn recv(&mut self, peer: usize, tag: u64, out: &mut Vec<f32>) -> Result<()> {
+        self.inner.p2p_recv(peer, tag, out)
+    }
+
     fn reserve_scratch(&mut self, elems: usize, count: usize) {
         self.inner.core.reserve(elems, count);
     }
@@ -1674,6 +1784,93 @@ mod tests {
         assert_eq!((ev.rank, ev.op.as_str()), (12, "all_reduce.rs"));
         assert!(RankLossEvent::classify(&anyhow::anyhow!("rank x wedged")).is_none());
         assert!(RankLossEvent::classify(&anyhow::anyhow!("plain failure")).is_none());
+    }
+
+    /// P2p roundtrips on both backends: payload delivered bitwise,
+    /// tags pair crossing transfers correctly, and the per-rank
+    /// accounting matches the closed form (4·len bytes, one message
+    /// per transfer, on each side).
+    #[test]
+    fn p2p_roundtrip_and_accounting() {
+        for handles in both(2) {
+            let stats = drive(handles, |r, pg| {
+                let mut got = Vec::new();
+                if r == 0 {
+                    pg.send(&[1.0, 2.0, 3.0], 1, 0).unwrap();
+                    pg.recv(1, 1, &mut got).unwrap();
+                    assert_eq!(got, vec![7.0, 8.0]);
+                } else {
+                    pg.recv(0, 0, &mut got).unwrap();
+                    assert_eq!(got, vec![1.0, 2.0, 3.0]);
+                    pg.send(&[7.0, 8.0], 0, 1).unwrap();
+                }
+                pg.stats().clone()
+            });
+            assert_eq!(stats[0].ops["p2p_send"].bytes, 12);
+            assert_eq!(stats[0].ops["p2p_send"].messages, 1);
+            assert_eq!(stats[0].ops["p2p_recv"].bytes, 8);
+            assert_eq!(stats[1].ops["p2p_send"].bytes, 8);
+            assert_eq!(stats[1].ops["p2p_recv"].bytes, 12);
+            assert_eq!(stats[1].ops["p2p_recv"].messages, 1);
+        }
+    }
+
+    /// Out-of-order tag consumption: the receiver can drain two
+    /// differently-tagged in-flight messages in either order — the tag,
+    /// not arrival order, names the payload.
+    #[test]
+    fn p2p_tags_disambiguate_in_flight_messages() {
+        for handles in both(2) {
+            drive(handles, |r, pg| {
+                if r == 0 {
+                    pg.send(&[10.0], 1, 100).unwrap();
+                    pg.send(&[20.0], 1, 200).unwrap();
+                } else {
+                    let mut a = Vec::new();
+                    let mut b = Vec::new();
+                    pg.recv(0, 200, &mut b).unwrap();
+                    pg.recv(0, 100, &mut a).unwrap();
+                    assert_eq!((a[0], b[0]), (10.0, 20.0));
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn p2p_invalid_peers_rejected() {
+        for mut handles in both(2) {
+            let pg = &mut handles[0];
+            let mut out = Vec::new();
+            assert!(pg.send(&[1.0], 0, 0).is_err(), "self-send");
+            assert!(pg.recv(0, 0, &mut out).is_err(), "self-recv");
+            assert!(pg.send(&[1.0], 9, 0).is_err(), "peer out of range");
+        }
+    }
+
+    /// A peer that dies before sending surfaces to the blocked receiver
+    /// as a typed [`RankLossEvent`] — same failure contract as the
+    /// collectives — on both backends, well before the timeout.
+    #[test]
+    fn p2p_dead_sender_is_typed_rank_loss() {
+        for spec in [
+            BackendSpec { kind: BackendKind::Lockstep, timeout_ms: 30_000, jitter_us: 0 },
+            BackendSpec { kind: BackendKind::Threaded, timeout_ms: 30_000, jitter_us: 0 },
+        ] {
+            let mut handles = spec.make(2);
+            let h1 = handles.pop().unwrap();
+            let mut h0 = handles.pop().unwrap();
+            let t0 = Instant::now();
+            let j = thread::spawn(move || {
+                let mut out = Vec::new();
+                h0.recv(1, 0, &mut out)
+            });
+            drop(h1);
+            let err = j.join().unwrap().unwrap_err();
+            let ev = RankLossEvent::classify(&err).expect("typed rank-loss event");
+            assert_eq!((ev.rank, ev.op.as_str()), (1, "p2p"));
+            assert_eq!(ev.group, vec![0, 1]);
+            assert!(t0.elapsed() < Duration::from_secs(10));
+        }
     }
 
     #[test]

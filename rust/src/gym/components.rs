@@ -59,6 +59,10 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             Some(c) => Some(c.downcast::<crate::telemetry::TelemetrySpec>()?),
             None => None,
         };
+        let pipeline = match ctx.component_field_opt(cfg, "pipeline", "pipeline")? {
+            Some(c) => Some(c.downcast::<crate::pipeline::components::PipelineSpec>()?),
+            None => None,
+        };
 
         let steps = ctx.usize(cfg, "steps")? as u64;
         let grad_accum = ctx.usize_or(cfg, "grad_accum", 1)?.max(1);
@@ -99,6 +103,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
                 run_name,
                 resume,
                 telemetry,
+                pipeline,
             },
         ))
     })?;
@@ -125,6 +130,7 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
             ("run_dir", "string", "runs/<run_name>", "output/checkpoint directory"),
             ("resume", "bool", "false", "resume from latest sharded checkpoint"),
             ("telemetry", "component", "none", "span/trace telemetry collection for the run"),
+            ("pipeline", "component", "none", "pipeline execution plan; its `micros` must equal `grad_accum`"),
         ],
     );
 
@@ -284,6 +290,7 @@ pub struct GymSpecSeed {
     pub run_name: String,
     pub resume: bool,
     pub telemetry: Option<Arc<crate::telemetry::TelemetrySpec>>,
+    pub pipeline: Option<Arc<crate::pipeline::components::PipelineSpec>>,
 }
 
 impl ObjectGraph {
@@ -337,6 +344,7 @@ impl ObjectGraph {
             resume: seed.resume,
             segment_index: None,
             telemetry: seed.telemetry.clone(),
+            pipeline: seed.pipeline.clone(),
         };
         Gym::new(spec).with_standard_subscribers(console)
     }
@@ -413,6 +421,45 @@ components:
         assert!(ts.enabled);
         assert_eq!(ts.ring_capacity, 128);
         assert!(ts.normalize);
+    }
+
+    #[test]
+    fn gym_spec_carries_pipeline_plan() {
+        let src = SRC.replace(
+            "      run_dir: /tmp/modalities-gym-spec-test\n",
+            "      run_dir: /tmp/modalities-gym-spec-test\n      grad_accum: 8\n      pipeline: {instance_key: pp}\n  pp:\n    component_key: pipeline\n    variant_key: one_f_one_b\n    config: {stages: 1, micros: 8}\n",
+        );
+        let cfg = Config::from_str_named(&src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let gym = g.into_gym().unwrap();
+        let pp = gym.spec.pipeline.as_ref().expect("pipeline plan must reach the gym");
+        assert_eq!((pp.stages, pp.micros), (1, 8));
+        assert_eq!(pp.schedule, crate::pipeline::Schedule::OneFOneB);
+    }
+
+    /// The two pipeline misconfigurations fail loudly before any
+    /// artifact loading: micros disagreeing with `grad_accum`, and a
+    /// multi-stage plan handed to the single-stage SPMD gym.
+    #[test]
+    fn gym_rejects_inconsistent_pipeline_plan() {
+        for (pp_cfg, needle) in [
+            ("{stages: 1, micros: 4}", "must agree"),
+            ("{stages: 2, micros: 1}", "PipelineEngine"),
+        ] {
+            let src = SRC.replace(
+                "      run_dir: /tmp/modalities-gym-spec-test\n",
+                &format!(
+                    "      run_dir: /tmp/modalities-gym-spec-test\n      pipeline: {{instance_key: pp}}\n  pp:\n    component_key: pipeline\n    variant_key: gpipe\n    config: {pp_cfg}\n"
+                ),
+            );
+            let cfg = Config::from_str_named(&src, "<t>").unwrap();
+            let reg = ComponentRegistry::with_builtins();
+            let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+            let mut gym = g.into_gym().unwrap();
+            let msg = format!("{:#}", gym.run().unwrap_err());
+            assert!(msg.contains(needle), "{pp_cfg}: {msg}");
+        }
     }
 
     #[test]

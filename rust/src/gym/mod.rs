@@ -77,6 +77,14 @@ pub struct GymSpec {
     /// per-rank phase/collective spans and exports
     /// `<run_dir>/telemetry/{trace,breakdown,metrics}.json`.
     pub telemetry: Option<Arc<crate::telemetry::TelemetrySpec>>,
+    /// Pipeline execution plan. With `stages: 1` this only pins the
+    /// microbatch count (`micros` must equal `grad_accum` — they are
+    /// the same quantity seen from the schedule and the optimizer
+    /// side). Multi-stage plans are driven by the stage-partitioned
+    /// [`crate::pipeline::engine::PipelineEngine`], not this SPMD
+    /// loop — the fused PJRT artifact is single-stage (see
+    /// `docs/architecture.md` §13).
+    pub pipeline: Option<Arc<crate::pipeline::components::PipelineSpec>>,
 }
 
 /// One (step, metric) curve point.
@@ -146,6 +154,26 @@ impl Gym {
     pub fn run(&mut self) -> Result<RunSummary> {
         let spec = &self.spec;
         let world = spec.parallel.dp;
+        if let Some(pp) = &spec.pipeline {
+            if pp.micros != spec.grad_accum {
+                bail!(
+                    "pipeline plan has micros={} but the gym runs grad_accum={} — \
+                     they are the same quantity (microbatches per optimizer step) \
+                     and must agree",
+                    pp.micros,
+                    spec.grad_accum
+                );
+            }
+            if pp.stages > 1 {
+                bail!(
+                    "pipeline plan has stages={}: the SPMD gym drives the fused \
+                     single-stage PJRT artifact; multi-stage runs are executed by \
+                     pipeline::engine::PipelineEngine (`modalities pp`, see \
+                     docs/architecture.md §13)",
+                    pp.stages
+                );
+            }
+        }
         std::fs::create_dir_all(&spec.run_dir)?;
         // Provenance: the resolved config is the experiment record.
         std::fs::write(spec.run_dir.join("config.resolved.yaml"), &spec.config_yaml)?;

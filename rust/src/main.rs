@@ -47,6 +47,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "config" => cmd_config(&args),
         "tune" => cmd_tune(&args),
         "trace" => cmd_trace(&args),
+        "pp" => cmd_pp(&args),
         "version" => {
             println!("modalities {}", modalities::VERSION);
             Ok(())
@@ -189,6 +190,7 @@ fn train_elastic(
             resume: seed.resume || plan.index > 0,
             segment_index: Some(plan.index),
             telemetry: telemetry.clone(),
+            pipeline: seed.pipeline.clone(),
         };
         let summary = Gym::new(spec).with_standard_subscribers(true)?.run()?;
         let steps = summary.steps;
@@ -811,6 +813,62 @@ fn cmd_tune(args: &Args) -> Result<()> {
             plan.unit_blocks,
             plan.hsdp_shard.map(|g| g.to_string()).unwrap_or("full".into()),
             tps
+        );
+    }
+    Ok(())
+}
+
+/// `modalities pp`: drive the stage-partitioned [`PipelineEngine`]
+/// (threaded backend) on the built-in layerwise model and print each
+/// step's loss with its exact f32 bit pattern — `make pp-smoke` diffs
+/// these lines between a 2-stage and a single-stage run to prove the
+/// pipeline is bitwise-equivalent, the way `backend_equivalence` pins
+/// threaded vs lockstep.
+fn cmd_pp(args: &Args) -> Result<()> {
+    use modalities::pipeline::engine::{PipelineConfig, PipelineEngine};
+    use modalities::pipeline::Schedule;
+    let cfg = PipelineConfig {
+        stages: args.opt_usize("stages", 2)?,
+        dp: args.opt_usize("dp", 1)?,
+        micros: args.opt_usize("micros", 4)?,
+        schedule: Schedule::parse(args.opt("schedule").unwrap_or("gpipe"))?,
+        layers: args.opt_usize("layers", 4)?,
+        width: args.opt_usize("width", 8)?,
+        batch: args.opt_usize("batch", 4)?,
+        steps: args.opt_usize("steps", 4)?,
+        seed: args.opt_usize("seed", 7)? as u64,
+        ..PipelineConfig::default()
+    };
+    let sched = modalities::pipeline::schedule(cfg.schedule, cfg.stages, cfg.micros)?;
+    println!(
+        "pipeline: {} stage(s) × dp {} × {} micro(s), {} schedule, {} layers of width {}",
+        cfg.stages,
+        cfg.dp,
+        cfg.micros,
+        cfg.schedule.as_str(),
+        cfg.layers,
+        cfg.width
+    );
+    print!("{}", modalities::pipeline::render(&sched, cfg.stages));
+    println!(
+        "bubble: {:.1}% measured on schedule, stage-0 peak stash {}",
+        100.0 * modalities::pipeline::bubble_fraction(&sched, cfg.stages),
+        modalities::pipeline::peak_inflight(&sched, 0)
+    );
+    let out = PipelineEngine::new(cfg.clone())?.run()?;
+    for (t, l) in out.losses.iter().enumerate() {
+        println!("loss[{t}] = {:08x} ({l})", l.to_bits());
+    }
+    for (r, st) in out.p2p_stats.iter().enumerate() {
+        let send = st.ops.get("p2p_send").copied().unwrap_or_default();
+        let recv = st.ops.get("p2p_recv").copied().unwrap_or_default();
+        println!(
+            "rank {r} (stage {}): p2p sent {} B / {} msg, received {} B / {} msg",
+            r / cfg.dp,
+            send.bytes,
+            send.messages,
+            recv.bytes,
+            recv.messages
         );
     }
     Ok(())

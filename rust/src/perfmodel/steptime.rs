@@ -122,8 +122,10 @@ pub fn tokens_per_gpu_per_s(w: &Workload, plan: &Plan, net: &InterconnectModel, 
 ///   plus one all-reduce of the sharded grads across dp/g replicas.
 /// TP: 4 all-reduces of activations per layer (fwd+bwd of attention +
 ///   MLP) within the tp group.
-/// PP: GPipe-style bubble (pp-1)/(m) fraction with m microbatches, plus
-///   p2p activation transfers.
+/// PP: GPipe-style bubble (pp-1)/(m+pp-1) fraction with m microbatches
+///   (the fwd+bwd makespan form the generated schedules realize; pinned
+///   against `pipeline::bubble_fraction` by a test below), plus p2p
+///   activation transfers.
 pub fn step_time(w: &Workload, plan: &Plan, net: &InterconnectModel, gpu: &GpuModel) -> StepTime {
     // Per-GPU compute: model is divided over tp*pp; each GPU computes
     // its microbatch's share.
@@ -170,7 +172,11 @@ pub fn step_time(w: &Workload, plan: &Plan, net: &InterconnectModel, gpu: &GpuMo
     // ---- PP bubble + p2p ----------------------------------------------------
     let (pp_bubble_s, pp_p2p_s) = if plan.pp > 1 {
         let m = 4 * plan.pp; // microbatches per step (1F1B convention)
-        let bubble_frac = (plan.pp - 1) as f64 / m as f64;
+        // Schedule-exact bubble: the generated GPipe/1F1B schedules
+        // idle (pp-1)/(m+pp-1) of their stage-clocks, not (pp-1)/m —
+        // the old form overstated the bubble by the warmup/drain
+        // clocks it left out of the makespan.
+        let bubble_frac = crate::pipeline::gpipe_bubble_closed_form(plan.pp, m);
         let act_bytes =
             (w.micro_batch * w.seq_len * w.d_model) as u64 * w.wire_bytes_per_param as u64;
         let p2p = 2.0 * (plan.pp - 1) as f64 * net.p2p_time(act_bytes, false) * m as f64
@@ -312,6 +318,36 @@ mod tests {
         assert!(tp.compute_s < plain.compute_s); // model divided over tp
         let pp = step_time(&w, &Plan { pp: 4, dp: 2, ..Plan::fsdp(8, 1) }, &net, &gpu);
         assert!(pp.pp_bubble_s > 0.0);
+    }
+
+    /// The perf model's closed-form PP bubble term and the schedule
+    /// generator's measured `bubble_fraction` are two views of the same
+    /// quantity — cross-check them on real generated schedules at the
+    /// model's own microbatch convention (m = 4·pp).
+    #[test]
+    fn pp_bubble_term_matches_generated_schedules() {
+        use crate::pipeline::{bubble_fraction, gpipe_bubble_closed_form, schedule, Schedule};
+        for pp in [2usize, 4, 8] {
+            let m = 4 * pp;
+            let analytic = gpipe_bubble_closed_form(pp, m);
+            let slots = schedule(Schedule::GPipe, pp, m).unwrap();
+            let measured = bubble_fraction(&slots, pp);
+            assert!(
+                (measured - analytic).abs() < 1e-9,
+                "pp={pp} m={m}: schedule bubble {measured} vs model term {analytic}"
+            );
+        }
+        // And the step-time composition books exactly that fraction of
+        // compute as bubble time.
+        let (w, net, gpu) = setup();
+        let plan = Plan { pp: 4, dp: 2, ..Plan::fsdp(8, 1) };
+        let st = step_time(&w, &plan, &net, &gpu);
+        let expect = gpipe_bubble_closed_form(4, 16) * st.compute_s;
+        assert!(
+            (st.pp_bubble_s - expect).abs() < 1e-12 * expect.max(1.0),
+            "{} vs {expect}",
+            st.pp_bubble_s
+        );
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Registry factories for the `pipeline` interface — stage-partitioned
+//! execution plans consumed by the gym's microbatch (`grad_accum`) path
+//! and the [`super::engine::PipelineEngine`].
+
+use super::Schedule;
+use crate::dist::process_group::BackendSpec;
+use crate::registry::{Component, ComponentRegistry};
+use anyhow::Result;
+
+/// Pipeline plan stored in the object graph: how many stages, how many
+/// microbatches per step, which slot schedule, and which collective
+/// backend carries the p2p transfers.
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub stages: usize,
+    pub micros: usize,
+    pub schedule: Schedule,
+    pub backend: BackendSpec,
+}
+
+pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
+    let parse_common = |ctx: &mut crate::registry::BuildCtx<'_>,
+                        cfg: &crate::yaml::Node,
+                        schedule: Schedule|
+     -> Result<PipelineSpec> {
+        let stages = ctx.usize_or(cfg, "stages", 1)?;
+        let micros = ctx.usize_or(cfg, "micros", 1)?;
+        if stages == 0 || micros == 0 {
+            anyhow::bail!("pipeline stages and micros must both be > 0");
+        }
+        let backend = BackendSpec {
+            kind: BackendSpec::parse_kind(&ctx.str_or(cfg, "backend", "threaded"))?,
+            timeout_ms: ctx.usize_or(cfg, "comm_timeout_ms", 30_000)? as u64,
+            jitter_us: ctx.usize_or(cfg, "comm_jitter_us", 0)? as u64,
+        };
+        Ok(PipelineSpec { stages, micros, schedule, backend })
+    };
+
+    reg.register("pipeline", "gpipe", move |ctx, cfg| {
+        let spec = parse_common(ctx, cfg, Schedule::GPipe)?;
+        Ok(Component::new("pipeline", "gpipe", spec))
+    })?;
+    reg.describe(
+        "pipeline",
+        "gpipe",
+        "GPipe schedule: all microbatch forwards, then all backwards — \
+         simple, but peak activation stash grows with the microbatch count.",
+        &[
+            ("stages", "int", "1", "pipeline stages (contiguous layer ranges)"),
+            ("micros", "int", "1", "microbatches per step (the gym's `grad_accum`)"),
+            ("backend", "string", "threaded", "p2p transport runtime: `lockstep` (oracle) or `threaded` (rank-per-thread)"),
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per transfer (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
+        ],
+    );
+
+    reg.register("pipeline", "one_f_one_b", move |ctx, cfg| {
+        let spec = parse_common(ctx, cfg, Schedule::OneFOneB)?;
+        Ok(Component::new("pipeline", "one_f_one_b", spec))
+    })?;
+    reg.describe(
+        "pipeline",
+        "one_f_one_b",
+        "1F1B schedule: steady-state alternating fwd/bwd bounds the \
+         activation stash at ~stages in-flight microbatches.",
+        &[
+            ("stages", "int", "1", "pipeline stages (contiguous layer ranges)"),
+            ("micros", "int", "1", "microbatches per step (the gym's `grad_accum`)"),
+            ("backend", "string", "threaded", "p2p transport runtime: `lockstep` (oracle) or `threaded` (rank-per-thread)"),
+            ("comm_timeout_ms", "int", "30000", "rendezvous timeout per transfer (deadlock backstop)"),
+            ("comm_jitter_us", "int", "0", "max random per-rank start jitter (schedule fuzzer)"),
+        ],
+    );
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::registry::{ComponentRegistry, ObjectGraphBuilder};
+
+    #[test]
+    fn pipeline_specs_from_config() {
+        let src = "\
+components:
+  pp1:
+    component_key: pipeline
+    variant_key: gpipe
+    config: {stages: 4, micros: 8}
+  pp2:
+    component_key: pipeline
+    variant_key: one_f_one_b
+    config: {stages: 2, micros: 4, backend: lockstep, comm_timeout_ms: 5000}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let g = ObjectGraphBuilder::new(&reg).build(&cfg).unwrap();
+        let p1 = g.get::<super::PipelineSpec>("pp1").unwrap();
+        assert_eq!((p1.stages, p1.micros), (4, 8));
+        assert_eq!(p1.schedule, crate::pipeline::Schedule::GPipe);
+        assert_eq!(p1.backend.kind, crate::dist::process_group::BackendKind::Threaded);
+        let p2 = g.get::<super::PipelineSpec>("pp2").unwrap();
+        assert_eq!(p2.schedule, crate::pipeline::Schedule::OneFOneB);
+        assert_eq!(p2.backend.kind, crate::dist::process_group::BackendKind::Lockstep);
+        assert_eq!(p2.backend.timeout_ms, 5000);
+    }
+
+    #[test]
+    fn zero_stage_plan_rejected() {
+        let src = "\
+components:
+  pp:
+    component_key: pipeline
+    variant_key: gpipe
+    config: {stages: 0}
+";
+        let cfg = Config::from_str_named(src, "<t>").unwrap();
+        let reg = ComponentRegistry::with_builtins();
+        let e = ObjectGraphBuilder::new(&reg).build(&cfg);
+        let msg = e.err().map(|e| e.root_cause().to_string()).unwrap();
+        assert!(msg.contains("must both be > 0"), "{msg}");
+    }
+}

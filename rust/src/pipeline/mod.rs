@@ -1,7 +1,14 @@
 //! Pipeline-parallel schedules: GPipe and 1F1B (interleaved-free)
 //! microbatch schedules with dependency validation and bubble
-//! accounting. The schedule generator feeds both the perf model's PP
-//! term and the `modalities trace` CLI (schedule visualization).
+//! accounting. The schedule generator feeds the perf model's PP term,
+//! the `modalities trace` CLI (schedule visualization) and — since the
+//! [`engine`] module landed — the real stage-partitioned executor: the
+//! [`engine::PipelineEngine`] drives exactly the slot stream generated
+//! here, with microbatch activations and gradients flowing over the
+//! [`crate::dist::process_group::ProcessGroup`] p2p transport.
+
+pub mod components;
+pub mod engine;
 
 use anyhow::{bail, Result};
 
@@ -25,6 +32,24 @@ pub enum Dir {
 pub enum Schedule {
     GPipe,
     OneFOneB,
+}
+
+impl Schedule {
+    /// Parse the `schedule:` config / `--schedule` CLI key.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gpipe" => Ok(Schedule::GPipe),
+            "1f1b" | "one_f_one_b" => Ok(Schedule::OneFOneB),
+            other => bail!("unknown pipeline schedule '{other}' (gpipe|1f1b)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Schedule::GPipe => "gpipe",
+            Schedule::OneFOneB => "1f1b",
+        }
+    }
 }
 
 /// Generate a schedule for `stages` pipeline stages and `micros`
@@ -128,12 +153,30 @@ pub fn makespan(slots: &[Slot]) -> usize {
     slots.iter().map(|s| s.clock).max().map(|c| c + 1).unwrap_or(0)
 }
 
-/// Bubble fraction: idle stage-clocks / total stage-clocks.
+/// Bubble fraction: idle stage-clocks / total stage-clocks. An empty
+/// slot list (or `stages == 0`) has no stage-clocks at all — that is
+/// zero idle time, not 0/0 NaN.
 pub fn bubble_fraction(slots: &[Slot], stages: usize) -> f64 {
     let span = makespan(slots);
     let busy = slots.len();
     let total = span * stages;
+    if total == 0 {
+        return 0.0;
+    }
     (total - busy) as f64 / total as f64
+}
+
+/// Closed-form GPipe bubble fraction for fwd+bwd schedules with unit
+/// slot cost: makespan is `2(m + p - 1)` clocks, busy stage-clocks are
+/// `2pm`, so the idle fraction is `(p-1)/(m+p-1)`. This is exactly
+/// what [`bubble_fraction`] reports on [`schedule`]`(GPipe, p, m)`
+/// output — a tolerance test in `perfmodel::steptime` pins the two
+/// (and the perf model's PP term uses this form).
+pub fn gpipe_bubble_closed_form(stages: usize, micros: usize) -> f64 {
+    if stages <= 1 || micros == 0 {
+        return 0.0;
+    }
+    (stages - 1) as f64 / (micros + stages - 1) as f64
 }
 
 /// Validate dependency order:
@@ -272,5 +315,42 @@ mod tests {
     fn invalid_args() {
         assert!(schedule(Schedule::GPipe, 0, 1).is_err());
         assert!(schedule(Schedule::GPipe, 1, 0).is_err());
+    }
+
+    /// Regression: an empty slot list used to divide 0/0 into NaN.
+    #[test]
+    fn bubble_fraction_of_empty_schedule_is_zero() {
+        assert_eq!(bubble_fraction(&[], 4), 0.0);
+        assert_eq!(bubble_fraction(&[], 0), 0.0);
+        let s = schedule(Schedule::GPipe, 2, 2).unwrap();
+        assert_eq!(bubble_fraction(&s, 0), 0.0);
+    }
+
+    /// The generated GPipe schedule's bubble is exactly the closed
+    /// form `(p-1)/(m+p-1)` — same slot cost model, so the agreement
+    /// is exact, not approximate.
+    #[test]
+    fn gpipe_bubble_matches_closed_form_exactly() {
+        forall(Cases::default().cases(30), |g| {
+            let stages = g.usize_in(1..7);
+            let micros = g.usize_in(1..17);
+            let s = schedule(Schedule::GPipe, stages, micros).unwrap();
+            let measured = bubble_fraction(&s, stages);
+            let analytic = gpipe_bubble_closed_form(stages, micros);
+            assert!(
+                (measured - analytic).abs() < 1e-12,
+                "stages={stages} micros={micros}: schedule {measured} vs closed form {analytic}"
+            );
+        });
+    }
+
+    #[test]
+    fn schedule_kind_parses() {
+        assert_eq!(Schedule::parse("gpipe").unwrap(), Schedule::GPipe);
+        assert_eq!(Schedule::parse("1f1b").unwrap(), Schedule::OneFOneB);
+        assert_eq!(Schedule::parse("one_f_one_b").unwrap(), Schedule::OneFOneB);
+        assert!(Schedule::parse("zigzag").is_err());
+        assert_eq!(Schedule::GPipe.as_str(), "gpipe");
+        assert_eq!(Schedule::OneFOneB.as_str(), "1f1b");
     }
 }

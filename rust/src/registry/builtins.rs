@@ -14,6 +14,7 @@ pub fn register_builtins(reg: &mut ComponentRegistry) {
     crate::model::components::register(reg).expect("model builtins");
     crate::dist::components::register(reg).expect("dist builtins");
     crate::fsdp::components::register(reg).expect("fsdp builtins");
+    crate::pipeline::components::register(reg).expect("pipeline builtins");
     crate::gym::components::register(reg).expect("gym builtins");
     crate::checkpoint::components::register(reg).expect("checkpoint builtins");
     crate::perfmodel::components::register(reg).expect("perfmodel builtins");

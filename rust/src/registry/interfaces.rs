@@ -1,12 +1,13 @@
 //! The framework's declared component interfaces.
 //!
 //! The paper ships "93 pluggable components each implementing one of the
-//! 32 pre-defined interfaces". This module declares those 32 plus five
+//! 32 pre-defined interfaces". This module declares those 32 plus six
 //! of our own (`ablation`, the sweep orchestrator — the layer the paper
 //! says everyone hand-rolls — `serve`, the batched inference engine,
 //! `elastic`, the rank-loss recovery supervisor, `kvcache`, the
-//! paged KV cache behind incremental decode, and `telemetry`, the
-//! unified span/metrics/trace layer); the registry
+//! paged KV cache behind incremental decode, `telemetry`, the
+//! unified span/metrics/trace layer, and `pipeline`, the
+//! stage-partitioned execution plan); the registry
 //! refuses registrations against undeclared
 //! interfaces, which is what makes config validation *interface-level*:
 //! a reference site knows which interface it expects, and the
@@ -14,7 +15,7 @@
 //! training starts.
 
 /// All component interfaces, in stable order.
-pub const INTERFACES: [&str; 37] = [
+pub const INTERFACES: [&str; 38] = [
     // model stack
     "model",                 // trainable model bound to AOT artifacts
     "model_descriptor",      // architecture shape/param metadata
@@ -36,6 +37,7 @@ pub const INTERFACES: [&str; 37] = [
     "device_mesh",           // DP×TP×PP topology descriptor
     "collective_backend",    // lockstep sim / modelled interconnect
     "parallel_strategy",     // fsdp / hsdp / ddp / tp / pp composition
+    "pipeline",              // stage-partitioned execution plan (gpipe / 1f1b)
     "sharding_policy",       // FSDP unit-size / wrapping policy
     "interconnect_model",    // α-β link model for the perf simulator
     // training driver
@@ -73,14 +75,15 @@ mod tests {
     #[test]
     fn paper_interfaces_plus_ours() {
         // The paper's 32 interfaces plus our sweep-orchestration,
-        // batched-inference, elastic-recovery, KV-cache and telemetry
-        // ones.
-        assert_eq!(INTERFACES.len(), 37);
+        // batched-inference, elastic-recovery, KV-cache, telemetry and
+        // pipeline-plan ones.
+        assert_eq!(INTERFACES.len(), 38);
         assert!(interface_exists("ablation"));
         assert!(interface_exists("serve"));
         assert!(interface_exists("elastic"));
         assert!(interface_exists("kvcache"));
         assert!(interface_exists("telemetry"));
+        assert!(interface_exists("pipeline"));
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Pipeline-vs-single-stage equivalence suite.
+//!
+//! The contract (docs/architecture.md §13): partitioning the layerwise
+//! reference model across pipeline stages — under either schedule, any
+//! microbatch count, and any thread interleaving the `ThreadedGroup`
+//! backend produces — must be **bitwise invisible**. Final parameters,
+//! per-step losses and optimizer trajectories of a `stages ∈ {2, 4}`
+//! run are compared bit-for-bit against the `stages = 1` baseline of
+//! the same config, the same standard `backend_equivalence.rs` applies
+//! to collectives.
+//!
+//! On top of the bitwise pin, per-rank `CommStats` p2p accounting is
+//! checked against the closed-form stage-boundary count
+//! (`PipelineConfig::expected_p2p`), and the stash high-water per stage
+//! is pinned to the schedule's `peak_inflight` — the 1F1B memory
+//! argument, measured rather than asserted.
+
+use modalities::dist::process_group::BackendSpec;
+use modalities::pipeline::engine::{PipelineConfig, PipelineEngine, PipelineRunResult};
+use modalities::pipeline::{peak_inflight, schedule, Schedule};
+use modalities::util::prop::JITTER_GRID_US;
+
+/// Everything observable that must match across partitionings: per-step
+/// loss bit patterns and the bit patterns of every parameter buffer,
+/// flattened in global layer order (stage order == layer order, so the
+/// flattening is partition-independent).
+#[derive(Debug, PartialEq, Eq)]
+struct RunFingerprint {
+    loss_bits: Vec<u32>,
+    param_bits: Vec<u32>,
+}
+
+impl RunFingerprint {
+    fn of(out: &PipelineRunResult) -> Self {
+        Self {
+            loss_bits: out.losses.iter().map(|l| l.to_bits()).collect(),
+            param_bits: out
+                .stage_params
+                .iter()
+                .flatten()
+                .flatten()
+                .map(|v| v.to_bits())
+                .collect(),
+        }
+    }
+}
+
+/// A model/data shape shared by every grid point. `layers = 8` divides
+/// evenly by stages 1, 2 and 4.
+fn base_cfg() -> PipelineConfig {
+    PipelineConfig {
+        layers: 8,
+        width: 6,
+        batch: 3,
+        steps: 3,
+        seed: 0x51de_ca5e,
+        ..PipelineConfig::default()
+    }
+}
+
+fn run(cfg: PipelineConfig) -> PipelineRunResult {
+    let label = format!(
+        "stages={} dp={} micros={} {:?} jitter={}us",
+        cfg.stages, cfg.dp, cfg.micros, cfg.schedule, cfg.backend.jitter_us
+    );
+    PipelineEngine::new(cfg)
+        .expect("config")
+        .run()
+        .unwrap_or_else(|e| panic!("{label}: {e:#}"))
+}
+
+/// The tentpole pin: for every `{stages} × {schedule} × {micros}` grid
+/// point, and for every jitter setting in the chaos harness's shared
+/// grid, the pipeline run reproduces the single-stage run bit-for-bit.
+#[test]
+fn pipeline_reproduces_single_stage_bitwise_across_grid() {
+    for micros in [2usize, 4, 8] {
+        // The baseline is schedule-independent at stages = 1 (there is
+        // a single fwd/bwd pair per micro either way); run it once.
+        let baseline = RunFingerprint::of(&run(PipelineConfig {
+            stages: 1,
+            micros,
+            ..base_cfg()
+        }));
+        for stages in [2usize, 4] {
+            for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+                for jitter_us in JITTER_GRID_US {
+                    let out = run(PipelineConfig {
+                        stages,
+                        micros,
+                        schedule: kind,
+                        backend: BackendSpec { jitter_us, ..BackendSpec::threaded() },
+                        ..base_cfg()
+                    });
+                    assert_eq!(
+                        baseline,
+                        RunFingerprint::of(&out),
+                        "stages={stages} micros={micros} {kind:?} jitter={jitter_us}us \
+                         diverged from single-stage"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Same fingerprint from the lockstep oracle backend: the pipeline
+/// engine's float schedule must not depend on which transport runs it.
+#[test]
+fn lockstep_and_threaded_pipelines_agree() {
+    for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+        let threaded = run(PipelineConfig {
+            stages: 4,
+            micros: 4,
+            schedule: kind,
+            backend: BackendSpec::threaded(),
+            ..base_cfg()
+        });
+        let lockstep = run(PipelineConfig {
+            stages: 4,
+            micros: 4,
+            schedule: kind,
+            backend: BackendSpec::default(),
+            ..base_cfg()
+        });
+        assert_eq!(
+            RunFingerprint::of(&threaded),
+            RunFingerprint::of(&lockstep),
+            "{kind:?}: threaded vs lockstep"
+        );
+    }
+}
+
+/// Pipeline composed with FSDP-within-stage (`dp = 2`): each stage's
+/// replicas see different data shards, so losses differ from `dp = 1`
+/// — but the two-stage dp run must still match the single-stage dp run
+/// bitwise, and it must *learn*.
+#[test]
+fn pipeline_with_dp_matches_single_stage_dp() {
+    for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+        let one = run(PipelineConfig {
+            stages: 1,
+            dp: 2,
+            micros: 4,
+            schedule: kind,
+            steps: 4,
+            ..base_cfg()
+        });
+        let two = run(PipelineConfig {
+            stages: 2,
+            dp: 2,
+            micros: 4,
+            schedule: kind,
+            steps: 4,
+            ..base_cfg()
+        });
+        assert_eq!(
+            RunFingerprint::of(&one),
+            RunFingerprint::of(&two),
+            "{kind:?} dp=2"
+        );
+        assert!(
+            two.losses.last().unwrap() < two.losses.first().unwrap(),
+            "{kind:?} dp=2 loss did not decrease: {:?}",
+            two.losses
+        );
+        // dp replicas exchange FSDP collectives within the stage; the
+        // global (p2p) communicator must never carry a collective.
+        for st in &two.p2p_stats {
+            for op in st.ops.keys() {
+                assert!(
+                    op.starts_with("p2p_"),
+                    "non-p2p op '{op}' on the global communicator"
+                );
+            }
+        }
+    }
+}
+
+/// Deterministic across repeated runs of the identical config — no
+/// hidden run-to-run state (thread scheduling, allocator layout).
+#[test]
+fn pipeline_is_self_deterministic() {
+    let cfg = PipelineConfig {
+        stages: 2,
+        micros: 4,
+        schedule: Schedule::OneFOneB,
+        ..base_cfg()
+    };
+    let a = RunFingerprint::of(&run(cfg.clone()));
+    let b = RunFingerprint::of(&run(cfg));
+    assert_eq!(a, b);
+}
+
+/// Per-rank p2p `CommStats` match the closed-form stage-boundary
+/// accounting for every rank, both schedules, dp ∈ {1, 2}. The
+/// schedule cannot change *what* crosses a boundary, only *when*.
+#[test]
+fn p2p_bytes_match_closed_form_accounting() {
+    for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+        for dp in [1usize, 2] {
+            let cfg = PipelineConfig {
+                stages: 4,
+                dp,
+                micros: 4,
+                schedule: kind,
+                ..base_cfg()
+            };
+            let out = run(cfg.clone());
+            for s in 0..cfg.stages {
+                let (sb, sm, rb, rm) = cfg.expected_p2p(s);
+                for d in 0..dp {
+                    let st = &out.p2p_stats[s * dp + d];
+                    let send = st.ops.get("p2p_send").copied().unwrap_or_default();
+                    let recv = st.ops.get("p2p_recv").copied().unwrap_or_default();
+                    assert_eq!(
+                        (send.bytes, send.messages),
+                        (sb, sm),
+                        "{kind:?} dp={dp} stage {s} d {d} send"
+                    );
+                    assert_eq!(
+                        (recv.bytes, recv.messages),
+                        (rb, rm),
+                        "{kind:?} dp={dp} stage {s} d {d} recv"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The 1F1B memory claim, measured: the engine's stash high-water per
+/// stage equals the schedule's `peak_inflight`. GPipe's first stage
+/// holds every micro; 1F1B caps at `stages − s` (≤ stages).
+#[test]
+fn stash_high_water_pins_memory_claim() {
+    let micros = 8usize;
+    for kind in [Schedule::GPipe, Schedule::OneFOneB] {
+        let cfg = PipelineConfig {
+            stages: 4,
+            micros,
+            schedule: kind,
+            steps: 2,
+            ..base_cfg()
+        };
+        let slots = schedule(kind, cfg.stages, cfg.micros).expect("schedule");
+        let out = run(cfg.clone());
+        for s in 0..cfg.stages {
+            assert_eq!(out.peak_stash[s], peak_inflight(&slots, s), "{kind:?} stage {s}");
+        }
+    }
+    // And the claim itself, independent of the engine: 1F1B's peak on
+    // stage 0 is bounded by `stages`, GPipe's is all of `micros`.
+    let gpipe = schedule(Schedule::GPipe, 4, micros).unwrap();
+    let f1b = schedule(Schedule::OneFOneB, 4, micros).unwrap();
+    assert_eq!(peak_inflight(&gpipe, 0), micros);
+    assert!(peak_inflight(&f1b, 0) <= 4);
+}

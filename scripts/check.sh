@@ -20,6 +20,9 @@ git diff --exit-code docs/config_reference.md
 echo "==> backend equivalence suite (threaded vs lockstep, bitwise, both backends)"
 cargo test --release --quiet --test backend_equivalence
 
+echo "==> pipeline equivalence suite (multi-stage vs single-stage, bitwise, p2p closed forms)"
+cargo test --release --quiet --test pipeline_equivalence
+
 echo "==> kv-cache equivalence suite (cached vs full decode, bitwise, + pool properties)"
 cargo test --release --quiet --test kvcache_equivalence
 
@@ -46,5 +49,8 @@ scripts/chaos_smoke.sh
 
 echo "==> telemetry trace smoke (4-rank profiled run → Chrome trace; collective bytes == CommStats)"
 scripts/trace_smoke.sh
+
+echo "==> pipeline-parallel smoke (2-stage × 4-micro threaded run, bitwise loss tail vs single-stage)"
+scripts/pp_smoke.sh
 
 echo "OK"

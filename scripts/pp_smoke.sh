@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Pipeline-parallel smoke test (`make pp-smoke`): a 2-stage × 4-micro
+# threaded pipeline run must produce a per-step loss tail *bitwise*
+# identical to the single-stage run of the same model/data seed — the
+# CLI prints each loss as its f32 bit pattern precisely so this check
+# can be a plain text diff. Also runs the 1F1B schedule (same bitwise
+# contract; shallower stage-0 stash) and sanity-checks the p2p
+# accounting lines are present on the multi-stage run and absent on the
+# single-stage run. Artifact-free — never skips. The exhaustive grid
+# ({stages} × {schedule} × {micros} × jitter, dp composition, stats
+# closed forms) lives in `cargo test --test pipeline_equivalence`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ROOT="$(mktemp -d)"
+trap 'rm -rf "$ROOT"' EXIT
+
+COMMON=(--micros 4 --layers 4 --width 8 --batch 4 --steps 4 --seed 7)
+
+echo "pp-smoke: single-stage baseline vs 2-stage pipeline (gpipe + 1f1b), bitwise loss tail"
+cargo run --release --quiet -- pp --stages 1 "${COMMON[@]}" > "$ROOT/one.txt"
+cargo run --release --quiet -- pp --stages 2 --schedule gpipe "${COMMON[@]}" > "$ROOT/gpipe.txt"
+cargo run --release --quiet -- pp --stages 2 --schedule 1f1b  "${COMMON[@]}" > "$ROOT/1f1b.txt"
+
+grep '^loss\[' "$ROOT/one.txt"   > "$ROOT/one.losses"
+grep '^loss\[' "$ROOT/gpipe.txt" > "$ROOT/gpipe.losses"
+grep '^loss\[' "$ROOT/1f1b.txt"  > "$ROOT/1f1b.losses"
+
+if [ "$(wc -l < "$ROOT/one.losses")" -ne 4 ]; then
+  echo "pp-smoke: FAIL — expected 4 loss lines from the baseline:"
+  cat "$ROOT/one.txt"
+  exit 1
+fi
+
+for sched in gpipe 1f1b; do
+  if ! diff -u "$ROOT/one.losses" "$ROOT/$sched.losses"; then
+    echo "pp-smoke: FAIL — $sched loss tail diverges bitwise from single-stage"
+    exit 1
+  fi
+done
+
+# The 2-stage run reports p2p traffic on both ranks; 1 stage reports none.
+if ! grep -q 'p2p sent 2048 B / 16 msg' "$ROOT/gpipe.txt"; then
+  echo "pp-smoke: FAIL — 2-stage run missing closed-form p2p accounting (4 steps × 4 micros × 128 B per boundary direction):"
+  grep 'p2p' "$ROOT/gpipe.txt" || true
+  exit 1
+fi
+if ! grep -q 'p2p sent 0 B / 0 msg' "$ROOT/one.txt"; then
+  echo "pp-smoke: FAIL — single-stage run should report zero p2p traffic"
+  exit 1
+fi
+
+echo "pp-smoke: OK (gpipe and 1f1b loss tails bitwise-equal to single-stage; p2p bytes match closed form)"
