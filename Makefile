@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate builds standalone; `artifacts`
 # needs a Python environment with jax installed (L2/L1 lowering).
 
-.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke trace-smoke pp-smoke bench-json
+.PHONY: artifacts build test check sweep-smoke serve-smoke dist-smoke chaos-smoke kv-smoke trace-smoke pp-smoke durability-smoke bench-json
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -61,6 +61,14 @@ trace-smoke:
 # accounting. Artifact-free — never skips.
 pp-smoke:
 	scripts/pp_smoke.sh
+
+# Durable checkpointing smoke: train, bit-flip the newest generation
+# via scripts/corrupt_ckpt.sh, resume — the fallback walk lands on the
+# prior generation and the rescued run bitwise-matches a clean control
+# resume (metrics tail + final shards). Skips when artifacts are
+# missing.
+durability-smoke:
+	scripts/durability_smoke.sh
 
 # Machine-readable benches, artifact-free:
 #  * steady-state train step (scratch-vs-allocating + the

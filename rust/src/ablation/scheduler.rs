@@ -207,7 +207,11 @@ fn run_one(
 /// point gets an independent but reproducible random stream) and, when
 /// the config declares a gym, its run directory routed into the store
 /// with `resume: true` so re-claimed points continue from their latest
-/// sharded checkpoint instead of starting over.
+/// **usable** checkpoint instead of starting over — the gym resumes
+/// through [`crate::checkpoint::durable::load_with_fallback`], so a
+/// worker that died mid-checkpoint-write leaves a point that re-claims
+/// from the previous verified generation rather than failing the sweep
+/// on a torn manifest.
 fn exec_config(cfg: &Config, fingerprint: &str, store: &ExperimentStore) -> Config {
     let mut c = cfg.clone();
     let base = c.opt("settings.seed").and_then(|n| n.as_i64()).unwrap_or(0) as u64;

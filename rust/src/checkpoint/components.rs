@@ -4,13 +4,47 @@ use crate::registry::{Component, ComponentRegistry};
 use anyhow::Result;
 use std::path::PathBuf;
 
-/// When to write sharded checkpoints.
+/// When and how to write checkpoints (generation layout; see
+/// [`super::durable`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CheckpointPolicy {
     /// Every N optimizer steps (None = only at end).
     pub every_steps: Option<u64>,
-    /// Keep only the latest K checkpoints (0 = keep all).
+    /// Keep only the latest K checkpoints (0 = keep all). Used as the
+    /// retention when `retain_generations` is 0 (legacy key).
     pub keep_last: usize,
+    /// Hand snapshots to the background writer thread instead of
+    /// blocking the step loop on the write.
+    pub async_write: bool,
+    /// Keep only the newest K generations (0 = fall back to
+    /// `keep_last`).
+    pub retain_generations: usize,
+    /// Digest-check every candidate generation before loading on
+    /// resume.
+    pub verify_on_load: bool,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint only at run end, retention off, verification on.
+    pub fn end_only() -> Self {
+        CheckpointPolicy {
+            every_steps: None,
+            keep_last: 0,
+            async_write: false,
+            retain_generations: 0,
+            verify_on_load: true,
+        }
+    }
+
+    /// Effective retention: `retain_generations` when set, else the
+    /// legacy `keep_last` (0 = keep all).
+    pub fn retention(&self) -> usize {
+        if self.retain_generations > 0 {
+            self.retain_generations
+        } else {
+            self.keep_last
+        }
+    }
 }
 
 /// Conversion job spec (`modalities convert` CLI).
@@ -24,31 +58,36 @@ pub fn register(reg: &mut ComponentRegistry) -> Result<()> {
     reg.register("checkpointing", "interval", |ctx, cfg| {
         let every = ctx.usize_or(cfg, "every_steps", 0)?;
         let keep_last = ctx.usize_or(cfg, "keep_last", 0)?;
+        let async_write = ctx.bool_or(cfg, "async", false)?;
+        let retain_generations = ctx.usize_or(cfg, "retain_generations", 0)?;
+        let verify_on_load = ctx.bool_or(cfg, "verify_on_load", true)?;
         Ok(Component::new(
             "checkpointing",
             "interval",
             CheckpointPolicy {
                 every_steps: if every == 0 { None } else { Some(every as u64) },
                 keep_last,
+                async_write,
+                retain_generations,
+                verify_on_load,
             },
         ))
     })?;
     reg.describe(
         "checkpointing",
         "interval",
-        "Sharded checkpoints every N steps, pruning to the latest K.",
+        "Durable generation checkpoints every N steps, pruning to the latest K.",
         &[
             ("every_steps", "int", "0 (end only)", "checkpoint cadence in steps"),
             ("keep_last", "int", "0 (keep all)", "checkpoints to retain"),
+            ("async", "bool", "false", "write snapshots on a background thread"),
+            ("retain_generations", "int", "0 (use keep_last)", "generations to retain"),
+            ("verify_on_load", "bool", "true", "crc64-verify generations before resume"),
         ],
     );
 
     reg.register("checkpointing", "none", |_ctx, _cfg| {
-        Ok(Component::new(
-            "checkpointing",
-            "none",
-            CheckpointPolicy { every_steps: None, keep_last: 0 },
-        ))
+        Ok(Component::new("checkpointing", "none", CheckpointPolicy::end_only()))
     })?;
     reg.describe("checkpointing", "none", "Checkpoint only at run end.", &[]);
 

@@ -1,0 +1,1129 @@
+//! Durable generation checkpoints: checksummed manifests, last-good
+//! fallback recovery, and an async snapshot writer.
+//!
+//! The legacy sharded layout (`<run_dir>/step_<n>/`) trusts the
+//! filesystem: one torn or bit-flipped shard file silently poisons
+//! every resume path. This module layers durability on top without
+//! changing the shard encoding:
+//!
+//! * **Generations** — each checkpoint lands in its own
+//!   `<run_dir>/ckpt/gen-<N>/` directory holding the usual
+//!   `rank_*.bin` files plus a manifest extended with a per-shard
+//!   digest table (`{file, bytes, crc64}`). Rank files are fsynced
+//!   before the manifest is published via tmp + fsync + rename (the
+//!   [`SegmentJournal`] pattern), so *a generation with a
+//!   `manifest.json` is complete by construction* and a crash at any
+//!   point leaves at worst an unreferenced directory.
+//! * **Verification** — [`verify_generation`] checks byte counts and
+//!   CRC-64/XZ digests and fails with typed, downcastable errors
+//!   ([`CorruptShard`], [`TornManifest`]) instead of handing garbage
+//!   params to the optimizer.
+//! * **Fallback** — [`load_with_fallback`] walks generations
+//!   newest→oldest, skipping damaged ones with a logged reason, so a
+//!   mid-write crash or disk bit-flip degrades to "lose one
+//!   generation" instead of "run unrecoverable". Only when *every*
+//!   generation is unusable does it surface [`NoUsableGeneration`].
+//! * **Async writes** — [`AsyncCkptWriter`] accepts a cloned-once
+//!   [`FlatCkptState`] snapshot over a bounded (depth-1) channel and
+//!   writes it on a background thread; the train step never blocks
+//!   beyond the snapshot clone plus backpressure when a previous
+//!   write is still in flight.
+//!
+//! [`SegmentJournal`]: crate::elastic::SegmentJournal
+
+use super::{CkptManifest, FlatCkptState, FlatUnitState, RANK_MAGIC};
+use crate::fsdp::FsdpEngine;
+use crate::model::ParamStore;
+use crate::telemetry::{RankTelemetry, SpanKind};
+use crate::util::bytesio::ByteWriter;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::OnceLock;
+use std::thread::JoinHandle;
+
+// ---- CRC-64/XZ ---------------------------------------------------------------
+
+/// ECMA-182 polynomial, reflected form (the CRC-64/XZ parameterisation:
+/// init all-ones, reflected in/out, final xor all-ones).
+const CRC64_POLY: u64 = 0xC96C_5795_D787_0F42;
+
+fn crc64_table() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u64; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut crc = i as u64;
+            for _ in 0..8 {
+                crc = if crc & 1 == 1 { (crc >> 1) ^ CRC64_POLY } else { crc >> 1 };
+            }
+            *e = crc;
+        }
+        t
+    })
+}
+
+/// CRC-64/XZ of `bytes` (table-driven, one pass). Strong enough to
+/// catch any single-bit flip and any truncation that byte counts miss.
+pub fn crc64(bytes: &[u8]) -> u64 {
+    let table = crc64_table();
+    let mut crc = !0u64;
+    for &b in bytes {
+        crc = table[((crc ^ b as u64) & 0xff) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---- typed errors ------------------------------------------------------------
+
+/// Which integrity check a shard file failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardCheck {
+    /// The file the manifest references does not exist (deleted
+    /// out-of-band, or the directory was partially pruned).
+    Missing,
+    /// File length differs from the manifest byte count (truncation or
+    /// an interrupted write).
+    ByteCount,
+    /// Byte count matches but the CRC-64 digest does not (bit rot,
+    /// torn sector, in-place corruption).
+    Crc64,
+}
+
+impl ShardCheck {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardCheck::Missing => "missing",
+            ShardCheck::ByteCount => "byte-count",
+            ShardCheck::Crc64 => "crc64",
+        }
+    }
+}
+
+/// A shard file failed verification against the generation manifest.
+/// Raised as the error value itself so callers can
+/// `downcast_ref::<CorruptShard>()` through an `anyhow` chain instead
+/// of parsing text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CorruptShard {
+    pub path: PathBuf,
+    pub check: ShardCheck,
+    /// Expected byte count ([`ShardCheck::Missing`]/[`ShardCheck::ByteCount`])
+    /// or CRC-64 digest ([`ShardCheck::Crc64`]).
+    pub expected: u64,
+    /// Observed byte count (0 when missing) or computed digest.
+    pub actual: u64,
+}
+
+impl std::fmt::Display for CorruptShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.check {
+            ShardCheck::Missing => write!(
+                f,
+                "corrupt shard {}: file missing (manifest expects {} bytes)",
+                self.path.display(),
+                self.expected
+            ),
+            ShardCheck::ByteCount => write!(
+                f,
+                "corrupt shard {}: byte count mismatch (manifest says {}, file has {})",
+                self.path.display(),
+                self.expected,
+                self.actual
+            ),
+            ShardCheck::Crc64 => write!(
+                f,
+                "corrupt shard {}: crc64 mismatch (manifest says {:016x}, computed {:016x})",
+                self.path.display(),
+                self.expected,
+                self.actual
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CorruptShard {}
+
+impl CorruptShard {
+    /// Extract the typed event from anywhere in an error chain.
+    pub fn classify(err: &anyhow::Error) -> Option<&CorruptShard> {
+        err.chain().find_map(|e| e.downcast_ref::<CorruptShard>())
+    }
+}
+
+/// The generation manifest itself is absent, unreadable, or not a
+/// durable-generation manifest — the signature of a crash between
+/// shard writes and the manifest rename.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TornManifest {
+    pub path: PathBuf,
+    pub detail: String,
+}
+
+impl std::fmt::Display for TornManifest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "torn manifest {}: {}", self.path.display(), self.detail)
+    }
+}
+
+impl std::error::Error for TornManifest {}
+
+impl TornManifest {
+    /// Extract the typed event from anywhere in an error chain.
+    pub fn classify(err: &anyhow::Error) -> Option<&TornManifest> {
+        err.chain().find_map(|e| e.downcast_ref::<TornManifest>())
+    }
+}
+
+/// One generation the fallback walk refused, with its rendered reason
+/// (the underlying typed error is logged and folded into
+/// [`NoUsableGeneration`] when nothing survives).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SkippedGeneration {
+    pub index: u64,
+    pub path: PathBuf,
+    pub reason: String,
+}
+
+/// Every generation under `ckpt/` was corrupt or incomplete — resume
+/// cannot proceed from this run dir (e.g. retention plus out-of-band
+/// deletion pruned the last good generation away).
+#[derive(Clone, Debug)]
+pub struct NoUsableGeneration {
+    pub root: PathBuf,
+    pub skipped: Vec<SkippedGeneration>,
+}
+
+impl std::fmt::Display for NoUsableGeneration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no usable checkpoint generation under {} ({} tried, all skipped)",
+            self.root.display(),
+            self.skipped.len()
+        )?;
+        for s in &self.skipped {
+            write!(f, "; gen-{}: {}", s.index, s.reason)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for NoUsableGeneration {}
+
+impl NoUsableGeneration {
+    /// Extract the typed event from anywhere in an error chain.
+    pub fn classify(err: &anyhow::Error) -> Option<&NoUsableGeneration> {
+        err.chain().find_map(|e| e.downcast_ref::<NoUsableGeneration>())
+    }
+}
+
+// ---- generation directories --------------------------------------------------
+
+/// Root of the generation layout inside a run dir.
+pub fn ckpt_root(run_dir: &Path) -> PathBuf {
+    run_dir.join("ckpt")
+}
+
+fn gen_dir_name(index: u64) -> String {
+    format!("gen-{index}")
+}
+
+/// One `gen-<N>` directory (complete or not).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenEntry {
+    pub index: u64,
+    pub path: PathBuf,
+}
+
+impl GenEntry {
+    /// A generation is complete exactly when its manifest was renamed
+    /// into place (rank files are fsynced before that happens).
+    pub fn is_complete(&self) -> bool {
+        self.path.join("manifest.json").exists()
+    }
+}
+
+/// All `gen-<N>` directories under `run_dir/ckpt/`, ascending by index.
+/// Includes incomplete ones — callers that need a loadable checkpoint
+/// verify or check [`GenEntry::is_complete`].
+pub fn list_generations(run_dir: &Path) -> Vec<GenEntry> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(ckpt_root(run_dir)) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(num) = name.strip_prefix("gen-") {
+                if let Ok(index) = num.parse::<u64>() {
+                    if e.path().is_dir() {
+                        out.push(GenEntry { index, path: e.path() });
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by_key(|g| g.index);
+    out
+}
+
+/// Index the next write should use (monotonic across prunes as long as
+/// the newest generation survives, which retention guarantees).
+pub fn next_generation_index(run_dir: &Path) -> u64 {
+    list_generations(run_dir).last().map(|g| g.index + 1).unwrap_or(0)
+}
+
+// ---- snapshot + write --------------------------------------------------------
+
+/// Lift the engine's current state into a topology-independent
+/// [`FlatCkptState`] — the cloned-once payload both the sync and async
+/// write paths consume. Only the first shard group is read (HSDP
+/// replica groups hold identical copies), so the cost is one copy of
+/// params + moments regardless of world size.
+pub fn snapshot(
+    engine: &FsdpEngine,
+    params: &ParamStore,
+    step: u64,
+    model_name: &str,
+    config_fingerprint: &str,
+) -> Result<FlatCkptState> {
+    let g = engine.cfg.shard_group_size()?;
+    let unit_elems: Vec<usize> = engine.units.iter().map(|u| u.elems).collect();
+    let n_units = unit_elems.len();
+    let mut units: Vec<FlatUnitState> = unit_elems
+        .iter()
+        .map(|&elems| FlatUnitState {
+            params: Vec::with_capacity(elems),
+            m: Vec::with_capacity(elems),
+            v: Vec::with_capacity(elems),
+            t: 0,
+        })
+        .collect();
+    for slot in 0..g {
+        let shards = engine.rank_shards(slot);
+        let opt = engine.rank_opt_state_views(slot);
+        if shards.len() != n_units {
+            bail!("slot {slot}: engine reports {} units, expected {n_units}", shards.len());
+        }
+        for (u, (shard, (m, v, t))) in shards.iter().zip(&opt).enumerate() {
+            units[u].params.extend_from_slice(shard);
+            units[u].m.extend_from_slice(m);
+            units[u].v.extend_from_slice(v);
+            if slot == 0 {
+                units[u].t = *t;
+            } else if units[u].t != *t {
+                bail!("unit {u}: optimizer step count diverges across slots ({} vs {t})", units[u].t);
+            }
+        }
+    }
+    for (u, unit) in units.iter().enumerate() {
+        if unit.params.len() != unit_elems[u] {
+            bail!("unit {u}: slots reassemble to {} elements, engine says {}", unit.params.len(), unit_elems[u]);
+        }
+    }
+    let manifest = CkptManifest {
+        step,
+        world: engine.cfg.world,
+        shard_group_size: g,
+        unit_elems,
+        param_names: params.names.clone(),
+        param_shapes: params.shapes.clone(),
+        model_name: model_name.to_string(),
+        config_fingerprint: config_fingerprint.to_string(),
+        backend: engine.backend_name().to_string(),
+    };
+    Ok(FlatCkptState { manifest, units })
+}
+
+fn write_fsync(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(bytes).with_context(|| format!("writing {}", path.display()))?;
+    f.sync_all().with_context(|| format!("fsyncing {}", path.display()))?;
+    Ok(())
+}
+
+/// Write `flat` as generation `index` under `run_dir/ckpt/gen-<index>/`.
+/// Every rank file is cut from the flat state with the engine's own
+/// [`even_split`] rule, so the bytes are identical to what
+/// [`save_sharded`] would emit for the same state. Rank files are
+/// fsynced before the checksummed manifest is published atomically
+/// (tmp + fsync + rename): a crash at any point leaves either a
+/// complete generation or an unreferenced directory the fallback walk
+/// skips — never a half-trusted one.
+///
+/// [`even_split`]: crate::util::even_split
+/// [`save_sharded`]: super::save_sharded
+pub fn write_generation(run_dir: &Path, index: u64, flat: &FlatCkptState) -> Result<PathBuf> {
+    let dir = ckpt_root(run_dir).join(gen_dir_name(index));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let man = &flat.manifest;
+    let g = man.shard_group_size;
+    let mut shards_meta: Vec<Json> = Vec::with_capacity(man.world);
+    for rank in 0..man.world {
+        let slot = rank % g;
+        let mut w = ByteWriter::new();
+        w.u32(RANK_MAGIC);
+        w.u32(rank as u32);
+        w.u32(flat.units.len() as u32);
+        for unit in &flat.units {
+            let (start, len) = crate::util::even_split(unit.params.len(), g, slot);
+            w.u64(unit.t);
+            w.u32(len as u32);
+            w.f32s(&unit.params[start..start + len]);
+            w.f32s(&unit.m[start..start + len]);
+            w.f32s(&unit.v[start..start + len]);
+        }
+        let file = format!("rank_{rank:05}.bin");
+        write_fsync(&dir.join(&file), &w.buf)?;
+        shards_meta.push(Json::from_pairs(vec![
+            ("file", file.as_str().into()),
+            ("bytes", w.buf.len().into()),
+            ("crc64", format!("{:016x}", crc64(&w.buf)).as_str().into()),
+        ]));
+    }
+    let mut manifest = super::manifest_json(man);
+    manifest.set("generation", (index as i64).into());
+    manifest.set("shards", Json::Arr(shards_meta));
+    let tmp = dir.join("manifest.json.tmp");
+    write_fsync(&tmp, manifest.dumps_pretty().as_bytes())?;
+    std::fs::rename(&tmp, dir.join("manifest.json"))
+        .with_context(|| format!("publishing {}", dir.join("manifest.json").display()))?;
+    Ok(dir)
+}
+
+/// Snapshot + write as the next generation, in one call — the
+/// synchronous checkpoint path. Returns the generation directory.
+pub fn save_generation(
+    run_dir: &Path,
+    step: u64,
+    engine: &FsdpEngine,
+    params: &ParamStore,
+    model_name: &str,
+    config_fingerprint: &str,
+) -> Result<PathBuf> {
+    let flat = snapshot(engine, params, step, model_name, config_fingerprint)?;
+    write_generation(run_dir, next_generation_index(run_dir), &flat)
+}
+
+// ---- verification ------------------------------------------------------------
+
+/// Verify a generation directory against its checksummed manifest:
+/// the manifest must exist and parse, and every shard it references
+/// must match both byte count and CRC-64 digest. Returns the parsed
+/// manifest on success; failures are typed ([`TornManifest`] /
+/// [`CorruptShard`]) and downcastable through `anyhow` chains.
+pub fn verify_generation(gen_dir: &Path) -> Result<CkptManifest> {
+    let man_path = gen_dir.join("manifest.json");
+    if !man_path.exists() {
+        let detail = if gen_dir.join("manifest.json.tmp").exists() {
+            "manifest.json missing but manifest.json.tmp present (crash before rename)"
+        } else {
+            "manifest.json missing (write never completed)"
+        };
+        return Err(TornManifest { path: man_path, detail: detail.to_string() }.into());
+    }
+    let text = std::fs::read_to_string(&man_path).map_err(|e| TornManifest {
+        path: man_path.clone(),
+        detail: format!("unreadable: {e}"),
+    })?;
+    let v = Json::parse(&text).map_err(|e| TornManifest {
+        path: man_path.clone(),
+        detail: format!("unparsable JSON: {e}"),
+    })?;
+    let shards = v.get("shards").and_then(|a| a.as_arr()).ok_or_else(|| TornManifest {
+        path: man_path.clone(),
+        detail: "no shard digest table (not a durable generation manifest)".to_string(),
+    })?;
+    for entry in shards {
+        let file = entry.get("file").and_then(|s| s.as_str()).ok_or_else(|| TornManifest {
+            path: man_path.clone(),
+            detail: "shard entry without a file name".to_string(),
+        })?;
+        let expected_bytes =
+            entry.get("bytes").and_then(|n| n.as_usize()).ok_or_else(|| TornManifest {
+                path: man_path.clone(),
+                detail: format!("shard entry {file} without a byte count"),
+            })? as u64;
+        let expected_crc = entry
+            .get("crc64")
+            .and_then(|s| s.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| TornManifest {
+                path: man_path.clone(),
+                detail: format!("shard entry {file} without a parsable crc64"),
+            })?;
+        let path = gen_dir.join(file);
+        let raw = match std::fs::read(&path) {
+            Ok(raw) => raw,
+            Err(_) => {
+                return Err(CorruptShard {
+                    path,
+                    check: ShardCheck::Missing,
+                    expected: expected_bytes,
+                    actual: 0,
+                }
+                .into())
+            }
+        };
+        if raw.len() as u64 != expected_bytes {
+            return Err(CorruptShard {
+                path,
+                check: ShardCheck::ByteCount,
+                expected: expected_bytes,
+                actual: raw.len() as u64,
+            }
+            .into());
+        }
+        let actual_crc = crc64(&raw);
+        if actual_crc != expected_crc {
+            return Err(CorruptShard {
+                path,
+                check: ShardCheck::Crc64,
+                expected: expected_crc,
+                actual: actual_crc,
+            }
+            .into());
+        }
+    }
+    super::read_manifest(gen_dir)
+}
+
+// ---- retention ---------------------------------------------------------------
+
+/// Keep the newest `retain` complete generations (`0` = keep all).
+/// Incomplete generations older than the retention window are removed
+/// too — they can never become loadable. Returns the removed dirs.
+pub fn prune_generations(run_dir: &Path, retain: usize) -> Result<Vec<PathBuf>> {
+    if retain == 0 {
+        return Ok(Vec::new());
+    }
+    let gens = list_generations(run_dir);
+    let complete: Vec<&GenEntry> = gens.iter().filter(|g| g.is_complete()).collect();
+    if complete.len() <= retain {
+        return Ok(Vec::new());
+    }
+    let cutoff = complete[complete.len() - retain].index;
+    let mut removed = Vec::new();
+    for g in &gens {
+        if g.index < cutoff {
+            std::fs::remove_dir_all(&g.path)
+                .with_context(|| format!("pruning {}", g.path.display()))?;
+            removed.push(g.path.clone());
+        }
+    }
+    Ok(removed)
+}
+
+// ---- fallback walk -----------------------------------------------------------
+
+/// What a fallback resume landed on: the step and directory loaded,
+/// the generation index (`None` when a legacy `step_*` dir was used),
+/// and every newer generation that had to be skipped.
+#[derive(Debug)]
+pub struct ResumeOutcome {
+    pub step: u64,
+    pub path: PathBuf,
+    pub generation: Option<u64>,
+    pub skipped: Vec<SkippedGeneration>,
+}
+
+fn try_load_generation(g: &GenEntry, engine: &mut FsdpEngine, verify: bool) -> Result<u64> {
+    if verify {
+        verify_generation(&g.path)?;
+    } else if !g.is_complete() {
+        return Err(TornManifest {
+            path: g.path.join("manifest.json"),
+            detail: "manifest.json missing (write never completed)".to_string(),
+        }
+        .into());
+    }
+    super::load_sharded(&g.path, engine)
+}
+
+/// Walk generations newest→oldest and load the first good one into
+/// `engine`, skipping corrupt/incomplete generations with a logged
+/// reason (callers surface the skips as telemetry fallback markers).
+/// With `verify` set, every candidate is digest-checked before a
+/// single byte reaches the engine.
+///
+/// Returns `Ok(None)` when the run dir holds no checkpoint at all
+/// (fresh start). When generations exist but every one is unusable,
+/// fails with a typed [`NoUsableGeneration`] carrying each skip
+/// reason. Run dirs that predate the generation layout fall back to
+/// the legacy `step_*` discovery (best effort — no digests to check).
+pub fn load_with_fallback(
+    run_dir: &Path,
+    engine: &mut FsdpEngine,
+    verify: bool,
+) -> Result<Option<ResumeOutcome>> {
+    let gens = list_generations(run_dir);
+    let mut skipped = Vec::new();
+    for g in gens.iter().rev() {
+        match try_load_generation(g, engine, verify) {
+            Ok(step) => {
+                return Ok(Some(ResumeOutcome {
+                    step,
+                    path: g.path.clone(),
+                    generation: Some(g.index),
+                    skipped,
+                }))
+            }
+            Err(e) => {
+                log::warn!(
+                    "skipping checkpoint generation {} ({}): {e:#}",
+                    g.index,
+                    g.path.display()
+                );
+                skipped.push(SkippedGeneration {
+                    index: g.index,
+                    path: g.path.clone(),
+                    reason: format!("{e:#}"),
+                });
+            }
+        }
+    }
+    if !gens.is_empty() {
+        return Err(NoUsableGeneration { root: ckpt_root(run_dir), skipped }.into());
+    }
+    if let Some(p) = super::latest_legacy_checkpoint(run_dir) {
+        let step = super::load_sharded(&p, engine)?;
+        return Ok(Some(ResumeOutcome { step, path: p, generation: None, skipped }));
+    }
+    Ok(None)
+}
+
+/// The step a fallback resume would land on, without touching an
+/// engine: newest generation whose digests verify, else the newest
+/// legacy checkpoint's manifest step, else 0. Used by the elastic
+/// supervisor's `resume_step` probe so segment planning agrees with
+/// what [`load_with_fallback`] will actually load.
+pub fn best_resume_step(run_dir: &Path) -> u64 {
+    for g in list_generations(run_dir).iter().rev() {
+        if let Ok(man) = verify_generation(&g.path) {
+            return man.step;
+        }
+    }
+    super::latest_legacy_checkpoint(run_dir)
+        .and_then(|p| super::read_manifest(&p).ok())
+        .map(|m| m.step)
+        .unwrap_or(0)
+}
+
+// ---- async writer ------------------------------------------------------------
+
+/// One queued snapshot: everything the writer thread needs to produce
+/// a generation.
+pub struct SnapshotJob {
+    pub run_dir: PathBuf,
+    pub flat: FlatCkptState,
+    /// Retention applied after a successful write (0 = keep all).
+    pub retain: usize,
+}
+
+/// Background checkpoint writer with a bounded (depth-1) handoff.
+/// [`submit`] blocks only when one snapshot is queued *and* another is
+/// still being written — at most one in flight, so checkpoint cost
+/// overlaps compute without unbounded memory growth. A write error
+/// stops the thread and surfaces at the next [`submit`] or at
+/// [`finish`]; generations are published (fsync + rename) before the
+/// thread moves on, so a kill mid-write never leaves a manifest that
+/// lies.
+///
+/// [`submit`]: AsyncCkptWriter::submit
+/// [`finish`]: AsyncCkptWriter::finish
+pub struct AsyncCkptWriter {
+    tx: Option<SyncSender<SnapshotJob>>,
+    handle: Option<JoinHandle<Result<u64>>>,
+}
+
+impl AsyncCkptWriter {
+    /// Start the writer thread. With a telemetry handle, each write is
+    /// recorded as a `ckpt_write` span (bytes = payload size, seq =
+    /// generation index).
+    pub fn spawn(tel: Option<RankTelemetry>) -> Self {
+        let (tx, rx) = sync_channel::<SnapshotJob>(1);
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || writer_loop(rx, tel))
+            .expect("spawning checkpoint writer thread");
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue a snapshot for writing (see type docs for the
+    /// backpressure contract). If the writer thread died, joins it and
+    /// propagates its error instead of silently dropping the snapshot.
+    pub fn submit(&mut self, job: SnapshotJob) -> Result<()> {
+        let Some(tx) = self.tx.as_ref() else {
+            bail!("checkpoint writer already finished");
+        };
+        if tx.send(job).is_err() {
+            self.finish()?;
+            bail!("checkpoint writer thread exited without an error");
+        }
+        Ok(())
+    }
+
+    /// Drain the queue, stop the thread, and propagate any write
+    /// error. Returns the number of generations written. Idempotent.
+    pub fn finish(&mut self) -> Result<u64> {
+        self.tx = None;
+        let Some(handle) = self.handle.take() else { return Ok(0) };
+        match handle.join() {
+            Ok(res) => res,
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| p.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                bail!("checkpoint writer panicked: {msg}");
+            }
+        }
+    }
+}
+
+impl Drop for AsyncCkptWriter {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+fn writer_loop(rx: Receiver<SnapshotJob>, tel: Option<RankTelemetry>) -> Result<u64> {
+    let mut written = 0u64;
+    while let Ok(job) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        let index = next_generation_index(&job.run_dir);
+        let payload_bytes: u64 =
+            job.flat.units.iter().map(|u| (u.params.len() * 3 * 4) as u64).sum();
+        write_generation(&job.run_dir, index, &job.flat)
+            .with_context(|| format!("async checkpoint write (generation {index})"))?;
+        if job.retain > 0 {
+            prune_generations(&job.run_dir, job.retain)?;
+        }
+        if let Some(t) = &tel {
+            t.record(SpanKind::Ckpt, "ckpt_write", payload_bytes, index, t0);
+        }
+        written += 1;
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fsdp::{FsdpConfig, ShardStrategy};
+    use crate::model::InitScheme;
+    use crate::optim::components::OptimizerSpec;
+    use crate::runtime::pjrt::ModelArtifacts;
+
+    fn arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "t".into(),
+            vocab_size: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 8,
+            batch_size: 2,
+            num_params: 0,
+            flops_per_token: 0,
+            param_shapes: vec![
+                ("a".into(), vec![16, 8]),
+                ("b".into(), vec![2, 8]),
+                ("c".into(), vec![8]),
+            ],
+            files: Default::default(),
+        }
+    }
+
+    fn opt() -> OptimizerSpec {
+        OptimizerSpec::AdamW { lr: 0.01, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modalities-durable-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn grads(params: &ParamStore, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Pcg64::new(seed);
+        params.bufs.iter().map(|b| (0..b.len()).map(|_| rng.next_f32() - 0.5).collect()).collect()
+    }
+
+    /// Train `steps` optimizer steps at `world`, writing a generation
+    /// after each. Returns the engine + params for further driving.
+    fn trained_run(
+        dir: &Path,
+        world: usize,
+        steps: u64,
+        strategy: ShardStrategy,
+    ) -> (FsdpEngine, ParamStore) {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+        let cfg = FsdpConfig { world, unit_bytes: 256, strategy, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        for step in 0..steps {
+            let g: Vec<Vec<Vec<f32>>> =
+                (0..world).map(|r| grads(&params, step * 131 + r as u64)).collect();
+            eng.apply_grads(&g, 1.0, None).unwrap();
+            save_generation(dir, step + 1, &eng, &params, "t", "fp").unwrap();
+        }
+        (eng, params)
+    }
+
+    fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+        let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .map(|e| {
+                (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+            })
+            .collect();
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        files
+    }
+
+    #[test]
+    fn crc64_known_vectors() {
+        // CRC-64/XZ check value from the catalogue of parametrised CRCs.
+        assert_eq!(crc64(b"123456789"), 0x995D_C9BB_DF19_39FA);
+        assert_eq!(crc64(b""), 0);
+        // Any single-bit flip changes the digest.
+        let base = crc64(b"modalities");
+        assert_ne!(base, crc64(b"modalitier"));
+    }
+
+    #[test]
+    fn generation_roundtrip_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let (mut eng, params) = trained_run(&dir, 4, 3, ShardStrategy::Hybrid { shard_size: 2 });
+        let gens = list_generations(&dir);
+        assert_eq!(gens.iter().map(|g| g.index).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let man = verify_generation(&gens[2].path).unwrap();
+        assert_eq!(man.step, 3);
+
+        let cfg = FsdpConfig {
+            world: 4,
+            unit_bytes: 256,
+            strategy: ShardStrategy::Hybrid { shard_size: 2 },
+            ..Default::default()
+        };
+        let mut eng2 = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let out = load_with_fallback(&dir, &mut eng2, true).unwrap().unwrap();
+        assert_eq!(out.step, 3);
+        assert_eq!(out.generation, Some(2));
+        assert!(out.skipped.is_empty());
+
+        // Continued training must be bit-identical.
+        let g: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, 900 + r as u64)).collect();
+        eng.apply_grads(&g, 1.0, None).unwrap();
+        eng2.apply_grads(&g, 1.0, None).unwrap();
+        let (mut o1, mut o2) = (params.clone(), params.clone());
+        eng.unshard_into(&mut o1).unwrap();
+        eng2.unshard_into(&mut o2).unwrap();
+        assert_eq!(o1.flatten(), o2.flatten());
+    }
+
+    /// The generation writer cuts rank files from the flat snapshot
+    /// with the same `even_split` rule `save_sharded` uses directly —
+    /// the shard bytes must be identical.
+    #[test]
+    fn generation_shards_match_save_sharded_bytes() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 3);
+        let cfg = FsdpConfig {
+            world: 4,
+            unit_bytes: 256,
+            strategy: ShardStrategy::Hybrid { shard_size: 2 },
+            ..Default::default()
+        };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let g: Vec<Vec<Vec<f32>>> = (0..4).map(|r| grads(&params, r as u64)).collect();
+        eng.apply_grads(&g, 1.0, None).unwrap();
+
+        let dir = tmpdir("bytes-match");
+        let legacy = super::super::save_sharded(&dir, 5, &eng, &params, "t", "fp").unwrap();
+        let gen = save_generation(&dir, 5, &eng, &params, "t", "fp").unwrap();
+        for rank in 0..4 {
+            let f = format!("rank_{rank:05}.bin");
+            assert_eq!(
+                std::fs::read(legacy.join(&f)).unwrap(),
+                std::fs::read(gen.join(&f)).unwrap(),
+                "{f}"
+            );
+        }
+    }
+
+    #[test]
+    fn bitflip_detected_and_typed() {
+        let dir = tmpdir("bitflip");
+        trained_run(&dir, 2, 2, ShardStrategy::Full);
+        let gen = list_generations(&dir).pop().unwrap();
+        let shard = gen.path.join("rank_00001.bin");
+        let mut raw = std::fs::read(&shard).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x10;
+        std::fs::write(&shard, &raw).unwrap();
+
+        let err = verify_generation(&gen.path).unwrap_err();
+        let c = CorruptShard::classify(&err).expect("typed CorruptShard");
+        assert_eq!(c.check, ShardCheck::Crc64);
+        assert_eq!(c.path, shard);
+        assert_ne!(c.expected, c.actual);
+    }
+
+    #[test]
+    fn truncation_detected_and_typed() {
+        let dir = tmpdir("truncate");
+        trained_run(&dir, 2, 2, ShardStrategy::Full);
+        let gen = list_generations(&dir).pop().unwrap();
+        let shard = gen.path.join("rank_00000.bin");
+        let raw = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &raw[..raw.len() / 2]).unwrap();
+
+        let err = verify_generation(&gen.path).unwrap_err();
+        let c = CorruptShard::classify(&err).expect("typed CorruptShard");
+        assert_eq!(c.check, ShardCheck::ByteCount);
+        assert_eq!(c.expected, raw.len() as u64);
+        assert_eq!(c.actual, (raw.len() / 2) as u64);
+    }
+
+    /// Satellite: a manifest referencing a shard deleted out-of-band is
+    /// a typed error, not a panic — standalone and through the walk.
+    #[test]
+    fn out_of_band_deleted_shard_is_typed() {
+        let dir = tmpdir("deleted-shard");
+        let (_, params) = trained_run(&dir, 2, 1, ShardStrategy::Full);
+        let gen = list_generations(&dir).pop().unwrap();
+        std::fs::remove_file(gen.path.join("rank_00001.bin")).unwrap();
+
+        let err = verify_generation(&gen.path).unwrap_err();
+        let c = CorruptShard::classify(&err).expect("typed CorruptShard");
+        assert_eq!(c.check, ShardCheck::Missing);
+        assert_eq!(c.actual, 0);
+
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let err = load_with_fallback(&dir, &mut eng, true).unwrap_err();
+        let nu = NoUsableGeneration::classify(&err).expect("typed NoUsableGeneration");
+        assert_eq!(nu.skipped.len(), 1);
+        assert!(nu.skipped[0].reason.contains("missing"), "{}", nu.skipped[0].reason);
+    }
+
+    #[test]
+    fn torn_manifest_detected_and_typed() {
+        let dir = tmpdir("torn");
+        trained_run(&dir, 2, 1, ShardStrategy::Full);
+        let gen = list_generations(&dir).pop().unwrap();
+
+        // Unparsable manifest (torn write of the file itself).
+        let full = std::fs::read_to_string(gen.path.join("manifest.json")).unwrap();
+        std::fs::write(gen.path.join("manifest.json"), &full[..full.len() / 3]).unwrap();
+        let err = verify_generation(&gen.path).unwrap_err();
+        assert!(TornManifest::classify(&err).is_some(), "{err:#}");
+
+        // Crash before rename: bins + tmp present, no manifest.json.
+        std::fs::remove_file(gen.path.join("manifest.json")).unwrap();
+        std::fs::write(gen.path.join("manifest.json.tmp"), "{ torn").unwrap();
+        let err = verify_generation(&gen.path).unwrap_err();
+        let t = TornManifest::classify(&err).expect("typed TornManifest");
+        assert!(t.detail.contains("crash before rename"), "{}", t.detail);
+    }
+
+    /// A stale `manifest.json.tmp` next to a complete manifest is
+    /// ignored, exactly like the elastic segment journal.
+    #[test]
+    fn torn_tmp_next_to_complete_manifest_tolerated() {
+        let dir = tmpdir("torn-tmp");
+        let (_, params) = trained_run(&dir, 2, 1, ShardStrategy::Full);
+        let gen = list_generations(&dir).pop().unwrap();
+        std::fs::write(gen.path.join("manifest.json.tmp"), "{ garbage").unwrap();
+        verify_generation(&gen.path).unwrap();
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        assert_eq!(load_with_fallback(&dir, &mut eng, true).unwrap().unwrap().step, 1);
+    }
+
+    /// The walk skips a damaged newest generation and lands on the
+    /// previous one; the skip is reported with its reason.
+    #[test]
+    fn fallback_skips_corrupt_newest_generation() {
+        let dir = tmpdir("fallback");
+        let (_, params) = trained_run(&dir, 2, 3, ShardStrategy::Full);
+        let gens = list_generations(&dir);
+        let newest = gens.last().unwrap();
+        let shard = newest.path.join("rank_00000.bin");
+        let mut raw = std::fs::read(&shard).unwrap();
+        raw[7] ^= 0x01;
+        std::fs::write(&shard, &raw).unwrap();
+
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let out = load_with_fallback(&dir, &mut eng, true).unwrap().unwrap();
+        assert_eq!(out.step, 2);
+        assert_eq!(out.generation, Some(1));
+        assert_eq!(out.skipped.len(), 1);
+        assert_eq!(out.skipped[0].index, 2);
+        assert!(out.skipped[0].reason.contains("crc64"), "{}", out.skipped[0].reason);
+
+        // The loaded state is bitwise the step-2 generation: re-saving
+        // it produces identical shard bytes.
+        let resaved = save_generation(&dir, 2, &eng, &params, "t", "fp").unwrap();
+        assert_eq!(
+            std::fs::read(gens[1].path.join("rank_00000.bin")).unwrap(),
+            std::fs::read(resaved.join("rank_00000.bin")).unwrap()
+        );
+    }
+
+    /// Satellite: retention (or out-of-band cleanup) pruned every
+    /// loadable generation — typed `NoUsableGeneration`, not a panic,
+    /// and `best_resume_step` degrades to 0.
+    #[test]
+    fn all_generations_pruned_is_typed() {
+        let dir = tmpdir("pruned-away");
+        let (_, params) = trained_run(&dir, 2, 2, ShardStrategy::Full);
+        // Out-of-band cleanup deletes the complete generations but
+        // leaves an in-progress one (bins, no manifest).
+        for g in list_generations(&dir) {
+            std::fs::remove_dir_all(&g.path).unwrap();
+        }
+        let stub = ckpt_root(&dir).join("gen-2");
+        std::fs::create_dir_all(&stub).unwrap();
+        std::fs::write(stub.join("rank_00000.bin"), b"partial").unwrap();
+
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let err = load_with_fallback(&dir, &mut eng, true).unwrap_err();
+        let nu = NoUsableGeneration::classify(&err).expect("typed NoUsableGeneration");
+        assert_eq!(nu.skipped.len(), 1);
+        assert!(nu.skipped[0].reason.contains("manifest.json missing"), "{}", nu.skipped[0].reason);
+        assert_eq!(best_resume_step(&dir), 0);
+    }
+
+    #[test]
+    fn retention_keeps_newest_generations() {
+        let dir = tmpdir("retention");
+        trained_run(&dir, 2, 5, ShardStrategy::Full);
+        assert!(prune_generations(&dir, 0).unwrap().is_empty());
+        let removed = prune_generations(&dir, 2).unwrap();
+        assert_eq!(removed.len(), 3);
+        let left = list_generations(&dir);
+        assert_eq!(left.iter().map(|g| g.index).collect::<Vec<_>>(), vec![3, 4]);
+        // Indices stay monotonic after pruning.
+        assert_eq!(next_generation_index(&dir), 5);
+        assert_eq!(best_resume_step(&dir), 5);
+    }
+
+    /// The async writer produces byte-identical generations to the
+    /// synchronous path, applies retention, and reports completions.
+    #[test]
+    fn async_writer_matches_sync_path() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let (sync_dir, async_dir) = (tmpdir("aw-sync"), tmpdir("aw-async"));
+        let mut writer = AsyncCkptWriter::spawn(None);
+        for step in 0..3u64 {
+            let g: Vec<Vec<Vec<f32>>> =
+                (0..2).map(|r| grads(&params, step * 17 + r as u64)).collect();
+            eng.apply_grads(&g, 1.0, None).unwrap();
+            save_generation(&sync_dir, step + 1, &eng, &params, "t", "fp").unwrap();
+            let flat = snapshot(&eng, &params, step + 1, "t", "fp").unwrap();
+            writer
+                .submit(SnapshotJob { run_dir: async_dir.clone(), flat, retain: 0 })
+                .unwrap();
+        }
+        assert_eq!(writer.finish().unwrap(), 3);
+        assert_eq!(writer.finish().unwrap(), 0); // idempotent
+
+        let (s, a) = (list_generations(&sync_dir), list_generations(&async_dir));
+        assert_eq!(s.len(), 3);
+        assert_eq!(a.len(), 3);
+        for (sg, ag) in s.iter().zip(&a) {
+            assert_eq!(sg.index, ag.index);
+            assert_eq!(dir_bytes(&sg.path), dir_bytes(&ag.path), "gen-{}", sg.index);
+        }
+    }
+
+    #[test]
+    fn async_writer_applies_retention() {
+        let dir = tmpdir("aw-retain");
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let mut writer = AsyncCkptWriter::spawn(None);
+        for step in 0..4u64 {
+            let g: Vec<Vec<Vec<f32>>> = (0..2).map(|r| grads(&params, step + r as u64)).collect();
+            eng.apply_grads(&g, 1.0, None).unwrap();
+            let flat = snapshot(&eng, &params, step + 1, "t", "fp").unwrap();
+            writer.submit(SnapshotJob { run_dir: dir.clone(), flat, retain: 2 }).unwrap();
+        }
+        writer.finish().unwrap();
+        let left = list_generations(&dir);
+        assert_eq!(left.iter().map(|g| g.index).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(verify_generation(&left[1].path).is_ok());
+    }
+
+    /// A writer-thread failure surfaces as an error at finish/submit —
+    /// never a panic, never a silent drop.
+    #[test]
+    fn async_writer_surfaces_write_errors() {
+        let dir = tmpdir("aw-error");
+        // Make `ckpt` a regular file so create_dir_all fails.
+        std::fs::write(ckpt_root(&dir), b"not a dir").unwrap();
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let eng = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let flat = snapshot(&eng, &params, 1, "t", "fp").unwrap();
+        let mut writer = AsyncCkptWriter::spawn(None);
+        writer.submit(SnapshotJob { run_dir: dir.clone(), flat, retain: 0 }).unwrap();
+        let err = writer.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("async checkpoint write"), "{err:#}");
+    }
+
+    /// Run dirs that predate the generation layout still resume via
+    /// the legacy `step_*` discovery.
+    #[test]
+    fn legacy_layout_still_resumes() {
+        let a = arts();
+        let params = ParamStore::init(&a, InitScheme::ScaledNormal, 7);
+        let cfg = FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() };
+        let mut eng = FsdpEngine::new(&params, cfg.clone(), &opt()).unwrap();
+        let g: Vec<Vec<Vec<f32>>> = (0..2).map(|r| grads(&params, r as u64)).collect();
+        eng.apply_grads(&g, 1.0, None).unwrap();
+        let dir = tmpdir("legacy");
+        super::super::save_sharded(&dir, 4, &eng, &params, "t", "fp").unwrap();
+
+        let mut eng2 = FsdpEngine::new(&params, cfg, &opt()).unwrap();
+        let out = load_with_fallback(&dir, &mut eng2, true).unwrap().unwrap();
+        assert_eq!(out.step, 4);
+        assert_eq!(out.generation, None);
+        assert_eq!(best_resume_step(&dir), 4);
+
+        // And an empty dir is a fresh start, not an error.
+        let empty = tmpdir("legacy-empty");
+        let mut eng3 = FsdpEngine::new(&params, FsdpConfig { world: 2, unit_bytes: 256, ..Default::default() }, &opt()).unwrap();
+        assert!(load_with_fallback(&empty, &mut eng3, true).unwrap().is_none());
+    }
+
+    /// `latest_checkpoint` sees both layouts and prefers the higher
+    /// step (generation wins ties — it is the durable layer's output).
+    #[test]
+    fn latest_checkpoint_spans_layouts() {
+        let dir = tmpdir("latest-both");
+        let (eng, params) = trained_run(&dir, 2, 2, ShardStrategy::Full);
+        let latest = super::super::latest_checkpoint(&dir).unwrap();
+        assert!(latest.ends_with("gen-1"), "{}", latest.display());
+        super::super::save_sharded(&dir, 9, &eng, &params, "t", "fp").unwrap();
+        let latest = super::super::latest_checkpoint(&dir).unwrap();
+        assert!(latest.ends_with("step_00000009"), "{}", latest.display());
+    }
+}

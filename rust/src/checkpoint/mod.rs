@@ -13,8 +13,14 @@
 //!   of world size / sharding — the portable interchange artifact
 //!   (our HF-conversion analog). Convertible from any sharded
 //!   checkpoint offline, loadable into a [`ParamStore`].
+//!
+//! The [`durable`] submodule layers generation directories
+//! (`ckpt/gen-<N>/`), per-shard CRC-64 digests, last-good fallback
+//! recovery, and an async snapshot writer on top of the sharded
+//! format — the production checkpoint path.
 
 pub mod components;
+pub mod durable;
 
 use crate::fsdp::FsdpEngine;
 use crate::model::ParamStore;
@@ -43,7 +49,40 @@ pub struct CkptManifest {
     pub backend: String,
 }
 
+/// Render a manifest as the canonical JSON object. Shared by the
+/// legacy sharded writer and the durable generation writer (which
+/// extends it with `generation` + per-shard digests).
+pub(crate) fn manifest_json(m: &CkptManifest) -> Json {
+    Json::from_pairs(vec![
+        ("version", 1usize.into()),
+        ("step", (m.step as i64).into()),
+        ("world", m.world.into()),
+        ("shard_group_size", m.shard_group_size.into()),
+        ("unit_elems", Json::Arr(m.unit_elems.iter().map(|&e| e.into()).collect())),
+        (
+            "param_names",
+            Json::Arr(m.param_names.iter().map(|n| n.as_str().into()).collect()),
+        ),
+        (
+            "param_shapes",
+            Json::Arr(
+                m.param_shapes
+                    .iter()
+                    .map(|s| Json::Arr(s.iter().map(|&d| d.into()).collect()))
+                    .collect(),
+            ),
+        ),
+        ("model_name", m.model_name.as_str().into()),
+        ("config_fingerprint", m.config_fingerprint.as_str().into()),
+        ("backend", m.backend.as_str().into()),
+        ("modalities_version", crate::VERSION.into()),
+    ])
+}
+
 /// Save a sharded checkpoint of `engine` into `dir/step_<step>/`.
+/// Rank files are written first and the manifest last via tmp+rename,
+/// so a directory with a `manifest.json` always has all its shards
+/// (resume discovery requires the manifest to be present).
 pub fn save_sharded(
     dir: &Path,
     step: u64,
@@ -60,35 +99,17 @@ pub fn save_sharded(
         crate::fsdp::ShardStrategy::Hybrid { shard_size } => shard_size,
     };
 
-    let manifest = Json::from_pairs(vec![
-        ("version", 1usize.into()),
-        ("step", (step as i64).into()),
-        ("world", engine.cfg.world.into()),
-        ("shard_group_size", shard_group_size.into()),
-        (
-            "unit_elems",
-            Json::Arr(engine.units.iter().map(|u| u.elems.into()).collect()),
-        ),
-        (
-            "param_names",
-            Json::Arr(params.names.iter().map(|n| n.as_str().into()).collect()),
-        ),
-        (
-            "param_shapes",
-            Json::Arr(
-                params
-                    .shapes
-                    .iter()
-                    .map(|s| Json::Arr(s.iter().map(|&d| d.into()).collect()))
-                    .collect(),
-            ),
-        ),
-        ("model_name", model_name.into()),
-        ("config_fingerprint", config_fingerprint.into()),
-        ("backend", engine.backend_name().into()),
-        ("modalities_version", crate::VERSION.into()),
-    ]);
-    std::fs::write(out.join("manifest.json"), manifest.dumps_pretty())?;
+    let manifest = manifest_json(&CkptManifest {
+        step,
+        world: engine.cfg.world,
+        shard_group_size,
+        unit_elems: engine.units.iter().map(|u| u.elems).collect(),
+        param_names: params.names.clone(),
+        param_shapes: params.shapes.clone(),
+        model_name: model_name.to_string(),
+        config_fingerprint: config_fingerprint.to_string(),
+        backend: engine.backend_name().to_string(),
+    });
 
     for rank in 0..engine.cfg.world {
         let mut w = ByteWriter::new();
@@ -108,6 +129,10 @@ pub fn save_sharded(
         }
         std::fs::write(out.join(format!("rank_{rank:05}.bin")), &w.buf)?;
     }
+    let tmp = out.join("manifest.json.tmp");
+    std::fs::write(&tmp, manifest.dumps_pretty())?;
+    std::fs::rename(&tmp, out.join("manifest.json"))
+        .with_context(|| format!("publishing {}", out.join("manifest.json").display()))?;
     Ok(out)
 }
 
@@ -334,8 +359,27 @@ pub fn read_manifest(ckpt_dir: &Path) -> Result<CkptManifest> {
     })
 }
 
-/// Latest `step_*` subdirectory of a run dir (resume discovery).
+/// Latest checkpoint of a run dir (resume discovery), across both
+/// layouts: the newest complete `ckpt/gen-*` generation and the
+/// newest legacy `step_*` directory. Whichever holds the higher step
+/// wins; a generation wins ties (it is the durable layer's output).
 pub fn latest_checkpoint(run_dir: &Path) -> Option<PathBuf> {
+    let legacy = latest_legacy_checkpoint(run_dir)
+        .and_then(|p| Some((read_manifest(&p).ok()?.step, p)));
+    let gen = durable::list_generations(run_dir)
+        .into_iter()
+        .rev()
+        .find(|g| g.is_complete())
+        .and_then(|g| Some((read_manifest(&g.path).ok()?.step, g.path)));
+    match (legacy, gen) {
+        (Some((ls, lp)), Some((gs, gp))) => Some(if gs >= ls { gp } else { lp }),
+        (Some((_, p)), None) | (None, Some((_, p))) => Some(p),
+        (None, None) => None,
+    }
+}
+
+/// Latest `step_*` subdirectory of a run dir (pre-generation layout).
+pub(crate) fn latest_legacy_checkpoint(run_dir: &Path) -> Option<PathBuf> {
     let mut best: Option<(u64, PathBuf)> = None;
     if let Ok(entries) = std::fs::read_dir(run_dir) {
         for e in entries.flatten() {

@@ -117,6 +117,8 @@ USAGE:
   modalities pp         [--stages <n>] [--micros <n>] [--schedule <gpipe|1f1b>] [--dp <n>]
                         [--layers <n>] [--width <n>] [--batch <n>] [--steps <n>] [--seed <n>]
                         # threaded pipeline run; prints per-step loss bit patterns
+  modalities ckpt ls     --run-dir <dir>   # list checkpoint generations + steps
+  modalities ckpt verify --run-dir <dir>   # crc64-verify every generation
   modalities version
 "
 }

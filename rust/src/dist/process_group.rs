@@ -761,8 +761,22 @@ impl CommCore {
             Self::check_dead(&st, gid, seq, group, op)?;
             let now = Instant::now();
             if now >= deadline {
+                // Cold path: name exactly which ranks never deposited
+                // so a chaos failure is diagnosable from the message.
+                let missing: Vec<usize> = match st.cells.get(&key) {
+                    Some(cell) => group
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| cell.deposits[*i].is_none())
+                        .map(|(_, r)| *r)
+                        .collect(),
+                    // No cell yet: nobody (including us) has deposited.
+                    None => group.to_vec(),
+                };
                 bail!(
-                    "{op} over group {group:?} timed out after {:?} (peer wedged or missing)",
+                    "{op} over group {group:?} (gid {gid}, {} {seq}) timed out after {:?} \
+                     waiting for deposits from rank(s) {missing:?} (peer wedged or missing)",
+                    if op == "p2p" { "tag" } else { "seq" },
                     self.timeout
                 );
             }
@@ -804,8 +818,12 @@ impl CommCore {
             Self::check_dead(&st, gid, seq, group, op)?;
             let now = Instant::now();
             if now >= deadline {
+                // All deposits arrived (we got past wait_deposits) but
+                // the computing member never published the result.
                 bail!(
-                    "{op} over group {group:?} timed out after {:?} (peer wedged or missing)",
+                    "{op} over group {group:?} (gid {gid}, {} {seq}) timed out after {:?} \
+                     awaiting the central result for rank {rank} (computing peer wedged or missing)",
+                    if op == "p2p" { "tag" } else { "seq" },
                     self.timeout
                 );
             }
@@ -1884,5 +1902,39 @@ mod tests {
         let res = j.join().unwrap();
         assert!(res.is_err(), "waiter must get a clean error");
         assert!(t0.elapsed() < Duration::from_secs(10), "must not wait for the timeout");
+    }
+
+    /// A rendezvous timeout names the op, group id, tag (p2p) / seq,
+    /// and the exact set of ranks that never arrived — the failure must
+    /// be diagnosable from the message alone. The peer stays *alive*
+    /// but absent (a wedged rank), so the dead-peer fast path cannot
+    /// fire and the deadline is what trips. The message also keeps the
+    /// literal "timed out after" marker `classify_failure` keys on.
+    #[test]
+    fn timeout_message_names_op_tag_and_missing_ranks() {
+        let mut handles = ThreadedComm::new(3, Duration::from_millis(300));
+        let _wedged = handles.pop().unwrap(); // rank 2: alive, never arrives
+        let h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+
+        // p2p: the receiver deposits its marker, so the only missing
+        // deposit is the wedged sender's.
+        let mut out = Vec::new();
+        let err = h0.recv(2, 42, &mut out).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("p2p"), "{msg}");
+        assert!(msg.contains("tag 42"), "{msg}");
+        assert!(msg.contains("gid"), "{msg}");
+        assert!(msg.contains("timed out after"), "{msg}");
+        assert!(msg.contains("rank(s) [2]"), "{msg}");
+
+        // Collective: ranks 0 and 1 arrive, rank 2 never does.
+        drop(h0); // recv timeout aborted rank 0's handle
+        let mut h1 = h1;
+        let err = h1.all_reduce_sum(&mut vec![1.0f32], &[1, 2]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("seq"), "{msg}");
+        assert!(msg.contains("timed out after"), "{msg}");
+        assert!(msg.contains("rank(s) [2]"), "{msg}");
     }
 }

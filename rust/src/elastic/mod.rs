@@ -6,8 +6,15 @@
 //! a rank death ([`RankLossEvent`]) or a rendezvous timeout — the
 //! supervisor journals the failure, picks a new (never larger) world
 //! size M, adapts the sharding strategy if M no longer divides into
-//! the old shard groups, and re-runs from the latest checkpoint, which
-//! [`crate::checkpoint::load_sharded`] re-shards N→M on load. Because
+//! the old shard groups, and re-runs from the latest **usable**
+//! checkpoint: the resume probe
+//! ([`crate::checkpoint::durable::best_resume_step`]) and the loader
+//! ([`crate::checkpoint::durable::load_with_fallback`]) both walk the
+//! durable generation directories newest→oldest, crc64-verifying each
+//! and skipping corrupt or torn ones, so a segment that died mid-write
+//! (or a bit-flipped shard) degrades to the previous generation
+//! instead of wedging the supervisor. The survivor is then re-sharded
+//! N→M on load by [`crate::checkpoint::load_sharded`]. Because
 //! the re-shard cuts shards with the exact `even_split` rule a native
 //! world-M engine uses, and the collective fold order is fixed, the
 //! rescaled resume is **bitwise identical** to an uninterrupted

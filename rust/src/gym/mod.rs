@@ -208,14 +208,33 @@ impl Gym {
             fsdp.attach_telemetry(t);
         }
 
-        // Resume from the latest sharded checkpoint in run_dir. When
-        // the checkpoint was written at a different world size (an
-        // elastic rescale), load_sharded re-shards it N→M on the fly.
+        // Resume via the durable fallback walk: newest generation
+        // first, digest-verified (policy `verify_on_load`), skipping
+        // corrupt/incomplete generations with a logged reason and a
+        // `ckpt_fallback` marker on every rank's ckpt lane. Legacy
+        // `step_*` dirs still resume; a rescaled checkpoint re-shards
+        // N→M on the fly inside load_sharded.
+        let verify_on_load =
+            spec.checkpoint_policy.as_ref().map(|p| p.verify_on_load).unwrap_or(true);
         let mut start_step = 0u64;
         if spec.resume {
-            if let Some(ckpt) = checkpoint::latest_checkpoint(&spec.run_dir) {
-                start_step = checkpoint::load_sharded(&ckpt, &mut fsdp)?;
-                log::info!("resumed from {} at step {start_step}", ckpt.display());
+            if let Some(out) =
+                checkpoint::durable::load_with_fallback(&spec.run_dir, &mut fsdp, verify_on_load)?
+            {
+                start_step = out.step;
+                log::info!("resumed from {} at step {start_step}", out.path.display());
+                if let Some(t) = &tel {
+                    t.set_step(start_step);
+                    for skip in &out.skipped {
+                        for rank in 0..world {
+                            t.handle(rank).instant(
+                                crate::telemetry::SpanKind::Ckpt,
+                                "ckpt_fallback",
+                                skip.index,
+                            );
+                        }
+                    }
+                }
             }
         }
 
@@ -284,10 +303,24 @@ impl Gym {
             (spec.dataloader.batch_size * spec.dataloader.dataset.seq_len()) as u64;
         let tokens_per_step = micro_tokens * world as u64 * spec.grad_accum as u64;
 
+        // Async checkpoint writer: one background thread, depth-1
+        // bounded handoff — the step loop pays only the snapshot clone
+        // (plus backpressure when a previous write is still in flight).
+        let mut ckpt_writer: Option<checkpoint::durable::AsyncCkptWriter> =
+            match &spec.checkpoint_policy {
+                Some(p) if p.async_write => Some(checkpoint::durable::AsyncCkptWriter::spawn(
+                    tel.as_ref().map(|t| t.handle(0)),
+                )),
+                _ => None,
+            };
+
         let timer = crate::util::stats::Timer::start();
         let mut curve = Vec::new();
         let mut eval_curve = Vec::new();
         let mut final_loss = f32::NAN;
+        // Highest step a generation has been written for — stops the
+        // final checkpoint from duplicating a cadence-aligned one.
+        let mut last_ckpt_step = start_step;
         let mut tokens_seen = start_step * tokens_per_step;
         let mut micro_idx = start_step * spec.grad_accum as u64;
         // One reusable token batch for the whole run — refilled per
@@ -415,34 +448,47 @@ impl Gym {
                 }
             }
 
-            // Checkpoint hook.
+            // Checkpoint hook (durable generation layout).
             if let Some(policy) = &spec.checkpoint_policy {
                 if let Some(every) = policy.every_steps {
                     if every > 0 && (step + 1) % every == 0 {
-                        checkpoint::save_sharded(
-                            &spec.run_dir,
-                            step + 1,
+                        write_checkpoint(
+                            spec,
                             &fsdp,
                             &params,
-                            &spec.model.model_name,
-                            &spec.config_fingerprint,
+                            step + 1,
+                            policy,
+                            &mut ckpt_writer,
+                            tel.as_ref(),
                         )?;
-                        prune_checkpoints(&spec.run_dir, policy.keep_last)?;
+                        last_ckpt_step = step + 1;
                     }
                 }
             }
         }
 
-        // Final checkpoint if a policy is present.
-        if spec.checkpoint_policy.is_some() && spec.steps > start_step {
-            checkpoint::save_sharded(
-                &spec.run_dir,
-                spec.steps,
-                &fsdp,
-                &params,
-                &spec.model.model_name,
-                &spec.config_fingerprint,
-            )?;
+        // Final checkpoint if a policy is present and the cadence hook
+        // didn't already cover the last step.
+        if let Some(policy) = &spec.checkpoint_policy {
+            if spec.steps > last_ckpt_step {
+                write_checkpoint(
+                    spec,
+                    &fsdp,
+                    &params,
+                    spec.steps,
+                    policy,
+                    &mut ckpt_writer,
+                    tel.as_ref(),
+                )?;
+            }
+        }
+
+        // Drain the async writer before exporting telemetry / declaring
+        // the run done: completion is only real once every queued
+        // snapshot has been fsynced and its manifest renamed in.
+        if let Some(mut w) = ckpt_writer.take() {
+            let written = w.finish().context("draining async checkpoint writer")?;
+            log::info!("async checkpoint writer drained ({written} generations)");
         }
 
         // Telemetry export: Chrome trace (Perfetto-loadable), per-step
@@ -509,6 +555,65 @@ pub fn evaluate(
         sum += model.loss(engine, params, &tb)?;
     }
     Ok(sum / n as f32)
+}
+
+/// One checkpoint: lift the engine into a cloned-once flat snapshot,
+/// then either hand it to the async writer (bounded, at most one in
+/// flight) or write + prune inline. The sync path records a
+/// `ckpt_write` span on rank 0's ckpt lane; the async writer records
+/// its own. Legacy `step_*` dirs from pre-durability runs are pruned
+/// under the same retention.
+fn write_checkpoint(
+    spec: &GymSpec,
+    fsdp: &FsdpEngine,
+    params: &ParamStore,
+    step: u64,
+    policy: &crate::checkpoint::components::CheckpointPolicy,
+    writer: &mut Option<checkpoint::durable::AsyncCkptWriter>,
+    tel: Option<&Arc<crate::telemetry::Telemetry>>,
+) -> Result<()> {
+    let snap_t0 = std::time::Instant::now();
+    let flat = checkpoint::durable::snapshot(
+        fsdp,
+        params,
+        step,
+        &spec.model.model_name,
+        &spec.config_fingerprint,
+    )?;
+    let payload_bytes: u64 = flat.units.iter().map(|u| (u.params.len() * 3 * 4) as u64).sum();
+    if let Some(t) = tel {
+        t.handle(0).record(
+            crate::telemetry::SpanKind::Ckpt,
+            "ckpt_snapshot",
+            payload_bytes,
+            step,
+            snap_t0,
+        );
+    }
+    prune_checkpoints(&spec.run_dir, policy.retention())?;
+    match writer {
+        Some(w) => w.submit(checkpoint::durable::SnapshotJob {
+            run_dir: spec.run_dir.clone(),
+            flat,
+            retain: policy.retention(),
+        }),
+        None => {
+            let t0 = std::time::Instant::now();
+            let index = checkpoint::durable::next_generation_index(&spec.run_dir);
+            checkpoint::durable::write_generation(&spec.run_dir, index, &flat)?;
+            checkpoint::durable::prune_generations(&spec.run_dir, policy.retention())?;
+            if let Some(t) = tel {
+                t.handle(0).record(
+                    crate::telemetry::SpanKind::Ckpt,
+                    "ckpt_write",
+                    payload_bytes,
+                    index,
+                    t0,
+                );
+            }
+            Ok(())
+        }
+    }
 }
 
 fn prune_checkpoints(run_dir: &std::path::Path, keep_last: usize) -> Result<()> {

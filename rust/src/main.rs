@@ -48,6 +48,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "tune" => cmd_tune(&args),
         "trace" => cmd_trace(&args),
         "pp" => cmd_pp(&args),
+        "ckpt" => cmd_ckpt(&args),
         "version" => {
             println!("modalities {}", modalities::VERSION);
             Ok(())
@@ -146,11 +147,11 @@ fn train_elastic(
     );
 
     let mut sup = Supervisor::new(espec, &run_dir)?;
-    let resume_step = || -> u64 {
-        checkpoint::latest_checkpoint(&run_dir)
-            .and_then(|p| p.file_name()?.to_str()?.strip_prefix("step_")?.parse().ok())
-            .unwrap_or(0)
-    };
+    // Probe what the durable fallback walk will actually load: the
+    // newest digest-verified generation (a corrupt one is skipped here
+    // exactly as the gym will skip it on resume), else the newest
+    // legacy checkpoint, else step 0.
+    let resume_step = || -> u64 { checkpoint::durable::best_resume_step(&run_dir) };
     let fingerprint = cfg.fingerprint_hex();
     let yaml = cfg.to_yaml();
     let telemetry = seed.telemetry.clone().or_else(|| {
@@ -922,5 +923,58 @@ fn cmd_trace(args: &Args) -> Result<()> {
         None => bail!(
             "usage: modalities trace pp [--set stages=4] [--set micros=16]\n       modalities trace <run_dir>"
         ),
+    }
+}
+
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    use modalities::checkpoint::durable;
+    let run_dir = Path::new(args.need("run-dir")?);
+    let gens = durable::list_generations(run_dir);
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("ls") => {
+            if gens.is_empty() {
+                println!("no generations under {}", durable::ckpt_root(run_dir).display());
+                if let Some(p) = modalities::checkpoint::latest_checkpoint(run_dir) {
+                    println!("legacy checkpoint: {}", p.display());
+                }
+                return Ok(());
+            }
+            for g in &gens {
+                match modalities::checkpoint::read_manifest(&g.path) {
+                    Ok(m) => println!(
+                        "gen-{} step {} world {} ({})",
+                        g.index, m.step, m.world, g.path.display()
+                    ),
+                    Err(_) if g.is_complete() => {
+                        println!("gen-{} unreadable manifest ({})", g.index, g.path.display())
+                    }
+                    Err(_) => println!("gen-{} incomplete ({})", g.index, g.path.display()),
+                }
+            }
+            Ok(())
+        }
+        Some("verify") => {
+            // Walk newest -> oldest, the same order the fallback loader
+            // uses, so the first `ok` line is what a resume would pick.
+            let mut usable = 0usize;
+            for g in gens.iter().rev() {
+                match durable::verify_generation(&g.path) {
+                    Ok(m) => {
+                        println!("gen-{} ok (step {})", g.index, m.step);
+                        usable += 1;
+                    }
+                    Err(e) => println!("gen-{} BAD: {e:#}", g.index),
+                }
+            }
+            if usable == 0 {
+                if let Some(p) = modalities::checkpoint::latest_checkpoint(run_dir) {
+                    println!("no usable generation; legacy checkpoint: {}", p.display());
+                    return Ok(());
+                }
+                bail!("no usable checkpoint under {}", run_dir.display());
+            }
+            Ok(())
+        }
+        _ => bail!("usage: modalities ckpt <ls|verify> --run-dir <dir>"),
     }
 }

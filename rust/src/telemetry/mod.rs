@@ -32,6 +32,7 @@
 //! | `collective` | `all_gather`, `all_reduce`, `reduce_scatter`, `all_reduce_scalar`, `barrier` (op-tagged, bytes/seq from the same call sites as `CommStats`) |
 //! | `serve`      | `prefill`, `decode`                              |
 //! | `segment`    | `segment` (elastic segment boundary, instant)    |
+//! | `ckpt`       | `ckpt_snapshot`, `ckpt_write` (durable checkpoint spans), `ckpt_fallback` (skipped-generation marker, instant) |
 //!
 //! `train_step` is one fused XLA call (forward+backward are not
 //! separable on-device); the gym maps `forward` to that call and
@@ -89,6 +90,10 @@ pub enum SpanKind {
     Serve,
     /// Elastic segment boundary (instant event; `seq` = segment index).
     Segment,
+    /// Durable checkpointing: `ckpt_snapshot`/`ckpt_write` spans
+    /// (bytes = payload, seq = step / generation index) and
+    /// `ckpt_fallback` instant markers (seq = skipped generation).
+    Ckpt,
 }
 
 impl SpanKind {
@@ -98,6 +103,7 @@ impl SpanKind {
             SpanKind::Collective => "collective",
             SpanKind::Serve => "serve",
             SpanKind::Segment => "segment",
+            SpanKind::Ckpt => "ckpt",
         }
     }
 
@@ -108,6 +114,7 @@ impl SpanKind {
             SpanKind::Collective => 1,
             SpanKind::Serve => 2,
             SpanKind::Segment => 3,
+            SpanKind::Ckpt => 4,
         }
     }
 }

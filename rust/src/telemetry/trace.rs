@@ -21,7 +21,7 @@ use crate::Result;
 
 use super::{RingSnapshot, SpanKind};
 
-const LANE_NAMES: [&str; 4] = ["phase", "collective", "serve", "segment"];
+const LANE_NAMES: [&str; 5] = ["phase", "collective", "serve", "segment", "ckpt"];
 
 fn event(e: &super::SpanEntry, rank: usize, ordinal: u64, normalize: bool) -> Json {
     let args = Json::from_pairs(vec![
@@ -29,7 +29,9 @@ fn event(e: &super::SpanEntry, rank: usize, ordinal: u64, normalize: bool) -> Js
         ("seq", Json::Num(e.seq as f64)),
         ("step", Json::Num(e.step as f64)),
     ]);
-    let instant = e.dur_us == 0 && e.kind == SpanKind::Segment;
+    // Segment boundaries and checkpoint fallback markers are instant
+    // events; ckpt write/snapshot spans carry a duration.
+    let instant = e.dur_us == 0 && matches!(e.kind, SpanKind::Segment | SpanKind::Ckpt);
     let ts = if normalize { ordinal } else { e.start_us };
     let mut pairs = vec![
         ("args", args),
@@ -66,7 +68,7 @@ fn metadata(name: &str, pid: usize, tid: Option<u64>, label: &str) -> Json {
 /// Render ring snapshots as a Chrome `trace_event` document.
 ///
 /// One pid per rank (`rank<N>` process names), one tid per span kind
-/// (`phase`/`collective`/`serve`/`segment` thread names). Extra
+/// (`phase`/`collective`/`serve`/`segment`/`ckpt` thread names). Extra
 /// top-level `otherData` records the world size and per-rank ring
 /// overflow counts. Output key order is `BTreeMap`-deterministic.
 pub fn chrome_trace(snapshots: &[RingSnapshot], normalize: bool) -> Json {
@@ -74,7 +76,7 @@ pub fn chrome_trace(snapshots: &[RingSnapshot], normalize: bool) -> Json {
     let mut dropped = BTreeMap::new();
     for snap in snapshots {
         events.push(metadata("process_name", snap.rank, None, &format!("rank{}", snap.rank)));
-        let mut lanes_seen = [false; 4];
+        let mut lanes_seen = [false; 5];
         for e in &snap.entries {
             lanes_seen[e.kind.lane() as usize] = true;
         }

@@ -15,8 +15,17 @@
 //! segments drive the FSDP engine with seeded synthetic gradients
 //! whose seeds depend only on `(step, rank)` — never on the world —
 //! which is exactly what makes the rescaled resume comparable.
+//!
+//! Since PR 10 the segments checkpoint through the **durable
+//! generation** layout (`ckpt/gen-<N>/` + checksummed manifest), so
+//! this suite also carries the corruption grid: bit-flip a drawn shard
+//! byte, truncate a shard, tear the manifest, or kill mid-write, and
+//! assert the rescued run falls back to the surviving generation and
+//! stays bitwise-equal to an uninterrupted run from it — every
+//! failure typed, never a panic.
 
 use modalities::checkpoint;
+use modalities::checkpoint::durable::{self, CorruptShard, ShardCheck, TornManifest};
 use modalities::dist::process_group::{BackendKind, BackendSpec, RankLossEvent};
 use modalities::elastic::{
     adapt_strategy, ElasticSpec, SegmentPlan, SegmentStatus, Supervisor,
@@ -106,11 +115,12 @@ fn final_state(eng: &mut FsdpEngine, losses: Vec<f32>) -> FinalState {
     }
 }
 
-/// One training segment: resume from the latest checkpoint in `dir`
-/// (re-sharded to this segment's world if needed), then run steps
-/// `start..steps`, checkpointing after every step. `kill` injects the
-/// chaos plan's rank death right before that step's collectives.
-/// Returns the per-step losses on success.
+/// One training segment: resume from the newest *usable* checkpoint
+/// generation in `dir` (verified + re-sharded to this segment's world
+/// if needed), then run steps `start..steps`, writing a durable
+/// generation after every step. `kill` injects the chaos plan's rank
+/// death right before that step's collectives. Returns the per-step
+/// losses on success.
 fn run_segment(
     dir: &Path,
     plan: &SegmentPlan,
@@ -121,8 +131,8 @@ fn run_segment(
     let p0 = params0();
     let mut eng = engine(plan.world, plan.strategy, backend);
     let mut start = 0u64;
-    if let Some(ckpt) = checkpoint::latest_checkpoint(dir) {
-        start = checkpoint::load_sharded(&ckpt, &mut eng)?;
+    if let Some(out) = durable::load_with_fallback(dir, &mut eng, true)? {
+        start = out.step;
     }
     assert_eq!(start, plan.start_step, "supervisor and segment disagree on the resume step");
     let mut losses = Vec::new();
@@ -137,10 +147,21 @@ fn run_segment(
             .map(|r| ((step + 1) as f32 * 0.3 + r as f32 * 0.07).sin())
             .collect();
         losses.push(eng.all_reduce_scalar(&vals)?);
-        checkpoint::save_sharded(dir, step + 1, &eng, &p0, "chaos", "fp")?;
+        durable::save_generation(dir, step + 1, &eng, &p0, "chaos", "fp")?;
     }
     eng.check_replica_consistency()?;
     Ok((steps, losses))
+}
+
+/// The generation directory holding the checkpoint for `step`, if any.
+fn gen_for_step(dir: &Path, step: u64) -> Option<PathBuf> {
+    durable::list_generations(dir)
+        .into_iter()
+        .rev()
+        .find(|g| {
+            checkpoint::read_manifest(&g.path).map(|m| m.step == step).unwrap_or(false)
+        })
+        .map(|g| g.path)
 }
 
 /// Uninterrupted world-M reference: a fresh engine loaded from the
@@ -192,13 +213,7 @@ fn chaos_scenario(
         .run(
             plan.world,
             strategy,
-            || {
-                checkpoint::latest_checkpoint(dir)
-                    .and_then(|p| {
-                        p.file_name()?.to_str()?.strip_prefix("step_")?.parse().ok()
-                    })
-                    .unwrap_or(0)
-            },
+            || durable::best_resume_step(dir),
             |seg| {
                 let kill = if seg.index == 0 { Some(plan) } else { None };
                 let (end, losses) = run_segment(dir, seg, steps, backend, kill)?;
@@ -207,8 +222,8 @@ fn chaos_scenario(
                 // (run_segment owns its engine; reload from the final
                 // checkpoint, which is exact-topology at this world).
                 let mut eng = engine(seg.world, seg.strategy, backend);
-                let ckpt = checkpoint::latest_checkpoint(dir).unwrap();
-                checkpoint::load_sharded(&ckpt, &mut eng)?;
+                durable::load_with_fallback(dir, &mut eng, true)?
+                    .ok_or_else(|| anyhow::anyhow!("no checkpoint after a complete segment"))?;
                 final_eng = Some(eng);
                 Ok(end)
             },
@@ -254,12 +269,12 @@ fn chaos_kill_rescale_resume_is_bitwise() {
                     chaos_scenario(&dir, &plan, strategy, schedule.clone());
                 let expect_m = schedule.first().copied().unwrap_or(world - 1);
                 assert_eq!(m, expect_m, "{label}");
-                // A kill at step k leaves checkpoints up to step k, so
+                // A kill at step k leaves generations up to step k, so
                 // the rescaled segment resumes exactly there.
                 assert_eq!(resumed_at, plan.kill_step, "{label}");
-                let ckpt = dir.join(format!("step_{:08}", plan.kill_step));
-                let ckpt = if plan.kill_step > 0 { Some(ckpt.as_path()) } else { None };
-                let want = reference_run(ckpt, m, adapt_strategy(strategy, m), STEPS);
+                let ckpt = gen_for_step(&dir, plan.kill_step);
+                let want =
+                    reference_run(ckpt.as_deref(), m, adapt_strategy(strategy, m), STEPS);
                 assert_eq!(got.params, want.params, "params diverged: {label}");
                 assert_eq!(got.opt_state, want.opt_state, "opt state diverged: {label}");
                 // Loss curves compared over the post-rescale segment.
@@ -366,11 +381,225 @@ fn chaos_smoke() {
     assert_eq!(segs[1].get("start_step").unwrap().as_i64(), Some(3));
     assert_eq!(summary.final_world, 3);
 
-    // Final shards: the last checkpoint is world-3 topology.
+    // Final shards: the last checkpoint is world-3 topology, written
+    // in the durable generation layout with verifying digests.
     let last = checkpoint::latest_checkpoint(&dir).unwrap();
-    let manifest = checkpoint::read_manifest(&last).unwrap();
+    assert!(last.starts_with(dir.join("ckpt")), "expected a gen dir, got {}", last.display());
+    let manifest = durable::verify_generation(&last).unwrap();
     assert_eq!((manifest.step, manifest.world), (STEPS, 3));
     for rank in 0..3 {
         assert!(last.join(format!("rank_{rank:05}.bin")).exists());
     }
+}
+
+// ---- corruption grid --------------------------------------------------------
+
+/// The four corruption modes the durability grid injects into the
+/// newest generation.
+#[derive(Clone, Copy, Debug)]
+enum Corruption {
+    /// Flip one drawn bit of one drawn shard byte (bit rot).
+    BitFlip,
+    /// Truncate a drawn shard to half its length (interrupted write).
+    Truncate,
+    /// Truncate `manifest.json` itself mid-JSON (torn manifest).
+    TearManifest,
+    /// Crash between shard fsyncs and the manifest rename: delete the
+    /// manifest, leave a half-written `manifest.json.tmp` behind.
+    KillMidWrite,
+}
+
+const CORRUPTIONS: [Corruption; 4] = [
+    Corruption::BitFlip,
+    Corruption::Truncate,
+    Corruption::TearManifest,
+    Corruption::KillMidWrite,
+];
+
+/// Corrupt `gen` in place. Shard-level modes draw the victim rank
+/// file, byte offset and bit from `seed`, so every grid point
+/// reproduces from its printed label.
+fn corrupt_generation(gen: &Path, mode: Corruption, seed: u64) {
+    let mut rng = Pcg64::new(seed ^ 0xc0de);
+    let mut shards: Vec<PathBuf> = std::fs::read_dir(gen)
+        .unwrap()
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            let name = p.file_name()?.to_str()?.to_string();
+            (name.starts_with("rank_") && name.ends_with(".bin")).then_some(p)
+        })
+        .collect();
+    shards.sort();
+    match mode {
+        Corruption::BitFlip => {
+            let victim = &shards[rng.next_below(shards.len() as u64) as usize];
+            let mut bytes = std::fs::read(victim).unwrap();
+            let at = rng.next_below(bytes.len() as u64) as usize;
+            bytes[at] ^= 1u8 << rng.next_below(8);
+            std::fs::write(victim, bytes).unwrap();
+        }
+        Corruption::Truncate => {
+            let victim = &shards[rng.next_below(shards.len() as u64) as usize];
+            let bytes = std::fs::read(victim).unwrap();
+            std::fs::write(victim, &bytes[..bytes.len() / 2]).unwrap();
+        }
+        Corruption::TearManifest => {
+            let man = gen.join("manifest.json");
+            let bytes = std::fs::read(&man).unwrap();
+            std::fs::write(&man, &bytes[..bytes.len() / 2]).unwrap();
+        }
+        Corruption::KillMidWrite => {
+            let man = gen.join("manifest.json");
+            let bytes = std::fs::read(&man).unwrap();
+            std::fs::write(gen.join("manifest.json.tmp"), &bytes[..bytes.len() / 2]).unwrap();
+            std::fs::remove_file(&man).unwrap();
+        }
+    }
+}
+
+/// The durability grid: {bit-flip, truncate, torn manifest, kill
+/// mid-write} × world {2, 4}. Train, corrupt the newest generation,
+/// resume. The fallback walk must skip the damaged generation with a
+/// typed reason, land on the survivor, and the rescued run must be
+/// bitwise-equal to an uninterrupted run from that surviving
+/// generation. Every failure is a typed error — never a panic.
+#[test]
+fn corruption_grid_falls_back_bitwise() {
+    const TRAINED: u64 = 5;
+    const TOTAL: u64 = 8;
+    let strategy = ShardStrategy::Hybrid { shard_size: 2 };
+    let p0 = params0();
+    for world in [2usize, 4] {
+        for (i, mode) in CORRUPTIONS.iter().enumerate() {
+            let seed = 0xd00d_0000 + (world as u64) * 16 + i as u64;
+            let label = format!("world {world} mode {mode:?} seed {seed:#x}");
+            let dir = tmp(&format!("corrupt-{world}-{i}"));
+
+            // Train TRAINED steps, one generation per step.
+            let mut eng = engine(world, strategy, BackendSpec::lockstep());
+            for step in 0..TRAINED {
+                eng.apply_grads(&grads_at(&p0, step, world), 1.0, Some(1.0)).unwrap();
+                durable::save_generation(&dir, step + 1, &eng, &p0, "chaos", "fp").unwrap();
+            }
+
+            // Corrupt the newest generation (it holds step TRAINED).
+            let bad = durable::list_generations(&dir).pop().unwrap();
+            corrupt_generation(&bad.path, *mode, seed);
+
+            // The damage is reported as the right typed error.
+            let err = durable::verify_generation(&bad.path).unwrap_err();
+            match mode {
+                Corruption::BitFlip | Corruption::Truncate => {
+                    let c = CorruptShard::classify(&err)
+                        .unwrap_or_else(|| panic!("untyped failure ({label}): {err:#}"));
+                    let want_check = if matches!(mode, Corruption::BitFlip) {
+                        ShardCheck::Crc64
+                    } else {
+                        ShardCheck::ByteCount
+                    };
+                    assert_eq!(c.check, want_check, "{label}");
+                    assert_ne!(c.expected, c.actual, "{label}");
+                }
+                Corruption::TearManifest | Corruption::KillMidWrite => {
+                    assert!(
+                        TornManifest::classify(&err).is_some(),
+                        "untyped failure ({label}): {err:#}"
+                    );
+                }
+            }
+
+            // Rescue: the fallback walk skips the bad generation and
+            // resumes one step earlier, on the survivor — and the
+            // supervisor's probe agrees with the loader.
+            let mut rescued = engine(world, strategy, BackendSpec::lockstep());
+            let out = durable::load_with_fallback(&dir, &mut rescued, true)
+                .unwrap_or_else(|e| panic!("rescue failed ({label}): {e:#}"))
+                .unwrap();
+            assert_eq!(out.step, TRAINED - 1, "{label}");
+            assert_eq!(out.skipped.len(), 1, "{label}");
+            assert_eq!(out.skipped[0].index, bad.index, "{label}");
+            assert!(!out.skipped[0].reason.is_empty(), "{label}");
+            assert_eq!(durable::best_resume_step(&dir), TRAINED - 1, "{label}");
+
+            let mut losses = Vec::new();
+            for step in out.step..TOTAL {
+                rescued.apply_grads(&grads_at(&p0, step, world), 1.0, Some(1.0)).unwrap();
+                let vals: Vec<f32> = (0..world)
+                    .map(|r| ((step + 1) as f32 * 0.3 + r as f32 * 0.07).sin())
+                    .collect();
+                losses.push(rescued.all_reduce_scalar(&vals).unwrap());
+            }
+            let got = final_state(&mut rescued, losses);
+
+            // Reference: uninterrupted run from the surviving generation.
+            let survivor = gen_for_step(&dir, TRAINED - 1).unwrap();
+            let want = reference_run(Some(survivor.as_path()), world, strategy, TOTAL);
+            assert_eq!(got, want, "rescued run diverged: {label}");
+        }
+    }
+}
+
+/// Supervisor integration: the generation written at the kill step is
+/// corrupted before the restart (as if the dying rank tore its last
+/// write on the way down). The supervisor's resume probe and the
+/// segment's fallback loader must agree on the surviving generation:
+/// the rescaled segment resumes one step *earlier* than the kill and
+/// still bitwise-matches the uninterrupted reference from there.
+#[test]
+fn supervisor_falls_back_past_corrupt_generation() {
+    const STEPS: u64 = 8;
+    let dir = tmp("supervisor-corrupt");
+    let plan = ChaosPlan {
+        seed: 0,
+        world: 4,
+        steps: STEPS,
+        kill_rank: 2,
+        kill_step: 3,
+        jitter_us: 150,
+    };
+    let strategy = ShardStrategy::Hybrid { shard_size: 2 };
+    let backend = BackendSpec {
+        kind: BackendKind::Threaded,
+        timeout_ms: 20_000,
+        jitter_us: plan.jitter_us,
+    };
+    let spec = ElasticSpec { max_restarts: 1, min_world: 1, world_schedule: vec![2] };
+    let mut sup = Supervisor::new(spec, &dir).unwrap();
+    let mut last_losses = Vec::new();
+    let mut final_eng: Option<FsdpEngine> = None;
+    let summary = sup
+        .run(
+            plan.world,
+            strategy,
+            || durable::best_resume_step(&dir),
+            |seg| {
+                if seg.index == 0 {
+                    let err = run_segment(&dir, seg, STEPS, backend, Some(&plan))
+                        .expect_err("segment 0 must die at the planned kill");
+                    // Tear the freshest generation before the failure
+                    // reaches the supervisor.
+                    let bad = durable::list_generations(&dir).pop().unwrap();
+                    corrupt_generation(&bad.path, Corruption::BitFlip, 7);
+                    return Err(err);
+                }
+                let (end, losses) = run_segment(&dir, seg, STEPS, backend, None)?;
+                last_losses = losses;
+                let mut eng = engine(seg.world, seg.strategy, backend);
+                durable::load_with_fallback(&dir, &mut eng, true)?;
+                final_eng = Some(eng);
+                Ok(end)
+            },
+        )
+        .unwrap();
+    assert_eq!(summary.restarts, 1);
+    let segs = &summary.segments;
+    assert_eq!(segs[1].status, SegmentStatus::Complete);
+    assert_eq!(segs[1].world, 2);
+    // The corrupt kill-step generation is skipped: resume lands one
+    // step earlier, on the survivor.
+    assert_eq!(segs[1].start_step, plan.kill_step - 1);
+    let got = final_state(final_eng.as_mut().unwrap(), last_losses);
+    let survivor = gen_for_step(&dir, plan.kill_step - 1).unwrap();
+    let want = reference_run(Some(survivor.as_path()), 2, adapt_strategy(strategy, 2), STEPS);
+    assert_eq!(got, want, "rescued run diverged after corrupt-generation fallback");
 }

@@ -34,9 +34,14 @@ for needle in '"world": 4' '"status": "failed"' '"world": 3' '"status": "complet
   fi
 done
 
-# The final checkpoint (step 8) must be world-3 topology: manifest says
-# so and exactly ranks 0..2 have shard files.
-FINAL="$RUN/step_00000008"
+# The final checkpoint — the newest durable generation — must be
+# world-3 topology: manifest says so and exactly ranks 0..2 have shard
+# files.
+FINAL="$RUN/ckpt/$(ls "$RUN/ckpt" | grep '^gen-' | sort -t- -k2 -n | tail -1)"
+if [ ! -f "$FINAL/manifest.json" ]; then
+  echo "chaos-smoke: FAIL — no complete generation under $RUN/ckpt"
+  exit 1
+fi
 grep -q '"world": 3' "$FINAL/manifest.json" || {
   echo "chaos-smoke: FAIL — final manifest is not world 3"
   cat "$FINAL/manifest.json"

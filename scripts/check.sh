@@ -53,4 +53,7 @@ scripts/trace_smoke.sh
 echo "==> pipeline-parallel smoke (2-stage × 4-micro threaded run, bitwise loss tail vs single-stage)"
 scripts/pp_smoke.sh
 
+echo "==> durability smoke (corrupt newest generation → fallback resume bitwise-matches clean; skips without artifacts)"
+scripts/durability_smoke.sh
+
 echo "OK"

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Corrupt the newest checkpoint generation under <run_dir>/ckpt — the
+# injection half of `make durability-smoke` (also handy for poking a
+# run by hand). One mode per durability-grid failure class:
+#   bitflip     flip one bit of a shard byte            (bit rot)
+#   truncate    cut a shard file to half its length     (interrupted write)
+#   tear        truncate manifest.json mid-JSON         (torn manifest)
+#   incomplete  drop the manifest, leave a torn .tmp    (kill mid-async-write)
+# The damage is deterministic (fixed offsets), so smoke runs reproduce.
+set -euo pipefail
+
+usage="usage: corrupt_ckpt.sh <run_dir> <bitflip|truncate|tear|incomplete>"
+RUN="${1:?$usage}"
+MODE="${2:?$usage}"
+
+CKPT="$RUN/ckpt"
+[ -d "$CKPT" ] || { echo "corrupt_ckpt: no generation layout under $RUN" >&2; exit 1; }
+GEN="$CKPT/$(ls "$CKPT" | grep '^gen-' | sort -t- -k2 -n | tail -1)"
+[ -d "$GEN" ] || { echo "corrupt_ckpt: no gen-* directory under $CKPT" >&2; exit 1; }
+SHARD="$(ls "$GEN"/rank_*.bin | head -1)"
+MANIFEST="$GEN/manifest.json"
+
+case "$MODE" in
+  bitflip)
+    # Flip the top bit of the byte at offset 64 — inside the first
+    # shard's payload; any single flipped bit breaks the crc64.
+    byte=$(od -An -tu1 -j64 -N1 "$SHARD" | tr -d ' ')
+    printf "$(printf '\\x%02x' $((byte ^ 0x80)))" \
+      | dd of="$SHARD" bs=1 seek=64 count=1 conv=notrunc status=none
+    ;;
+  truncate)
+    truncate -s $(( $(wc -c < "$SHARD") / 2 )) "$SHARD"
+    ;;
+  tear)
+    truncate -s $(( $(wc -c < "$MANIFEST") / 2 )) "$MANIFEST"
+    ;;
+  incomplete)
+    head -c $(( $(wc -c < "$MANIFEST") / 2 )) "$MANIFEST" > "$MANIFEST.tmp"
+    rm "$MANIFEST"
+    ;;
+  *)
+    echo "corrupt_ckpt: unknown mode '$MODE'" >&2
+    echo "$usage" >&2
+    exit 1
+    ;;
+esac
+
+echo "corrupt_ckpt: $MODE applied to $GEN"

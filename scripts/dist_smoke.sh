@@ -51,10 +51,16 @@ if ! diff -u "$ROOT/tail_straight" "$ROOT/tail_resumed"; then
   exit 1
 fi
 
-# Final checkpoints (step 8) must agree byte-for-byte, shard by shard.
-for rank_file in "$ROOT"/straight/step_00000008/rank_*.bin; do
+# Final checkpoints (the newest durable generation of each run, both
+# holding step 8) must agree byte-for-byte, shard by shard.
+latest_gen() {
+  echo "$1/ckpt/$(ls "$1/ckpt" | grep '^gen-' | sort -t- -k2 -n | tail -1)"
+}
+SG="$(latest_gen "$ROOT/straight")"
+RG="$(latest_gen "$ROOT/resumed")"
+for rank_file in "$SG"/rank_*.bin; do
   name="$(basename "$rank_file")"
-  cmp "$rank_file" "$ROOT/resumed/step_00000008/$name" || {
+  cmp "$rank_file" "$RG/$name" || {
     echo "dist-smoke: FAIL — $name differs between straight and resumed runs"
     exit 1
   }
